@@ -1,0 +1,51 @@
+//! Table 1 as a runnable example: accuracy of {naive, ACIQ, DS-ACIQ, PDA}
+//! × bitwidths over the eval set, quantizing every boundary activation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example accuracy_sweep [-- 8,4,2]
+//! ```
+
+use quantpipe::benchkit::{hlo_spec, load_artifacts, Table};
+use quantpipe::config::Config;
+use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::pipeline::{run, LinkQuant, Workload};
+use quantpipe::quant::Method;
+
+fn main() -> quantpipe::Result<()> {
+    let bits: Vec<u8> = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "32,16,8,6,4,2".into())
+        .split(',')
+        .map(|b| b.trim().parse().expect("bitwidth"))
+        .collect();
+
+    let (manifest, dir, eval) = load_artifacts()?;
+    let cfg = Config::default();
+    println!(
+        "Table 1 sweep — fp32 reference {:.2}%, eval {} images",
+        manifest.model.fp32_top1 * 100.0,
+        eval.count
+    );
+
+    let mut headers: Vec<String> = vec!["method".into()];
+    headers.extend(bits.iter().map(|b| format!("{b}bit")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs);
+
+    for method in [Method::Naive, Method::Aciq, Method::DsAciq, Method::Pda] {
+        let mut cells = vec![method.name().to_string()];
+        for &b in &bits {
+            let spec = hlo_spec(
+                &manifest, &dir, &cfg,
+                vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
+                LinkQuant { method, calib_every: 1, initial_bits: b },
+                None,
+            );
+            let report = run(spec, Workload::one_pass(eval.clone(), manifest.microbatch))?;
+            cells.push(format!("{:.2}%", report.accuracy * 100.0));
+        }
+        table.row(&cells);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: load the AOT artifacts, run the 4-stage pipeline over the
+//! eval set with adaptive PDA on unconstrained links, print the report.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use quantpipe::benchkit::load_artifacts;
+use quantpipe::config::Config;
+use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::pipeline::{run, LinkQuant, Workload};
+use quantpipe::quant::Method;
+
+fn main() -> quantpipe::Result<()> {
+    let (manifest, dir, eval) = load_artifacts()?;
+    println!(
+        "loaded ViT ({:.2}M params, fp32 top-1 {:.2}%), {} stages, microbatch {}",
+        manifest.model.params as f64 / 1e6,
+        manifest.model.fp32_top1 * 100.0,
+        manifest.stages.len(),
+        manifest.microbatch
+    );
+
+    let cfg = Config::default();
+    let spec = quantpipe::benchkit::hlo_spec(
+        &manifest,
+        &dir,
+        &cfg,
+        vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        Some(cfg.adapt_config()?),
+    );
+
+    let report = run(spec, Workload::one_pass(eval, manifest.microbatch))?;
+    println!("processed {} images in {:.2}s", report.images, report.wall_secs);
+    println!("throughput      {:.1} img/s", report.throughput);
+    println!("top-1 accuracy  {:.2}%", report.accuracy * 100.0);
+    println!(
+        "p50 / p99 microbatch latency: {:?} / {:?}",
+        report.latency.quantile(0.5),
+        report.latency.quantile(0.99)
+    );
+    println!("per-stage compute (s): {:?}", report.stage_compute_s);
+    Ok(())
+}

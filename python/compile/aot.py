@@ -1,0 +1,270 @@
+"""AOT driver: train (cached) -> lower shards + kernels to HLO text ->
+export eval set, calibration activations, golden vectors, manifest.
+
+Interchange format is HLO **text**, NOT .serialize(): the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .kernels import quant as qk
+from .kernels import ref
+from .model import (
+    ViTConfig,
+    boundary_activations,
+    forward,
+    init_params,
+    param_count,
+    stage_cuts,
+    stage_fn,
+)
+from .train import load_or_train
+
+EVAL_MAGIC = 0x51504556  # "QPEV"
+CALIB_MAGIC = 0x51504341  # "QPCA"
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jitted fn (must return a tuple) to HLO text.
+
+    `as_hlo_text(True)` == print_large_constants: the model weights are
+    baked into the shard as constants and MUST survive the text round-trip
+    (the default elides them as `{...}`, which parses back as zeros)."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def write_eval_bin(path: Path, imgs: np.ndarray, labels: np.ndarray) -> None:
+    """Binary eval set consumed by rust/src/data. Layout:
+    u32 magic | u32 version | u32 count | u32 h | u32 w | u32 c |
+    f32[count*h*w*c] images | u32[count] labels  (all little-endian)."""
+    n, h, w, c = imgs.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIIIII", EVAL_MAGIC, 1, n, h, w, c))
+        f.write(imgs.astype("<f4").tobytes())
+        f.write(labels.astype("<u4").tobytes())
+
+
+def write_calib_bin(path: Path, acts: list[np.ndarray]) -> None:
+    """Boundary calibration activations for rust-side analyses (Fig 3/4 and
+    DS-ACIQ goldens). Layout: u32 magic | u32 version | u32 n_tensors |
+    then per tensor: u32 rank | u32 dims[rank] | f32 data."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", CALIB_MAGIC, 1, len(acts)))
+        for a in acts:
+            a = np.asarray(a, "<f4")
+            f.write(struct.pack("<I", a.ndim))
+            f.write(struct.pack(f"<{a.ndim}I", *a.shape))
+            f.write(a.tobytes())
+
+
+def golden_vectors(acts: list[np.ndarray], rng: np.random.Generator) -> dict:
+    """Cross-language golden vectors: the rust quant library must reproduce
+    these numbers (tests/golden.rs)."""
+    cases = []
+    # A real boundary activation slice + controlled synthetic distributions.
+    samples = {
+        "boundary0_slice": np.asarray(acts[0]).ravel()[:4096].astype(np.float32),
+        "laplace": rng.laplace(0.0, 0.7, 4096).astype(np.float32),
+        "gauss_outliers": np.concatenate(
+            [rng.normal(0, 0.5, 4000), rng.normal(0, 8.0, 96)]
+        ).astype(np.float32),
+    }
+    for name, x in samples.items():
+        for q in ref.SUPPORTED_BITS:
+            s, zp, lo, hi = ref.naive_params(x, q)
+            naive_rt = ref.quant_roundtrip(x, s, zp, lo, hi)
+            alpha = ref.aciq_alpha(x, q)
+            b_star, ds_mse = ref.ds_aciq_b(x, q)
+            cases.append(
+                {
+                    "name": name,
+                    "q": q,
+                    "b_e": ref.laplace_b(x),
+                    "aciq_ratio": ref.ACIQ_RATIOS[q],
+                    "aciq_alpha": alpha,
+                    "naive_scale": float(s),
+                    "naive_zp": float(zp),
+                    "naive_mse": ref.mse(x, naive_rt),
+                    "aciq_mse": ref.mse(x, ref.quantize_aciq(x, q)),
+                    "ds_b_star": b_star,
+                    "ds_hist_mse": ds_mse,
+                    "pda_mse": ref.mse(x, ref.quantize_pda(x, q)),
+                }
+            )
+    # Exact-code vectors: tiny input, full expected codes, both modes.
+    x_small = np.array(
+        [-3.0, -1.5, -0.4, -0.05, 0.0, 0.02, 0.3, 0.9, 1.7, 4.2], np.float32
+    )
+    exact = []
+    for q in ref.SUPPORTED_BITS:
+        s, zp, lo, hi = ref.naive_params(x_small, q)
+        exact.append(
+            {
+                "q": q,
+                "mode": "naive",
+                "scale": float(s),
+                "zp": float(zp),
+                "lo": lo,
+                "hi": hi,
+                "codes": ref.quantize(x_small, s, zp, lo, hi).tolist(),
+            }
+        )
+        s2, zp2, lo2, hi2 = ref.symmetric_params(ref.aciq_alpha(x_small, q), q)
+        exact.append(
+            {
+                "q": q,
+                "mode": "aciq",
+                "scale": float(s2),
+                "zp": float(zp2),
+                "lo": lo2,
+                "hi": hi2,
+                "codes": ref.quantize(x_small, s2, zp2, lo2, hi2).tolist(),
+            }
+        )
+    return {"x_small": x_small.tolist(), "cases": cases, "exact": exact}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--microbatch", type=int, default=64)
+    ap.add_argument("--train-steps", type=int, default=600)
+    ap.add_argument("--eval-count", type=int, default=1920)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--untrained", action="store_true", help="skip training (tests only)")
+    args = ap.parse_args()
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    cfg = ViTConfig()
+    S = args.microbatch
+
+    # ---- weights -----------------------------------------------------------
+    if args.untrained:
+        params = init_params(cfg, seed=args.seed)
+    else:
+        params = load_or_train(cfg, out, steps=args.train_steps, seed=args.seed)
+    print(f"[aot] model: {param_count(params)/1e6:.2f}M params, "
+          f"{cfg.depth} blocks, {args.stages} stages, microbatch {S}")
+
+    # ---- stage HLOs --------------------------------------------------------
+    cuts = stage_cuts(cfg.depth, args.stages)
+    act_shape = (S, cfg.tokens, cfg.dim)
+    img_spec = jax.ShapeDtypeStruct((S, *cfg.img), jnp.float32)
+    act_spec = jax.ShapeDtypeStruct(act_shape, jnp.float32)
+    stages_meta = []
+    for s, (lo, hi) in enumerate(cuts):
+        first, last = s == 0, s == len(cuts) - 1
+        fn = stage_fn(cfg, params, lo, hi, first, last)
+        in_spec = img_spec if first else act_spec
+        text = to_hlo_text(fn, in_spec)
+        fname = f"stage_{s}.hlo.txt"
+        (out / fname).write_text(text)
+        out_shape = [S, cfg.classes] if last else list(act_shape)
+        stages_meta.append(
+            {
+                "file": fname,
+                "blocks": [lo, hi],
+                "first": first,
+                "last": last,
+                "in_shape": list(in_spec.shape),
+                "out_shape": out_shape,
+            }
+        )
+        print(f"[aot] wrote {fname} (blocks {lo}..{hi}, {len(text)} chars)")
+
+    # Full (unpartitioned) model — single-node baseline + quickstart.
+    full_text = to_hlo_text(lambda x: (forward(cfg, params, x),), img_spec)
+    (out / "model_full.hlo.txt").write_text(full_text)
+
+    # ---- quant kernel HLOs (one pair; bitwidth is runtime data) ------------
+    rows, cols = S * cfg.tokens, cfg.dim
+    f1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    x2d = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    c2d = jax.ShapeDtypeStruct((rows, cols), jnp.int32)
+    (out / "quantize.hlo.txt").write_text(
+        to_hlo_text(qk.quantize_fn_for_export(rows, cols), x2d, f1, f1, f1, f1)
+    )
+    (out / "dequantize.hlo.txt").write_text(
+        to_hlo_text(qk.dequantize_fn_for_export(rows, cols), c2d, f1, f1)
+    )
+    print(f"[aot] wrote quantize/dequantize HLO ({rows}x{cols})")
+
+    # ---- eval set -----------------------------------------------------------
+    n_eval = (args.eval_count // S) * S
+    ev_imgs, ev_labels = data.make_split(seed=777, n=n_eval)
+    write_eval_bin(out / "eval.bin", ev_imgs, ev_labels)
+    fp32_logits = np.asarray(forward(cfg, params, jnp.asarray(ev_imgs)))
+    fp32_acc = float((fp32_logits.argmax(-1) == ev_labels).mean())
+    print(f"[aot] eval set: {n_eval} images, fp32 top-1 = {fp32_acc*100:.2f}%")
+
+    # ---- calibration boundary activations (one microbatch) ------------------
+    calib_imgs, _ = data.make_split(seed=4242, n=S)
+    acts = [np.asarray(a) for a in
+            boundary_activations(cfg, params, jnp.asarray(calib_imgs), args.stages)]
+    write_calib_bin(out / "calib.bin", acts)
+
+    # ---- golden vectors ------------------------------------------------------
+    rng = np.random.default_rng(99)
+    (out / "golden.json").write_text(json.dumps(golden_vectors(acts, rng), indent=1))
+
+    # ---- manifest ------------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "model": {
+            "img": list(cfg.img),
+            "patch": cfg.patch,
+            "dim": cfg.dim,
+            "depth": cfg.depth,
+            "heads": cfg.heads,
+            "classes": cfg.classes,
+            "tokens": cfg.tokens,
+            "params": param_count(params),
+            "trained": not args.untrained,
+            "fp32_top1": fp32_acc,
+        },
+        "microbatch": S,
+        "activation_shape": list(act_shape),
+        "stages": stages_meta,
+        "full_model": {"file": "model_full.hlo.txt",
+                       "in_shape": [S, *cfg.img], "out_shape": [S, cfg.classes]},
+        "quant": {
+            "quantize": "quantize.hlo.txt",
+            "dequantize": "dequantize.hlo.txt",
+            "rows": rows,
+            "cols": cols,
+            "supported_bits": list(ref.SUPPORTED_BITS),
+            "aciq_ratios": {str(q): ref.ACIQ_RATIOS[q] for q in ref.SUPPORTED_BITS},
+        },
+        "eval": {"file": "eval.bin", "count": n_eval},
+        "calib": {"file": "calib.bin", "boundaries": len(acts)},
+        "golden": "golden.json",
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] manifest.json written to {out}")
+
+
+if __name__ == "__main__":
+    main()

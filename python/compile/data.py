@@ -1,0 +1,73 @@
+"""Synthetic fine-grained sparse-texture classification dataset.
+
+Stand-in for ImageNet (not available in the sandbox — see DESIGN.md
+§Substitutions). Design goals, each mapped to a property the paper's
+evaluation depends on:
+
+* **Shared sparse base texture** (high-amplitude content confined to a few
+  patches): token energies form a sparse/heavy-tailed mixture, so trained
+  boundary activations are leptokurtic at the early cut — the activation
+  regime ACIQ/DS-ACIQ target (Fig 3/4).
+* **Per-image contrast mixture** (log-uniform gain): natural images vary
+  widely in dynamic range; the pooled activation distribution becomes a
+  scale mixture with outliers, which is what breaks naive min/max PTQ.
+* **Fine-grained classes** (100 classes = shared base + small dense
+  class-specific detail): decision margins are small relative to
+  activation magnitude, so low-bitwidth quantization noise actually costs
+  accuracy — the hardness axis Table 1 needs (fp32 lands ≈ 92-95%).
+
+All randomness is seeded so `make artifacts` is reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG_H, IMG_W, IMG_C = 32, 32, 3
+NUM_CLASSES = 100
+BASE_PATCHES = 6       # how many of the 16 patches carry the base texture
+BASE_AMP = 2.5         # base texture amplitude
+DETAIL_AMP = 0.5       # class-specific detail amplitude (the fine-grained signal)
+NOISE = 1.0            # per-pixel Gaussian noise sigma
+GAIN_RANGE = (0.25, 4.0)  # per-image contrast, log-uniform
+
+
+def make_prototypes(seed: int = 0) -> np.ndarray:
+    """Fixed class prototypes, shape (NUM_CLASSES, H, W, C): one shared
+    sparse base texture + a small dense class-specific detail field."""
+    rng = np.random.default_rng(seed)
+    base = np.zeros((IMG_H, IMG_W, IMG_C), np.float32)
+    pids = rng.choice(16, size=BASE_PATCHES, replace=False)
+    for p in pids:
+        r, c = (p // 4) * 8, (p % 4) * 8
+        base[r : r + 8, c : c + 8, :] = rng.normal(0, BASE_AMP, (8, 8, IMG_C))
+    protos = np.zeros((NUM_CLASSES, IMG_H, IMG_W, IMG_C), np.float32)
+    for k in range(NUM_CLASSES):
+        detail = rng.normal(0, DETAIL_AMP, (IMG_H, IMG_W, IMG_C)).astype(np.float32)
+        protos[k] = base + detail
+    return protos
+
+
+def sample_batch(
+    rng: np.random.Generator,
+    protos: np.ndarray,
+    n: int,
+    noise: float = NOISE,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Draw n labelled images. Returns (images f32[n,H,W,C], labels i32[n])."""
+    ncls = protos.shape[0]
+    labels = rng.integers(0, ncls, size=n)
+    base = protos[labels]
+    eps = rng.normal(0.0, noise, size=base.shape).astype(np.float32)
+    # Per-image contrast (log-uniform): the scale-mixture driver.
+    logg = rng.uniform(np.log(GAIN_RANGE[0]), np.log(GAIN_RANGE[1]), size=(n, 1, 1, 1))
+    gain = np.exp(logg).astype(np.float32)
+    imgs = gain * (base + eps)
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+def make_split(seed: int, n: int, noise: float = NOISE):
+    """Deterministic dataset split (train/eval use disjoint seeds)."""
+    protos = make_prototypes()
+    rng = np.random.default_rng(seed)
+    return sample_batch(rng, protos, n, noise=noise)

@@ -1,0 +1,123 @@
+"""L1: Pallas kernels for the quantization hot-spot.
+
+The paper's compute hot-spot is the PDA module's quantize/dequantize of the
+boundary activation (everything else — histogram stats and the DS search —
+is control-path work that runs only on recalibration).
+
+Both kernels are a single fused elementwise pass:
+
+  quantize  : codes = clamp(round(x / scale + zp), lo, hi)      f32 -> i32
+  dequantize: x_hat = (codes - zp) * scale                      i32 -> f32
+
+The affine form with runtime (scale, zp, lo, hi) covers every method in the
+paper with ONE compiled executable each:
+  * naive PTQ      : zp = -xmin/scale rounded, [lo,hi] = [0, 2^q-1]
+  * ACIQ / DS-ACIQ : zp = 0, [lo,hi] = [-2^{q-1}, 2^{q-1}-1], scale = a/2^{q-1}
+Bitwidth changes at runtime are therefore *data*, not recompiles — the key
+property the adaptive controller needs.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the kernel is
+bandwidth-bound elementwise work, so the TPU mapping is a (block_rows, 128)
+VMEM tile pipeline over the (tokens*batch, dim) activation; no MXU. Lowered
+with interpret=True for CPU-PJRT execution (Mosaic custom-calls cannot run
+on the CPU plugin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128  # TPU lane width; dim=128 activations map 1:1 onto lanes.
+
+
+def pick_block_rows(rows: int, target: int = 128) -> int:
+    """Largest divisor of `rows` that is <= target (so the grid tiles the
+    input exactly; hypothesis feeds odd shapes)."""
+    best = 1
+    for d in range(1, min(rows, target) + 1):
+        if rows % d == 0:
+            best = d
+    return best
+
+
+def _scalar_spec():
+    # Every grid step sees the same (1,) parameter block.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _quant_kernel(x_ref, scale_ref, zp_ref, lo_ref, hi_ref, o_ref):
+    x = x_ref[...]
+    inv = 1.0 / scale_ref[0]
+    codes = jnp.round(x * inv + zp_ref[0])
+    codes = jnp.clip(codes, lo_ref[0], hi_ref[0])
+    o_ref[...] = codes.astype(jnp.int32)
+
+
+def _dequant_kernel(c_ref, scale_ref, zp_ref, o_ref):
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (c - zp_ref[0]) * scale_ref[0]
+
+
+def quantize(x, scale, zp, lo, hi, *, block_rows: int | None = None):
+    """Pallas quantize over a 2-D activation (rows, cols). scale/zp/lo/hi
+    are shape-(1,) f32 arrays (runtime data)."""
+    rows, cols = x.shape
+    br = block_rows or pick_block_rows(rows)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            _scalar_spec(),
+            _scalar_spec(),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        interpret=True,
+    )(x, scale, zp, lo, hi)
+
+
+def dequantize(codes, scale, zp, *, block_rows: int | None = None):
+    """Pallas dequantize: i32 codes -> f32 reconstruction."""
+    rows, cols = codes.shape
+    br = block_rows or pick_block_rows(rows)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(codes, scale, zp)
+
+
+def quantize_fn_for_export(rows: int, cols: int):
+    """Tuple-returning wrapper for AOT lowering (see aot.py)."""
+
+    def fn(x, scale, zp, lo, hi):
+        return (quantize(x, scale, zp, lo, hi),)
+
+    return fn
+
+
+def dequantize_fn_for_export(rows: int, cols: int):
+    def fn(codes, scale, zp):
+        return (dequantize(codes, scale, zp),)
+
+    return fn
+
+
+def vmem_bytes(block_rows: int, cols: int) -> int:
+    """VMEM footprint estimate for one grid step (in + out tiles + params),
+    used by the DESIGN.md §Perf roofline discussion."""
+    return block_rows * cols * 4 * 2 + 4 * 4

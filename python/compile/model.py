@@ -1,0 +1,214 @@
+"""L2: ViT-Tiny-synthetic in pure JAX, partitioned into pipeline shards.
+
+The model mirrors the layer-wise concatenated structure the paper exploits
+(§2: ViT "has a layer-wise concatenated structure without inter-layer
+connections, making it suitable to be partitioned by the layer boundaries").
+
+Shards:
+  stage 0   : patch embed (+pos embed) + blocks[0 .. c0)
+  stage i   : blocks[c_{i-1} .. c_i)
+  stage n-1 : blocks[.. L) + final LayerNorm + mean-pool + linear head
+
+Every inter-stage boundary activation has the same shape (B, T, D), which is
+what QuantPipe quantizes on the wire. Weights are baked into each shard's
+HLO as constants at AOT time — the rust runtime feeds activations only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    img: tuple[int, int, int] = (32, 32, 3)
+    patch: int = 8
+    dim: int = 128
+    depth: int = 8
+    heads: int = 4
+    mlp_ratio: int = 2
+    classes: int = 100
+
+    @property
+    def tokens(self) -> int:
+        return (self.img[0] // self.patch) * (self.img[1] // self.patch)
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.img[2]
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.dim * self.mlp_ratio
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ViTConfig, seed: int = 0) -> dict:
+    """Initialise all weights as a flat dict of jnp arrays."""
+    rng = np.random.default_rng(seed)
+
+    def dense(fan_in, fan_out):
+        w = rng.normal(0.0, (2.0 / (fan_in + fan_out)) ** 0.5, (fan_in, fan_out))
+        return w.astype(np.float32), np.zeros(fan_out, np.float32)
+
+    p: dict[str, np.ndarray] = {}
+    p["embed.w"], p["embed.b"] = dense(cfg.patch_dim, cfg.dim)
+    p["pos"] = (rng.normal(0, 0.02, (cfg.tokens, cfg.dim))).astype(np.float32)
+    for i in range(cfg.depth):
+        pre = f"block{i}."
+        p[pre + "ln1.g"] = np.ones(cfg.dim, np.float32)
+        p[pre + "ln1.b"] = np.zeros(cfg.dim, np.float32)
+        p[pre + "qkv.w"], p[pre + "qkv.b"] = dense(cfg.dim, 3 * cfg.dim)
+        p[pre + "proj.w"], p[pre + "proj.b"] = dense(cfg.dim, cfg.dim)
+        p[pre + "ln2.g"] = np.ones(cfg.dim, np.float32)
+        p[pre + "ln2.b"] = np.zeros(cfg.dim, np.float32)
+        p[pre + "fc1.w"], p[pre + "fc1.b"] = dense(cfg.dim, cfg.mlp_dim)
+        p[pre + "fc2.w"], p[pre + "fc2.b"] = dense(cfg.mlp_dim, cfg.dim)
+    p["ln_f.g"] = np.ones(cfg.dim, np.float32)
+    p["ln_f.b"] = np.zeros(cfg.dim, np.float32)
+    p["head.w"], p["head.b"] = dense(cfg.dim, cfg.classes)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def param_count(params: dict) -> int:
+    return sum(int(np.prod(v.shape)) for v in params.values())
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def patchify(cfg: ViTConfig, imgs):
+    """(B,H,W,C) -> (B,T,patch_dim)."""
+    B = imgs.shape[0]
+    ph = pw = cfg.patch
+    gh, gw = cfg.img[0] // ph, cfg.img[1] // pw
+    x = imgs.reshape(B, gh, ph, gw, pw, cfg.img[2])
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, gh * gw, ph * pw * cfg.img[2])
+
+
+def embed(cfg: ViTConfig, p: dict, imgs):
+    x = patchify(cfg, imgs)
+    x = x @ p["embed.w"] + p["embed.b"]
+    return x + p["pos"]
+
+
+def attention(cfg: ViTConfig, p: dict, pre: str, x):
+    B, T, D = x.shape
+    h, hd = cfg.heads, cfg.dim // cfg.heads
+    qkv = x @ p[pre + "qkv.w"] + p[pre + "qkv.b"]
+    qkv = qkv.reshape(B, T, 3, h, hd).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    att = (q @ k.transpose(0, 1, 3, 2)) / (hd**0.5)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ p[pre + "proj.w"] + p[pre + "proj.b"]
+
+
+def block(cfg: ViTConfig, p: dict, i: int, x):
+    pre = f"block{i}."
+    x = x + attention(cfg, p, pre, layer_norm(x, p[pre + "ln1.g"], p[pre + "ln1.b"]))
+    h = layer_norm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+    h = jax.nn.gelu(h @ p[pre + "fc1.w"] + p[pre + "fc1.b"])
+    return x + h @ p[pre + "fc2.w"] + p[pre + "fc2.b"]
+
+
+def head(cfg: ViTConfig, p: dict, x):
+    x = layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    return x.mean(axis=1) @ p["head.w"] + p["head.b"]
+
+
+def forward(cfg: ViTConfig, p: dict, imgs):
+    """Full model: images -> logits (B, classes)."""
+    x = embed(cfg, p, imgs)
+    for i in range(cfg.depth):
+        x = block(cfg, p, i, x)
+    return head(cfg, p, x)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline partitioning
+# ---------------------------------------------------------------------------
+
+def stage_cuts(depth: int, n_stages: int) -> list[tuple[int, int]]:
+    """Evenly partition `depth` blocks into `n_stages` contiguous ranges
+    (the paper partitions evenly via [15]'s algorithm; the rust side also
+    implements the cost-aware DP in partition/)."""
+    assert 1 <= n_stages <= depth
+    base, rem = divmod(depth, n_stages)
+    cuts, lo = [], 0
+    for s in range(n_stages):
+        hi = lo + base + (1 if s < rem else 0)
+        cuts.append((lo, hi))
+        lo = hi
+    return cuts
+
+
+def stage_fn(cfg: ViTConfig, p: dict, lo: int, hi: int, first: bool, last: bool):
+    """Build the callable for one shard; weights are captured (baked as HLO
+    constants at lowering time)."""
+
+    def fn(x):
+        if first:
+            x = embed(cfg, p, x)
+        for i in range(lo, hi):
+            x = block(cfg, p, i, x)
+        if last:
+            x = head(cfg, p, x)
+        return (x,)
+
+    return fn
+
+
+def forward_staged(cfg: ViTConfig, p: dict, imgs, n_stages: int):
+    """Reference: run the partitioned model stage by stage (used in tests to
+    prove partitioning is exact)."""
+    cuts = stage_cuts(cfg.depth, n_stages)
+    x = imgs
+    for s, (lo, hi) in enumerate(cuts):
+        fn = stage_fn(cfg, p, lo, hi, first=(s == 0), last=(s == len(cuts) - 1))
+        (x,) = fn(x)
+    return x
+
+
+def boundary_activations(cfg: ViTConfig, p: dict, imgs, n_stages: int):
+    """Activations at each inter-stage boundary (n_stages-1 tensors of shape
+    (B, T, D)). Used by aot.py to export calibration tensors and by the
+    Fig 3/4 analyses."""
+    cuts = stage_cuts(cfg.depth, n_stages)
+    x, outs = imgs, []
+    for s, (lo, hi) in enumerate(cuts):
+        fn = stage_fn(cfg, p, lo, hi, first=(s == 0), last=(s == len(cuts) - 1))
+        (x,) = fn(x)
+        if s != len(cuts) - 1:
+            outs.append(x)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Loss / accuracy (used by train.py)
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ViTConfig, p: dict, imgs, labels):
+    logits = forward(cfg, p, imgs)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(cfg: ViTConfig, p: dict, imgs, labels):
+    logits = forward(cfg, p, imgs)
+    return (jnp.argmax(logits, -1) == labels).mean()

@@ -1,0 +1,121 @@
+"""Build-time trainer for the ViT-Tiny-synthetic model.
+
+Hand-rolled Adam (optax is not available in the image). Runs once inside
+`make artifacts`; weights are cached in artifacts/weights.npz keyed by a
+config hash, so repeat builds are no-ops. Training takes ~30-60 s on CPU.
+
+The trained loss curve is logged to artifacts/train_log.csv and summarised
+in EXPERIMENTS.md — this is the "real small workload" of the end-to-end
+validation requirement (serving papers load a small *real* model; ours is
+real in the sense that it is trained to >90% top-1 on its task, not
+random-initialised).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import ViTConfig, accuracy, init_params, loss_fn, param_count
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in grads}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in grads}
+    tf = t.astype(jnp.float32)
+    new_p = {}
+    for k in params:
+        mhat = m[k] / (1 - b1**tf)
+        vhat = v[k] / (1 - b2**tf)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, {"m": m, "v": v, "t": t}
+
+
+def config_hash(cfg: ViTConfig, steps: int, seed: int) -> str:
+    blob = json.dumps({"cfg": dataclass_dict(cfg), "steps": steps, "seed": seed}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def dataclass_dict(cfg: ViTConfig) -> dict:
+    return {f: getattr(cfg, f) for f in cfg.__dataclass_fields__}
+
+
+def train(
+    cfg: ViTConfig,
+    steps: int = 600,
+    batch: int = 128,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_path: Path | None = None,
+    verbose: bool = True,
+) -> dict:
+    """Train from scratch; returns the trained params dict."""
+    params = init_params(cfg, seed=seed)
+    if verbose:
+        print(f"[train] ViT {param_count(params) / 1e6:.2f}M params, {steps} steps")
+    opt = adam_init(params)
+    protos = data.make_prototypes()
+    rng = np.random.default_rng(seed + 1)
+
+    @jax.jit
+    def step(p, o, imgs, labels):
+        loss, grads = jax.value_and_grad(lambda q: loss_fn(cfg, q, imgs, labels))(p)
+        p, o = adam_update(p, grads, o, lr)
+        return p, o, loss
+
+    log_rows = []
+    t0 = time.time()
+    for i in range(steps):
+        imgs, labels = data.sample_batch(rng, protos, batch)
+        params, opt, loss = step(params, opt, jnp.asarray(imgs), jnp.asarray(labels))
+        if i % 25 == 0 or i == steps - 1:
+            l = float(loss)
+            log_rows.append((i, l, time.time() - t0))
+            if verbose:
+                print(f"[train] step {i:4d} loss {l:.4f} ({time.time() - t0:.1f}s)")
+
+    # Held-out evaluation.
+    ev_imgs, ev_labels = data.make_split(seed=777, n=1024)
+    acc = float(accuracy(cfg, params, jnp.asarray(ev_imgs), jnp.asarray(ev_labels)))
+    if verbose:
+        print(f"[train] held-out top-1 = {acc * 100:.2f}%")
+    if log_path is not None:
+        with open(log_path, "w") as f:
+            f.write("step,loss,seconds\n")
+            for r in log_rows:
+                f.write(f"{r[0]},{r[1]:.6f},{r[2]:.2f}\n")
+            f.write(f"# held-out top-1 = {acc * 100:.2f}%\n")
+    return params
+
+
+def load_or_train(cfg: ViTConfig, artifacts: Path, steps: int = 600, seed: int = 0) -> dict:
+    """Cache-aware entrypoint used by aot.py."""
+    artifacts.mkdir(parents=True, exist_ok=True)
+    h = config_hash(cfg, steps, seed)
+    cache = artifacts / "weights.npz"
+    meta = artifacts / "weights.meta.json"
+    if cache.exists() and meta.exists():
+        try:
+            if json.loads(meta.read_text())["hash"] == h:
+                print(f"[train] cache hit ({cache})")
+                loaded = np.load(cache)
+                return {k: jnp.asarray(loaded[k]) for k in loaded.files}
+        except Exception:
+            pass
+    params = train(cfg, steps=steps, seed=seed, log_path=artifacts / "train_log.csv")
+    np.savez(cache, **{k: np.asarray(v) for k, v in params.items()})
+    meta.write_text(json.dumps({"hash": h}))
+    return params

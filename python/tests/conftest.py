@@ -1,0 +1,5 @@
+import sys
+from pathlib import Path
+
+# Tests run as `cd python && pytest tests/` — make `compile` importable.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

@@ -1,0 +1,106 @@
+# pytest: Pallas kernel vs pure-numpy oracle — the CORE correctness signal.
+#
+# hypothesis sweeps shapes and quantization parameter regimes; every case
+# asserts the Pallas (interpret=True) kernel matches ref.py bit-for-bit on
+# codes and allclose on reconstructions.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import quant as qk
+from compile.kernels import ref
+
+
+def run_quant_pallas(x, scale, zp, lo, hi):
+    s = lambda v: jnp.asarray([v], jnp.float32)
+    return np.asarray(qk.quantize(jnp.asarray(x), s(scale), s(zp), s(lo), s(hi)))
+
+
+def run_dequant_pallas(codes, scale, zp):
+    s = lambda v: jnp.asarray([v], jnp.float32)
+    return np.asarray(qk.dequantize(jnp.asarray(codes, jnp.int32), s(scale), s(zp)))
+
+
+shapes = st.tuples(st.integers(1, 96), st.sampled_from([1, 3, 8, 32, 128]))
+bits = st.sampled_from(ref.SUPPORTED_BITS)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=shapes, q=bits, seed=st.integers(0, 2**31 - 1), sigma=st.floats(0.01, 10.0))
+def test_quantize_naive_matches_ref(shape, q, seed, sigma):
+    rng = np.random.default_rng(seed)
+    x = rng.laplace(0.0, sigma, shape).astype(np.float32)
+    scale, zp, lo, hi = ref.naive_params(x, q)
+    want = ref.quantize(x, scale, zp, lo, hi)
+    got = run_quant_pallas(x, scale, zp, lo, hi)
+    # round-half tie behaviour can differ by 1 code at exact .5 boundaries
+    diff = np.abs(got - want)
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.02  # ties are rare for continuous data
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=shapes, q=bits, seed=st.integers(0, 2**31 - 1), sigma=st.floats(0.01, 10.0))
+def test_quantize_symmetric_matches_ref(shape, q, seed, sigma):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, sigma, shape).astype(np.float32)
+    alpha = ref.aciq_alpha(x, q)
+    scale, zp, lo, hi = ref.symmetric_params(alpha, q)
+    want = ref.quantize(x, scale, zp, lo, hi)
+    got = run_quant_pallas(x, scale, zp, lo, hi)
+    diff = np.abs(got - want)
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.02
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=shapes, q=bits, seed=st.integers(0, 2**31 - 1))
+def test_dequantize_matches_ref(shape, q, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (q - 1)), (1 << (q - 1)) - 1
+    codes = rng.integers(lo, hi + 1, shape).astype(np.int32)
+    scale, zp = 0.173, 0.0
+    want = ref.dequantize(codes, scale, zp)
+    got = run_dequant_pallas(codes, scale, zp)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, q=bits, seed=st.integers(0, 2**31 - 1))
+def test_roundtrip_error_bounded(shape, q, seed):
+    """Reconstruction error inside the representable range [lo*s, hi*s] is
+    bounded by scale/2; values beyond it clamp to the range edge."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 1.0, shape).astype(np.float32)
+    alpha = float(np.abs(x).max()) + 1e-3
+    scale, zp, lo, hi = ref.symmetric_params(alpha, q)
+    codes = run_quant_pallas(x, scale, zp, lo, hi)
+    xh = run_dequant_pallas(codes, scale, zp)
+    rep_lo, rep_hi = lo * scale, hi * scale
+    inside = (x >= rep_lo) & (x <= rep_hi)
+    assert np.abs(xh[inside] - x[inside]).max(initial=0.0) <= scale / 2 + 1e-6
+    assert np.all(np.abs(xh[~inside] - rep_hi) < scale + 1e-6) or np.all(
+        np.abs(xh[~inside] - rep_lo) < scale + 1e-6
+    )
+
+
+def test_quantize_codes_in_range():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 5.0, (64, 128)).astype(np.float32)
+    for q in ref.SUPPORTED_BITS:
+        scale, zp, lo, hi = ref.symmetric_params(0.5, q)  # deliberately tight clip
+        codes = run_quant_pallas(x, scale, zp, lo, hi)
+        assert codes.min() >= lo and codes.max() <= hi
+
+
+def test_pick_block_rows_divides():
+    for rows in [1, 7, 64, 96, 1000, 1024]:
+        br = qk.pick_block_rows(rows)
+        assert rows % br == 0 and 1 <= br <= 128
+
+
+def test_vmem_budget():
+    # One grid step must fit comfortably in a 16 MB VMEM budget.
+    assert qk.vmem_bytes(128, 128) < 16 * 2**20 // 8

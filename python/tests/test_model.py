@@ -1,0 +1,114 @@
+# Model/partitioning correctness: staged execution must equal the full
+# forward pass exactly (pipelining must not change semantics), and the
+# synthetic task must be learnable enough to carry an accuracy axis.
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import data
+from compile.model import (
+    ViTConfig,
+    boundary_activations,
+    forward,
+    forward_staged,
+    init_params,
+    param_count,
+    stage_cuts,
+)
+
+CFG = ViTConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    imgs, labels = data.make_split(seed=123, n=8)
+    return jnp.asarray(imgs), np.asarray(labels)
+
+
+def test_param_count_about_1m(params):
+    n = param_count(params)
+    assert 0.5e6 < n < 3e6
+
+
+@pytest.mark.parametrize("n_stages", [1, 2, 3, 4, 8])
+def test_staged_equals_full(params, batch, n_stages):
+    imgs, _ = batch
+    full = forward(CFG, params, imgs)
+    staged = forward_staged(CFG, params, imgs, n_stages)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(staged), rtol=2e-5, atol=2e-5)
+
+
+def test_stage_cuts_cover_all_blocks():
+    for depth in (4, 8, 12):
+        for n in range(1, depth + 1):
+            cuts = stage_cuts(depth, n)
+            assert cuts[0][0] == 0 and cuts[-1][1] == depth
+            for (a, b), (c, d) in zip(cuts, cuts[1:]):
+                assert b == c and b > a
+            sizes = [b - a for a, b in cuts]
+            assert max(sizes) - min(sizes) <= 1  # even partition
+
+
+def test_boundary_activation_shapes(params, batch):
+    imgs, _ = batch
+    acts = boundary_activations(CFG, params, imgs, 4)
+    assert len(acts) == 3
+    for a in acts:
+        assert a.shape == (8, CFG.tokens, CFG.dim)
+
+
+def test_logit_shape(params, batch):
+    imgs, _ = batch
+    logits = forward(CFG, params, imgs)
+    assert logits.shape == (8, CFG.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_dataset_deterministic():
+    a_imgs, a_labels = data.make_split(seed=42, n=16)
+    b_imgs, b_labels = data.make_split(seed=42, n=16)
+    np.testing.assert_array_equal(a_imgs, b_imgs)
+    np.testing.assert_array_equal(a_labels, b_labels)
+
+
+def test_dataset_learnable_by_linear_probe():
+    """Sanity: class prototypes are separable — nearest-prototype accuracy
+    far above chance (1%), so a trained ViT has signal to learn. It must
+    not be trivially easy either (fine-grained classes share a base)."""
+    protos = data.make_prototypes()
+    rng = np.random.default_rng(9)
+    imgs, labels = data.sample_batch(rng, protos, 512)
+    flat_p = protos.reshape(data.NUM_CLASSES, -1)
+    flat_x = imgs.reshape(512, -1)
+    # Cosine nearest-prototype classification.
+    fp = flat_p / np.linalg.norm(flat_p, axis=1, keepdims=True)
+    fx = flat_x / np.linalg.norm(flat_x, axis=1, keepdims=True)
+    pred = (fx @ fp.T).argmax(1)
+    acc = (pred == labels).mean()
+    assert acc > 0.2, f"probe accuracy {acc} too close to chance"
+
+
+def test_dataset_images_heavy_tailed():
+    """The contrast mixture + sparse base make image statistics
+    leptokurtic — the premise for heavy-tailed activations (Fig 3/4)."""
+    imgs, _ = data.make_split(seed=11, n=256)
+    x = imgs.ravel()
+    kurt = ((x - x.mean()) ** 4).mean() / (x.std() ** 4) - 3
+    assert kurt > 2.0, f"excess kurtosis {kurt}"
+
+
+def test_activation_distribution_long_tailed(params):
+    """The premise of Fig 3: boundary activations have outliers, so the
+    naive min/max range is much wider than the bulk of the data."""
+    imgs, _ = data.make_split(seed=55, n=16)
+    acts = boundary_activations(CFG, params, jnp.asarray(imgs), 4)
+    for a in acts:
+        a = np.asarray(a).ravel()
+        assert np.abs(a).max() > 6 * np.abs(a).std()

@@ -1,0 +1,138 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. controller policy: Eq. 2 (power-of-two) vs bitwidth ladder;
+//! 2. calibration cadence: per-microbatch vs amortized (calib_every);
+//! 3. monitor window length: reaction latency vs stability;
+//! 4. hysteresis margin: flapping vs responsiveness.
+//!
+//! All run on mock stages with a shaped link (the ablations isolate the
+//! L3 control plane; model compute is irrelevant here and mocks keep the
+//! suite fast).
+
+use quantpipe::adapt::{AdaptConfig, Policy};
+use quantpipe::benchkit::{section, Table};
+use quantpipe::data::EvalSet;
+use quantpipe::net::link::SimLink;
+use quantpipe::net::mbps;
+use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::pipeline::{mock_stage_factory, run, LinkQuant, PipelineSpec, Workload};
+use quantpipe::quant::Method;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn eval_set(count: usize, dim: usize) -> Arc<EvalSet> {
+    // one-hot rows: passthrough mock stages keep argmax = label.
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..count {
+        let lab = i % dim;
+        for c in 0..dim {
+            images.push(if c == lab { 1.0 } else { 0.0 });
+        }
+        labels.push(lab as u32);
+    }
+    Arc::new(EvalSet { images, labels, count, dims: (1, 1, dim) })
+}
+
+const DIM: usize = 256;
+const S: usize = 16;
+
+fn spec(
+    trace: BandwidthTrace,
+    policy: Policy,
+    window: u64,
+    calib_every: u32,
+    raise_margin: f64,
+    target: f64,
+) -> PipelineSpec {
+    PipelineSpec {
+        stages: (0..2)
+            .map(|_| mock_stage_factory(1.0, 0.0, vec![S, DIM], Duration::from_micros(200)))
+            .collect(),
+        links: vec![Arc::new(SimLink::new(trace))],
+        quant: LinkQuant { method: Method::Pda, calib_every, initial_bits: 32 },
+        adapt: Some(AdaptConfig { target_rate: target, microbatch: S, policy, raise_margin }),
+        window,
+        inflight: 2,
+    }
+}
+
+fn main() -> quantpipe::Result<()> {
+    let eval = eval_set(S * 16, DIM);
+    // Frame @32-bit ≈ S*DIM*4 B = 16 KB; step the capacity so compression
+    // requirements move through the ladder mid-run.
+    let dynamic = BandwidthTrace::from_points(&[
+        (0.0, mbps(40.0)),
+        (2.0, mbps(4.0)),
+        (4.0, mbps(12.0)),
+    ]);
+    let target = 2000.0; // img/s -> 8 ms budget/microbatch -> 16.4 Mb/s at fp32
+
+    section("ablation 1: Eq.2 policy vs bitwidth ladder");
+    let mut t = Table::new(&["policy", "throughput", "bits seq", "mean bytes/mb"]);
+    for (name, policy) in [("eq2", Policy::Eq2), ("ladder", Policy::Ladder)] {
+        let r = run(
+            spec(dynamic.clone(), policy, 8, 1, 1.1, target),
+            Workload::repeat(eval.clone(), S, 600),
+        )?;
+        t.row(&[
+            name.into(),
+            format!("{:.0} img/s", r.throughput),
+            format!("{:?}", r.timeline.bits_sequence(0)),
+            format!("{:.0}", r.link0_mean_bytes),
+        ]);
+    }
+    t.print();
+    println!("expected: ladder visits 6-bit and holds higher widths (better accuracy headroom);");
+    println!("eq2 snaps to powers of two (coarser, sometimes over-compresses).");
+
+    section("ablation 2: calibration cadence (calib_every)");
+    let mut t = Table::new(&["calib_every", "throughput", "accuracy"]);
+    for ce in [1u32, 10, 50] {
+        let r = run(
+            spec(BandwidthTrace::constant(mbps(6.0)), Policy::Ladder, 8, ce, 1.1, target),
+            Workload::repeat(eval.clone(), S, 400),
+        )?;
+        t.row(&[
+            format!("{ce}"),
+            format!("{:.0} img/s", r.throughput),
+            format!("{:.1}%", r.accuracy * 100.0),
+        ]);
+    }
+    t.print();
+    println!("expected: amortized calibration trades (tiny) accuracy for less control-path work;");
+    println!("with stationary inputs the accuracy cost is ≈0 — the knob matters under drift.");
+
+    section("ablation 3: window length (reaction vs stability)");
+    let mut t = Table::new(&["window", "decisions", "bits seq", "throughput"]);
+    for w in [4u64, 16, 64] {
+        let r = run(
+            spec(dynamic.clone(), Policy::Ladder, w, 1, 1.1, target),
+            Workload::repeat(eval.clone(), S, 600),
+        )?;
+        t.row(&[
+            format!("{w}"),
+            format!("{}", r.timeline.points.len()),
+            format!("{:?}", r.timeline.bits_sequence(0)),
+            format!("{:.0} img/s", r.throughput),
+        ]);
+    }
+    t.print();
+    println!("expected: short windows react fast but wobble; long windows are stable but slow");
+    println!("to recover after each capacity step (the paper's 'measurement latency').");
+
+    section("ablation 4: hysteresis raise-margin");
+    let mut t = Table::new(&["margin", "bits changes", "bits seq"]);
+    for m in [1.0f64, 1.1, 1.5] {
+        let r = run(
+            spec(dynamic.clone(), Policy::Ladder, 8, 1, m, target),
+            Workload::repeat(eval.clone(), S, 600),
+        )?;
+        let seq = r.timeline.bits_sequence(0);
+        t.row(&[format!("{m}"), format!("{}", seq.len()), format!("{seq:?}")]);
+    }
+    t.print();
+    println!("expected: larger margins suppress flapping at capacity boundaries at the cost");
+    println!("of holding lower bitwidths (≈ lower accuracy) slightly longer.");
+    Ok(())
+}

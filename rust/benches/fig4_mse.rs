@@ -1,0 +1,69 @@
+//! Fig 4 reproduction: estimated distribution with and without directed
+//! search at partition boundaries (paper: blocks 4 and 6).
+//!
+//! The figure's claim: the Laplace fit from the moment estimate `b_E`
+//! misses the real histogram; the directed search finds `b*` whose density
+//! matches far better — "DS-ACIQ decreases the MSE by around 50%". We
+//! report the Eq. 1 density-fit MSE at `b_E` vs `b*` for every boundary
+//! (real calibration activations) plus controlled mixtures that exhibit
+//! the estimated-vs-real gap strongly.
+
+use quantpipe::benchkit::{load_artifacts, section, Table};
+use quantpipe::data::load_calib;
+use quantpipe::quant::ds_aciq::{ds_aciq_b, DEFAULT_STEPS};
+use quantpipe::quant::{aciq, calibrate, uniform, Method};
+use quantpipe::util::rng::Rng;
+
+fn report_row(table: &mut Table, name: &str, x: &[f32]) {
+    let r = ds_aciq_b(x, 2, DEFAULT_STEPS);
+    let m_aciq = uniform::quant_mse(x, &calibrate(x, Method::Aciq, 2));
+    let m_ds = uniform::quant_mse(x, &calibrate(x, Method::DsAciq, 2));
+    table.row(&[
+        name.to_string(),
+        format!("{:.4}", r.b_e),
+        format!("{:.4}", r.b_r),
+        format!("{:.4}", r.b_star),
+        format!("{:.3e}", r.fit_mse_e),
+        format!("{:.3e}", r.fit_mse_star),
+        format!("{:.1}%", r.improvement() * 100.0),
+        format!("{:.4}", m_aciq),
+        format!("{:.4}", m_ds),
+    ]);
+}
+
+fn main() -> quantpipe::Result<()> {
+    let (manifest, dir, _eval) = load_artifacts()?;
+    let tensors = load_calib(dir.join(&manifest.calib.file))?;
+
+    section("Fig 4: Eq.1 density-fit MSE, ACIQ estimate (b_E) vs directed search (b*)");
+    let mut table = Table::new(&[
+        "tensor", "b_E", "b_R", "b*", "fit(b_E)", "fit(b*)", "fit-impr", "qMSE aciq", "qMSE ds",
+    ]);
+    for (i, t) in tensors.iter().enumerate() {
+        report_row(
+            &mut table,
+            &format!("boundary {} (block {})", i, manifest.stages[i].blocks[1]),
+            &t.data,
+        );
+    }
+
+    // Controlled estimated-vs-real-gap distributions (the Fig 4 mechanism
+    // in isolation): sharp bulk + wide tail ⇒ moment estimate overshoots.
+    let mut rng = Rng::seed(17);
+    let mut mix = rng.laplace_vec(80000, 0.1);
+    mix.extend(rng.laplace_vec(8000, 2.0));
+    report_row(&mut table, "peaked mixture (synthetic)", &mix);
+
+    let mut gaussmix = rng.gaussian_vec(60000, 0.2);
+    gaussmix.extend(rng.gaussian_vec(6000, 3.0));
+    report_row(&mut table, "gauss scale-mixture", &gaussmix);
+
+    let pure = rng.laplace_vec(60000, 1.0);
+    report_row(&mut table, "pure laplace (control)", &pure);
+
+    table.print();
+    println!("\nshape check: on gap distributions the fit improves ~50% or more and");
+    println!("b* < b_E (tighter clip); on the pure-Laplace control DS barely moves b.");
+    println!("Also sanity: aciq::ratio(2) = {:.3} (paper/Banner: 2.83).", aciq::ratio(2));
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Fig 5 reproduction: QuantPipe adapting the bitwidth to unannounced
+//! bandwidth changes over five phases.
+//!
+//! Protocol (paper §4.2): the link between stage1 and stage2 is re-shaped
+//! at phase boundaries; the controller sees only its own window
+//! measurements. Tracks reported per window: measured bandwidth, output
+//! rate, bitwidth, link utilization + the model-accuracy track.
+//!
+//! **Bandwidth scaling** (DESIGN.md §Substitutions): the paper's absolute
+//! Mbps values encode *their* testbed's compute:communication ratio
+//! (ViT-Base on Jetson ≈ 100 img/s vs our ViT-Tiny ≈ 1.4k img/s). We keep
+//! the paper's *shape* — nominal → mild constraint (16-bit) → severe
+//! (2-bit) → partial recovery (8-bit) → nominal — by deriving each phase's
+//! capacity from the measured compute ceiling and Eq. 2's own thresholds:
+//! `B_min(q) = full_bits·(q/32) / (S/R)`.
+
+use quantpipe::adapt::AdaptConfig;
+use quantpipe::benchkit::{hlo_spec, load_artifacts, section, Table};
+use quantpipe::config::Config;
+use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::pipeline::{run, LinkQuant, Workload};
+use quantpipe::quant::Method;
+
+fn main() -> quantpipe::Result<()> {
+    let (manifest, dir, eval) = load_artifacts()?;
+    let mut cfg = Config::default();
+
+    // Window scaled down (50 → 10) together with phase length (200 → 60
+    // microbatches) to keep the bench minutes-scale; ratios preserved.
+    let window = 10u64;
+    let phase_mb = 60u64;
+    cfg.adapt.window = window;
+    let n_links = manifest.stages.len() - 1;
+    let s = manifest.microbatch;
+    let total = 5 * phase_mb;
+
+    // Nominal compute ceiling from per-stage compute times (steady state).
+    let probe = hlo_spec(
+        &manifest, &dir, &cfg,
+        vec![BandwidthTrace::unlimited(); n_links],
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        None,
+    );
+    let probe_rep = run(probe, Workload::repeat(eval.clone(), s, 30))?;
+    let max_stage = probe_rep
+        .stage_compute_s
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max)
+        .max(1e-6);
+    let nominal = s as f64 / max_stage;
+    let target = nominal * 0.75;
+
+    // Eq.2 threshold: capacity needed to hold bitwidth q at target rate.
+    let full_bits = manifest.activation_shape.iter().product::<usize>() as f64 * 32.0;
+    let budget_secs = s as f64 / target;
+    let b_min = |q: f64| full_bits * (q / 32.0) / budget_secs;
+
+    // Phases: nominal → just under the 32-bit threshold (→16) → just above
+    // the 2-bit threshold (→2) → between 8- and 16-bit thresholds (→8) →
+    // nominal. Same qualitative schedule as the paper's ∞/400/50/200/∞.
+    let p1 = b_min(32.0) * 0.85;
+    let p2 = b_min(2.0) * 1.15;
+    let p3 = b_min(8.0) * 1.2;
+
+    // Phase wall-clock: time for phase_mb microbatches at the SLOWEST
+    // phase (p2 at 2-bit ≈ budget-limited) with margin.
+    let phase_secs = budget_secs * phase_mb as f64 * 1.3;
+
+    section("Fig 5: adaptivity to dynamic bandwidth (five phases)");
+    println!(
+        "nominal {:.0} img/s, target R = {:.0} img/s, window {window} mb, phase ≈ {phase_secs:.1}s",
+        nominal, target
+    );
+    println!(
+        "phase capacities (scaled to this testbed): inf / {:.0} / {:.1} / {:.0} Mbps / inf",
+        p1 / 1e6,
+        p2 / 1e6,
+        p3 / 1e6
+    );
+
+    let mut traces = vec![BandwidthTrace::unlimited(); n_links];
+    traces[0] = BandwidthTrace::from_points(&[
+        (0.0, f64::INFINITY),
+        (phase_secs, p1),
+        (2.0 * phase_secs, p2),
+        (3.0 * phase_secs, p3),
+        (4.0 * phase_secs, f64::INFINITY),
+    ]);
+
+    let adapt = AdaptConfig {
+        target_rate: target,
+        microbatch: s,
+        policy: quantpipe::adapt::Policy::Ladder,
+        raise_margin: 1.1,
+    };
+    let spec = hlo_spec(
+        &manifest, &dir, &cfg,
+        traces,
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        Some(adapt),
+    );
+    let report = run(spec, Workload::repeat(eval.clone(), s, total))?;
+
+    let mut table = Table::new(&["t(s)", "bw meas (Mbps)", "rate (img/s)", "bits", "util"]);
+    for p in report.timeline.points.iter().filter(|p| p.stage == 0) {
+        table.row(&[
+            format!("{:.1}", p.t),
+            if p.bandwidth_bps.is_infinite() {
+                "inf".into()
+            } else {
+                format!("{:.1}", p.bandwidth_bps / 1e6)
+            },
+            format!("{:.0}", p.rate),
+            format!("{}", p.bits),
+            format!("{:.2}", p.util),
+        ]);
+    }
+    table.print();
+
+    println!("\nbitwidth sequence (link 0): {:?}", report.timeline.bits_sequence(0));
+    println!(
+        "overall throughput {:.1} img/s, accuracy {:.2}%",
+        report.throughput,
+        report.accuracy * 100.0
+    );
+    print!("window accuracy track: ");
+    for (t, a) in &report.window_accuracy {
+        print!("({t:.0}s {:.0}%) ", a * 100.0);
+    }
+    println!();
+    std::fs::write("fig5_timeline.csv", report.timeline.to_csv())?;
+    println!("timeline -> fig5_timeline.csv");
+    println!("\npaper's track: 32 → 16 → 2 → 6 → 8 → 32 with the rate recovering each phase.");
+    Ok(())
+}

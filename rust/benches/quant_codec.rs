@@ -1,0 +1,118 @@
+//! Hot-path microbenchmarks: quantize/dequantize (native vs AOT-Pallas
+//! HLO), bit pack/unpack, calibration (including the DS search), end-to-end
+//! codec — plus the paper's "<1% DS-ACIQ overhead" check against measured
+//! stage compute.
+
+use quantpipe::benchkit::{fmt_dur, load_artifacts, section, time, Table};
+use quantpipe::quant::codec::{Codec, NativeBackend, QuantBackend};
+use quantpipe::quant::ds_aciq::{ds_aciq_b, DEFAULT_STEPS};
+use quantpipe::quant::{calibrate, pack, uniform, Method};
+use quantpipe::runtime::{Engine, HloQuantBackend};
+use quantpipe::tensor::Tensor;
+use quantpipe::util::rng::Rng;
+
+fn main() -> quantpipe::Result<()> {
+    let (manifest, dir, eval) = load_artifacts()?;
+    let rows = manifest.quant.rows;
+    let cols = manifest.quant.cols;
+    let n = rows * cols;
+    let mut rng = Rng::seed(11);
+    let x = rng.laplace_vec(n, 1.3);
+    let bytes = (n * 4) as f64;
+
+    section("codec microbenchmarks");
+    println!("activation: {rows}x{cols} = {n} f32 ({:.0} KB)", bytes / 1024.0);
+
+    let mut table = Table::new(&["op", "mean", "GB/s", "notes"]);
+
+    // --- native quantize/dequantize -------------------------------------------
+    let p8 = calibrate(&x, Method::Aciq, 8);
+    let mut codes = vec![0i32; n];
+    let (mean, _, _) = time(3, 20, || uniform::quantize_into(&x, &p8, &mut codes));
+    table.row(&["quantize (native)".into(), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "8-bit aciq".into()]);
+
+    let mut back = vec![0f32; n];
+    let (mean, _, _) = time(3, 20, || uniform::dequantize_into(&codes, &p8, &mut back));
+    table.row(&["dequantize (native)".into(), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "".into()]);
+
+    // --- bit packing -----------------------------------------------------------
+    for bits in [2u8, 4, 6, 8, 16] {
+        let p = calibrate(&x, Method::Aciq, bits);
+        let cs = uniform::quantize(&x, &p);
+        let mut buf = Vec::new();
+        let (mean, _, _) = time(3, 20, || pack::pack(&cs, bits, p.pack_offset(), &mut buf));
+        table.row(&[
+            format!("pack {bits}-bit"),
+            fmt_dur(mean),
+            format!("{:.2}", bytes / mean.as_secs_f64() / 1e9),
+            format!("{}x compression", 32 / bits),
+        ]);
+        let mut out = Vec::new();
+        let (mean, _, _) = time(3, 20, || pack::unpack(&buf, n, bits, p.pack_offset(), &mut out));
+        table.row(&[format!("unpack {bits}-bit"), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "".into()]);
+    }
+
+    // --- calibration -----------------------------------------------------------
+    let (mean_aciq, _, _) = time(3, 20, || {
+        let _ = calibrate(&x, Method::Aciq, 8);
+    });
+    table.row(&["calibrate aciq".into(), fmt_dur(mean_aciq), format!("{:.2}", bytes / mean_aciq.as_secs_f64() / 1e9), "mean|x| pass".into()]);
+    let (mean_ds_exact, _, _) = time(3, 10, || {
+        let _ = ds_aciq_b(&x, 2, DEFAULT_STEPS);
+    });
+    table.row(&["calibrate ds-aciq (exact)".into(), fmt_dur(mean_ds_exact), format!("{:.2}", bytes / mean_ds_exact.as_secs_f64() / 1e9), "full hist + 100-step search".into()]);
+    let (mean_ds, _, _) = time(3, 10, || {
+        let _ = calibrate(&x, quantpipe::quant::Method::DsAciq, 2);
+    });
+    table.row(&["calibrate ds-aciq (deployed)".into(), fmt_dur(mean_ds), format!("{:.2}", bytes / mean_ds.as_secs_f64() / 1e9), "16k-sample fast path".into()]);
+
+    // --- end-to-end codec --------------------------------------------------------
+    let mut codec = Codec::default();
+    for bits in [2u8, 8] {
+        let (mean, _, _) = time(3, 10, || {
+            let enc = codec.encode(&x, Method::Pda, bits).unwrap();
+            std::hint::black_box(&enc);
+        });
+        table.row(&[format!("encode e2e {bits}-bit (pda)"), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "calib+quant+pack".into()]);
+    }
+
+    // --- HLO (AOT Pallas kernel) backend ----------------------------------------
+    let engine = Engine::cpu()?;
+    let mut hlo = HloQuantBackend::load(&engine, &dir, &manifest)?;
+    let (mean_hq, _, _) = time(2, 10, || {
+        hlo.quantize(&x, &p8, &mut codes).unwrap();
+    });
+    table.row(&["quantize (hlo-pallas)".into(), fmt_dur(mean_hq), format!("{:.2}", bytes / mean_hq.as_secs_f64() / 1e9), "PJRT execute".into()]);
+    let (mean_hd, _, _) = time(2, 10, || {
+        hlo.dequantize(&codes, &p8, &mut back).unwrap();
+    });
+    table.row(&["dequantize (hlo-pallas)".into(), fmt_dur(mean_hd), format!("{:.2}", bytes / mean_hd.as_secs_f64() / 1e9), "".into()]);
+
+    // --- stage compute for the paper's <1% claim ------------------------------------
+    let stage0 = engine.load_hlo(dir.join(&manifest.stages[0].file))?;
+    let img = eval.microbatch(0, manifest.microbatch);
+    let out_shape = manifest.stages[0].out_shape.clone();
+    let (mean_stage, _, _) = time(2, 10, || {
+        let _ = stage0.run_f32(&[&img], &out_shape).unwrap();
+    });
+    table.row(&["stage 0 compute".into(), fmt_dur(mean_stage), "".into(), "2-block ViT shard".into()]);
+    table.print();
+
+    let overhead = mean_ds.as_secs_f64() / mean_stage.as_secs_f64() * 100.0;
+    println!("\nDS-ACIQ (deployed) overhead vs stage compute here: {overhead:.2}%");
+    // The paper's <1% claim is at THEIR compute scale: ViT-Base on Jetson
+    // ≈ 640 ms per 64-image microbatch vs our tiny model's ~8 ms.
+    let paper_scale = mean_ds.as_secs_f64() / 0.64 * 100.0;
+    println!("same absolute cost at the paper's stage compute (~640 ms): {paper_scale:.3}%  (paper claims <1%)");
+
+    // HLO-vs-native code agreement (semantics check, not speed).
+    let mut c_native = vec![0i32; n];
+    NativeBackend.quantize(&x, &p8, &mut c_native)?;
+    let mut c_hlo = vec![0i32; n];
+    hlo.quantize(&x, &p8, &mut c_hlo)?;
+    let diff = c_native.iter().zip(&c_hlo).filter(|(a, b)| a != b).count();
+    println!("native vs hlo code agreement: {}/{} differ ({:.4}%)", diff, n, diff as f64 / n as f64 * 100.0);
+
+    let _ = Tensor::zeros(&[1]); // keep Tensor linked for doc example parity
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Bitwidth selection policies.
+
+/// How the controller maps a required compression ratio to a bitwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// The paper's Eq. 2, literally: `q = 32 / 2^ceil(log2(ratio))` —
+    /// powers of two only.
+    Eq2,
+    /// Highest supported bitwidth `{2,4,6,8,16,32}` whose volume fits the
+    /// budget (the behaviour Fig 5 actually exhibits; includes 6-bit).
+    #[default]
+    Ladder,
+    /// Pin a bitwidth (baselines/ablations).
+    Fixed(u8),
+}
+
+/// Supported ladder, descending (32 = no quantization).
+pub const LADDER: [u8; 6] = [32, 16, 8, 6, 4, 2];
+
+/// Eq. 2: required compression `ratio` → power-of-two bitwidth.
+/// `ratio ≤ 1` means the link already fits full precision.
+pub fn required_bits_eq2(ratio: f64) -> u8 {
+    if !ratio.is_finite() {
+        return 2;
+    }
+    if ratio <= 1.0 {
+        return 32;
+    }
+    let e = ratio.log2().ceil() as i32; // compression exponent ≥ 1
+    let bits = 32.0 / 2f64.powi(e);
+    // Quantization floor: 2-bit is the smallest representable width.
+    bits.max(2.0) as u8
+}
+
+/// One ladder step below `bits` (2-bit floor).
+pub fn ladder_step_down(bits: u8) -> u8 {
+    let idx = LADDER.iter().position(|&b| b == bits).unwrap_or(0);
+    LADDER[(idx + 1).min(LADDER.len() - 1)]
+}
+
+/// Ladder: highest supported width with `width/32 ≤ 1/ratio`.
+pub fn required_bits_ladder(ratio: f64) -> u8 {
+    if !ratio.is_finite() {
+        return 2;
+    }
+    for &b in LADDER.iter() {
+        if (b as f64) / 32.0 <= 1.0 / ratio.max(1e-300) {
+            return b;
+        }
+    }
+    2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_table() {
+        assert_eq!(required_bits_eq2(0.0), 32);
+        assert_eq!(required_bits_eq2(1.0), 32);
+        assert_eq!(required_bits_eq2(1.5), 16);
+        assert_eq!(required_bits_eq2(2.0), 16);
+        assert_eq!(required_bits_eq2(3.0), 8);
+        assert_eq!(required_bits_eq2(4.0), 8);
+        assert_eq!(required_bits_eq2(7.9), 4);
+        assert_eq!(required_bits_eq2(16.0), 2);
+        assert_eq!(required_bits_eq2(1e9), 2);
+        assert_eq!(required_bits_eq2(f64::INFINITY), 2);
+    }
+
+    #[test]
+    fn ladder_table() {
+        assert_eq!(required_bits_ladder(0.5), 32);
+        assert_eq!(required_bits_ladder(1.0), 32);
+        assert_eq!(required_bits_ladder(1.01), 16);
+        assert_eq!(required_bits_ladder(2.0), 16);
+        assert_eq!(required_bits_ladder(3.9), 8);
+        assert_eq!(required_bits_ladder(4.0), 8);
+        assert_eq!(required_bits_ladder(5.0), 6);   // the Fig 5 step
+        assert_eq!(required_bits_ladder(32.0 / 6.0), 6);
+        assert_eq!(required_bits_ladder(6.0), 4);
+        assert_eq!(required_bits_ladder(8.0), 4);
+        assert_eq!(required_bits_ladder(16.0), 2);
+        assert_eq!(required_bits_ladder(100.0), 2);
+    }
+
+    #[test]
+    fn ladder_never_exceeds_budget() {
+        for i in 0..1000 {
+            let ratio = 0.1 + i as f64 * 0.05;
+            let b = required_bits_ladder(ratio);
+            // 2-bit is the quantization floor: beyond ratio 16 the budget
+            // is simply unreachable and the ladder bottoms out.
+            if b < 32 && ratio <= 16.0 {
+                assert!(
+                    (b as f64) / 32.0 <= 1.0 / ratio + 1e-12,
+                    "ratio={ratio} bits={b}"
+                );
+            }
+            if ratio > 16.0 {
+                assert_eq!(b, 2, "ratio={ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn eq2_at_least_as_aggressive_as_ladder() {
+        // Eq2 skips 6-bit, so it must always pick ≤ the ladder's choice.
+        for i in 0..1000 {
+            let ratio = 0.1 + i as f64 * 0.1;
+            assert!(required_bits_eq2(ratio) <= required_bits_ladder(ratio));
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Support for the paper-reproduction benches (criterion is unavailable
+//! offline): wall-clock timing with warmup + repeats, simple statistics,
+//! aligned table printing, and shared experiment plumbing used by
+//! `rust/benches/*.rs` and `examples/*.rs`.
+
+use crate::config::Config;
+use crate::data::EvalSet;
+use crate::net::link::SimLink;
+use crate::pipeline::{hlo_stage_factory, LinkQuant, PipelineSpec};
+use crate::runtime::Manifest;
+use crate::Result;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Time `f` with `warmup` + `iters` runs; returns (mean, min, max).
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (Duration, Duration, Duration) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total = Duration::ZERO;
+    let mut min = Duration::MAX;
+    let mut max = Duration::ZERO;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        total += dt;
+        min = min.min(dt);
+        max = max.max(dt);
+    }
+    (total / iters.max(1) as u32, min, max)
+}
+
+/// Human duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Load manifest + eval set from the default artifacts dir, with a clear
+/// message if `make artifacts` hasn't run.
+pub fn load_artifacts() -> Result<(Manifest, PathBuf, Arc<EvalSet>)> {
+    let dir = Manifest::default_dir();
+    let (manifest, dir) = Manifest::load(&dir)?;
+    let eval = Arc::new(EvalSet::load(dir.join(&manifest.eval.file))?);
+    Ok((manifest, dir, eval))
+}
+
+/// Spec over the real HLO stages with per-link traces.
+pub fn hlo_spec(
+    manifest: &Manifest,
+    dir: &Path,
+    cfg: &Config,
+    traces: Vec<crate::net::trace::BandwidthTrace>,
+    quant: LinkQuant,
+    adapt: Option<crate::adapt::AdaptConfig>,
+) -> PipelineSpec {
+    let n = manifest.stages.len();
+    assert_eq!(traces.len(), n - 1, "need one trace per link");
+    let hlo_codec = cfg.pipeline.codec_backend == "hlo";
+    PipelineSpec {
+        stages: (0..n)
+            .map(|i| hlo_stage_factory(dir.to_path_buf(), manifest.clone(), i, hlo_codec))
+            .collect(),
+        links: traces
+            .into_iter()
+            .map(|t| {
+                Arc::new(SimLink::with_faults(
+                    t,
+                    Duration::from_micros(cfg.net.latency_us),
+                    cfg.link_faults(),
+                ))
+            })
+            .collect(),
+        quant,
+        adapt,
+        window: cfg.adapt.window,
+        inflight: cfg.pipeline.inflight,
+    }
+}
+
+/// Headline section printer for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_ordered_stats() {
+        let (mean, min, max) = time(1, 5, || std::thread::sleep(Duration::from_micros(200)));
+        assert!(min <= mean && mean <= max);
+        assert!(min >= Duration::from_micros(150));
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "x".into()]);
+        t.print();
+    }
+}

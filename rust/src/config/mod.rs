@@ -1,0 +1,280 @@
+//! JSON configuration for the launcher and experiment presets.
+//!
+//! Everything an experiment varies lives here: stage count, microbatch
+//! size, quantization method and policy, window length, target rate,
+//! bandwidth traces per link, codec backend and fault injection.
+//! `configs/*.json` ship the paper's experiment presets; CLI flags
+//! override individual fields (see main.rs). Parsed with the in-tree
+//! [`crate::util::json`] (TOML/serde are unavailable offline).
+
+use crate::adapt::{AdaptConfig, Policy};
+use crate::net::link::LinkFaults;
+use crate::quant::Method;
+use crate::util::json::Value;
+use crate::Result;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub pipeline: PipelineSection,
+    pub quant: QuantSection,
+    pub adapt: AdaptSection,
+    pub net: NetSection,
+    pub run: RunSection,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineSection {
+    /// Number of pipeline stages (model shards). Must match the artifacts.
+    pub stages: usize,
+    /// Images per microbatch (S). Must match the artifacts.
+    pub microbatch: usize,
+    /// Max in-flight frames per link (backpressure bound).
+    pub inflight: usize,
+    /// Quantize/dequantize arithmetic: "native" or "hlo" (AOT Pallas kernel).
+    pub codec_backend: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantSection {
+    /// Calibration method: naive | aciq | ds_aciq | pda.
+    pub method: Method,
+    /// Re-calibrate every N microbatches (1 = per microbatch).
+    pub calib_every: u32,
+    /// DS-ACIQ search steps (paper: 100).
+    pub ds_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct AdaptSection {
+    /// Enable the adaptive controller (false = fixed bitwidth below).
+    pub enabled: bool,
+    /// Fixed bitwidth when disabled (32 = no quantization).
+    pub fixed_bits: u8,
+    /// Target output rate R (images/sec).
+    pub target_rate: f64,
+    /// Window length in microbatches (paper: 50).
+    pub window: u64,
+    /// Policy: "ladder" (default), "eq2", or "fixed:<bits>".
+    pub policy: String,
+    /// Hysteresis margin for raising bitwidth.
+    pub raise_margin: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetSection {
+    /// Per-link bandwidth traces, "t:bw" comma lists (see net::trace). One
+    /// entry per inter-stage link; a single entry applies to all links.
+    pub traces: Vec<String>,
+    /// One-way propagation latency, microseconds.
+    pub latency_us: u64,
+    /// Fault injection.
+    pub loss_p: f64,
+    pub jitter_ms: f64,
+    pub fault_seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunSection {
+    /// Microbatches to push through (0 = one pass over the eval set).
+    pub microbatches: u64,
+    /// Artifacts directory.
+    pub artifacts: String,
+    /// Write the Fig-5 style timeline CSV here ("" = don't).
+    pub timeline_csv: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            pipeline: PipelineSection {
+                stages: 4,
+                microbatch: 64,
+                inflight: 2,
+                codec_backend: "native".into(),
+            },
+            quant: QuantSection { method: Method::Pda, calib_every: 1, ds_steps: 100 },
+            adapt: AdaptSection {
+                enabled: true,
+                fixed_bits: 32,
+                target_rate: 100.0,
+                window: 50,
+                policy: "ladder".into(),
+                raise_margin: 1.1,
+            },
+            net: NetSection {
+                traces: vec!["0:inf".into()],
+                latency_us: 200,
+                loss_p: 0.0,
+                jitter_ms: 0.0,
+                fault_seed: 0,
+            },
+            run: RunSection {
+                microbatches: 0,
+                artifacts: "artifacts".into(),
+                timeline_csv: String::new(),
+            },
+        }
+    }
+}
+
+fn method_from_str(s: &str) -> Result<Method> {
+    Ok(match s {
+        "naive" => Method::Naive,
+        "aciq" => Method::Aciq,
+        "ds_aciq" => Method::DsAciq,
+        "pda" => Method::Pda,
+        other => anyhow::bail!("unknown quant method {other:?}"),
+    })
+}
+
+impl Config {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    /// Parse a JSON config; missing keys fall back to defaults.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let v = Value::parse(text)?;
+        if let Some(p) = v.get("pipeline") {
+            if let Some(x) = p.get("stages") { cfg.pipeline.stages = x.as_usize()?; }
+            if let Some(x) = p.get("microbatch") { cfg.pipeline.microbatch = x.as_usize()?; }
+            if let Some(x) = p.get("inflight") { cfg.pipeline.inflight = x.as_usize()?; }
+            if let Some(x) = p.get("codec_backend") { cfg.pipeline.codec_backend = x.as_str()?.into(); }
+        }
+        if let Some(q) = v.get("quant") {
+            if let Some(x) = q.get("method") { cfg.quant.method = method_from_str(x.as_str()?)?; }
+            if let Some(x) = q.get("calib_every") { cfg.quant.calib_every = x.as_u64()? as u32; }
+            if let Some(x) = q.get("ds_steps") { cfg.quant.ds_steps = x.as_usize()?; }
+        }
+        if let Some(a) = v.get("adapt") {
+            if let Some(x) = a.get("enabled") { cfg.adapt.enabled = x.as_bool()?; }
+            if let Some(x) = a.get("fixed_bits") { cfg.adapt.fixed_bits = x.as_u64()? as u8; }
+            if let Some(x) = a.get("target_rate") { cfg.adapt.target_rate = x.as_f64()?; }
+            if let Some(x) = a.get("window") { cfg.adapt.window = x.as_u64()?; }
+            if let Some(x) = a.get("policy") { cfg.adapt.policy = x.as_str()?.into(); }
+            if let Some(x) = a.get("raise_margin") { cfg.adapt.raise_margin = x.as_f64()?; }
+        }
+        if let Some(n) = v.get("net") {
+            if let Some(x) = n.get("traces") {
+                cfg.net.traces = x
+                    .as_arr()?
+                    .iter()
+                    .map(|t| Ok(t.as_str()?.to_string()))
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(x) = n.get("latency_us") { cfg.net.latency_us = x.as_u64()?; }
+            if let Some(x) = n.get("loss_p") { cfg.net.loss_p = x.as_f64()?; }
+            if let Some(x) = n.get("jitter_ms") { cfg.net.jitter_ms = x.as_f64()?; }
+            if let Some(x) = n.get("fault_seed") { cfg.net.fault_seed = x.as_u64()?; }
+        }
+        if let Some(r) = v.get("run") {
+            if let Some(x) = r.get("microbatches") { cfg.run.microbatches = x.as_u64()?; }
+            if let Some(x) = r.get("artifacts") { cfg.run.artifacts = x.as_str()?.into(); }
+            if let Some(x) = r.get("timeline_csv") { cfg.run.timeline_csv = x.as_str()?.into(); }
+        }
+        Ok(cfg)
+    }
+
+    /// Controller config derived from the adapt/pipeline sections.
+    pub fn adapt_config(&self) -> Result<AdaptConfig> {
+        let policy = match self.adapt.policy.as_str() {
+            "ladder" => Policy::Ladder,
+            "eq2" => Policy::Eq2,
+            other => {
+                let bits: u8 = other
+                    .strip_prefix("fixed:")
+                    .ok_or_else(|| anyhow::anyhow!("unknown policy {other:?}"))?
+                    .parse()?;
+                Policy::Fixed(bits)
+            }
+        };
+        Ok(AdaptConfig {
+            target_rate: self.adapt.target_rate,
+            microbatch: self.pipeline.microbatch,
+            policy,
+            raise_margin: self.adapt.raise_margin,
+        })
+    }
+
+    /// Trace for link `i` (stage i → i+1).
+    pub fn trace_for_link(&self, i: usize) -> Result<crate::net::trace::BandwidthTrace> {
+        let s = if self.net.traces.len() == 1 {
+            &self.net.traces[0]
+        } else {
+            self.net
+                .traces
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("no trace for link {i}"))?
+        };
+        crate::net::trace::BandwidthTrace::parse(s)
+    }
+
+    pub fn link_faults(&self) -> LinkFaults {
+        LinkFaults {
+            loss_p: self.net.loss_p,
+            jitter_s: self.net.jitter_ms / 1e3,
+            seed: self.net.fault_seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.pipeline.stages, 4);
+        assert_eq!(c.adapt.window, 50);
+        assert_eq!(c.quant.method, Method::Pda);
+        assert!(matches!(c.adapt_config().unwrap().policy, Policy::Ladder));
+    }
+
+    #[test]
+    fn full_json_roundtrip() {
+        let text = r#"{
+            "pipeline": {"stages": 2, "microbatch": 64, "inflight": 4, "codec_backend": "hlo"},
+            "quant": {"method": "aciq", "calib_every": 10},
+            "adapt": {"enabled": true, "target_rate": 250.0, "window": 25, "policy": "eq2"},
+            "net": {"traces": ["0:inf,10:400M,20:50M"], "loss_p": 0.01},
+            "run": {"microbatches": 500}
+        }"#;
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.pipeline.stages, 2);
+        assert_eq!(c.pipeline.codec_backend, "hlo");
+        assert_eq!(c.quant.method, Method::Aciq);
+        assert_eq!(c.quant.calib_every, 10);
+        assert!(matches!(c.adapt_config().unwrap().policy, Policy::Eq2));
+        let tr = c.trace_for_link(0).unwrap();
+        assert_eq!(tr.at(15.0), 400e6);
+        assert!((c.link_faults().loss_p - 0.01).abs() < 1e-12);
+        assert_eq!(c.run.microbatches, 500);
+    }
+
+    #[test]
+    fn fixed_policy_string() {
+        let mut c = Config::default();
+        c.adapt.policy = "fixed:8".into();
+        assert!(matches!(c.adapt_config().unwrap().policy, Policy::Fixed(8)));
+        c.adapt.policy = "bogus".into();
+        assert!(c.adapt_config().is_err());
+    }
+
+    #[test]
+    fn per_link_traces() {
+        let mut c = Config::default();
+        c.net.traces = vec!["0:100M".into(), "0:50M".into()];
+        assert_eq!(c.trace_for_link(0).unwrap().at(0.0), 100e6);
+        assert_eq!(c.trace_for_link(1).unwrap().at(0.0), 50e6);
+        assert!(c.trace_for_link(2).is_err());
+    }
+
+    #[test]
+    fn bad_method_rejected() {
+        assert!(Config::parse(r#"{"quant": {"method": "zap"}}"#).is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Dataset loaders (artifacts/eval.bin, calib.bin) and accuracy metrics.
+//!
+//! Binary formats are defined by python/compile/aot.py (little-endian):
+//! * eval.bin : magic "QPEV" | ver | count | h | w | c | f32 images | u32 labels
+//! * calib.bin: magic "QPCA" | ver | n | per-tensor (rank, dims, f32 data)
+
+use crate::tensor::Tensor;
+use crate::Result;
+use std::io::Read;
+use std::path::Path;
+
+pub const EVAL_MAGIC: u32 = 0x5150_4556;
+pub const CALIB_MAGIC: u32 = 0x5150_4341;
+
+/// The held-out evaluation set: images + labels.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub images: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub count: usize,
+    pub dims: (usize, usize, usize),
+}
+
+impl EvalSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("open {:?}: {e} (run `make artifacts`)", path.as_ref()))?;
+        let mut hdr = [0u8; 24];
+        f.read_exact(&mut hdr)?;
+        let u = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap());
+        anyhow::ensure!(u(0) == EVAL_MAGIC, "bad eval.bin magic");
+        anyhow::ensure!(u(1) == 1, "unsupported eval.bin version");
+        let (count, h, w, c) = (u(2) as usize, u(3) as usize, u(4) as usize, u(5) as usize);
+        let mut img_bytes = vec![0u8; count * h * w * c * 4];
+        f.read_exact(&mut img_bytes)?;
+        let images: Vec<f32> = img_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let mut lab_bytes = vec![0u8; count * 4];
+        f.read_exact(&mut lab_bytes)?;
+        let labels: Vec<u32> = lab_bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(EvalSet { images, labels, count, dims: (h, w, c) })
+    }
+
+    /// Microbatch `i` of size `s` as an image tensor (s, h, w, c).
+    pub fn microbatch(&self, i: usize, s: usize) -> Tensor {
+        let (h, w, c) = self.dims;
+        let stride = h * w * c;
+        let start = i * s * stride;
+        let end = start + s * stride;
+        assert!(end <= self.images.len(), "microbatch {i} out of range");
+        Tensor::new(self.images[start..end].to_vec(), vec![s, h, w, c])
+    }
+
+    /// Labels for microbatch `i`.
+    pub fn labels_for(&self, i: usize, s: usize) -> &[u32] {
+        &self.labels[i * s..(i + 1) * s]
+    }
+
+    pub fn microbatches(&self, s: usize) -> usize {
+        self.count / s
+    }
+}
+
+/// Calibration boundary activations exported by aot.py.
+pub fn load_calib(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut hdr = [0u8; 12];
+    f.read_exact(&mut hdr)?;
+    let u32at = |b: &[u8], i: usize| u32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap());
+    anyhow::ensure!(u32at(&hdr, 0) == CALIB_MAGIC, "bad calib.bin magic");
+    anyhow::ensure!(u32at(&hdr, 1) == 1, "unsupported calib.bin version");
+    let n = u32at(&hdr, 2) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut rank_b = [0u8; 4];
+        f.read_exact(&mut rank_b)?;
+        let rank = u32::from_le_bytes(rank_b) as usize;
+        let mut dims_b = vec![0u8; rank * 4];
+        f.read_exact(&mut dims_b)?;
+        let shape: Vec<usize> = dims_b
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()) as usize)
+            .collect();
+        let elems: usize = shape.iter().product();
+        let mut data_b = vec![0u8; elems * 4];
+        f.read_exact(&mut data_b)?;
+        let data: Vec<f32> = data_b
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        out.push(Tensor::new(data, shape));
+    }
+    Ok(out)
+}
+
+/// Top-1 accuracy of logits against labels.
+pub fn top1_accuracy(logits: &Tensor, labels: &[u32]) -> f64 {
+    let preds = logits.argmax_rows();
+    assert_eq!(preds.len(), labels.len());
+    let correct = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Running accuracy accumulator (per-window accuracy for the Fig 5 track).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AccuracyMeter {
+    pub correct: u64,
+    pub total: u64,
+}
+
+impl AccuracyMeter {
+    pub fn add(&mut self, logits: &Tensor, labels: &[u32]) {
+        let preds = logits.argmax_rows();
+        for (p, l) in preds.iter().zip(labels) {
+            if *p == *l as usize {
+                self.correct += 1;
+            }
+        }
+        self.total += labels.len() as u64;
+    }
+
+    pub fn value(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+
+    pub fn take(&mut self) -> f64 {
+        let v = self.value();
+        *self = AccuracyMeter::default();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_eval(path: &Path, count: usize) {
+        let (h, w, c) = (2usize, 2, 1);
+        let mut f = std::fs::File::create(path).unwrap();
+        for v in [EVAL_MAGIC, 1, count as u32, h as u32, w as u32, c as u32] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for i in 0..count * h * w * c {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        for i in 0..count {
+            f.write_all(&((i % 10) as u32).to_le_bytes()).unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("qp-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn eval_roundtrip() {
+        let dir = tmpdir("eval");
+        let p = dir.join("eval.bin");
+        write_eval(&p, 8);
+        let ev = EvalSet::load(&p).unwrap();
+        assert_eq!(ev.count, 8);
+        assert_eq!(ev.dims, (2, 2, 1));
+        assert_eq!(ev.microbatches(4), 2);
+        let mb = ev.microbatch(1, 4);
+        assert_eq!(mb.shape, vec![4, 2, 2, 1]);
+        assert_eq!(mb.data[0], 16.0); // second microbatch starts at elem 16
+        assert_eq!(ev.labels_for(1, 4), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn accuracy_math() {
+        let logits = Tensor::new(vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4], vec![3, 2]);
+        assert!((top1_accuracy(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-12);
+        let mut m = AccuracyMeter::default();
+        m.add(&logits, &[0, 1, 1]);
+        m.add(&logits, &[0, 1, 0]);
+        assert_eq!(m.correct, 5);
+        assert_eq!(m.total, 6);
+        assert!((m.take() - 5.0 / 6.0).abs() < 1e-12);
+        assert_eq!(m.total, 0);
+    }
+
+    #[test]
+    fn calib_roundtrip() {
+        let dir = tmpdir("calib");
+        let p = dir.join("calib.bin");
+        let mut f = std::fs::File::create(&p).unwrap();
+        for v in [CALIB_MAGIC, 1, 2] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for t in 0..2u32 {
+            f.write_all(&2u32.to_le_bytes()).unwrap(); // rank
+            f.write_all(&2u32.to_le_bytes()).unwrap();
+            f.write_all(&3u32.to_le_bytes()).unwrap();
+            for i in 0..6 {
+                f.write_all(&((t * 10 + i) as f32).to_le_bytes()).unwrap();
+            }
+        }
+        drop(f);
+        let ts = load_calib(&p).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].shape, vec![2, 3]);
+        assert_eq!(ts[1].data[0], 10.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! # QuantPipe
+//!
+//! Reproduction of *QuantPipe: Applying Adaptive Post-Training Quantization
+//! for Distributed Transformer Pipelines in Dynamic Edge Environments*
+//! (Wang et al., 2022) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the pipeline runtime
+//! (stage threads, microbatch flow, shaped links), the runtime bandwidth
+//! monitor, the adaptive PDA bitwidth controller (paper Eq. 2), and the
+//! quantization codec (naive PTQ / ACIQ / DS-ACIQ, bit packing, wire
+//! framing). Model shards and the Pallas quantize/dequantize kernels are
+//! AOT-compiled from JAX to HLO text at build time (`make artifacts`) and
+//! executed through the PJRT CPU client ([`runtime`]); **python is never on
+//! the request path**.
+//!
+//! The build environment is offline: besides `xla` (PJRT FFI) and `anyhow`,
+//! everything — JSON, config, RNG, property testing, the bench harness —
+//! is implemented in-tree ([`util`]).
+//!
+//! ## Module map
+//!
+//! | module | paper role |
+//! |---|---|
+//! | [`quant`] | §3 PTQ/ACIQ/DS-ACIQ math, bit packing, tensor codec |
+//! | [`net`] | edge network substrate: shaped links, traces, framing, transports |
+//! | [`monitor`] | §3 runtime monitor (windowed bandwidth / output-rate) |
+//! | [`adapt`] | §3 adaptive PDA module (Eq. 2 bitwidth policy) |
+//! | [`pipeline`] | distributed pipeline driver: stage threads, scheduling, backpressure |
+//! | [`partition`] | PipeEdge [15] optimal partition DP |
+//! | [`runtime`] | PJRT engine: load + execute AOT HLO artifacts |
+//! | [`tensor`] | host tensors (f32 / i32) |
+//! | [`data`] | eval/calibration set loaders, accuracy |
+//! | [`metrics`] | throughput / latency instrumentation, Fig 5 timelines |
+//! | [`config`] | JSON config + experiment presets |
+//! | [`util`] | offline-substitute utilities (JSON, RNG, prop testing) |
+
+pub mod adapt;
+pub mod benchkit;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod monitor;
+pub mod net;
+pub mod partition;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

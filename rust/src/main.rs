@@ -1,0 +1,311 @@
+//! QuantPipe CLI — the launcher.
+//!
+//! ```text
+//! quantpipe run       [--config F] [--trace T] [--microbatches N]
+//!                     [--method M] [--fixed-bits B] [--target-rate R]
+//!                     [--timeline-csv F] [--codec-backend native|hlo]
+//! quantpipe sweep     [--config F] [--bits 32,16,8,6,4,2]
+//! quantpipe partition <profile.json> [--devices N]
+//! quantpipe inspect   [--artifacts DIR]
+//! ```
+//!
+//! Arg parsing is hand-rolled (offline build: no clap).
+
+use quantpipe::adapt::AdaptConfig;
+use quantpipe::config::Config;
+use quantpipe::data::EvalSet;
+use quantpipe::net::link::SimLink;
+use quantpipe::partition::CostModel;
+use quantpipe::pipeline::{self, hlo_stage_factory, LinkQuant, PipelineSpec, Workload};
+use quantpipe::quant::Method;
+use quantpipe::runtime::Manifest;
+use quantpipe::util::json::Value;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+quantpipe — adaptive PTQ for distributed transformer pipelines (QuantPipe reproduction)
+
+USAGE:
+  quantpipe run       [--config F] [--trace T] [--microbatches N] [--method M]
+                      [--fixed-bits B] [--target-rate R] [--timeline-csv F]
+                      [--codec-backend native|hlo] [--artifacts DIR]
+  quantpipe sweep     [--config F] [--bits 32,16,8,6,4,2] [--artifacts DIR]
+  quantpipe partition <profile.json> [--devices N]
+  quantpipe inspect   [--artifacts DIR]
+";
+
+/// Tiny flag parser: --key value pairs + positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> quantpipe::Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "partition" => cmd_partition(&args),
+        "inspect" => cmd_inspect(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> quantpipe::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::load(p)?,
+        None => Config::default(),
+    };
+    if let Some(t) = args.get("trace") {
+        cfg.net.traces = vec![t.to_string()];
+    }
+    if let Some(m) = args.get("microbatches") {
+        cfg.run.microbatches = m.parse()?;
+    }
+    if let Some(m) = args.get("method") {
+        cfg.quant.method = parse_method(m)?;
+    }
+    if let Some(b) = args.get("fixed-bits") {
+        cfg.adapt.enabled = false;
+        cfg.adapt.fixed_bits = b.parse()?;
+    }
+    if let Some(r) = args.get("target-rate") {
+        cfg.adapt.target_rate = r.parse()?;
+    }
+    if let Some(f) = args.get("timeline-csv") {
+        cfg.run.timeline_csv = f.to_string();
+    }
+    if let Some(cb) = args.get("codec-backend") {
+        cfg.pipeline.codec_backend = cb.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.run.artifacts = a.to_string();
+    }
+    Ok(cfg)
+}
+
+fn parse_method(s: &str) -> quantpipe::Result<Method> {
+    Ok(match s {
+        "naive" => Method::Naive,
+        "aciq" => Method::Aciq,
+        "ds_aciq" => Method::DsAciq,
+        "pda" => Method::Pda,
+        other => anyhow::bail!("unknown method {other:?}"),
+    })
+}
+
+/// Build a PipelineSpec from config + artifacts.
+fn build_spec(cfg: &Config, manifest: &Manifest, dir: &std::path::Path) -> quantpipe::Result<PipelineSpec> {
+    let n = manifest.stages.len();
+    let hlo_codec = cfg.pipeline.codec_backend == "hlo";
+    let stages = (0..n)
+        .map(|i| hlo_stage_factory(dir.to_path_buf(), manifest.clone(), i, hlo_codec))
+        .collect();
+    let links = (0..n - 1)
+        .map(|i| {
+            Ok(Arc::new(SimLink::with_faults(
+                cfg.trace_for_link(i)?,
+                std::time::Duration::from_micros(cfg.net.latency_us),
+                cfg.link_faults(),
+            )))
+        })
+        .collect::<quantpipe::Result<_>>()?;
+    let quant = LinkQuant {
+        method: cfg.quant.method,
+        calib_every: cfg.quant.calib_every,
+        initial_bits: if cfg.adapt.enabled { 32 } else { cfg.adapt.fixed_bits },
+    };
+    let adapt: Option<AdaptConfig> = if cfg.adapt.enabled {
+        let mut a = cfg.adapt_config()?;
+        a.microbatch = manifest.microbatch;
+        Some(a)
+    } else {
+        None
+    };
+    Ok(PipelineSpec {
+        stages,
+        links,
+        quant,
+        adapt,
+        window: cfg.adapt.window,
+        inflight: cfg.pipeline.inflight,
+    })
+}
+
+fn cmd_run(args: &Args) -> quantpipe::Result<()> {
+    let cfg = load_config(args)?;
+    let (manifest, dir) = Manifest::load(&cfg.run.artifacts)?;
+    let eval = Arc::new(EvalSet::load(dir.join(&manifest.eval.file))?);
+    let spec = build_spec(&cfg, &manifest, &dir)?;
+    let s = manifest.microbatch;
+    let workload = if cfg.run.microbatches == 0 {
+        Workload::one_pass(eval, s)
+    } else {
+        Workload::repeat(eval, s, cfg.run.microbatches)
+    };
+
+    let report = pipeline::run(spec, workload)?;
+
+    println!("== QuantPipe run ==");
+    println!("microbatches      {}", report.microbatches);
+    println!("images            {}", report.images);
+    println!("wall              {:.2}s", report.wall_secs);
+    println!("throughput        {:.1} img/s", report.throughput);
+    println!("top-1 accuracy    {:.2}%", report.accuracy * 100.0);
+    println!(
+        "p50/p99 latency   {:?} / {:?}",
+        report.latency.quantile(0.5),
+        report.latency.quantile(0.99)
+    );
+    println!("link0 mean bytes  {:.0} B/microbatch", report.link0_mean_bytes);
+    println!(
+        "stage compute     {:?} ms",
+        report
+            .stage_compute_s
+            .iter()
+            .map(|s| (s * 1e3 * 10.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    if let Some(bits) = report.timeline.final_bits(0) {
+        println!("final bits (l0)   {bits}");
+        println!("bits sequence     {:?}", report.timeline.bits_sequence(0));
+    }
+    if !cfg.run.timeline_csv.is_empty() {
+        std::fs::write(&cfg.run.timeline_csv, report.timeline.to_csv())?;
+        println!("timeline          -> {}", cfg.run.timeline_csv);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> quantpipe::Result<()> {
+    let cfg = load_config(args)?;
+    let bits: Vec<u8> = args
+        .get("bits")
+        .unwrap_or("32,16,8,6,4,2")
+        .split(',')
+        .map(|b| b.trim().parse())
+        .collect::<std::result::Result<_, _>>()?;
+    let (manifest, dir) = Manifest::load(&cfg.run.artifacts)?;
+    let eval = Arc::new(EvalSet::load(dir.join(&manifest.eval.file))?);
+    let s = manifest.microbatch;
+
+    println!(
+        "== Table 1: top-1 accuracy (fp32 reference = {:.2}%) ==",
+        manifest.model.fp32_top1 * 100.0
+    );
+    print!("{:<8}", "method");
+    for b in &bits {
+        print!("{:>9}", format!("{b}bit"));
+    }
+    println!();
+    for method in [Method::Naive, Method::Aciq, Method::Pda] {
+        print!("{:<8}", method.name());
+        for &b in &bits {
+            let mut c = cfg.clone();
+            c.adapt.enabled = false;
+            c.adapt.fixed_bits = b;
+            c.quant.method = method;
+            let spec = build_spec(&c, &manifest, &dir)?;
+            let report = pipeline::run(spec, Workload::one_pass(eval.clone(), s))?;
+            print!("{:>8.2}%", report.accuracy * 100.0);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> quantpipe::Result<()> {
+    let profile = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("partition needs a profile.json path"))?;
+    let devices: usize = args.get("devices").unwrap_or("4").parse()?;
+    let v = Value::parse(&std::fs::read_to_string(profile)?)?;
+    let block_s: Vec<Vec<f64>> = v
+        .at("block_s")?
+        .as_arr()?
+        .iter()
+        .map(|r| r.f64_vec())
+        .collect::<quantpipe::Result<_>>()?;
+    let comm_s = v.at("comm_s")?.f64_vec()?;
+    let costs = CostModel::new(block_s, comm_s);
+    let p = quantpipe::partition::partition(&costs, devices);
+    println!(
+        "partition (bottleneck {:.4}s, est. throughput {:.2}/s):",
+        p.bottleneck(&costs),
+        p.throughput(&costs)
+    );
+    for (d, (lo, hi)) in p.cuts.iter().enumerate() {
+        println!("  device {d}: blocks {lo}..{hi}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> quantpipe::Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let (m, dir) = Manifest::load(dir)?;
+    println!("artifacts     {}", dir.display());
+    println!(
+        "model         ViT d{} dim{} heads{} ({:.2}M params, trained={})",
+        m.model.depth,
+        m.model.dim,
+        m.model.heads,
+        m.model.params as f64 / 1e6,
+        m.model.trained
+    );
+    println!("fp32 top-1    {:.2}%", m.model.fp32_top1 * 100.0);
+    println!("microbatch    {}", m.microbatch);
+    println!(
+        "activation    {:?} ({} KB fp32)",
+        m.activation_shape,
+        m.activation_shape.iter().product::<usize>() * 4 / 1024
+    );
+    println!("stages        {}", m.stages.len());
+    for (i, s) in m.stages.iter().enumerate() {
+        println!("  {i}: blocks {:?} {} -> {:?}", s.blocks, s.file, s.out_shape);
+    }
+    println!("eval          {} images", m.eval.count);
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Lightweight metrics: throughput meters, latency histograms, and the
+//! timeline recorder behind the Fig 5 reproduction.
+
+use std::time::{Duration, Instant};
+
+/// Exponential-bucket latency histogram (1 µs … ~64 s).
+#[derive(Debug, Clone)]
+pub struct LatencyHisto {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u128,
+}
+
+const BUCKETS: usize = 27; // 2^i µs, i in 0..27
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto { buckets: vec![0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl LatencyHisto {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1);
+        let idx = (127 - (us as u128).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns += d.as_nanos();
+        self.max_ns = self.max_ns.max(d.as_nanos());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns as u64)
+    }
+
+    /// Approximate quantile from bucket upper edges.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// A point on the Fig 5 timeline: one adaptive window on one link.
+#[derive(Debug, Clone, Copy)]
+pub struct TimelinePoint {
+    /// Seconds since run start.
+    pub t: f64,
+    /// Stage index that owns the send link.
+    pub stage: usize,
+    /// Measured output bandwidth (bits/s).
+    pub bandwidth_bps: f64,
+    /// Achieved output rate (images/s).
+    pub rate: f64,
+    /// Bitwidth in effect after this window's decision.
+    pub bits: u8,
+    /// Link utilization for the window.
+    pub util: f64,
+}
+
+/// Collects window-by-window state for offline plotting / assertions.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    pub points: Vec<TimelinePoint>,
+}
+
+impl Timeline {
+    pub fn push(&mut self, p: TimelinePoint) {
+        self.points.push(p);
+    }
+
+    /// CSV dump (t, stage, bandwidth_mbps, rate, bits, util).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,stage,bandwidth_mbps,rate,bits,util\n");
+        for p in &self.points {
+            let bw = if p.bandwidth_bps.is_infinite() { -1.0 } else { p.bandwidth_bps / 1e6 };
+            s.push_str(&format!(
+                "{:.3},{},{:.2},{:.2},{},{:.3}\n",
+                p.t, p.stage, bw, p.rate, p.bits, p.util
+            ));
+        }
+        s
+    }
+
+    /// Bits in effect at the end of the run for a given stage link.
+    pub fn final_bits(&self, stage: usize) -> Option<u8> {
+        self.points.iter().rev().find(|p| p.stage == stage).map(|p| p.bits)
+    }
+
+    /// Distinct bitwidth sequence (collapsed) for a stage — the Fig 5
+    /// "bitwidth track".
+    pub fn bits_sequence(&self, stage: usize) -> Vec<u8> {
+        let mut out: Vec<u8> = Vec::new();
+        for p in self.points.iter().filter(|p| p.stage == stage) {
+            if out.last() != Some(&p.bits) {
+                out.push(p.bits);
+            }
+        }
+        out
+    }
+}
+
+/// Simple throughput meter over the whole run.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    items: u64,
+}
+
+impl ThroughputMeter {
+    pub fn start() -> Self {
+        ThroughputMeter { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.items as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_quantiles_ordered() {
+        let mut h = LatencyHisto::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(0.999));
+        assert!(h.mean() > Duration::from_micros(400));
+        assert!(h.mean() < Duration::from_micros(600));
+    }
+
+    #[test]
+    fn timeline_bits_sequence_collapses() {
+        let mut t = Timeline::default();
+        for (i, bits) in [32u8, 32, 16, 16, 2, 2, 8, 8].iter().enumerate() {
+            t.push(TimelinePoint {
+                t: i as f64,
+                stage: 0,
+                bandwidth_bps: 1e6,
+                rate: 100.0,
+                bits: *bits,
+                util: 0.5,
+            });
+        }
+        assert_eq!(t.bits_sequence(0), vec![32, 16, 2, 8]);
+        assert_eq!(t.final_bits(0), Some(8));
+        assert_eq!(t.final_bits(1), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Timeline::default();
+        t.push(TimelinePoint { t: 0.5, stage: 1, bandwidth_bps: f64::INFINITY, rate: 10.0, bits: 32, util: 0.0 });
+        let csv = t.to_csv();
+        assert!(csv.starts_with("t,stage"));
+        assert!(csv.contains("-1.00")); // inf encoded as -1
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn throughput_meter() {
+        let mut m = ThroughputMeter::start();
+        m.add(50);
+        std::thread::sleep(Duration::from_millis(100));
+        m.add(50);
+        let r = m.rate();
+        assert!(r > 100.0 && r < 1100.0, "{r}");
+        assert_eq!(m.items(), 100);
+    }
+}

@@ -1,0 +1,178 @@
+//! Runtime monitor (paper §3): per-stage windowed measurements.
+//!
+//! "As is common in adaptive runtime systems, QuantPipe measures relevant
+//! metrics over a window period, then makes an adaptive decision based on
+//! the window average values" (§4.2: window = 50 microbatches). The
+//! monitor tracks, per window:
+//!
+//! * **output bandwidth** `B_i` — payload bytes sent ÷ link-occupied time
+//!   (what the link actually sustained, i.e. the measured capacity);
+//! * **output rate** — images/sec leaving the stage (compared against the
+//!   target rate `R` to detect violation);
+//! * **quantized volume** `V` — mean wire bytes per microbatch (Eq. 2's
+//!   numerator component).
+//!
+//! The monitor never reads the bandwidth trace — capacity is *inferred*
+//! from measurements, exactly as on the paper's testbed. Timestamps are
+//! passed in explicitly so tests drive a virtual clock.
+
+use std::time::Instant;
+
+/// One completed window's averages.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowStats {
+    /// Measured output bandwidth, bits/sec (wire bytes ÷ link busy time).
+    pub bandwidth_bps: f64,
+    /// Achieved output rate, images/sec over the window wall time.
+    pub rate: f64,
+    /// Mean wire bytes per microbatch (V in Eq. 2).
+    pub mean_bytes: f64,
+    /// Microbatches in the window.
+    pub microbatches: u64,
+    /// Wall time covered, seconds.
+    pub wall_secs: f64,
+    /// Fraction of wall time the link was busy (≈1.0 ⇒ comm-bound).
+    pub link_utilization: f64,
+}
+
+/// Sliding-window accumulator fed by the stage's send loop.
+#[derive(Debug)]
+pub struct WindowMonitor {
+    window: u64,
+    batch: usize,
+    bytes: u64,
+    busy_secs: f64,
+    count: u64,
+    window_start: Option<Instant>,
+    last: Option<WindowStats>,
+}
+
+impl WindowMonitor {
+    /// `window` = microbatches per adaptive decision (paper: 50);
+    /// `batch` = images per microbatch (paper: 64).
+    pub fn new(window: u64, batch: usize) -> Self {
+        WindowMonitor {
+            window: window.max(1),
+            batch,
+            bytes: 0,
+            busy_secs: 0.0,
+            count: 0,
+            window_start: None,
+            last: None,
+        }
+    }
+
+    /// Record one sent microbatch at time `now`: wire bytes + seconds the
+    /// link was busy. Returns `Some(stats)` when a window just completed.
+    pub fn record_send_at(&mut self, wire_bytes: usize, busy_secs: f64, now: Instant) -> Option<WindowStats> {
+        let start = *self.window_start.get_or_insert(now);
+        self.bytes += wire_bytes as u64;
+        self.busy_secs += busy_secs;
+        self.count += 1;
+        if self.count < self.window {
+            return None;
+        }
+        let wall = now.duration_since(start).as_secs_f64().max(1e-9);
+        let stats = WindowStats {
+            bandwidth_bps: if self.busy_secs > 1e-9 {
+                self.bytes as f64 * 8.0 / self.busy_secs
+            } else {
+                f64::INFINITY // link never measurably busy ⇒ unconstrained
+            },
+            rate: (self.count * self.batch as u64) as f64 / wall,
+            mean_bytes: self.bytes as f64 / self.count as f64,
+            microbatches: self.count,
+            wall_secs: wall,
+            link_utilization: (self.busy_secs / wall).min(1.0),
+        };
+        self.bytes = 0;
+        self.busy_secs = 0.0;
+        self.count = 0;
+        self.window_start = Some(now);
+        self.last = Some(stats);
+        Some(stats)
+    }
+
+    /// Convenience: record at `Instant::now()`.
+    pub fn record_send(&mut self, wire_bytes: usize, busy_secs: f64) -> Option<WindowStats> {
+        self.record_send_at(wire_bytes, busy_secs, Instant::now())
+    }
+
+    /// Most recently completed window, if any.
+    pub fn last(&self) -> Option<WindowStats> {
+        self.last
+    }
+
+    pub fn window_len(&self) -> u64 {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn t(epoch: Instant, ms: u64) -> Instant {
+        epoch + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn window_boundaries() {
+        let epoch = Instant::now();
+        let mut m = WindowMonitor::new(3, 64);
+        assert!(m.record_send_at(1000, 0.001, t(epoch, 0)).is_none());
+        assert!(m.record_send_at(1000, 0.001, t(epoch, 100)).is_none());
+        let s = m.record_send_at(1000, 0.001, t(epoch, 200)).unwrap();
+        assert_eq!(s.microbatches, 3);
+        assert!((s.mean_bytes - 1000.0).abs() < 1e-9);
+        assert!((s.wall_secs - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_is_bytes_over_busy_time() {
+        let epoch = Instant::now();
+        let mut m = WindowMonitor::new(2, 64);
+        // 2 MB over 2 s of busy time ⇒ 8 Mbps measured.
+        m.record_send_at(1_000_000, 1.0, t(epoch, 0));
+        let s = m.record_send_at(1_000_000, 1.0, t(epoch, 2000)).unwrap();
+        assert!((s.bandwidth_bps - 8e6).abs() / 8e6 < 1e-6, "{s:?}");
+        assert!(s.link_utilization > 0.99);
+    }
+
+    #[test]
+    fn rate_uses_wall_time() {
+        let epoch = Instant::now();
+        let mut m = WindowMonitor::new(2, 64);
+        m.record_send_at(10, 0.0, t(epoch, 0));
+        let s = m.record_send_at(10, 0.0, t(epoch, 1000)).unwrap();
+        // 2 microbatches × 64 images over 1 s wall.
+        assert!((s.rate - 128.0).abs() < 1.0, "{s:?}");
+        assert!(s.bandwidth_bps.is_infinite());
+        assert!(s.link_utilization < 0.01);
+    }
+
+    #[test]
+    fn window_resets_after_report() {
+        let epoch = Instant::now();
+        let mut m = WindowMonitor::new(2, 1);
+        m.record_send_at(100, 0.1, t(epoch, 0));
+        assert!(m.record_send_at(100, 0.1, t(epoch, 10)).is_some());
+        // New window starts clean at the report instant.
+        assert!(m.record_send_at(999, 0.9, t(epoch, 20)).is_none());
+        assert_eq!(m.last().unwrap().mean_bytes, 100.0);
+        let s2 = m.record_send_at(999, 0.9, t(epoch, 30)).unwrap();
+        assert_eq!(s2.mean_bytes, 999.0);
+        assert!((s2.wall_secs - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_capped_at_one() {
+        let epoch = Instant::now();
+        let mut m = WindowMonitor::new(1, 1);
+        // busy 2 s inside 1 s wall (overlapped sends) ⇒ clamp to 1.0.
+        m.record_send_at(10, 2.0, t(epoch, 0));
+        let s = m.record_send_at(10, 2.0, t(epoch, 1000)).unwrap();
+        assert_eq!(s.link_utilization, 1.0);
+    }
+}

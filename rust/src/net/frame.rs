@@ -1,0 +1,237 @@
+//! Wire format for inter-stage activation frames.
+//!
+//! Self-describing so the receiver can dequantize without out-of-band
+//! coordination — the sender may change bitwidth at any window boundary
+//! (adaptive PDA) and the receiver just follows the header:
+//!
+//! ```text
+//! magic  u32  "QPFR"
+//! ver    u8
+//! kind   u8    0 = raw f32, 1 = quantized
+//! bits   u8    2/4/6/8/16 (or 32 for raw)
+//! rank   u8
+//! seq    u64   microbatch sequence number
+//! scale  f32 | zp f32 | lo f32 | hi f32     (quantized only)
+//! dims   u32 × rank
+//! plen   u32   payload byte length
+//! crc    u32   CRC32 (IEEE) of payload
+//! payload …
+//! ```
+
+use crate::quant::codec::Encoded;
+use crate::quant::QuantParams;
+use crate::Result;
+
+pub const MAGIC: u32 = 0x5150_4652; // "QPFR"
+pub const VERSION: u8 = 1;
+
+/// One activation frame: header + payload bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub seq: u64,
+    pub shape: Vec<usize>,
+    pub enc: Encoded,
+}
+
+impl Frame {
+    pub fn new(seq: u64, shape: Vec<usize>, enc: Encoded) -> Self {
+        Frame { seq, shape, enc }
+    }
+
+    /// Total bytes on the wire (header + payload).
+    pub fn wire_len(&self) -> usize {
+        self.header_len() + self.enc.payload.len()
+    }
+
+    fn header_len(&self) -> usize {
+        4 + 1 + 1 + 1 + 1 + 8 + if self.enc.params.is_some() { 16 } else { 0 } + 4 * self.shape.len() + 4 + 4
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(VERSION);
+        out.push(if self.enc.params.is_some() { 1 } else { 0 });
+        out.push(self.enc.bits());
+        out.push(self.shape.len() as u8);
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        if let Some(p) = self.enc.params {
+            out.extend_from_slice(&p.scale.to_le_bytes());
+            out.extend_from_slice(&p.zero_point.to_le_bytes());
+            out.extend_from_slice(&p.lo.to_le_bytes());
+            out.extend_from_slice(&p.hi.to_le_bytes());
+        }
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.enc.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&self.enc.payload).to_le_bytes());
+        out.extend_from_slice(&self.enc.payload);
+        out
+    }
+
+    /// Parse from bytes (validates magic, version, CRC).
+    pub fn from_bytes(buf: &[u8]) -> Result<Frame> {
+        let mut r = Reader { buf, pos: 0 };
+        anyhow::ensure!(r.u32()? == MAGIC, "bad frame magic");
+        anyhow::ensure!(r.u8()? == VERSION, "unsupported frame version");
+        let kind = r.u8()?;
+        let bits = r.u8()?;
+        let rank = r.u8()? as usize;
+        let seq = r.u64()?;
+        let params = if kind == 1 {
+            Some(QuantParams {
+                scale: r.f32()?,
+                zero_point: r.f32()?,
+                lo: r.f32()?,
+                hi: r.f32()?,
+                bits,
+            })
+        } else {
+            None
+        };
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u32()? as usize);
+        }
+        let plen = r.u32()? as usize;
+        let crc = r.u32()?;
+        anyhow::ensure!(r.buf.len() - r.pos >= plen, "frame payload truncated");
+        let payload = r.buf[r.pos..r.pos + plen].to_vec();
+        anyhow::ensure!(crc32(&payload) == crc, "frame CRC mismatch");
+        let elems: usize = shape.iter().product();
+        Ok(Frame {
+            seq,
+            shape,
+            enc: Encoded { params, elems, payload },
+        })
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "frame header truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// CRC32 (IEEE 802.3), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codec::Codec;
+    use crate::quant::Method;
+
+    fn sample_frame(bits: u8) -> Frame {
+        let x: Vec<f32> = (0..256).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let mut c = Codec::default();
+        let enc = c.encode(&x, Method::Pda, bits).unwrap();
+        Frame::new(7, vec![2, 8, 16], enc)
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard test vector: crc32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_all_bitwidths() {
+        for bits in [2u8, 4, 6, 8, 16, 32] {
+            let f = sample_frame(bits);
+            let bytes = f.to_bytes();
+            assert_eq!(bytes.len(), f.wire_len());
+            let back = Frame::from_bytes(&bytes).unwrap();
+            assert_eq!(back, f, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn decode_roundtrip_through_frame() {
+        let x: Vec<f32> = (0..256).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut c = Codec::default();
+        let enc = c.encode(&x, Method::Aciq, 8).unwrap();
+        let f = Frame::new(0, vec![256], enc);
+        let back = Frame::from_bytes(&f.to_bytes()).unwrap();
+        let mut out = Vec::new();
+        c.decode(&back.enc, &mut out).unwrap();
+        let p = back.enc.params.unwrap();
+        for (a, b) in x.iter().zip(&out) {
+            assert!((a - b).abs() <= p.scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let f = sample_frame(8);
+        let mut bytes = f.to_bytes();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        assert!(Frame::from_bytes(&bytes).unwrap_err().to_string().contains("CRC"));
+    }
+
+    #[test]
+    fn corrupt_magic_detected() {
+        let f = sample_frame(4);
+        let mut bytes = f.to_bytes();
+        bytes[0] ^= 0xff;
+        assert!(Frame::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let f = sample_frame(16);
+        let bytes = f.to_bytes();
+        for cut in [3usize, 10, bytes.len() - 1] {
+            assert!(Frame::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn header_overhead_is_small() {
+        let f = sample_frame(2);
+        let overhead = f.wire_len() - f.enc.payload.len();
+        assert!(overhead <= 64, "header overhead {overhead}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Serialization-delay link model with trace-driven capacity.
+//!
+//! Replaces `tc`-shaped Ethernet between Jetsons. A send occupies the link
+//! for `bytes / capacity(t)` (integrated across capacity changes), plus a
+//! fixed propagation latency and optional jitter; loss injection re-sends
+//! after a timeout, consuming extra link time — the observable effect the
+//! adaptive controller must react to.
+//!
+//! Implementation: the link keeps a `busy_until` watermark (serialization
+//! is serial); senders compute their completion instant under the trace
+//! and sleep until it. The model is *time-based*, not token-based, so the
+//! sleep maths is exact and unit-tested against the pure
+//! [`BandwidthTrace::transmit_secs`].
+
+use super::trace::BandwidthTrace;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Link impairment/failure-injection knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkFaults {
+    /// Per-frame loss probability; each loss costs one extra latency +
+    /// a full re-serialization.
+    pub loss_p: f64,
+    /// Uniform extra jitter bound (seconds) added per frame.
+    pub jitter_s: f64,
+    /// Deterministic seed for reproducible fault schedules.
+    pub seed: u64,
+}
+
+impl Default for LinkFaults {
+    fn default() -> Self {
+        LinkFaults { loss_p: 0.0, jitter_s: 0.0, seed: 0 }
+    }
+}
+
+/// A shaped, unidirectional link.
+pub struct SimLink {
+    trace: BandwidthTrace,
+    /// One-way propagation latency.
+    latency: Duration,
+    faults: LinkFaults,
+    state: Mutex<LinkState>,
+    epoch: Instant,
+}
+
+#[derive(Debug)]
+struct LinkState {
+    /// Seconds-from-epoch when the serializer frees up.
+    busy_until: f64,
+    /// xorshift state for fault injection.
+    rng: u64,
+    bytes_sent: u64,
+    frames_sent: u64,
+    frames_lost: u64,
+}
+
+impl SimLink {
+    pub fn new(trace: BandwidthTrace) -> Self {
+        Self::with_faults(trace, Duration::from_micros(200), LinkFaults::default())
+    }
+
+    pub fn with_faults(trace: BandwidthTrace, latency: Duration, faults: LinkFaults) -> Self {
+        SimLink {
+            trace,
+            latency,
+            faults,
+            state: Mutex::new(LinkState {
+                busy_until: 0.0,
+                rng: faults.seed | 1,
+                bytes_sent: 0,
+                frames_sent: 0,
+                frames_lost: 0,
+            }),
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn unlimited() -> Self {
+        Self::new(BandwidthTrace::unlimited())
+    }
+
+    /// Capacity currently configured (what `tc` would report — the
+    /// controller must NOT call this; it measures instead).
+    pub fn capacity_now(&self) -> f64 {
+        self.trace.at(self.epoch.elapsed().as_secs_f64())
+    }
+
+    /// (bytes, frames, lost) counters for offline analysis.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let s = self.state.lock().unwrap();
+        (s.bytes_sent, s.frames_sent, s.frames_lost)
+    }
+
+    fn xorshift(rng: &mut u64) -> f64 {
+        let mut x = *rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *rng = x;
+        (x >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Transmit `bytes`, blocking until the last byte has arrived at the
+    /// receiver. Returns the seconds the link was occupied (serialization
+    /// + queueing, excluding propagation) — the sender-side "output
+    /// bandwidth" measurement uses this.
+    pub fn send(&self, bytes: usize) -> Duration {
+        let (done_rel, occupied) = {
+            let mut st = self.state.lock().unwrap();
+            let now_rel = self.epoch.elapsed().as_secs_f64();
+            let start_rel = st.busy_until.max(now_rel);
+            let mut ser_secs = self.trace.transmit_secs(bytes, start_rel);
+
+            // Fault injection: a lost frame is retransmitted after one
+            // latency timeout, costing latency + a full re-serialization.
+            let mut lost = 0u64;
+            while self.faults.loss_p > 0.0 && Self::xorshift(&mut st.rng) < self.faults.loss_p {
+                lost += 1;
+                ser_secs = ser_secs * 2.0 + self.latency.as_secs_f64();
+                if lost >= 4 {
+                    break; // retry cap: bound worst-case occupancy
+                }
+            }
+            let jitter = if self.faults.jitter_s > 0.0 {
+                Self::xorshift(&mut st.rng) * self.faults.jitter_s
+            } else {
+                0.0
+            };
+
+            // Clamp runaway serialization (e.g. zero-capacity trace tails).
+            let ser_secs = ser_secs.min(3600.0);
+            let done_rel = start_rel + ser_secs;
+            st.busy_until = done_rel;
+            st.bytes_sent += bytes as u64;
+            st.frames_sent += 1;
+            st.frames_lost += lost;
+            (done_rel + self.latency.as_secs_f64() + jitter, done_rel - now_rel)
+        };
+        // Sleep off the remaining wait (other senders may have queued more
+        // behind us meanwhile; our own completion time is already fixed).
+        loop {
+            let now_rel = self.epoch.elapsed().as_secs_f64();
+            if now_rel >= done_rel {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64((done_rel - now_rel).min(0.05)));
+        }
+        Duration::from_secs_f64(occupied.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mbps;
+    use std::sync::Arc;
+
+    #[test]
+    fn unlimited_link_is_latency_only() {
+        let link = SimLink::with_faults(
+            BandwidthTrace::unlimited(),
+            Duration::from_millis(1),
+            LinkFaults::default(),
+        );
+        let t0 = Instant::now();
+        link.send(10 << 20);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn serialization_matches_capacity() {
+        // 100 KB over 8 Mbps = 100 ms.
+        let link = SimLink::new(BandwidthTrace::constant(mbps(8.0)));
+        let t0 = Instant::now();
+        let occ = link.send(100_000);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!((dt - 0.1).abs() < 0.03, "{dt}");
+        assert!((occ.as_secs_f64() - 0.1).abs() < 0.02, "{occ:?}");
+    }
+
+    #[test]
+    fn back_to_back_sends_queue() {
+        let link = Arc::new(SimLink::new(BandwidthTrace::constant(mbps(8.0))));
+        let t0 = Instant::now();
+        let a = link.clone();
+        let h1 = std::thread::spawn(move || a.send(50_000));
+        let b = link.clone();
+        let h2 = std::thread::spawn(move || b.send(50_000));
+        h1.join().unwrap();
+        h2.join().unwrap();
+        // Two 50 ms serializations share the link -> ~100 ms total.
+        let dt = t0.elapsed().as_secs_f64();
+        assert!((0.08..0.2).contains(&dt), "{dt}");
+    }
+
+    #[test]
+    fn capacity_change_mid_send() {
+        // First 50 ms at 8 Mbps, then 80 Mbps: 100 KB = 50 KB + 50 KB.
+        let tr = BandwidthTrace::from_points(&[(0.0, mbps(8.0)), (0.05, mbps(80.0))]);
+        let link = SimLink::new(tr);
+        let t0 = Instant::now();
+        link.send(100_000); // 50 KB in 0.05 s + 50 KB in 0.005 s
+        let dt = t0.elapsed().as_secs_f64();
+        assert!((dt - 0.055).abs() < 0.025, "{dt}");
+    }
+
+    #[test]
+    fn loss_injection_slows_link() {
+        let faults = LinkFaults { loss_p: 1.0, jitter_s: 0.0, seed: 42 };
+        let lossy = SimLink::with_faults(
+            BandwidthTrace::constant(mbps(80.0)),
+            Duration::from_millis(1),
+            faults,
+        );
+        let clean = SimLink::new(BandwidthTrace::constant(mbps(80.0)));
+        let t0 = Instant::now();
+        clean.send(100_000);
+        let clean_dt = t0.elapsed();
+        let t1 = Instant::now();
+        lossy.send(100_000);
+        let lossy_dt = t1.elapsed();
+        assert!(lossy_dt > clean_dt * 2, "{clean_dt:?} vs {lossy_dt:?}");
+        assert!(lossy.counters().2 > 0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let link = SimLink::unlimited();
+        link.send(100);
+        link.send(200);
+        let (bytes, frames, lost) = link.counters();
+        assert_eq!(bytes, 300);
+        assert_eq!(frames, 2);
+        assert_eq!(lost, 0);
+    }
+}

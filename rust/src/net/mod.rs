@@ -1,0 +1,28 @@
+//! Edge network substrate.
+//!
+//! Replaces the paper's testbed networking (6 Jetsons + Linux `tc`
+//! shaping) with a byte-accurate simulation plus a real-TCP option:
+//!
+//! * [`trace`] — piecewise-constant bandwidth traces (the experiment
+//!   script's `tc` schedule); the controller is never told about changes,
+//!   it must *measure* them, exactly as in the paper.
+//! * [`link`] — a serialization-delay link model with propagation latency,
+//!   jitter and loss injection.
+//! * [`frame`] — the wire format for (possibly quantized) activations:
+//!   self-describing header + CRC32-protected payload.
+//! * [`transport`] — async transports between stages: in-process (shaped
+//!   by a [`link::SimLink`]) and real TCP sockets for multi-process mode.
+
+pub mod frame;
+pub mod link;
+pub mod tcp;
+pub mod trace;
+pub mod transport;
+
+/// Bits per second. `f64::INFINITY` means unlimited (no shaping).
+pub type Bps = f64;
+
+/// Convenience: megabits/s → bits/s (the paper quotes Mbps throughout).
+pub fn mbps(v: f64) -> Bps {
+    v * 1e6
+}

@@ -1,0 +1,149 @@
+//! TCP transport for multi-process deployments: each stage process owns
+//! its shard and connects to its neighbours over real sockets (the frame
+//! format is identical to the in-proc path, so the pipeline logic is
+//! transport-agnostic).
+//!
+//! Frames go over the socket length-prefixed (`u32 LE length || frame
+//! bytes`); the frame's own header/CRC provide integrity. Bandwidth is
+//! whatever the real network (or an external `tc` config) provides — this
+//! path exists to show the system runs across real sockets, while the
+//! simulated in-proc transport is the measurement substrate.
+
+use super::frame::Frame;
+use crate::Result;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+pub struct TcpFrameSender {
+    stream: TcpStream,
+}
+
+pub struct TcpFrameReceiver {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+/// Split a connected stream into framed halves.
+pub fn framed(stream: TcpStream) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
+    stream.set_nodelay(true).ok();
+    let rx_stream = stream.try_clone()?;
+    Ok((
+        TcpFrameSender { stream },
+        TcpFrameReceiver { stream: rx_stream, buf: Vec::new() },
+    ))
+}
+
+/// Connect to a downstream worker.
+pub fn connect(addr: &str) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
+    framed(TcpStream::connect(addr)?)
+}
+
+/// Accept one upstream connection.
+pub fn accept_one(listener: &TcpListener) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
+    let (stream, _) = listener.accept()?;
+    framed(stream)
+}
+
+impl Drop for TcpFrameSender {
+    fn drop(&mut self) {
+        // Half-close so the peer's reader sees EOF even while our own
+        // receiver clone keeps the socket alive.
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+    }
+}
+
+impl TcpFrameSender {
+    /// Ship one frame; returns seconds spent writing (the socket's own
+    /// backpressure is the bandwidth signal in TCP mode).
+    pub fn send(&mut self, frame: Frame) -> Result<f64> {
+        let bytes = frame.to_bytes();
+        let t0 = Instant::now();
+        self.stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&bytes)?;
+        self.stream.flush()?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+impl TcpFrameReceiver {
+    /// Next frame; `None` on EOF/abort. CRC failures skip the frame.
+    pub fn recv(&mut self) -> Option<Frame> {
+        loop {
+            let mut len = [0u8; 4];
+            self.stream.read_exact(&mut len).ok()?;
+            let n = u32::from_le_bytes(len) as usize;
+            if n > 1 << 30 {
+                return None; // absurd length: treat as corrupt stream
+            }
+            self.buf.resize(n, 0);
+            self.stream.read_exact(&mut self.buf).ok()?;
+            match Frame::from_bytes(&self.buf) {
+                Ok(f) => return Some(f),
+                Err(_) => continue,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codec::Codec;
+    use crate::quant::Method;
+
+    fn frame(seq: u64, n: usize) -> Frame {
+        let x: Vec<f32> = (0..n).map(|i| ((i + seq as usize) as f32).sin()).collect();
+        let mut c = Codec::default();
+        Frame::new(seq, vec![n], c.encode(&x, Method::Pda, 4).unwrap())
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            let mut seqs = Vec::new();
+            while let Some(f) = rx.recv() {
+                seqs.push(f.seq);
+                if seqs.len() == 5 {
+                    break;
+                }
+            }
+            seqs
+        });
+        let (mut tx, _rx) = connect(&addr).unwrap();
+        for seq in 0..5 {
+            tx.send(frame(seq, 512)).unwrap();
+        }
+        assert_eq!(server.join().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn tcp_large_frame() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv().unwrap()
+        });
+        let (mut tx, _rx) = connect(&addr).unwrap();
+        let f = frame(9, 1024 * 256); // 256k elements, 4-bit → 128 KB payload
+        tx.send(f.clone()).unwrap();
+        assert_eq!(server.join().unwrap(), f);
+    }
+
+    #[test]
+    fn tcp_eof_returns_none() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv()
+        });
+        let (tx, _rx) = connect(&addr).unwrap();
+        drop(tx); // close without sending
+        assert!(server.join().unwrap().is_none());
+    }
+}

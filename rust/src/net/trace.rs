@@ -1,0 +1,212 @@
+//! Piecewise-constant bandwidth traces.
+//!
+//! A trace is the experiment's external schedule of link-capacity changes
+//! (the paper drives these with Linux `tc` "at roughly 200-microbatch
+//! intervals"). QuantPipe itself never reads the trace — only the link
+//! does; the adaptive controller must infer capacity from its own window
+//! measurements.
+
+use super::{mbps, Bps};
+
+/// One segment: from `start` seconds onward, capacity is `bps`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub start: f64,
+    pub bps: Bps,
+}
+
+/// Piecewise-constant bandwidth over time. Segments are sorted by start;
+/// capacity before the first segment is unlimited.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BandwidthTrace {
+    pub segments: Vec<Segment>,
+}
+
+impl BandwidthTrace {
+    /// Constant-capacity trace.
+    pub fn constant(bps: Bps) -> Self {
+        BandwidthTrace { segments: vec![Segment { start: 0.0, bps }] }
+    }
+
+    /// Unlimited capacity (nominal state).
+    pub fn unlimited() -> Self {
+        Self::constant(f64::INFINITY)
+    }
+
+    /// Build from (start_secs, bps) pairs; sorts by start.
+    pub fn from_points(points: &[(f64, Bps)]) -> Self {
+        let mut segments: Vec<Segment> =
+            points.iter().map(|&(start, bps)| Segment { start, bps }).collect();
+        segments.sort_by(|a, b| a.start.total_cmp(&b.start));
+        BandwidthTrace { segments }
+    }
+
+    /// The paper's Fig 5 schedule, parameterized by phase length in seconds:
+    /// unlimited → 400 Mbps → 50 Mbps → 200 Mbps → unlimited.
+    pub fn fig5(phase_secs: f64) -> Self {
+        Self::from_points(&[
+            (0.0, f64::INFINITY),
+            (phase_secs, mbps(400.0)),
+            (2.0 * phase_secs, mbps(50.0)),
+            (3.0 * phase_secs, mbps(200.0)),
+            (4.0 * phase_secs, f64::INFINITY),
+        ])
+    }
+
+    /// Capacity at absolute time `t` seconds.
+    pub fn at(&self, t: f64) -> Bps {
+        let mut bw = f64::INFINITY;
+        for s in &self.segments {
+            if s.start <= t {
+                bw = s.bps;
+            } else {
+                break;
+            }
+        }
+        bw
+    }
+
+    /// Next capacity-change instant strictly after `t`, if any.
+    pub fn next_change(&self, t: f64) -> Option<f64> {
+        self.segments.iter().map(|s| s.start).find(|&s| s > t)
+    }
+
+    /// Time to serialize `bytes` onto the link starting at time `t`,
+    /// integrating across capacity changes. Returns `f64::INFINITY` if the
+    /// trace pins capacity at zero forever.
+    pub fn transmit_secs(&self, bytes: usize, t: f64) -> f64 {
+        let mut remaining_bits = bytes as f64 * 8.0;
+        let mut now = t;
+        let mut elapsed = 0.0;
+        // Bounded iteration: at most segments + 1 spans.
+        for _ in 0..=self.segments.len() + 1 {
+            if remaining_bits <= 0.0 {
+                return elapsed;
+            }
+            let bw = self.at(now);
+            let until = self.next_change(now);
+            if bw.is_infinite() {
+                match until {
+                    // Unlimited: everything flushes instantly.
+                    _ => return elapsed,
+                }
+            }
+            if bw <= 0.0 {
+                match until {
+                    Some(u) => {
+                        elapsed += u - now;
+                        now = u;
+                        continue;
+                    }
+                    None => return f64::INFINITY,
+                }
+            }
+            let span = until.map(|u| u - now).unwrap_or(f64::INFINITY);
+            let can_send = bw * span;
+            if can_send >= remaining_bits {
+                return elapsed + remaining_bits / bw;
+            }
+            remaining_bits -= can_send;
+            elapsed += span;
+            now += span;
+        }
+        elapsed
+    }
+
+    /// Parse `"0:inf,10:400M,20:50M"` → trace (seconds:capacity; suffixes
+    /// K/M/G are bits/s multipliers, `inf` = unlimited).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let mut points = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (t, bw) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad trace segment {part:?} (want time:bw)"))?;
+            let t: f64 = t.trim().parse()?;
+            let bw = bw.trim();
+            let bps = if bw.eq_ignore_ascii_case("inf") {
+                f64::INFINITY
+            } else {
+                let (num, mult) = match bw.chars().last() {
+                    Some('K') | Some('k') => (&bw[..bw.len() - 1], 1e3),
+                    Some('M') | Some('m') => (&bw[..bw.len() - 1], 1e6),
+                    Some('G') | Some('g') => (&bw[..bw.len() - 1], 1e9),
+                    _ => (bw, 1.0),
+                };
+                num.trim().parse::<f64>()? * mult
+            };
+            points.push((t, bps));
+        }
+        anyhow::ensure!(!points.is_empty(), "empty bandwidth trace");
+        Ok(Self::from_points(&points))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_piecewise() {
+        let tr = BandwidthTrace::from_points(&[(0.0, 100.0), (10.0, 50.0), (20.0, 200.0)]);
+        assert_eq!(tr.at(0.0), 100.0);
+        assert_eq!(tr.at(9.99), 100.0);
+        assert_eq!(tr.at(10.0), 50.0);
+        assert_eq!(tr.at(25.0), 200.0);
+        assert_eq!(tr.next_change(0.0), Some(10.0));
+        assert_eq!(tr.next_change(10.0), Some(20.0));
+        assert_eq!(tr.next_change(20.0), None);
+    }
+
+    #[test]
+    fn transmit_constant() {
+        let tr = BandwidthTrace::constant(mbps(8.0)); // 1 MB/s
+        let dt = tr.transmit_secs(1_000_000, 0.0);
+        assert!((dt - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transmit_across_change() {
+        // 1 MB at 8 Mbps for 0.5 s (0.5 MB) then 16 Mbps (0.5 MB in 0.25 s).
+        let tr = BandwidthTrace::from_points(&[(0.0, mbps(8.0)), (0.5, mbps(16.0))]);
+        let dt = tr.transmit_secs(1_000_000, 0.0);
+        assert!((dt - 0.75).abs() < 1e-9, "{dt}");
+    }
+
+    #[test]
+    fn transmit_unlimited_is_instant() {
+        let tr = BandwidthTrace::unlimited();
+        assert_eq!(tr.transmit_secs(1 << 30, 5.0), 0.0);
+    }
+
+    #[test]
+    fn transmit_through_outage() {
+        // Zero capacity until t=2, then 8 Mbps.
+        let tr = BandwidthTrace::from_points(&[(0.0, 0.0), (2.0, mbps(8.0))]);
+        let dt = tr.transmit_secs(1_000_000, 0.0);
+        assert!((dt - 3.0).abs() < 1e-9, "{dt}");
+        // Permanent outage -> infinite.
+        let dead = BandwidthTrace::constant(0.0);
+        assert!(dead.transmit_secs(1, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let tr = BandwidthTrace::parse("0:inf, 10:400M, 20:50M, 30:1.5G").unwrap();
+        assert_eq!(tr.segments.len(), 4);
+        assert!(tr.at(0.0).is_infinite());
+        assert_eq!(tr.at(15.0), 400e6);
+        assert_eq!(tr.at(35.0), 1.5e9);
+        assert!(BandwidthTrace::parse("").is_err());
+        assert!(BandwidthTrace::parse("nope").is_err());
+    }
+
+    #[test]
+    fn fig5_phases() {
+        let tr = BandwidthTrace::fig5(10.0);
+        assert!(tr.at(5.0).is_infinite());
+        assert_eq!(tr.at(15.0), mbps(400.0));
+        assert_eq!(tr.at(25.0), mbps(50.0));
+        assert_eq!(tr.at(35.0), mbps(200.0));
+        assert!(tr.at(45.0).is_infinite());
+    }
+}

@@ -1,0 +1,175 @@
+//! Transports between pipeline stages.
+//!
+//! Stages are OS threads (PJRT is thread-pinned), so transports are
+//! blocking: a bounded `sync_channel` of serialized frames behind a
+//! bandwidth-shaped [`SimLink`] (single host), or real TCP sockets
+//! ([`super::tcp`], multi-process mode). Serializing through bytes keeps
+//! semantics identical across both — including CRC validation on receive.
+//!
+//! The bounded channel is the pipeline's in-flight cap (GPipe-style
+//! microbatch backpressure): a full channel blocks the upstream sender.
+
+use super::frame::Frame;
+use super::link::SimLink;
+use crate::Result;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sender half of an in-process shaped link.
+pub struct InProcSender {
+    link: Arc<SimLink>,
+    tx: SyncSender<Vec<u8>>,
+}
+
+/// Receiver half.
+pub struct InProcReceiver {
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Create a connected pair. `depth` bounds in-flight frames.
+pub fn inproc_pair(link: Arc<SimLink>, depth: usize) -> (InProcSender, InProcReceiver) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(depth.max(1));
+    (InProcSender { link, tx }, InProcReceiver { rx })
+}
+
+impl InProcSender {
+    /// Ship one frame: blocks for the shaped serialization time, then for
+    /// channel space. Returns seconds the link was occupied.
+    pub fn send(&self, frame: Frame) -> Result<f64> {
+        let bytes = frame.to_bytes();
+        let occupied = self.link.send(bytes.len());
+        self.tx
+            .send(bytes)
+            .map_err(|_| anyhow::anyhow!("receiver dropped"))?;
+        Ok(occupied.as_secs_f64())
+    }
+}
+
+impl InProcReceiver {
+    /// Next frame, in order. `None` = channel closed. Frames failing CRC
+    /// are skipped (loss injection models retransmission delay upstream;
+    /// CRC failures here are test-injected corruption).
+    pub fn recv(&mut self) -> Option<Frame> {
+        loop {
+            let bytes = self.rx.recv().ok()?;
+            match Frame::from_bytes(&bytes) {
+                Ok(f) => return Some(f),
+                Err(_) => continue,
+            }
+        }
+    }
+
+    /// Receive with a timeout (used by shutdown paths).
+    pub fn recv_timeout(&mut self, d: Duration) -> std::result::Result<Option<Frame>, ()> {
+        loop {
+            match self.rx.recv_timeout(d) {
+                Ok(bytes) => match Frame::from_bytes(&bytes) {
+                    Ok(f) => return Ok(Some(f)),
+                    Err(_) => continue,
+                },
+                Err(RecvTimeoutError::Timeout) => return Err(()),
+                Err(RecvTimeoutError::Disconnected) => return Ok(None),
+            }
+        }
+    }
+}
+
+/// Expose try-send saturation for tests.
+pub fn try_send_raw(tx: &SyncSender<Vec<u8>>, bytes: Vec<u8>) -> std::result::Result<(), TrySendError<Vec<u8>>> {
+    tx.try_send(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mbps;
+    use crate::net::trace::BandwidthTrace;
+    use crate::quant::codec::Codec;
+    use crate::quant::Method;
+
+    fn frame(seq: u64) -> Frame {
+        let x: Vec<f32> = (0..128).map(|i| (i as f32 + seq as f32).sin()).collect();
+        let mut c = Codec::default();
+        Frame::new(seq, vec![128], c.encode(&x, Method::Aciq, 8).unwrap())
+    }
+
+    #[test]
+    fn frames_arrive_in_order() {
+        let link = Arc::new(SimLink::unlimited());
+        let (tx, mut rx) = inproc_pair(link, 4);
+        let sender = std::thread::spawn(move || {
+            for seq in 0..8u64 {
+                tx.send(frame(seq)).unwrap();
+            }
+        });
+        for seq in 0..8u64 {
+            assert_eq!(rx.recv().unwrap().seq, seq);
+        }
+        sender.join().unwrap();
+        assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    fn shaped_send_takes_time() {
+        // ~616-byte frame over 0.1 Mbps ≈ 49 ms.
+        let link = Arc::new(SimLink::new(BandwidthTrace::constant(mbps(0.1))));
+        let (tx, rx) = inproc_pair(link, 4);
+        let f = frame(0);
+        let bytes = f.wire_len();
+        let t0 = std::time::Instant::now();
+        let r = std::thread::spawn(move || {
+            let mut rx = rx;
+            rx.recv()
+        });
+        let occ = tx.send(f).unwrap();
+        assert!(r.join().unwrap().is_some());
+        let expect = bytes as f64 * 8.0 / 0.1e6;
+        assert!((occ - expect).abs() / expect < 0.3, "occ={occ} expect={expect}");
+        assert!(t0.elapsed().as_secs_f64() >= expect * 0.8);
+    }
+
+    #[test]
+    fn bounded_channel_backpressures() {
+        let link = Arc::new(SimLink::unlimited());
+        let (tx, mut rx) = inproc_pair(link, 2);
+        tx.send(frame(0)).unwrap();
+        tx.send(frame(1)).unwrap();
+        // 3rd raw try_send must fail (channel full).
+        assert!(try_send_raw(&tx.tx, frame(2).to_bytes()).is_err());
+        rx.recv().unwrap();
+        assert!(try_send_raw(&tx.tx, frame(2).to_bytes()).is_ok());
+    }
+
+    #[test]
+    fn closed_receiver_errors() {
+        let link = Arc::new(SimLink::unlimited());
+        let (tx, rx) = inproc_pair(link, 1);
+        drop(rx);
+        assert!(tx.send(frame(0)).is_err());
+    }
+
+    #[test]
+    fn corrupt_frames_skipped() {
+        let link = Arc::new(SimLink::unlimited());
+        let (tx, mut rx) = inproc_pair(link, 4);
+        let mut bad = frame(0).to_bytes();
+        let n = bad.len();
+        bad[n - 1] ^= 0xff;
+        try_send_raw(&tx.tx, bad).unwrap();
+        tx.send(frame(1)).unwrap();
+        // The corrupt frame is skipped; the next valid one arrives.
+        assert_eq!(rx.recv().unwrap().seq, 1);
+    }
+
+    #[test]
+    fn recv_timeout_paths() {
+        let link = Arc::new(SimLink::unlimited());
+        let (tx, mut rx) = inproc_pair(link, 1);
+        assert!(rx.recv_timeout(Duration::from_millis(10)).is_err()); // timeout
+        tx.send(frame(5)).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)).unwrap().unwrap().seq, 5);
+        drop(tx);
+        assert!(rx.recv_timeout(Duration::from_millis(10)).unwrap().is_none()); // closed
+    }
+}

@@ -1,0 +1,229 @@
+//! PipeEdge-style optimal model partitioning ([15], Hu et al. DSD'22).
+//!
+//! Given per-block compute costs on each device and the communication cost
+//! of cutting between blocks, choose contiguous block ranges (one per
+//! device, in order) minimizing the pipeline bottleneck — the max over
+//! stages of `compute(stage) + comm(outgoing cut)` — since steady-state
+//! pipeline throughput is `1 / max_stage_time` (§2: "the overall
+//! performance is bounded by the slowest stage").
+//!
+//! Solved exactly by binary search on the bottleneck T with a greedy
+//! feasibility check (each device takes the longest prefix that fits T),
+//! which is optimal for contiguous partitioning with monotone costs;
+//! `partition_dp` is the O(n²·k) reference DP used to cross-check in
+//! tests.
+
+pub mod profile;
+
+pub use profile::CostModel;
+
+/// A partition: `cuts[i] = (lo, hi)` — device `i` runs blocks `lo..hi`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub cuts: Vec<(usize, usize)>,
+}
+
+impl Partition {
+    /// Bottleneck stage time under `costs` (seconds).
+    pub fn bottleneck(&self, costs: &CostModel) -> f64 {
+        self.cuts
+            .iter()
+            .enumerate()
+            .map(|(d, &(lo, hi))| costs.stage_time(d, lo, hi, hi < costs.blocks()))
+            .fold(0.0, f64::max)
+    }
+
+    /// Steady-state pipeline throughput estimate, items/sec.
+    pub fn throughput(&self, costs: &CostModel) -> f64 {
+        1.0 / self.bottleneck(costs).max(1e-12)
+    }
+}
+
+/// Feasibility: can `blocks` be split across `devices` with bottleneck ≤ t?
+fn feasible(costs: &CostModel, devices: usize, t: f64) -> Option<Partition> {
+    let n = costs.blocks();
+    let mut cuts = Vec::with_capacity(devices);
+    let mut lo = 0;
+    for d in 0..devices {
+        if lo == n {
+            break;
+        }
+        // Longest prefix from `lo` that fits in t on device d.
+        let mut hi = lo;
+        let remaining_devices = devices - d - 1;
+        while hi < n {
+            let cand = hi + 1;
+            let has_cut = cand < n;
+            if costs.stage_time(d, lo, cand, has_cut) <= t {
+                hi = cand;
+            } else {
+                break;
+            }
+        }
+        if hi == lo {
+            return None; // single block exceeds t on this device
+        }
+        // Leave at least one block per remaining device.
+        let max_hi = n - remaining_devices;
+        hi = hi.min(max_hi.max(lo + 1));
+        cuts.push((lo, hi));
+        lo = hi;
+    }
+    if lo == n && !cuts.is_empty() {
+        Some(Partition { cuts })
+    } else {
+        None
+    }
+}
+
+/// Optimal contiguous partition by binary search on the bottleneck.
+pub fn partition(costs: &CostModel, devices: usize) -> Partition {
+    let n = costs.blocks();
+    let devices = devices.min(n).max(1);
+    // Bounds: lo = max single-block time, hi = total on slowest device.
+    let mut lo = 0f64;
+    let mut hi = 0f64;
+    for d in 0..devices {
+        let mut tot = 0.0;
+        for b in 0..n {
+            let t = costs.stage_time(d, b, b + 1, true);
+            lo = lo.max(t * 0.0); // keep lo at 0; greedy check handles the rest
+            tot += t;
+        }
+        hi = hi.max(tot);
+    }
+    let mut best = feasible(costs, devices, hi).expect("total time must be feasible");
+    for _ in 0..64 {
+        let mid = (lo + hi) / 2.0;
+        match feasible(costs, devices, mid) {
+            Some(p) => {
+                hi = mid;
+                best = p;
+            }
+            None => lo = mid,
+        }
+    }
+    best
+}
+
+/// Reference O(n²·k) DP (minimize bottleneck), for cross-checking.
+pub fn partition_dp(costs: &CostModel, devices: usize) -> Partition {
+    let n = costs.blocks();
+    let k = devices.min(n).max(1);
+    // dp[d][i] = min bottleneck splitting blocks[..i] over first d devices.
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; k + 1];
+    let mut back = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for d in 1..=k {
+        for i in 1..=n {
+            for j in 0..i {
+                if dp[d - 1][j].is_finite() {
+                    let t = costs.stage_time(d - 1, j, i, i < n);
+                    let b = dp[d - 1][j].max(t);
+                    if b < dp[d][i] {
+                        dp[d][i] = b;
+                        back[d][i] = j;
+                    }
+                }
+            }
+        }
+    }
+    // Use however many devices achieve the best bottleneck for all n blocks.
+    let (best_d, _) = (1..=k)
+        .map(|d| (d, dp[d][n]))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap();
+    let mut cuts = Vec::new();
+    let mut i = n;
+    let mut d = best_d;
+    while d > 0 {
+        let j = back[d][i];
+        cuts.push((j, i));
+        i = j;
+        d -= 1;
+    }
+    cuts.reverse();
+    Partition { cuts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use profile::CostModel;
+
+    fn uniform_costs(blocks: usize, devices: usize, block_s: f64, comm_s: f64) -> CostModel {
+        CostModel::uniform(blocks, devices, block_s, comm_s)
+    }
+
+    #[test]
+    fn even_split_for_uniform_costs() {
+        let c = uniform_costs(8, 4, 1.0, 0.1);
+        let p = partition(&c, 4);
+        assert_eq!(p.cuts.len(), 4);
+        let sizes: Vec<usize> = p.cuts.iter().map(|&(a, b)| b - a).collect();
+        assert_eq!(sizes, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn matches_reference_dp() {
+        // Heterogeneous: device speeds vary, comm costs vary.
+        for seed in 0..20u64 {
+            let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+            let mut next = || {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f64 / (1u64 << 53) as f64
+            };
+            let blocks = 6 + (seed as usize % 6);
+            let devices = 2 + (seed as usize % 3);
+            let block_times: Vec<Vec<f64>> = (0..devices)
+                .map(|_| (0..blocks).map(|_| 0.5 + next()).collect())
+                .collect();
+            let comm: Vec<f64> = (0..blocks).map(|_| next() * 0.5).collect();
+            let c = CostModel::new(block_times, comm);
+            let a = partition(&c, devices).bottleneck(&c);
+            let b = partition_dp(&c, devices).bottleneck(&c);
+            assert!(
+                (a - b).abs() < 1e-6 || a <= b + 1e-6,
+                "seed={seed}: greedy {a} vs dp {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn comm_cost_discourages_extra_cuts() {
+        // Huge comm cost: best partition collapses to fewer, bigger stages
+        // in the DP (which may use fewer devices).
+        let c = uniform_costs(4, 4, 1.0, 100.0);
+        let p = partition_dp(&c, 4);
+        assert_eq!(p.cuts.len(), 1, "{p:?}");
+        assert_eq!(p.cuts[0], (0, 4));
+    }
+
+    #[test]
+    fn single_device_takes_all() {
+        let c = uniform_costs(8, 1, 1.0, 0.1);
+        let p = partition(&c, 1);
+        assert_eq!(p.cuts, vec![(0, 8)]);
+    }
+
+    #[test]
+    fn throughput_is_inverse_bottleneck() {
+        let c = uniform_costs(8, 4, 1.0, 0.0);
+        let p = partition(&c, 4);
+        assert!((p.bottleneck(&c) - 2.0).abs() < 1e-9);
+        assert!((p.throughput(&c) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_device_gets_fewer_blocks() {
+        // Device 0 is 3x slower: it should receive fewer blocks.
+        let block_times = vec![vec![3.0; 8], vec![1.0; 8]];
+        let c = CostModel::new(block_times, vec![0.01; 8]);
+        let p = partition_dp(&c, 2);
+        assert_eq!(p.cuts.len(), 2);
+        let (a, b) = (p.cuts[0].1 - p.cuts[0].0, p.cuts[1].1 - p.cuts[1].0);
+        assert!(a < b, "{p:?}");
+    }
+}

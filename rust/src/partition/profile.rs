@@ -1,0 +1,98 @@
+//! Per-block / per-device cost profiles feeding the partitioner.
+
+/// Costs for partitioning: `block_s[d][b]` = seconds for block `b` on
+/// device `d`; `comm_s[b]` = seconds to ship the activation cut after
+/// block `b` (at the current bandwidth and bitwidth).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub block_s: Vec<Vec<f64>>,
+    pub comm_s: Vec<f64>,
+}
+
+impl CostModel {
+    pub fn new(block_s: Vec<Vec<f64>>, comm_s: Vec<f64>) -> Self {
+        assert!(!block_s.is_empty());
+        let n = block_s[0].len();
+        assert!(block_s.iter().all(|r| r.len() == n));
+        assert_eq!(comm_s.len(), n);
+        CostModel { block_s, comm_s }
+    }
+
+    /// Homogeneous devices + uniform blocks.
+    pub fn uniform(blocks: usize, devices: usize, block_s: f64, comm_s: f64) -> Self {
+        CostModel {
+            block_s: vec![vec![block_s; blocks]; devices],
+            comm_s: vec![comm_s; blocks],
+        }
+    }
+
+    /// Build from measured quantities: per-block seconds, activation bytes
+    /// at the cut, link bandwidth (bits/s) and quantization bitwidth.
+    pub fn from_measurements(
+        block_s: Vec<Vec<f64>>,
+        cut_bytes: &[usize],
+        bandwidth_bps: f64,
+        bits: u8,
+    ) -> Self {
+        let comm_s = cut_bytes
+            .iter()
+            .map(|&b| {
+                if bandwidth_bps.is_infinite() {
+                    0.0
+                } else {
+                    (b as f64 * bits as f64 / 32.0) * 8.0 / bandwidth_bps
+                }
+            })
+            .collect();
+        CostModel::new(block_s, comm_s)
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.comm_s.len()
+    }
+
+    pub fn devices(&self) -> usize {
+        self.block_s.len()
+    }
+
+    /// Stage time = compute of blocks `lo..hi` on device `d`, plus the
+    /// outgoing communication if this stage has a downstream cut.
+    pub fn stage_time(&self, device: usize, lo: usize, hi: usize, has_cut: bool) -> f64 {
+        let d = device.min(self.block_s.len() - 1);
+        let compute: f64 = self.block_s[d][lo..hi].iter().sum();
+        let comm = if has_cut && hi > 0 { self.comm_s[hi - 1] } else { 0.0 };
+        compute + comm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_time_sums_compute_and_cut() {
+        let c = CostModel::uniform(4, 2, 1.0, 0.5);
+        assert!((c.stage_time(0, 0, 2, true) - 2.5).abs() < 1e-12);
+        assert!((c.stage_time(1, 2, 4, false) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_measurements_scales_with_bits() {
+        let c32 = CostModel::from_measurements(vec![vec![1.0; 4]], &[1_000_000; 4], 8e6, 32);
+        let c8 = CostModel::from_measurements(vec![vec![1.0; 4]], &[1_000_000; 4], 8e6, 8);
+        assert!((c32.comm_s[0] - 1.0).abs() < 1e-9);
+        assert!((c8.comm_s[0] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_bandwidth_zero_comm() {
+        let c = CostModel::from_measurements(vec![vec![1.0; 2]], &[999; 2], f64::INFINITY, 32);
+        assert_eq!(c.comm_s, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_panic() {
+        CostModel::new(vec![vec![1.0; 3]], vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,437 @@
+//! The pipeline driver: wires stage threads, shaped links, monitors and
+//! the adaptive controller into a running system (paper Fig 2).
+//!
+//! Topology for n stages:
+//!
+//! ```text
+//! source thread ─sync_channel─▶ [stage0 thread] ─▶ {sender thread 0:
+//!   SimLink shaping, WindowMonitor, AdaptivePda} ─▶ [stage1 thread]
+//!   ─▶ … ─▶ [stage n-1 thread] ─sync_channel─▶ sink (caller thread)
+//! ```
+//!
+//! * Stage threads own the PJRT engine (thread-pinned), the shard
+//!   executable and the codec; they decode incoming frames, run the shard,
+//!   then calibrate + encode outgoing frames at the bitwidth currently
+//!   published by their link's controller (an `AtomicU8` — the paper's
+//!   control/data split inside the adaptive PDA module).
+//! * Sender threads serialize frames through the shaped [`SimLink`], feed
+//!   the [`WindowMonitor`], and run the Eq. 2 controller at window
+//!   boundaries.
+//! * Labels bypass the pipeline (eval-only) and join at the sink.
+//! * Bounded `sync_channel`s give GPipe-style in-flight caps.
+
+use crate::adapt::{AdaptConfig, AdaptivePda};
+use crate::data::{AccuracyMeter, EvalSet};
+use crate::metrics::{LatencyHisto, Timeline, TimelinePoint};
+use crate::monitor::WindowMonitor;
+use crate::net::frame::Frame;
+use crate::net::link::SimLink;
+use crate::net::transport::{inproc_pair, InProcReceiver};
+use crate::pipeline::stage::StageFactory;
+use crate::quant::codec::Codec;
+use crate::quant::{calibrate, Method, QuantParams, BITS_NONE};
+use crate::tensor::Tensor;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Quantization behaviour of the links.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkQuant {
+    pub method: Method,
+    /// Recalibrate every N microbatches (params reused in between).
+    pub calib_every: u32,
+    /// Initial bitwidth (the controller may change it at any window).
+    pub initial_bits: u8,
+}
+
+impl Default for LinkQuant {
+    fn default() -> Self {
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: BITS_NONE }
+    }
+}
+
+/// Full pipeline specification.
+pub struct PipelineSpec {
+    pub stages: Vec<StageFactory>,
+    /// One link per stage boundary (len = stages - 1).
+    pub links: Vec<Arc<SimLink>>,
+    pub quant: LinkQuant,
+    /// Adaptive controller config; `None` pins `quant.initial_bits`.
+    pub adapt: Option<AdaptConfig>,
+    /// Monitor window in microbatches (paper: 50).
+    pub window: u64,
+    /// In-flight frames per channel (backpressure bound).
+    pub inflight: usize,
+}
+
+struct SourceMsg {
+    seq: u64,
+    tensor: Tensor,
+}
+
+struct SinkMsg {
+    seq: u64,
+    logits: Tensor,
+}
+
+enum StageIn {
+    Source(Receiver<SourceMsg>),
+    Upstream(InProcReceiver),
+}
+
+enum StageOut {
+    Downstream {
+        frame_tx: SyncSender<Frame>,
+        bits: Arc<AtomicU8>,
+        quant: LinkQuant,
+    },
+    Sink(SyncSender<SinkMsg>),
+}
+
+/// Results of a pipeline run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub images: u64,
+    pub microbatches: u64,
+    pub wall_secs: f64,
+    /// End-to-end images/sec.
+    pub throughput: f64,
+    /// Top-1 accuracy over all processed microbatches.
+    pub accuracy: f64,
+    /// Per-window (t_secs, accuracy) samples — the Fig 5 accuracy track.
+    pub window_accuracy: Vec<(f64, f64)>,
+    /// Bandwidth/bitwidth/rate timeline per link — the Fig 5 tracks.
+    pub timeline: Timeline,
+    /// End-to-end microbatch latency.
+    pub latency: LatencyHisto,
+    /// Mean wire bytes per microbatch on link 0 (compression evidence).
+    pub link0_mean_bytes: f64,
+    /// Per-stage mean compute seconds (profiling/partitioning input).
+    pub stage_compute_s: Vec<f64>,
+}
+
+/// Workload: which microbatches to feed.
+pub struct Workload {
+    pub eval: Arc<EvalSet>,
+    pub microbatch: usize,
+    /// Total microbatches to push (cycles over the eval set).
+    pub total: u64,
+}
+
+impl Workload {
+    pub fn one_pass(eval: Arc<EvalSet>, microbatch: usize) -> Self {
+        let total = eval.microbatches(microbatch) as u64;
+        Workload { eval, microbatch, total }
+    }
+
+    pub fn repeat(eval: Arc<EvalSet>, microbatch: usize, total: u64) -> Self {
+        Workload { eval, microbatch, total }
+    }
+}
+
+/// Run the pipeline to completion and report. Blocking (the caller thread
+/// acts as the sink).
+pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
+    let n = spec.stages.len();
+    anyhow::ensure!(n >= 1, "need at least one stage");
+    anyhow::ensure!(
+        spec.links.len() + 1 == n,
+        "need {} links for {} stages, got {}",
+        n - 1,
+        n,
+        spec.links.len()
+    );
+
+    let start = Instant::now();
+    let timeline = Arc::new(Mutex::new(Timeline::default()));
+    let send_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let label_map: Arc<Mutex<HashMap<u64, Vec<u32>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let inflight = spec.inflight.max(1);
+
+    let (src_tx, src_rx) = sync_channel::<SourceMsg>(inflight);
+    let (sink_tx, sink_rx) = sync_channel::<SinkMsg>(inflight);
+    let stage_secs: Arc<Mutex<Vec<(f64, u64)>>> = Arc::new(Mutex::new(vec![(0.0, 0); n]));
+
+    let link_bits: Vec<Arc<AtomicU8>> = (0..n - 1)
+        .map(|_| Arc::new(AtomicU8::new(spec.quant.initial_bits)))
+        .collect();
+
+    // --- stage + sender threads ----------------------------------------------
+    let mut threads = Vec::new();
+    let mut stage_input = StageIn::Source(src_rx);
+
+    for (i, factory) in spec.stages.into_iter().enumerate() {
+        let is_last = i == n - 1;
+        let input = std::mem::replace(&mut stage_input, StageIn::Source(sync_channel(1).1));
+        let secs = stage_secs.clone();
+
+        if is_last {
+            let out = StageOut::Sink(sink_tx.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("qp-stage-{i}"))
+                    .spawn(move || stage_thread(i, factory, input, out, secs))?,
+            );
+        } else {
+            let (frame_tx, frame_rx) = sync_channel::<Frame>(inflight);
+            let (link_tx, link_rx) = inproc_pair(spec.links[i].clone(), inflight);
+            let out = StageOut::Downstream {
+                frame_tx,
+                bits: link_bits[i].clone(),
+                quant: spec.quant,
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("qp-stage-{i}"))
+                    .spawn(move || stage_thread(i, factory, input, out, secs))?,
+            );
+
+            // Sender thread: shaping + monitoring + adaptation for link i.
+            let bits = link_bits[i].clone();
+            let tl = timeline.clone();
+            let adapt_cfg = spec.adapt;
+            let window = spec.window;
+            let batch = workload.microbatch;
+            let initial_bits = spec.quant.initial_bits;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("qp-send-{i}"))
+                    .spawn(move || {
+                        sender_thread(i, frame_rx, link_tx, window, batch, adapt_cfg, initial_bits, bits, tl, start)
+                    })?,
+            );
+            stage_input = StageIn::Upstream(link_rx);
+        }
+    }
+    drop(sink_tx);
+
+    // --- source thread ----------------------------------------------------------
+    {
+        let eval = workload.eval.clone();
+        let s = workload.microbatch;
+        let total = workload.total;
+        let labels = label_map.clone();
+        let times = send_times.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("qp-source".into())
+                .spawn(move || {
+                    let per_pass = eval.microbatches(s).max(1);
+                    for seq in 0..total {
+                        let i = (seq as usize) % per_pass;
+                        let tensor = eval.microbatch(i, s);
+                        labels.lock().unwrap().insert(seq, eval.labels_for(i, s).to_vec());
+                        times.lock().unwrap().insert(seq, Instant::now());
+                        if src_tx.send(SourceMsg { seq, tensor }).is_err() {
+                            break; // pipeline died; sink reports what completed
+                        }
+                    }
+                })?,
+        );
+    }
+
+    // --- sink (this thread) --------------------------------------------------------
+    let mut acc = AccuracyMeter::default();
+    let mut window_meter = AccuracyMeter::default();
+    let mut window_accuracy = Vec::new();
+    let mut latency = LatencyHisto::default();
+    let mut done: u64 = 0;
+    let mut images: u64 = 0;
+    while let Ok(msg) = sink_rx.recv() {
+        let labels = label_map.lock().unwrap().remove(&msg.seq);
+        if let Some(labels) = labels {
+            images += labels.len() as u64;
+            acc.add(&msg.logits, &labels);
+            window_meter.add(&msg.logits, &labels);
+        }
+        if let Some(t0) = send_times.lock().unwrap().remove(&msg.seq) {
+            latency.record(t0.elapsed());
+        }
+        done += 1;
+        if done % spec.window == 0 {
+            window_accuracy.push((start.elapsed().as_secs_f64(), window_meter.take()));
+        }
+        if done >= workload.total {
+            break;
+        }
+    }
+    drop(sink_rx); // unblocks a still-sending last stage
+    if window_meter.total > 0 {
+        window_accuracy.push((start.elapsed().as_secs_f64(), window_meter.take()));
+    }
+
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    for t in threads {
+        let _ = t.join();
+    }
+
+    let link0_mean_bytes = if !spec.links.is_empty() {
+        let (bytes, frames, _) = spec.links[0].counters();
+        bytes as f64 / frames.max(1) as f64
+    } else {
+        0.0
+    };
+
+    let timeline = Arc::try_unwrap(timeline)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default();
+
+    let stage_compute_s = stage_secs
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|&(s, c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect();
+
+    Ok(RunReport {
+        images,
+        microbatches: done,
+        wall_secs: wall,
+        throughput: images as f64 / wall,
+        accuracy: acc.value(),
+        window_accuracy,
+        timeline,
+        latency,
+        link0_mean_bytes,
+        stage_compute_s,
+    })
+}
+
+// -----------------------------------------------------------------------------
+// Stage thread body
+// -----------------------------------------------------------------------------
+
+fn stage_thread(
+    idx: usize,
+    factory: StageFactory,
+    input: StageIn,
+    output: StageOut,
+    secs: Arc<Mutex<Vec<(f64, u64)>>>,
+) {
+    if let Err(e) = stage_loop(idx, factory, input, output, secs) {
+        eprintln!("[quantpipe] stage {idx} exited with error: {e:#}");
+    }
+}
+
+fn stage_loop(
+    idx: usize,
+    factory: StageFactory,
+    mut input: StageIn,
+    output: StageOut,
+    secs: Arc<Mutex<Vec<(f64, u64)>>>,
+) -> Result<()> {
+    let bundle = factory()?;
+    let mut compute = bundle.compute;
+    let mut codec = Codec::new(bundle.quant_backend);
+    let mut decode_buf: Vec<f32> = Vec::new();
+    // Calibration cache: reused until `calib_every` sends or a bits change.
+    let mut cached: Option<QuantParams> = None;
+    let mut since_calib: u32 = 0;
+
+    loop {
+        let (seq, tensor) = match &mut input {
+            StageIn::Source(rx) => match rx.recv() {
+                Ok(m) => (m.seq, m.tensor),
+                Err(_) => return Ok(()),
+            },
+            StageIn::Upstream(rx) => match rx.recv() {
+                Some(frame) => {
+                    codec.decode(&frame.enc, &mut decode_buf)?;
+                    (frame.seq, Tensor::new(decode_buf.clone(), frame.shape.clone()))
+                }
+                None => return Ok(()),
+            },
+        };
+
+        let t0 = Instant::now();
+        let out = compute.run(&tensor)?;
+        {
+            let mut s = secs.lock().unwrap();
+            s[idx].0 += t0.elapsed().as_secs_f64();
+            s[idx].1 += 1;
+        }
+
+        match &output {
+            StageOut::Sink(tx) => {
+                if tx.send(SinkMsg { seq, logits: out }).is_err() {
+                    return Ok(()); // sink finished early
+                }
+            }
+            StageOut::Downstream { frame_tx, bits, quant } => {
+                let bits_now = bits.load(Ordering::Relaxed);
+                let enc = if bits_now >= BITS_NONE {
+                    cached = None;
+                    codec.encode(&out.data, quant.method, BITS_NONE)?
+                } else {
+                    let need_calib = match cached {
+                        Some(p) => p.bits != bits_now || since_calib >= quant.calib_every,
+                        None => true,
+                    };
+                    if need_calib {
+                        cached = Some(calibrate(&out.data, quant.method, bits_now));
+                        since_calib = 0;
+                    }
+                    since_calib += 1;
+                    codec.encode_with_params(&out.data, cached.unwrap())?
+                };
+                let frame = Frame::new(seq, out.shape.clone(), enc);
+                if frame_tx.send(frame).is_err() {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+// -----------------------------------------------------------------------------
+// Sender thread: link shaping + window monitor + Eq.2 controller
+// -----------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn sender_thread(
+    stage: usize,
+    frame_rx: Receiver<Frame>,
+    link_tx: crate::net::transport::InProcSender,
+    window: u64,
+    batch: usize,
+    adapt: Option<AdaptConfig>,
+    initial_bits: u8,
+    bits: Arc<AtomicU8>,
+    timeline: Arc<Mutex<Timeline>>,
+    start: Instant,
+) {
+    let mut monitor = WindowMonitor::new(window, batch);
+    let mut ctl = adapt.map(|cfg| {
+        let mut c = AdaptivePda::new(cfg);
+        c.set_bits(initial_bits);
+        c
+    });
+    while let Ok(frame) = frame_rx.recv() {
+        let wire = frame.wire_len();
+        let busy = match link_tx.send(frame) {
+            Ok(b) => b,
+            Err(_) => return, // downstream gone
+        };
+        if let Some(stats) = monitor.record_send(wire, busy) {
+            let decided = if let Some(c) = &mut ctl {
+                let d = c.on_window(&stats);
+                bits.store(d.bits, Ordering::Relaxed);
+                d.bits
+            } else {
+                bits.load(Ordering::Relaxed)
+            };
+            timeline.lock().unwrap().push(TimelinePoint {
+                t: start.elapsed().as_secs_f64(),
+                stage,
+                bandwidth_bps: stats.bandwidth_bps,
+                rate: stats.rate,
+                bits: decided,
+                util: stats.link_utilization,
+            });
+        }
+    }
+}

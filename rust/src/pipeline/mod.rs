@@ -1,0 +1,174 @@
+//! Distributed pipeline runtime (the paper's Fig 2 system).
+//!
+//! * [`stage`] — stage compute (AOT HLO shard via PJRT, or mocks) and the
+//!   per-thread construction discipline PJRT requires.
+//! * [`driver`] — the event loop: source → stage threads → shaped links
+//!   with monitors + adaptive PDA controllers → sink; produces a
+//!   [`driver::RunReport`] with the Fig 5 timeline, accuracy, throughput
+//!   and latency.
+
+pub mod driver;
+pub mod stage;
+
+pub use driver::{run, LinkQuant, PipelineSpec, RunReport, Workload};
+pub use stage::{hlo_stage_factory, mock_stage_factory, StageBundle, StageCompute, StageFactory};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::AdaptConfig;
+    use crate::data::EvalSet;
+    use crate::net::link::SimLink;
+    use crate::net::trace::BandwidthTrace;
+    use crate::quant::Method;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Tiny synthetic eval set: one-hot "images" so passthrough logits'
+    /// argmax equals the label exactly.
+    fn tiny_eval(count: usize, classes: usize) -> Arc<EvalSet> {
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..count {
+            let lab = i % classes;
+            for c in 0..classes {
+                images.push(if c == lab { 1.0 } else { 0.0 });
+            }
+            labels.push(lab as u32);
+        }
+        Arc::new(EvalSet { images, labels, count, dims: (1, 1, classes) })
+    }
+
+    fn spec_with_links(
+        n_stages: usize,
+        classes: usize,
+        s: usize,
+        trace: BandwidthTrace,
+        quant: LinkQuant,
+        adapt: Option<AdaptConfig>,
+        window: u64,
+    ) -> PipelineSpec {
+        let stages = (0..n_stages)
+            .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
+            .collect();
+        let links = (0..n_stages - 1)
+            .map(|_| Arc::new(SimLink::new(trace.clone())))
+            .collect();
+        PipelineSpec { stages, links, quant, adapt, window, inflight: 2 }
+    }
+
+    #[test]
+    fn two_stage_passthrough_accuracy() {
+        let eval = tiny_eval(64, 4);
+        let spec = spec_with_links(2, 4, 8, BandwidthTrace::unlimited(), LinkQuant::default(), None, 4);
+        let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
+        assert_eq!(report.microbatches, 8);
+        assert_eq!(report.images, 64);
+        // Passthrough at 32-bit: logits == one-hot images, so accuracy = 1.
+        assert!((report.accuracy - 1.0).abs() < 1e-12, "{report:?}");
+    }
+
+    #[test]
+    fn quantized_passthrough_still_classifies() {
+        // 8-bit ACIQ quantization of one-hot rows keeps argmax intact.
+        let eval = tiny_eval(64, 4);
+        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+        let spec = spec_with_links(3, 4, 8, BandwidthTrace::unlimited(), quant, None, 4);
+        let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
+        assert!((report.accuracy - 1.0).abs() < 1e-12, "{report:?}");
+        // Wire volume reflects 8-bit compression (payload 32 B + header).
+        assert!(report.link0_mean_bytes < 8.0 * 4.0 * 4.0, "{report:?}");
+    }
+
+    #[test]
+    fn single_stage_no_links() {
+        let eval = tiny_eval(16, 4);
+        let stages = vec![mock_stage_factory(1.0, 0.0, vec![4, 4], Duration::ZERO)];
+        let spec = PipelineSpec {
+            stages,
+            links: vec![],
+            quant: LinkQuant::default(),
+            adapt: None,
+            window: 2,
+            inflight: 2,
+        };
+        let report = run(spec, Workload::one_pass(eval, 4)).unwrap();
+        assert_eq!(report.microbatches, 4);
+        assert!((report.accuracy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_controller_reduces_bits_under_constraint() {
+        // Frame at 32-bit ≈ 128 B payload + ~44 B header ≈ 1.4 kbit.
+        // Target 800 img/s with S=8 ⇒ 10 ms budget ⇒ need ≥140 kbps for
+        // 32-bit; give the link 60 kbps so the controller must compress.
+        let eval = tiny_eval(160, 4);
+        let trace = BandwidthTrace::constant(60e3);
+        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 };
+        let adapt = AdaptConfig {
+            target_rate: 800.0,
+            microbatch: 8,
+            policy: crate::adapt::Policy::Ladder,
+            raise_margin: 1.0,
+        };
+        let spec = spec_with_links(2, 4, 8, trace, quant, Some(adapt), 5);
+        let report = run(spec, Workload::repeat(eval, 8, 40)).unwrap();
+        let final_bits = report.timeline.final_bits(0).expect("windows must complete");
+        assert!(final_bits < 32, "controller should have compressed: {report:?}");
+        assert_eq!(report.microbatches, 40);
+    }
+
+    #[test]
+    fn throughput_tracks_bandwidth() {
+        // Comm-bound two-stage pipeline: throughput ≈ capacity / frame bits.
+        let eval = tiny_eval(64, 4);
+        let s = 8usize;
+        let trace = BandwidthTrace::constant(100e3); // 100 kbps
+        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 };
+        let spec = spec_with_links(2, 4, s, trace, quant, None, 4);
+        let report = run(spec, Workload::repeat(eval, s, 20)).unwrap();
+        // Frame ≈ 128 B payload + 44 B header = 1376 bits ⇒ ~72 fps ⇒
+        // ~580 img/s. Allow generous slack for pipeline fill + timers.
+        assert!(
+            report.throughput > 300.0 && report.throughput < 800.0,
+            "{}",
+            report.throughput
+        );
+    }
+
+    #[test]
+    fn latency_recorded_per_microbatch() {
+        let eval = tiny_eval(32, 4);
+        let spec = spec_with_links(
+            2, 4, 8,
+            BandwidthTrace::constant(1e6),
+            LinkQuant::default(),
+            None,
+            4,
+        );
+        let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
+        assert_eq!(report.latency.count(), 4);
+        assert!(report.latency.mean() > Duration::from_micros(100));
+        assert_eq!(report.stage_compute_s.len(), 2);
+    }
+
+    #[test]
+    fn mock_compute_time_measured() {
+        let eval = tiny_eval(16, 4);
+        let stages = vec![
+            mock_stage_factory(1.0, 0.0, vec![4, 4], Duration::from_millis(5)),
+            mock_stage_factory(1.0, 0.0, vec![4, 4], Duration::from_millis(1)),
+        ];
+        let spec = PipelineSpec {
+            stages,
+            links: vec![Arc::new(SimLink::unlimited())],
+            quant: LinkQuant::default(),
+            adapt: None,
+            window: 2,
+            inflight: 2,
+        };
+        let report = run(spec, Workload::one_pass(eval, 4)).unwrap();
+        assert!(report.stage_compute_s[0] > report.stage_compute_s[1]);
+        assert!(report.stage_compute_s[0] >= 0.004, "{:?}", report.stage_compute_s);
+    }
+}

@@ -1,0 +1,144 @@
+//! Stage compute abstraction.
+//!
+//! A stage is whatever turns an input activation into an output activation
+//! — in production the AOT-compiled ViT shard run through PJRT, in tests a
+//! mock. `PjRtClient` is thread-pinned (Rc), so stages are built *inside*
+//! their owning thread by a `Send` factory.
+
+use crate::runtime::{Engine, Executable, HloQuantBackend, Manifest};
+use crate::quant::codec::{NativeBackend, QuantBackend};
+use crate::tensor::Tensor;
+use crate::Result;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Stage compute: input activation → output activation.
+pub trait StageCompute {
+    fn run(&mut self, input: &Tensor) -> Result<Tensor>;
+    fn out_shape(&self) -> &[usize];
+}
+
+/// Everything a stage thread owns: the shard and its codec arithmetic.
+pub struct StageBundle {
+    pub compute: Box<dyn StageCompute>,
+    pub quant_backend: Box<dyn QuantBackend>,
+}
+
+/// Runs once inside the stage's thread to construct its bundle.
+pub type StageFactory = Box<dyn FnOnce() -> Result<StageBundle> + Send>;
+
+// ---------------------------------------------------------------------------
+// Real stage: AOT HLO shard via PJRT
+// ---------------------------------------------------------------------------
+
+/// A compiled model shard.
+pub struct HloStage {
+    exe: Executable,
+    out_shape: Vec<usize>,
+}
+
+impl StageCompute for HloStage {
+    fn run(&mut self, input: &Tensor) -> Result<Tensor> {
+        self.exe.run_f32(&[input], &self.out_shape)
+    }
+
+    fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+}
+
+/// Factory for stage `idx` of the manifest; `hlo_codec` selects the AOT
+/// Pallas kernel (vs native rust) for quantize/dequantize.
+pub fn hlo_stage_factory(
+    dir: PathBuf,
+    manifest: Manifest,
+    idx: usize,
+    hlo_codec: bool,
+) -> StageFactory {
+    Box::new(move || {
+        let engine = Engine::cpu()?;
+        let meta = &manifest.stages[idx];
+        let exe = engine.load_hlo(dir.join(&meta.file))?;
+        let quant_backend: Box<dyn QuantBackend> = if hlo_codec {
+            Box::new(HloQuantBackend::load(&engine, &dir, &manifest)?)
+        } else {
+            Box::new(NativeBackend)
+        };
+        Ok(StageBundle {
+            compute: Box::new(HloStage { exe, out_shape: meta.out_shape.clone() }),
+            quant_backend,
+        })
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Mock stage (tests / net-only benches)
+// ---------------------------------------------------------------------------
+
+/// Deterministic mock: y = a·x + b elementwise (reshaped to `out_shape`,
+/// truncating/cycling data), with optional busy-sleep to model compute.
+pub struct MockStage {
+    pub a: f32,
+    pub b: f32,
+    pub out_shape: Vec<usize>,
+    pub compute: Duration,
+}
+
+impl MockStage {
+    pub fn passthrough(out_shape: Vec<usize>) -> Self {
+        MockStage { a: 1.0, b: 0.0, out_shape, compute: Duration::ZERO }
+    }
+}
+
+impl StageCompute for MockStage {
+    fn run(&mut self, input: &Tensor) -> Result<Tensor> {
+        if !self.compute.is_zero() {
+            std::thread::sleep(self.compute);
+        }
+        let n: usize = self.out_shape.iter().product();
+        let data = (0..n)
+            .map(|i| self.a * input.data[i % input.data.len().max(1)] + self.b)
+            .collect();
+        Ok(Tensor::new(data, self.out_shape.clone()))
+    }
+
+    fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+}
+
+/// Factory for a mock stage with a native codec backend.
+pub fn mock_stage_factory(a: f32, b: f32, out_shape: Vec<usize>, compute: Duration) -> StageFactory {
+    Box::new(move || {
+        Ok(StageBundle {
+            compute: Box::new(MockStage { a, b, out_shape, compute }),
+            quant_backend: Box::new(NativeBackend),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_stage_transform() {
+        let mut s = MockStage { a: 2.0, b: 1.0, out_shape: vec![2, 2], compute: Duration::ZERO };
+        let out = s.run(&Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2])).unwrap();
+        assert_eq!(out.data, vec![3.0, 5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn mock_stage_reshapes() {
+        let mut s = MockStage::passthrough(vec![6]);
+        let out = s.run(&Tensor::new(vec![1.0, 2.0, 3.0], vec![3])).unwrap();
+        assert_eq!(out.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn factory_is_send() {
+        fn assert_send<T: Send>(_: &T) {}
+        let f = mock_stage_factory(1.0, 0.0, vec![4], Duration::ZERO);
+        assert_send(&f);
+    }
+}

@@ -1,0 +1,223 @@
+//! Tensor codec: calibrate → quantize → bit-pack on send, unpack →
+//! dequantize on receive. This is the adaptive PDA module's data path.
+//!
+//! The quantize/dequantize arithmetic is pluggable via [`QuantBackend`]:
+//! * [`NativeBackend`] — the pure-rust loop in [`super::uniform`];
+//! * `runtime::HloQuantBackend` — the AOT-compiled Pallas kernel executed
+//!   through PJRT (the architecture's L1 hot path).
+//! Both produce identical codes (cross-checked in tests/runtime_hlo.rs),
+//! so the choice is a deployment/perf knob (`codec_backend` in the config),
+//! benchmarked as an ablation.
+
+use super::pack;
+use super::{calibrate, Method, QuantParams, BITS_NONE};
+use crate::Result;
+
+/// Pluggable quantize/dequantize arithmetic.
+pub trait QuantBackend: Send {
+    fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> Result<()>;
+    fn dequantize(&mut self, codes: &[i32], p: &QuantParams, out: &mut [f32]) -> Result<()>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend (no PJRT involvement).
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl QuantBackend for NativeBackend {
+    fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> Result<()> {
+        super::uniform::quantize_into(x, p, out);
+        Ok(())
+    }
+
+    fn dequantize(&mut self, codes: &[i32], p: &QuantParams, out: &mut [f32]) -> Result<()> {
+        super::uniform::dequantize_into(codes, p, out);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// An encoded activation ready for framing onto the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoded {
+    /// `None` ⇒ raw f32 passthrough (bits = 32, the nominal state).
+    pub params: Option<QuantParams>,
+    /// Element count of the original tensor.
+    pub elems: usize,
+    /// Packed payload bytes.
+    pub payload: Vec<u8>,
+}
+
+impl Encoded {
+    pub fn bits(&self) -> u8 {
+        self.params.map_or(BITS_NONE, |p| p.bits)
+    }
+
+    /// Wire bytes (payload only; the frame header adds a fixed few bytes).
+    pub fn wire_len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Compression factor vs f32.
+    pub fn compression(&self) -> f64 {
+        (self.elems * 4) as f64 / self.payload.len().max(1) as f64
+    }
+}
+
+/// Stateful encoder/decoder with reusable scratch buffers (zero allocation
+/// in steady state).
+pub struct Codec {
+    backend: Box<dyn QuantBackend>,
+    codes: Vec<i32>,
+}
+
+impl Default for Codec {
+    fn default() -> Self {
+        Codec::new(Box::new(NativeBackend))
+    }
+}
+
+impl Codec {
+    pub fn new(backend: Box<dyn QuantBackend>) -> Self {
+        Codec { backend, codes: Vec::new() }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Calibrate on `x` and encode it at `bits` using `method`.
+    /// `bits == 32` bypasses quantization entirely (raw f32 LE payload).
+    pub fn encode(&mut self, x: &[f32], method: Method, bits: u8) -> Result<Encoded> {
+        if bits >= BITS_NONE {
+            let mut payload = Vec::with_capacity(x.len() * 4);
+            for v in x {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            return Ok(Encoded { params: None, elems: x.len(), payload });
+        }
+        let params = calibrate(x, method, bits);
+        self.encode_with_params(x, params)
+    }
+
+    /// Encode with pre-derived params (used when calibration is amortized
+    /// across a window rather than per-microbatch).
+    pub fn encode_with_params(&mut self, x: &[f32], params: QuantParams) -> Result<Encoded> {
+        self.codes.resize(x.len(), 0);
+        self.backend.quantize(x, &params, &mut self.codes)?;
+        let mut payload = Vec::new();
+        pack::pack(&self.codes, params.bits, params.pack_offset(), &mut payload);
+        Ok(Encoded { params: Some(params), elems: x.len(), payload })
+    }
+
+    /// Decode into `out` (resized to the tensor's element count).
+    pub fn decode(&mut self, enc: &Encoded, out: &mut Vec<f32>) -> Result<()> {
+        out.resize(enc.elems, 0.0);
+        match enc.params {
+            None => {
+                anyhow::ensure!(
+                    enc.payload.len() == enc.elems * 4,
+                    "raw payload length mismatch: {} != {}",
+                    enc.payload.len(),
+                    enc.elems * 4
+                );
+                for (o, ch) in out.iter_mut().zip(enc.payload.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+                }
+            }
+            Some(p) => {
+                anyhow::ensure!(
+                    enc.payload.len() >= pack::packed_len(enc.elems, p.bits),
+                    "packed payload truncated"
+                );
+                self.codes.clear();
+                pack::unpack(&enc.payload, enc.elems, p.bits, p.pack_offset(), &mut self.codes);
+                self.backend.dequantize(&self.codes, &p, out)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::SUPPORTED_BITS;
+
+    fn test_tensor(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let t = i as f32 * 0.618;
+                (t.sin() * 2.0) + if i % 97 == 0 { 8.0 } else { 0.0 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn passthrough_is_lossless() {
+        let x = test_tensor(1000);
+        let mut c = Codec::default();
+        let enc = c.encode(&x, Method::Pda, 32).unwrap();
+        assert!(enc.params.is_none());
+        assert_eq!(enc.wire_len(), 4000);
+        let mut out = Vec::new();
+        c.decode(&enc, &mut out).unwrap();
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn encode_decode_reconstruction_error_bounded() {
+        let x = test_tensor(2048);
+        let mut c = Codec::default();
+        for m in Method::ALL {
+            for bits in SUPPORTED_BITS {
+                let enc = c.encode(&x, m, bits).unwrap();
+                let p = enc.params.unwrap();
+                let mut out = Vec::new();
+                c.decode(&enc, &mut out).unwrap();
+                // Inside the clip range the error is <= scale/2.
+                let clip_hi = (p.hi - p.zero_point) * p.scale;
+                let clip_lo = (p.lo - p.zero_point) * p.scale;
+                for (a, b) in x.iter().zip(&out) {
+                    if *a > clip_lo && *a < clip_hi {
+                        assert!((a - b).abs() <= p.scale * 0.5 + 1e-5, "{m:?}/{bits}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_sizes_match_bitwidth() {
+        let x = test_tensor(4096);
+        let mut c = Codec::default();
+        for bits in SUPPORTED_BITS {
+            let enc = c.encode(&x, Method::Aciq, bits).unwrap();
+            assert_eq!(enc.wire_len(), 4096 * bits as usize / 8);
+            assert!((enc.compression() - 32.0 / bits as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn amortized_params_reuse() {
+        let x = test_tensor(512);
+        let mut c = Codec::default();
+        let p = crate::quant::calibrate(&x, Method::Aciq, 8);
+        let e1 = c.encode_with_params(&x, p).unwrap();
+        let e2 = c.encode(&x, Method::Aciq, 8).unwrap();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn decode_rejects_truncated_payload() {
+        let x = test_tensor(128);
+        let mut c = Codec::default();
+        let mut enc = c.encode(&x, Method::Aciq, 8).unwrap();
+        enc.payload.truncate(10);
+        let mut out = Vec::new();
+        assert!(c.decode(&enc, &mut out).is_err());
+    }
+}

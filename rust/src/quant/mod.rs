@@ -1,0 +1,171 @@
+//! Post-training quantization (paper §3).
+//!
+//! Three methods, matching Table 1's rows:
+//! * **naive PTQ** ([`uniform::naive_params`]) — asymmetric affine range from
+//!   the tensor min/max; collapses at small bitwidths because outliers blow
+//!   up the quantization interval (Fig 3).
+//! * **ACIQ** ([`aciq`]) — Banner et al.'s analytically-optimal symmetric
+//!   clip `alpha = F(q) * b` under a Laplace(0, b) assumption with the
+//!   moment estimate `b_E = mean(|x|)`.
+//! * **DS-ACIQ** ([`ds_aciq`]) — the paper's contribution: a directed
+//!   numerical search for a scale `b*` whose Laplace density better fits the
+//!   *real* activation histogram (Eq. 1), bridging the estimated-vs-real
+//!   distribution gap that wrecks 2-bit ACIQ.
+//!
+//! **PDA** (= PTQ with DS-ACIQ) dispatches: DS-ACIQ at 2/4-bit, plain ACIQ
+//! otherwise (§3: "the DS-ACIQ approach is only activated under 4- and
+//! 2-bit quantization").
+//!
+//! The numerical semantics of every function here are pinned to the python
+//! oracle `python/compile/kernels/ref.py` via `artifacts/golden.json`
+//! (tests/golden.rs) and to the Pallas kernel via the runtime tests.
+
+pub mod aciq;
+pub mod codec;
+pub mod ds_aciq;
+pub mod pack;
+pub mod stats;
+pub mod uniform;
+
+/// Bitwidths supported on the wire. 32 means "no quantization" (raw f32).
+pub const SUPPORTED_BITS: [u8; 5] = [2, 4, 6, 8, 16];
+
+/// `q = 32`: pass-through (no quantization), the pipeline's nominal state.
+pub const BITS_NONE: u8 = 32;
+
+/// Quantization method selector (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Method {
+    /// Asymmetric affine min/max PTQ.
+    Naive,
+    /// Laplace-optimal symmetric clip (moment-estimated scale).
+    Aciq,
+    /// Directed-search ACIQ (always on).
+    DsAciq,
+    /// The paper's deployed config: DS-ACIQ at 2/4-bit, ACIQ elsewhere.
+    #[default]
+    Pda,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] = [Method::Naive, Method::Aciq, Method::DsAciq, Method::Pda];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Naive => "naive",
+            Method::Aciq => "aciq",
+            Method::DsAciq => "ds_aciq",
+            Method::Pda => "pda",
+        }
+    }
+}
+
+/// Affine quantizer parameters: `codes = clamp(round(x/scale + zp), lo, hi)`.
+///
+/// The single affine form covers naive (zp != 0, unsigned range) and
+/// symmetric-clipped (zp = 0, signed range) quantization, and is exactly the
+/// runtime-input signature of the AOT Pallas kernel — so a `QuantParams` is
+/// both the native-path and the HLO-path parameterization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: f32,
+    pub lo: f32,
+    pub hi: f32,
+    /// Bitwidth these params were derived for (2..=16).
+    pub bits: u8,
+}
+
+impl QuantParams {
+    /// Number of representable codes; always `2^bits`.
+    pub fn levels(&self) -> u32 {
+        (self.hi - self.lo) as u32 + 1
+    }
+
+    /// Offset applied before bit-packing so codes are non-negative.
+    pub fn pack_offset(&self) -> i32 {
+        self.lo as i32
+    }
+}
+
+/// Derive quantizer params for `x` under `method` at `bits`.
+///
+/// This is the calibration step of the PDA module: stats (+ histogram and
+/// directed search when DS is active) -> clip range -> affine params. It is
+/// control-path work; the data-path quantize/dequantize runs either through
+/// the AOT Pallas kernel or [`uniform`]'s native implementation.
+pub fn calibrate(x: &[f32], method: Method, bits: u8) -> QuantParams {
+    debug_assert!(SUPPORTED_BITS.contains(&bits), "unsupported bitwidth {bits}");
+    match method {
+        Method::Naive => uniform::naive_params(x, bits),
+        Method::Aciq => {
+            let alpha = aciq::aciq_alpha(x, bits);
+            uniform::symmetric_params(alpha, bits)
+        }
+        Method::DsAciq => {
+            let b = ds_aciq::ds_aciq_b_sampled(
+                x,
+                bits,
+                ds_aciq::DEFAULT_STEPS,
+                ds_aciq::CALIB_MAX_SAMPLES,
+            )
+            .b_star;
+            uniform::symmetric_params(aciq::ratio(bits) * b, bits)
+        }
+        Method::Pda => {
+            if bits <= 4 {
+                calibrate(x, Method::DsAciq, bits)
+            } else {
+                calibrate(x, Method::Aciq, bits)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn laplace(n: usize, b: f32, seed: u64) -> Vec<f32> {
+        crate::util::rng::Rng::seed(seed).laplace_vec(n, b)
+    }
+
+    #[test]
+    fn pda_dispatches_to_ds_at_low_bits() {
+        let x = laplace(4096, 1.0, 7);
+        for bits in [2u8, 4] {
+            assert_eq!(
+                calibrate(&x, Method::Pda, bits),
+                calibrate(&x, Method::DsAciq, bits)
+            );
+        }
+        for bits in [6u8, 8, 16] {
+            assert_eq!(
+                calibrate(&x, Method::Pda, bits),
+                calibrate(&x, Method::Aciq, bits)
+            );
+        }
+    }
+
+    #[test]
+    fn levels_match_bits() {
+        let x = laplace(1024, 0.5, 3);
+        for m in Method::ALL {
+            for bits in SUPPORTED_BITS {
+                let p = calibrate(&x, m, bits);
+                assert_eq!(p.levels(), 1u32 << bits, "{m:?} {bits}");
+                assert_eq!(p.bits, bits);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_methods_have_zero_zp() {
+        let x = laplace(1024, 1.0, 9);
+        for m in [Method::Aciq, Method::DsAciq, Method::Pda] {
+            for bits in SUPPORTED_BITS {
+                assert_eq!(calibrate(&x, m, bits).zero_point, 0.0);
+            }
+        }
+    }
+}

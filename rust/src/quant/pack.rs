@@ -1,0 +1,167 @@
+//! Dense bit-packing of quantization codes for the wire.
+//!
+//! This is where the bandwidth saving actually materializes: the Pallas /
+//! native quantizer emits i32 codes, and the sender packs them into a dense
+//! little-endian bitstream of `q` bits per element (so 2-bit quantization
+//! really is a 16x byte reduction vs f32, matching the paper's "compressed
+//! by 4x using 8-bit quantization" arithmetic).
+//!
+//! Codes are offset by `-lo` before packing so the packed fields are
+//! unsigned; the receiver adds `lo` back. Layout: element `i` occupies bits
+//! `[i*q, (i+1)*q)` of the stream, bit `k` of the stream is bit `k % 8` of
+//! byte `k / 8`. 8- and 16-bit widths take byte-aligned fast paths.
+
+/// Packed size in bytes for `n` codes at `bits` per code.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+/// Pack `codes` (each in `[lo, lo + 2^bits)`) into a dense bitstream.
+pub fn pack(codes: &[i32], bits: u8, lo: i32, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(packed_len(codes.len(), bits));
+    match bits {
+        8 => {
+            for &c in codes {
+                out.push((c - lo) as u8);
+            }
+        }
+        16 => {
+            for &c in codes {
+                let u = (c - lo) as u16;
+                out.extend_from_slice(&u.to_le_bytes());
+            }
+        }
+        _ => {
+            debug_assert!(bits < 8);
+            let mask = (1u32 << bits) - 1;
+            let mut acc: u32 = 0;
+            let mut nbits: u32 = 0;
+            for &c in codes {
+                let u = (c - lo) as u32 & mask;
+                acc |= u << nbits;
+                nbits += bits as u32;
+                while nbits >= 8 {
+                    out.push((acc & 0xff) as u8);
+                    acc >>= 8;
+                    nbits -= 8;
+                }
+            }
+            if nbits > 0 {
+                out.push((acc & 0xff) as u8);
+            }
+        }
+    }
+}
+
+/// Unpack `n` codes from a bitstream produced by [`pack`].
+pub fn unpack(bytes: &[u8], n: usize, bits: u8, lo: i32, out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(n);
+    match bits {
+        8 => {
+            for &b in bytes.iter().take(n) {
+                out.push(b as i32 + lo);
+            }
+        }
+        16 => {
+            for ch in bytes.chunks_exact(2).take(n) {
+                out.push(u16::from_le_bytes([ch[0], ch[1]]) as i32 + lo);
+            }
+        }
+        _ => {
+            debug_assert!(bits < 8);
+            let mask = (1u32 << bits) - 1;
+            let mut acc: u32 = 0;
+            let mut nbits: u32 = 0;
+            let mut iter = bytes.iter();
+            for _ in 0..n {
+                while nbits < bits as u32 {
+                    acc |= (*iter.next().expect("bitstream truncated") as u32) << nbits;
+                    nbits += 8;
+                }
+                out.push((acc & mask) as i32 + lo);
+                acc >>= bits;
+                nbits -= bits as u32;
+            }
+        }
+    }
+}
+
+/// Allocating wrappers (tests / non-hot-path callers).
+pub fn pack_vec(codes: &[i32], bits: u8, lo: i32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack(codes, bits, lo, &mut out);
+    out
+}
+
+pub fn unpack_vec(bytes: &[u8], n: usize, bits: u8, lo: i32) -> Vec<i32> {
+    let mut out = Vec::new();
+    unpack(bytes, n, bits, lo, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_case(bits: u8, lo: i32, n: usize, seed: u64) {
+        let mut rng = crate::util::rng::Rng::seed(seed);
+        let span = 1usize << bits;
+        let codes: Vec<i32> = (0..n).map(|_| lo + rng.usize(0, span) as i32).collect();
+        let bytes = pack_vec(&codes, bits, lo);
+        assert_eq!(bytes.len(), packed_len(n, bits));
+        let back = unpack_vec(&bytes, n, bits, lo);
+        assert_eq!(back, codes, "bits={bits} lo={lo} n={n}");
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in crate::quant::SUPPORTED_BITS {
+            let lo_sym = -(1i32 << (bits - 1));
+            for n in [0usize, 1, 3, 7, 8, 63, 64, 1000] {
+                roundtrip_case(bits, lo_sym, n, 42 + n as u64);
+                roundtrip_case(bits, 0, n, 137 + n as u64); // naive (unsigned)
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sizes_exact() {
+        assert_eq!(packed_len(1024, 2), 256);
+        assert_eq!(packed_len(1024, 4), 512);
+        assert_eq!(packed_len(1024, 6), 768);
+        assert_eq!(packed_len(1024, 8), 1024);
+        assert_eq!(packed_len(1024, 16), 2048);
+        assert_eq!(packed_len(3, 6), 3); // 18 bits -> 3 bytes
+    }
+
+    #[test]
+    fn compression_ratio_vs_f32() {
+        // The paper's headline arithmetic: 8-bit => 4x, 2-bit => 16x.
+        let n = 4096;
+        assert_eq!(n * 4 / packed_len(n, 8), 4);
+        assert_eq!(n * 4 / packed_len(n, 2), 16);
+    }
+
+    #[test]
+    fn six_bit_cross_byte_boundaries() {
+        // 6-bit fields straddle bytes; check a hand-computed pattern.
+        let codes = vec![0b000001, 0b000010, 0b000011, 0b000100]; // lo = 0
+        let bytes = pack_vec(&codes, 6, 0);
+        // stream bits: 000001 | 000010 | 000011 | 000100 (LSB-first)
+        // byte0 = 10_000001, byte1 = 0011_0000, byte2 = 000100_00
+        assert_eq!(bytes, vec![0b1000_0001, 0b0011_0000, 0b0001_0000]);
+        assert_eq!(unpack_vec(&bytes, 4, 6, 0), codes);
+    }
+
+    #[test]
+    fn extreme_codes_survive() {
+        for bits in crate::quant::SUPPORTED_BITS {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let codes = vec![lo, hi, lo, hi, 0];
+            assert_eq!(unpack_vec(&pack_vec(&codes, bits, lo), 5, bits, lo), codes);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Streaming tensor statistics and the |x| histogram used by DS-ACIQ and
+//! the Fig 3/4 analyses.
+
+/// Single-pass min / max / mean|x| / mean / variance over a tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorStats {
+    pub min: f32,
+    pub max: f32,
+    pub mean: f64,
+    pub mean_abs: f64,
+    pub var: f64,
+    pub n: usize,
+}
+
+impl TensorStats {
+    pub fn compute(x: &[f32]) -> Self {
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        let (mut s, mut sa, mut s2) = (0f64, 0f64, 0f64);
+        for &v in x {
+            min = min.min(v);
+            max = max.max(v);
+            let d = v as f64;
+            s += d;
+            sa += d.abs();
+            s2 += d * d;
+        }
+        let n = x.len().max(1) as f64;
+        let mean = s / n;
+        TensorStats {
+            min,
+            max,
+            mean,
+            mean_abs: sa / n,
+            var: (s2 / n - mean * mean).max(0.0),
+            n: x.len(),
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var.sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.min.abs().max(self.max.abs())
+    }
+
+    /// Excess kurtosis (needs a second pass; used by analyses, not hot path).
+    pub fn excess_kurtosis(&self, x: &[f32]) -> f64 {
+        if self.var <= 0.0 || x.is_empty() {
+            return 0.0;
+        }
+        let m4: f64 = x
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - self.mean;
+                d * d * d * d
+            })
+            .sum::<f64>()
+            / x.len() as f64;
+        m4 / (self.var * self.var) - 3.0
+    }
+}
+
+/// |x| histogram: fixed bin count over `[0, max|x|]`, matching ref.py's
+/// `histogram` so the DS search sees identical bins in both languages.
+#[derive(Debug, Clone)]
+pub struct AbsHistogram {
+    pub counts: Vec<u64>,
+    pub width: f64,
+    pub total: u64,
+}
+
+pub const DEFAULT_BINS: usize = 2048;
+
+impl AbsHistogram {
+    pub fn compute(x: &[f32], bins: usize) -> Self {
+        let mut top = 0f32;
+        for &v in x {
+            top = top.max(v.abs());
+        }
+        let top = if top > 0.0 { top as f64 } else { 1e-12 };
+        let width = top / bins as f64;
+        let mut counts = vec![0u64; bins];
+        let inv = bins as f64 / top;
+        for &v in x {
+            // numpy's histogram places x == top in the last bin.
+            let mut idx = (v.abs() as f64 * inv) as usize;
+            if idx >= bins {
+                idx = bins - 1;
+            }
+            counts[idx] += 1;
+        }
+        AbsHistogram { counts, width, total: x.len() as u64 }
+    }
+
+    /// Bin center of bin `i` (matches numpy's edge midpoints).
+    pub fn center(&self, i: usize) -> f64 {
+        (i as f64 + 0.5) * self.width
+    }
+
+    /// Real signed-axis density `D_R` at bin `i` (÷2 unfolds |x| symmetry).
+    pub fn density(&self, i: usize) -> f64 {
+        self.counts[i] as f64 / (self.total.max(1) as f64 * self.width) / 2.0
+    }
+
+    /// `max(D_R)` — the real density peak used for the search direction and
+    /// boundary in DS-ACIQ.
+    pub fn peak_density(&self) -> f64 {
+        let max_count = self.counts.iter().copied().max().unwrap_or(0);
+        max_count as f64 / (self.total.max(1) as f64 * self.width) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_vector() {
+        let x = [-2.0f32, -1.0, 0.0, 1.0, 2.0];
+        let s = TensorStats::compute(&x);
+        assert_eq!(s.min, -2.0);
+        assert_eq!(s.max, 2.0);
+        assert!((s.mean).abs() < 1e-12);
+        assert!((s.mean_abs - 1.2).abs() < 1e-12);
+        assert!((s.var - 2.0).abs() < 1e-12);
+        assert_eq!(s.abs_max(), 2.0);
+    }
+
+    #[test]
+    fn histogram_mass_conserved() {
+        let x: Vec<f32> = (0..10000).map(|i| ((i % 97) as f32 - 48.0) * 0.11).collect();
+        let h = AbsHistogram::compute(&x, DEFAULT_BINS);
+        assert_eq!(h.counts.iter().sum::<u64>(), 10000);
+        assert_eq!(h.total, 10000);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_half() {
+        // sum(density * width) over |x| bins = 1/2 (the other half is x<0).
+        let x: Vec<f32> = (0..5000).map(|i| i as f32 / 500.0 - 5.0).collect();
+        let h = AbsHistogram::compute(&x, 256);
+        let integral: f64 = (0..256).map(|i| h.density(i) * h.width).sum();
+        assert!((integral - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_density_flat() {
+        // |x| of symmetric uniform data is uniform on [0, top].
+        let x: Vec<f32> = (0..100000).map(|i| (i as f32 / 50000.0) - 1.0).collect();
+        let h = AbsHistogram::compute(&x, 64);
+        let d0 = h.density(1);
+        for i in 2..63 {
+            assert!((h.density(i) - d0).abs() / d0 < 0.05, "bin {i}");
+        }
+    }
+
+    #[test]
+    fn kurtosis_sign() {
+        let mut rng = crate::util::rng::Rng::seed(9);
+        let gauss = rng.gaussian_vec(20000, 1.0);
+        let s = TensorStats::compute(&gauss);
+        assert!(s.excess_kurtosis(&gauss).abs() < 0.2, "{}", s.excess_kurtosis(&gauss));
+        // Laplace has excess kurtosis 3.
+        let lap = rng.laplace_vec(20000, 1.0);
+        let s2 = TensorStats::compute(&lap);
+        let k = s2.excess_kurtosis(&lap);
+        assert!(k > 1.5 && k < 4.5, "{k}");
+    }
+}

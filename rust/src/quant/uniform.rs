@@ -1,0 +1,181 @@
+//! Uniform affine quantize / dequantize — the native-rust data path.
+//!
+//! Semantics are identical to the Pallas kernel (kernels/quant.py) and the
+//! python oracle (kernels/ref.py): `codes = clamp(round(x/scale + zp), lo,
+//! hi)`, `x_hat = (codes - zp) * scale`. The codec can run this native
+//! implementation or the AOT HLO executable; both are cross-checked in
+//! tests.
+
+use super::QuantParams;
+
+/// Naive PTQ calibration: asymmetric affine range from the tensor min/max
+/// (§3: "determines the quantization range based on the minimum and maximum
+/// tensor values"). Codes are unsigned in `[0, 2^q - 1]`.
+pub fn naive_params(x: &[f32], bits: u8) -> QuantParams {
+    let (mut min, mut max) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in x {
+        min = min.min(v);
+        max = max.max(v);
+    }
+    if !min.is_finite() || !max.is_finite() {
+        (min, max) = (0.0, 1.0);
+    }
+    // Standard min/max PTQ extends the range to include zero so the
+    // zero-point is exactly representable (TFLite convention; ref.py does
+    // the same).
+    min = min.min(0.0);
+    max = max.max(0.0);
+    if max <= min {
+        max = min + 1e-8;
+    }
+    let n = ((1u32 << bits) - 1) as f32;
+    let scale = (max - min) / n;
+    let zp = (-min / scale).round().clamp(0.0, n);
+    QuantParams { scale, zero_point: zp, lo: 0.0, hi: n, bits }
+}
+
+/// Symmetric clipped calibration over `[-alpha, alpha]`, signed codes in
+/// `[-(2^{q-1}), 2^{q-1} - 1]` (used by ACIQ / DS-ACIQ).
+pub fn symmetric_params(alpha: f32, bits: u8) -> QuantParams {
+    let half = 1i64 << (bits - 1);
+    let scale = (alpha / half as f32).max(1e-12);
+    QuantParams {
+        scale,
+        zero_point: 0.0,
+        lo: -(half as f32),
+        hi: (half - 1) as f32,
+        bits,
+    }
+}
+
+/// Quantize into the caller-provided code buffer (hot path: no allocation).
+pub fn quantize_into(x: &[f32], p: &QuantParams, out: &mut [i32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let inv = 1.0 / p.scale;
+    let (zp, lo, hi) = (p.zero_point, p.lo, p.hi);
+    // `round` is round-half-away-from-zero, matching numpy's float32
+    // rounding of continuous data to within one code (ties on exact .5 are
+    // measure-zero for real activations; the golden tests tolerate <=1
+    // code on synthetic ties). max/min instead of clamp lets LLVM emit
+    // vector min/max (clamp's NaN ordering blocks it) — §Perf: 537µs →
+    // ~190µs on the 131k-element boundary activation.
+    for (o, &v) in out.iter_mut().zip(x) {
+        let c = (v * inv + zp).round();
+        *o = c.max(lo).min(hi) as i32;
+    }
+}
+
+/// Allocating convenience wrapper over [`quantize_into`].
+pub fn quantize(x: &[f32], p: &QuantParams) -> Vec<i32> {
+    let mut out = vec![0i32; x.len()];
+    quantize_into(x, p, &mut out);
+    out
+}
+
+/// Dequantize into the caller-provided buffer (hot path: no allocation).
+pub fn dequantize_into(codes: &[i32], p: &QuantParams, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let (s, zp) = (p.scale, p.zero_point);
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = (c as f32 - zp) * s;
+    }
+}
+
+/// Allocating convenience wrapper over [`dequantize_into`].
+pub fn dequantize(codes: &[i32], p: &QuantParams) -> Vec<f32> {
+    let mut out = vec![0f32; codes.len()];
+    dequantize_into(codes, p, &mut out);
+    out
+}
+
+/// Quantize-dequantize round trip (what the receiving stage actually sees).
+pub fn roundtrip(x: &[f32], p: &QuantParams) -> Vec<f32> {
+    dequantize(&quantize(x, p), p)
+}
+
+/// Mean squared reconstruction error of quantizing `x` under `p`.
+pub fn quant_mse(x: &[f32], p: &QuantParams) -> f64 {
+    let inv = 1.0 / p.scale;
+    let mut acc = 0f64;
+    for &v in x {
+        let c = (v * inv + p.zero_point).round().clamp(p.lo, p.hi);
+        let xh = (c - p.zero_point) * p.scale;
+        let e = (v - xh) as f64;
+        acc += e * e;
+    }
+    acc / x.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_covers_minmax() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32) * 0.13 - 5.0).collect();
+        for bits in crate::quant::SUPPORTED_BITS {
+            let p = naive_params(&x, bits);
+            let codes = quantize(&x, &p);
+            assert!(codes.iter().all(|&c| c >= 0 && c < (1 << bits)));
+            // Extremes map near the code range ends.
+            assert!(codes[0] <= 1);
+            assert!(codes[99] >= (1 << bits) - 2);
+        }
+    }
+
+    #[test]
+    fn symmetric_range_signed() {
+        let p = symmetric_params(1.0, 4);
+        assert_eq!(p.lo, -8.0);
+        assert_eq!(p.hi, 7.0);
+        assert!((p.scale - 0.125).abs() < 1e-7);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_inside_clip() {
+        let x: Vec<f32> = (0..1000).map(|i| ((i as f32) / 500.0 - 1.0) * 0.99).collect();
+        for bits in crate::quant::SUPPORTED_BITS {
+            let p = symmetric_params(1.0, bits);
+            let xh = roundtrip(&x, &p);
+            // The half-step bound holds on the representable range
+            // [lo*scale, hi*scale]; beyond it values clamp to the edge.
+            let (rep_lo, rep_hi) = (p.lo * p.scale, p.hi * p.scale);
+            for (a, b) in x.iter().zip(&xh) {
+                if *a >= rep_lo && *a <= rep_hi {
+                    assert!((a - b).abs() <= p.scale / 2.0 + 1e-6, "bits={bits} a={a} b={b}");
+                } else {
+                    assert!((*b - rep_hi).abs() < 1e-6 || (*b - rep_lo).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clipping_clamps_outliers() {
+        let x = vec![-100.0f32, 0.0, 100.0];
+        let p = symmetric_params(1.0, 8);
+        let xh = roundtrip(&x, &p);
+        assert!(xh[0] >= -1.0 - 1e-6 && xh[2] <= 1.0);
+        assert_eq!(xh[1], 0.0);
+    }
+
+    #[test]
+    fn degenerate_constant_tensor() {
+        let x = vec![3.2f32; 64];
+        for bits in crate::quant::SUPPORTED_BITS {
+            let p = naive_params(&x, bits);
+            assert!(p.scale > 0.0 && p.scale.is_finite());
+            let xh = roundtrip(&x, &p);
+            assert!(xh.iter().all(|v| (v - 3.2).abs() < 1e-2));
+        }
+    }
+
+    #[test]
+    fn mse_matches_roundtrip() {
+        let x: Vec<f32> = (0..512).map(|i| ((i * 2654435761u64 as usize) % 1000) as f32 / 100.0 - 5.0).collect();
+        let p = symmetric_params(2.0, 4);
+        let xh = roundtrip(&x, &p);
+        let direct: f64 = x.iter().zip(&xh).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / x.len() as f64;
+        assert!((quant_mse(&x, &p) - direct).abs() < 1e-12);
+    }
+}

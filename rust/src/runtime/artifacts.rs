@@ -1,0 +1,208 @@
+//! Artifact manifest: the contract between `make artifacts` (python AOT)
+//! and the rust runtime. Mirrors python/compile/aot.py's manifest.json,
+//! parsed with the in-tree JSON parser.
+
+use crate::util::json::Value;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub model: ModelMeta,
+    pub microbatch: usize,
+    pub activation_shape: Vec<usize>,
+    pub stages: Vec<StageMeta>,
+    pub full_model: FullModelMeta,
+    pub quant: QuantMeta,
+    pub eval: EvalMeta,
+    pub calib: CalibMeta,
+    pub golden: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub img: Vec<usize>,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub classes: usize,
+    pub tokens: usize,
+    pub params: u64,
+    pub trained: bool,
+    pub fp32_top1: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageMeta {
+    pub file: String,
+    pub blocks: Vec<usize>,
+    pub first: bool,
+    pub last: bool,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FullModelMeta {
+    pub file: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantMeta {
+    pub quantize: String,
+    pub dequantize: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub supported_bits: Vec<u8>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalMeta {
+    pub file: String,
+    pub count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibMeta {
+    pub file: String,
+    pub boundaries: usize,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<(Manifest, PathBuf)> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?} (run `make artifacts` first): {e}"))?;
+        let m = Self::parse(&text)?;
+        Ok((m, dir))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let version = v.at("version")?.as_u64()? as u32;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mv = v.at("model")?;
+        let model = ModelMeta {
+            img: mv.at("img")?.usize_vec()?,
+            patch: mv.at("patch")?.as_usize()?,
+            dim: mv.at("dim")?.as_usize()?,
+            depth: mv.at("depth")?.as_usize()?,
+            heads: mv.at("heads")?.as_usize()?,
+            classes: mv.at("classes")?.as_usize()?,
+            tokens: mv.at("tokens")?.as_usize()?,
+            params: mv.at("params")?.as_u64()?,
+            trained: mv.at("trained")?.as_bool()?,
+            fp32_top1: mv.at("fp32_top1")?.as_f64()?,
+        };
+        let stages = v
+            .at("stages")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(StageMeta {
+                    file: s.at("file")?.as_str()?.into(),
+                    blocks: s.at("blocks")?.usize_vec()?,
+                    first: s.at("first")?.as_bool()?,
+                    last: s.at("last")?.as_bool()?,
+                    in_shape: s.at("in_shape")?.usize_vec()?,
+                    out_shape: s.at("out_shape")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fv = v.at("full_model")?;
+        let qv = v.at("quant")?;
+        let ev = v.at("eval")?;
+        let cv = v.at("calib")?;
+        Ok(Manifest {
+            version,
+            model,
+            microbatch: v.at("microbatch")?.as_usize()?,
+            activation_shape: v.at("activation_shape")?.usize_vec()?,
+            stages,
+            full_model: FullModelMeta {
+                file: fv.at("file")?.as_str()?.into(),
+                in_shape: fv.at("in_shape")?.usize_vec()?,
+                out_shape: fv.at("out_shape")?.usize_vec()?,
+            },
+            quant: QuantMeta {
+                quantize: qv.at("quantize")?.as_str()?.into(),
+                dequantize: qv.at("dequantize")?.as_str()?.into(),
+                rows: qv.at("rows")?.as_usize()?,
+                cols: qv.at("cols")?.as_usize()?,
+                supported_bits: qv
+                    .at("supported_bits")?
+                    .usize_vec()?
+                    .into_iter()
+                    .map(|b| b as u8)
+                    .collect(),
+            },
+            eval: EvalMeta {
+                file: ev.at("file")?.as_str()?.into(),
+                count: ev.at("count")?.as_usize()?,
+            },
+            calib: CalibMeta {
+                file: cv.at("file")?.as_str()?.into(),
+                boundaries: cv.at("boundaries")?.as_usize()?,
+            },
+            golden: v.at("golden")?.as_str()?.into(),
+        })
+    }
+
+    /// Default artifacts directory: `$QUANTPIPE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("QUANTPIPE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const SAMPLE: &str = r#"{
+      "version": 1,
+      "model": {"img":[32,32,3],"patch":8,"dim":128,"depth":8,"heads":4,
+                "classes":10,"tokens":16,"params":1000,
+                "trained":true,"fp32_top1":0.93},
+      "microbatch": 64,
+      "activation_shape": [64,16,128],
+      "stages": [{"file":"stage_0.hlo.txt","blocks":[0,2],"first":true,
+                  "last":false,"in_shape":[64,32,32,3],"out_shape":[64,16,128]}],
+      "full_model": {"file":"model_full.hlo.txt","in_shape":[64,32,32,3],"out_shape":[64,10]},
+      "quant": {"quantize":"quantize.hlo.txt","dequantize":"dequantize.hlo.txt",
+                "rows":1024,"cols":128,"supported_bits":[2,4,6,8,16]},
+      "eval": {"file":"eval.bin","count":1920},
+      "calib": {"file":"calib.bin","boundaries":3},
+      "golden": "golden.json"
+    }"#;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.microbatch, 64);
+        assert_eq!(m.stages.len(), 1);
+        assert!(m.stages[0].first);
+        assert_eq!(m.quant.rows, 1024);
+        assert_eq!(m.quant.supported_bits, vec![2, 4, 6, 8, 16]);
+        assert!((m.model.fp32_top1 - 0.93).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn version_gate() {
+        let bad = SAMPLE.replacen("\"version\": 1", "\"version\": 9", 1);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (serialized jax≥0.5 protos are rejected by xla_extension 0.5.1).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so an [`Engine`] lives on one
+//! thread; the pipeline gives each stage its own OS thread that constructs
+//! its engine in place (see [`crate::pipeline`]).
+
+pub mod artifacts;
+
+pub use artifacts::Manifest;
+
+use crate::quant::codec::QuantBackend;
+use crate::quant::QuantParams;
+use crate::tensor::Tensor;
+use crate::Result;
+use std::path::Path;
+
+/// One-thread PJRT engine: client + compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("loading HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation. All our AOT modules return a 1-tuple (lowered
+/// with `return_tuple=True`), so `run*` unwraps `to_tuple1`.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs, returning the f32 tuple-0 output.
+    pub fn run_f32(&self, inputs: &[&Tensor], out_shape: &[usize]) -> Result<Tensor> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| literal_f32(&t.data, &t.shape))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == out_shape.iter().product::<usize>(),
+            "output size mismatch: got {} want {:?}",
+            data.len(),
+            out_shape
+        );
+        Ok(Tensor::new(data, out_shape.to_vec()))
+    }
+
+    /// Execute with raw literals (mixed dtypes).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// The AOT Pallas quantize/dequantize kernels as a [`QuantBackend`].
+///
+/// The kernels were lowered for a fixed (rows, cols) activation shape (all
+/// ViT boundaries share it); scale/zp/lo/hi arrive as runtime `(1,)`
+/// tensors so bitwidth changes never recompile.
+pub struct HloQuantBackend {
+    quantize: Executable,
+    dequantize: Executable,
+    rows: usize,
+    cols: usize,
+}
+
+impl HloQuantBackend {
+    pub fn load(engine: &Engine, dir: impl AsRef<Path>, manifest: &Manifest) -> Result<Self> {
+        let dir = dir.as_ref();
+        Ok(HloQuantBackend {
+            quantize: engine.load_hlo(dir.join(&manifest.quant.quantize))?,
+            dequantize: engine.load_hlo(dir.join(&manifest.quant.dequantize))?,
+            rows: manifest.quant.rows,
+            cols: manifest.quant.cols,
+        })
+    }
+}
+
+impl QuantBackend for HloQuantBackend {
+    fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.rows * self.cols,
+            "HLO quant kernel compiled for {}x{}, got {} elems",
+            self.rows,
+            self.cols,
+            x.len()
+        );
+        let scalar = |v: f32| literal_f32(&[v], &[1]);
+        let lits = vec![
+            literal_f32(x, &[self.rows, self.cols])?,
+            scalar(p.scale)?,
+            scalar(p.zero_point)?,
+            scalar(p.lo)?,
+            scalar(p.hi)?,
+        ];
+        let res = self.quantize.run_literals(&lits)?;
+        let codes = res.to_vec::<i32>()?;
+        out.copy_from_slice(&codes);
+        Ok(())
+    }
+
+    fn dequantize(&mut self, codes: &[i32], p: &QuantParams, out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(codes.len() == self.rows * self.cols, "shape mismatch");
+        let scalar = |v: f32| literal_f32(&[v], &[1]);
+        let lits = vec![
+            literal_i32(codes, &[self.rows, self.cols])?,
+            scalar(p.scale)?,
+            scalar(p.zero_point)?,
+        ];
+        let res = self.dequantize.run_literals(&lits)?;
+        let x = res.to_vec::<f32>()?;
+        out.copy_from_slice(&x);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo-pallas"
+    }
+}
+
+// NOTE: Engine/Executable contain Rc-backed PJRT handles and are therefore
+// !Send. The pipeline never moves them across threads: each stage thread
+// runs a `Send` *factory* closure that constructs its Engine in place (see
+// pipeline::StageFactory), so no unsafe impls are needed.
+//
+// HloQuantBackend must still satisfy the `QuantBackend: Send` bound used by
+// Codec. It is only ever constructed and used on one stage thread; the
+// unsafe impl is sound under that construct-where-you-use discipline.
+unsafe impl Send for HloQuantBackend {}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that require artifacts live in rust/tests/ (integration)
+    // so unit tests stay artifact-free.
+
+    #[test]
+    fn manifest_default_dir_env_override() {
+        std::env::set_var("QUANTPIPE_ARTIFACTS", "/tmp/somewhere");
+        assert_eq!(
+            super::Manifest::default_dir(),
+            std::path::PathBuf::from("/tmp/somewhere")
+        );
+        std::env::remove_var("QUANTPIPE_ARTIFACTS");
+        assert_eq!(super::Manifest::default_dir(), std::path::PathBuf::from("artifacts"));
+    }
+}

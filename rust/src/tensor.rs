@@ -1,0 +1,83 @@
+//! Minimal host tensor types for the request path.
+//!
+//! The coordinator only ever handles dense row-major f32 activations and
+//! i32 code tensors, so a thin (data, shape) pair keeps the hot path free
+//! of generic-tensor machinery. Conversion to/from `xla::Literal` lives in
+//! [`crate::runtime`].
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Size in bytes at full (f32) precision — the `V × 32/q` numerator of
+    /// the paper's Eq. 2.
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Leading dimension (microbatch size for stage inputs/outputs).
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    /// Argmax over the trailing dimension of a rank-2 tensor (logits ->
+    /// predicted classes).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2, "argmax_rows expects rank-2");
+        let cols = self.shape[1];
+        self.data
+            .chunks_exact(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_sizes() {
+        let t = Tensor::zeros(&[64, 16, 128]);
+        assert_eq!(t.elems(), 64 * 16 * 128);
+        assert_eq!(t.byte_len(), 64 * 16 * 128 * 4);
+        assert_eq!(t.batch(), 64);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0], vec![2, 3]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_handles_nan_free_ties() {
+        let t = Tensor::new(vec![1.0, 1.0, 0.5, 0.5], vec![2, 2]);
+        // max_by keeps the last max under Ordering::Equal -> deterministic.
+        let am = t.argmax_rows();
+        assert_eq!(am.len(), 2);
+    }
+}

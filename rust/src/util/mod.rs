@@ -1,0 +1,8 @@
+//! In-tree utilities replacing unavailable ecosystem crates (the build
+//! environment is fully offline): a JSON parser/writer, a seedable RNG
+//! with the distributions the tests need, and a micro property-testing
+//! harness.
+
+pub mod json;
+pub mod prop;
+pub mod rng;

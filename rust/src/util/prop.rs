@@ -1,0 +1,61 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed_cases, |rng| …)` runs a property across many seeded RNGs
+//! and reports the first failing seed so cases reproduce exactly. Shrinking
+//! is out of scope — failures print the seed, and properties take the RNG
+//! directly so a failing case can be replayed in a unit test.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panics with the failing
+/// seed on first failure.
+pub fn forall<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed(0xDEAD_BEEF ^ (seed.wrapping_mul(0x1234_5678_9ABC_DEF1)));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(25, |rng| {
+            count += 1;
+            let v = rng.f64();
+            prop_assert!((0.0..1.0).contains(&v));
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn failing_property_reports_seed() {
+        forall(10, |rng| {
+            let v = rng.f64();
+            prop_assert!(v < 0.5, "v was {v}");
+            Ok(())
+        });
+    }
+}

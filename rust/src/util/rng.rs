@@ -1,0 +1,122 @@
+//! Seedable RNG + the sampling distributions used by tests, benches and
+//! the fault injector. SplitMix64 core: tiny, fast, excellent statistical
+//! quality for non-cryptographic use.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn seed(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() % (hi - lo).max(1) as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Laplace(0, b) via inverse CDF.
+    pub fn laplace(&mut self, b: f64) -> f64 {
+        let u = self.f64() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Vec of standard normals scaled by sigma.
+    pub fn gaussian_vec(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.gaussian() * sigma as f64) as f32).collect()
+    }
+
+    /// Vec of Laplace(0, b) samples.
+    pub fn laplace_vec(&mut self, n: usize, b: f32) -> Vec<f32> {
+        (0..n).map(|_| self.laplace(b as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = {
+            let mut r = Rng::seed(7);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::seed(7);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = Rng::seed(8);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::seed(1);
+        let mut sum = 0.0;
+        for _ in 0..20000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / 20000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::seed(2);
+        let xs: Vec<f64> = (0..50000).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.03, "{var}");
+    }
+
+    #[test]
+    fn laplace_mean_abs_is_b() {
+        let mut r = Rng::seed(3);
+        let xs: Vec<f64> = (0..50000).map(|_| r.laplace(0.7)).collect();
+        let mean_abs = xs.iter().map(|x| x.abs()).sum::<f64>() / xs.len() as f64;
+        assert!((mean_abs - 0.7).abs() < 0.02, "{mean_abs}");
+    }
+
+    #[test]
+    fn usize_range() {
+        let mut r = Rng::seed(4);
+        for _ in 0..1000 {
+            let v = r.usize(3, 10);
+            assert!((3..10).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Cross-language golden tests: the rust quantization library must
+//! reproduce the numbers of the python oracle (kernels/ref.py) recorded in
+//! artifacts/golden.json by `make artifacts`.
+//!
+//! Run after `make artifacts` (the Makefile's `test` target does).
+
+use quantpipe::quant::{aciq, calibrate, ds_aciq, uniform, Method, QuantParams};
+use quantpipe::runtime::Manifest;
+use quantpipe::util::json::Value;
+
+fn load_golden() -> Value {
+    let dir = Manifest::default_dir();
+    let text = std::fs::read_to_string(dir.join("golden.json"))
+        .expect("artifacts/golden.json missing — run `make artifacts` first");
+    Value::parse(&text).expect("golden.json parses")
+}
+
+fn f32s(v: &Value) -> Vec<f32> {
+    v.as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// Reconstruct each named sample distribution exactly as aot.py did —
+/// from the *same* recorded inputs. golden.json only records derived
+/// values per (sample, bits); the sample data itself comes from
+/// artifacts/calib.bin (boundary slice) or is re-deriveable. To keep the
+/// test self-contained we use the recorded scalar statistics instead:
+/// b_e is checked against laplace_b on the recorded exact vector, and the
+/// per-case b_e/alpha/ds values are verified for internal consistency
+/// (ratio * b_e == alpha) plus against the rust implementations on the
+/// boundary slice reconstructed from calib.bin.
+#[test]
+fn aciq_ratio_matches_python() {
+    let g = load_golden();
+    for case in g.at("cases").unwrap().as_arr().unwrap() {
+        let q = case.at("q").unwrap().as_u64().unwrap() as u8;
+        let py_ratio = case.at("aciq_ratio").unwrap().as_f64().unwrap();
+        let rust_ratio = aciq::ratio(q) as f64;
+        assert!(
+            (py_ratio - rust_ratio).abs() < 1e-4,
+            "F({q}): py {py_ratio} vs rust {rust_ratio}"
+        );
+        // alpha = ratio * b_e consistency
+        let b_e = case.at("b_e").unwrap().as_f64().unwrap();
+        let alpha = case.at("aciq_alpha").unwrap().as_f64().unwrap();
+        assert!((alpha - py_ratio * b_e).abs() / alpha.max(1e-9) < 1e-5);
+    }
+}
+
+#[test]
+fn boundary_slice_statistics_match() {
+    let g = load_golden();
+    let dir = Manifest::default_dir();
+    let (manifest, dir) = Manifest::load(&dir).unwrap();
+    let calib = quantpipe::data::load_calib(dir.join(&manifest.calib.file)).unwrap();
+    let slice: Vec<f32> = calib[0].data.iter().take(4096).copied().collect();
+
+    for case in g.at("cases").unwrap().as_arr().unwrap() {
+        if case.at("name").unwrap().as_str().unwrap() != "boundary0_slice" {
+            continue;
+        }
+        let q = case.at("q").unwrap().as_u64().unwrap() as u8;
+        let py_b_e = case.at("b_e").unwrap().as_f64().unwrap();
+        let rust_b_e = aciq::laplace_b(&slice) as f64;
+        assert!(
+            (py_b_e - rust_b_e).abs() / py_b_e < 1e-4,
+            "b_e mismatch: py {py_b_e} rust {rust_b_e}"
+        );
+
+        // Naive params
+        let p = uniform::naive_params(&slice, q);
+        let py_scale = case.at("naive_scale").unwrap().as_f64().unwrap();
+        assert!(
+            ((p.scale as f64) - py_scale).abs() / py_scale < 1e-4,
+            "naive scale q={q}"
+        );
+        let py_zp = case.at("naive_zp").unwrap().as_f64().unwrap();
+        assert!(((p.zero_point as f64) - py_zp).abs() <= 1.0, "naive zp q={q}");
+
+        // Quantization MSEs
+        let py_mse = case.at("naive_mse").unwrap().as_f64().unwrap();
+        let rust_mse = uniform::quant_mse(&slice, &p);
+        assert!(
+            (py_mse - rust_mse).abs() / py_mse.max(1e-12) < 5e-3,
+            "naive mse q={q}: py {py_mse} rust {rust_mse}"
+        );
+        let py_aciq_mse = case.at("aciq_mse").unwrap().as_f64().unwrap();
+        let rust_aciq_mse = uniform::quant_mse(&slice, &calibrate(&slice, Method::Aciq, q));
+        assert!(
+            (py_aciq_mse - rust_aciq_mse).abs() / py_aciq_mse.max(1e-12) < 5e-3,
+            "aciq mse q={q}: py {py_aciq_mse} rust {rust_aciq_mse}"
+        );
+
+        // DS-ACIQ refined scale
+        let py_b_star = case.at("ds_b_star").unwrap().as_f64().unwrap();
+        let r = ds_aciq::ds_aciq_b(&slice, q, ds_aciq::DEFAULT_STEPS);
+        assert!(
+            (py_b_star - r.b_star as f64).abs() / py_b_star < 5e-3,
+            "ds b* q={q}: py {py_b_star} rust {}",
+            r.b_star
+        );
+    }
+}
+
+#[test]
+fn exact_code_vectors_match() {
+    let g = load_golden();
+    let x = f32s(g.at("x_small").unwrap());
+    for case in g.at("exact").unwrap().as_arr().unwrap() {
+        let q = case.at("q").unwrap().as_u64().unwrap() as u8;
+        let p = QuantParams {
+            scale: case.at("scale").unwrap().as_f64().unwrap() as f32,
+            zero_point: case.at("zp").unwrap().as_f64().unwrap() as f32,
+            lo: case.at("lo").unwrap().as_f64().unwrap() as f32,
+            hi: case.at("hi").unwrap().as_f64().unwrap() as f32,
+            bits: q,
+        };
+        let want: Vec<i32> = case
+            .at("codes")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let got = uniform::quantize(&x, &p);
+        // Allow ±1 code on exact rounding ties only.
+        for (i, (w, g_)) in want.iter().zip(&got).enumerate() {
+            assert!(
+                (w - g_).abs() <= 1,
+                "mode {} q={q} elem {i}: py {w} rust {g_}",
+                case.at("mode").unwrap().as_str().unwrap()
+            );
+        }
+        let ties = want.iter().zip(&got).filter(|(w, g_)| w != g_).count();
+        assert!(ties <= 1, "too many code mismatches: {ties}");
+    }
+}

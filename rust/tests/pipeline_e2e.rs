@@ -1,0 +1,148 @@
+//! End-to-end integration: the full rust pipeline (HLO stages + shaped
+//! links + codec + controller) over the real eval workload.
+//!
+//! Requires `make artifacts`.
+
+use quantpipe::adapt::{AdaptConfig, Policy};
+use quantpipe::benchkit::hlo_spec;
+use quantpipe::config::Config;
+use quantpipe::data::EvalSet;
+use quantpipe::net::mbps;
+use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::pipeline::{run, LinkQuant, Workload};
+use quantpipe::quant::Method;
+use quantpipe::runtime::Manifest;
+use std::sync::Arc;
+
+fn setup() -> (Manifest, std::path::PathBuf, Arc<EvalSet>, Config) {
+    let (manifest, dir) = Manifest::load(Manifest::default_dir())
+        .expect("run `make artifacts` before integration tests");
+    let eval = Arc::new(EvalSet::load(dir.join(&manifest.eval.file)).unwrap());
+    (manifest, dir, eval, Config::default())
+}
+
+#[test]
+fn fp32_pipeline_matches_manifest_accuracy() {
+    let (manifest, dir, eval, cfg) = setup();
+    let spec = hlo_spec(
+        &manifest, &dir, &cfg,
+        vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        None,
+    );
+    let report = run(spec, Workload::one_pass(eval, manifest.microbatch)).unwrap();
+    assert!(
+        (report.accuracy - manifest.model.fp32_top1).abs() < 0.01,
+        "pipeline fp32 {} vs manifest {}",
+        report.accuracy,
+        manifest.model.fp32_top1
+    );
+    assert_eq!(report.images as usize, manifest.eval.count);
+}
+
+#[test]
+fn eight_bit_pda_keeps_accuracy_and_compresses() {
+    let (manifest, dir, eval, cfg) = setup();
+    let spec = hlo_spec(
+        &manifest, &dir, &cfg,
+        vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 8 },
+        None,
+    );
+    let report = run(spec, Workload::one_pass(eval, manifest.microbatch)).unwrap();
+    assert!(
+        report.accuracy > manifest.model.fp32_top1 - 0.03,
+        "8-bit accuracy dropped too far: {}",
+        report.accuracy
+    );
+    // ~4x compression on the wire (payload; header adds a little).
+    let full = manifest.activation_shape.iter().product::<usize>() * 4;
+    assert!(
+        report.link0_mean_bytes < full as f64 / 3.5,
+        "8-bit should compress ~4x: {} vs {}",
+        report.link0_mean_bytes,
+        full
+    );
+}
+
+#[test]
+fn adaptive_run_recovers_bits_on_recovery() {
+    let (manifest, dir, eval, mut cfg) = setup();
+    cfg.adapt.window = 5;
+    let n_links = manifest.stages.len() - 1;
+    // Capacity step: tight for ~half the run, then unlimited.
+    let act_bits = manifest.activation_shape.iter().product::<usize>() as f64 * 32.0;
+    // Budget that requires ≈8x compression at target rate 0.5 ceiling…
+    // use a rough compute estimate instead of hardcoding: run 10 mb first.
+    let ceiling = run(
+        hlo_spec(
+            &manifest, &dir, &cfg,
+            vec![BandwidthTrace::unlimited(); n_links],
+            LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+            None,
+        ),
+        Workload::repeat(eval.clone(), manifest.microbatch, 10),
+    )
+    .unwrap();
+    let target = ceiling.throughput * 0.7;
+    let mb_per_sec = ceiling.throughput / manifest.microbatch as f64;
+    // Link that can move only 1/6 of fp32 volume at the offered microbatch rate.
+    let tight = act_bits * mb_per_sec / 6.0;
+    let switch_t = 25.0 / mb_per_sec; // ~25 microbatches of tight phase
+    let mut traces = vec![BandwidthTrace::unlimited(); n_links];
+    traces[0] = BandwidthTrace::from_points(&[(0.0, tight), (switch_t, f64::INFINITY)]);
+
+    let spec = hlo_spec(
+        &manifest, &dir, &cfg,
+        traces,
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        Some(AdaptConfig {
+            target_rate: target,
+            microbatch: manifest.microbatch,
+            policy: Policy::Ladder,
+            raise_margin: 1.0,
+        }),
+    );
+    let report = run(spec, Workload::repeat(eval, manifest.microbatch, 60)).unwrap();
+    let seq = report.timeline.bits_sequence(0);
+    assert!(seq.iter().any(|&b| b < 32), "controller never compressed: {seq:?}");
+    assert_eq!(
+        report.timeline.final_bits(0),
+        Some(32),
+        "controller should return to 32-bit after recovery: {seq:?}"
+    );
+}
+
+#[test]
+fn hlo_codec_backend_runs_pipeline() {
+    let (manifest, dir, eval, mut cfg) = setup();
+    cfg.pipeline.codec_backend = "hlo".into();
+    let spec = hlo_spec(
+        &manifest, &dir, &cfg,
+        vec![BandwidthTrace::constant(mbps(500.0)); manifest.stages.len() - 1],
+        LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        None,
+    );
+    let report = run(spec, Workload::repeat(eval, manifest.microbatch, 6)).unwrap();
+    assert_eq!(report.microbatches, 6);
+    assert!(
+        report.accuracy > manifest.model.fp32_top1 - 0.05,
+        "hlo-codec accuracy: {}",
+        report.accuracy
+    );
+}
+
+#[test]
+fn lossy_link_still_completes() {
+    let (manifest, dir, eval, mut cfg) = setup();
+    cfg.net.loss_p = 0.05;
+    cfg.net.jitter_ms = 0.2;
+    let spec = hlo_spec(
+        &manifest, &dir, &cfg,
+        vec![BandwidthTrace::constant(mbps(300.0)); manifest.stages.len() - 1],
+        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 8 },
+        None,
+    );
+    let report = run(spec, Workload::repeat(eval, manifest.microbatch, 8)).unwrap();
+    assert_eq!(report.microbatches, 8);
+}

@@ -1,0 +1,130 @@
+//! Integration tests over the PJRT runtime + AOT artifacts:
+//! * staged HLO execution == full-model HLO execution (partitioning is
+//!   semantics-preserving end to end, through the rust runtime);
+//! * the AOT Pallas quantize/dequantize kernels agree with the native
+//!   rust implementation code-for-code;
+//! * eval-set accuracy through the runtime matches the manifest's
+//!   recorded fp32 top-1.
+//!
+//! Requires `make artifacts`.
+
+use quantpipe::data::EvalSet;
+use quantpipe::quant::codec::{NativeBackend, QuantBackend};
+use quantpipe::quant::{calibrate, Method};
+use quantpipe::runtime::{Engine, HloQuantBackend, Manifest};
+use quantpipe::tensor::Tensor;
+use quantpipe::util::rng::Rng;
+
+fn setup() -> (Manifest, std::path::PathBuf, Engine) {
+    let (manifest, dir) = Manifest::load(Manifest::default_dir())
+        .expect("run `make artifacts` before integration tests");
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    (manifest, dir, engine)
+}
+
+#[test]
+fn staged_equals_full_model() {
+    let (manifest, dir, engine) = setup();
+    let eval = EvalSet::load(dir.join(&manifest.eval.file)).unwrap();
+    let s = manifest.microbatch;
+    let img = eval.microbatch(0, s);
+
+    // Full model in one executable.
+    let full = engine.load_hlo(dir.join(&manifest.full_model.file)).unwrap();
+    let want = full.run_f32(&[&img], &manifest.full_model.out_shape).unwrap();
+
+    // Stage by stage.
+    let mut x = img;
+    for st in &manifest.stages {
+        let exe = engine.load_hlo(dir.join(&st.file)).unwrap();
+        x = exe.run_f32(&[&x], &st.out_shape).unwrap();
+    }
+    assert_eq!(x.shape, want.shape);
+    let max_diff = x
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 2e-3, "staged vs full logits diverge: {max_diff}");
+    // And the decisions agree exactly.
+    assert_eq!(x.argmax_rows(), want.argmax_rows());
+}
+
+#[test]
+fn hlo_quant_kernel_matches_native() {
+    let (manifest, dir, engine) = setup();
+    let n = manifest.quant.rows * manifest.quant.cols;
+    let mut hlo = HloQuantBackend::load(&engine, &dir, &manifest).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Rng::seed(5);
+
+    for (i, bits) in [2u8, 4, 6, 8, 16].into_iter().enumerate() {
+        let x = rng.laplace_vec(n, 0.5 + i as f32 * 0.3);
+        for method in [Method::Naive, Method::Aciq] {
+            let p = calibrate(&x, method, bits);
+            let mut c_hlo = vec![0i32; n];
+            let mut c_nat = vec![0i32; n];
+            hlo.quantize(&x, &p, &mut c_hlo).unwrap();
+            native.quantize(&x, &p, &mut c_nat).unwrap();
+            // Rounding-tie tolerance: a small fraction of values land on
+            // exact half-code boundaries (more at high bitwidths where the
+            // grid is fine); those may differ by exactly one code.
+            let mut diff = 0usize;
+            for (a, b) in c_hlo.iter().zip(&c_nat) {
+                assert!((a - b).abs() <= 1, "{method:?}@{bits}: code gap {a} vs {b}");
+                if a != b {
+                    diff += 1;
+                }
+            }
+            assert!(
+                (diff as f64) < n as f64 * 5e-3,
+                "{method:?}@{bits}: {diff}/{n} codes differ"
+            );
+
+            let mut x_hlo = vec![0f32; n];
+            let mut x_nat = vec![0f32; n];
+            hlo.dequantize(&c_hlo, &p, &mut x_hlo).unwrap();
+            native.dequantize(&c_hlo, &p, &mut x_nat).unwrap();
+            for (a, b) in x_hlo.iter().zip(&x_nat) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+}
+
+#[test]
+fn runtime_accuracy_matches_manifest() {
+    let (manifest, dir, engine) = setup();
+    let eval = EvalSet::load(dir.join(&manifest.eval.file)).unwrap();
+    let s = manifest.microbatch;
+    let full = engine.load_hlo(dir.join(&manifest.full_model.file)).unwrap();
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..eval.microbatches(s) {
+        let img = eval.microbatch(i, s);
+        let logits = full.run_f32(&[&img], &manifest.full_model.out_shape).unwrap();
+        let preds = logits.argmax_rows();
+        for (p, l) in preds.iter().zip(eval.labels_for(i, s)) {
+            if *p == *l as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(
+        (acc - manifest.model.fp32_top1).abs() < 0.01,
+        "runtime fp32 accuracy {acc} vs manifest {}",
+        manifest.model.fp32_top1
+    );
+}
+
+#[test]
+fn executable_rejects_wrong_shape() {
+    let (manifest, dir, engine) = setup();
+    let exe = engine.load_hlo(dir.join(&manifest.stages[0].file)).unwrap();
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    assert!(exe.run_f32(&[&bad], &manifest.stages[0].out_shape).is_err());
+}

@@ -1,0 +1,78 @@
+//! The adaptive pipeline over REAL localhost TCP sockets — no `SimLink`
+//! anywhere on the data path. Three mock stages; the middle one is
+//! artificially slow, so it stops draining its socket while "computing",
+//! the kernel buffers fill, and stage 0's writes stall. The controller
+//! never sees a configured bandwidth: it infers congestion purely from
+//! measured write-stall time and sheds bits, exactly as it would across
+//! machines.
+//!
+//! ```bash
+//! cargo run --release --example tcp_pipeline
+//! ```
+//!
+//! No AOT artifacts needed (mock stages + synthetic one-hot eval).
+//!
+//! For a true multi-process deployment of the same code path, run one
+//! process per endpoint (any start order; connects retry):
+//!
+//! ```bash
+//! quantpipe coordinate --config configs/tcp_demo.json --synthetic 256x16 --microbatches 64 &
+//! quantpipe worker --stage 0 --config configs/tcp_demo.json --mock 64x16 --stages 3 &
+//! quantpipe worker --stage 1 --config configs/tcp_demo.json --mock 64x16 --stages 3 &
+//! quantpipe worker --stage 2 --config configs/tcp_demo.json --mock 64x16 --stages 3 &
+//! ```
+
+use quantpipe::adapt::{AdaptConfig, Policy};
+use quantpipe::data::EvalSet;
+use quantpipe::net::transport::LinkSpec;
+use quantpipe::pipeline::{mock_stage_factory, run, LinkQuant, PipelineSpec, Workload};
+use quantpipe::quant::Method;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> quantpipe::Result<()> {
+    let s = 32usize;
+    let wide = 4096usize; // 512 KB raw frame: bigger than loopback buffers
+    let stall = Duration::from_millis(30);
+
+    let spec = PipelineSpec {
+        stages: vec![
+            mock_stage_factory(1.0, 0.0, vec![s, wide], Duration::ZERO),
+            mock_stage_factory(1.0, 0.0, vec![s, wide], stall), // the bottleneck
+            mock_stage_factory(1.0, 0.0, vec![s, 4], Duration::ZERO),
+        ],
+        links: vec![LinkSpec::tcp_loopback()?, LinkSpec::tcp_loopback()?],
+        quant: LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        adapt: Some(AdaptConfig {
+            target_rate: 6400.0, // 5 ms budget per microbatch
+            microbatch: s,
+            policy: Policy::Ladder,
+            raise_margin: 1.1,
+        }),
+        window: 4,
+        inflight: 2,
+    };
+
+    let eval = Arc::new(EvalSet::synthetic_onehot(64, 4));
+    let report = run(spec, Workload::repeat(eval, s, 60))?;
+
+    println!("per-window decisions on the stage-0 socket (all bandwidth MEASURED):");
+    println!("{:>7} {:>12} {:>10} {:>5} {:>6}", "t(s)", "bw(Mbps)", "rate", "bits", "util");
+    for p in report.timeline.points.iter().filter(|p| p.stage == 0) {
+        let bw = if p.bandwidth_bps.is_infinite() {
+            "inf".into()
+        } else {
+            format!("{:.0}", p.bandwidth_bps / 1e6)
+        };
+        println!("{:>7.1} {:>12} {:>10.0} {:>5} {:>6.2}", p.t, bw, p.rate, p.bits, p.util);
+    }
+    println!("\nbitwidth sequence: {:?}", report.timeline.bits_sequence(0));
+    println!(
+        "throughput {:.0} img/s | link0 mean {:.0} B/frame | wall {:.1}s",
+        report.throughput, report.link0_mean_bytes, report.wall_secs
+    );
+    if !report.errors.is_empty() {
+        eprintln!("link failures: {:?}", report.errors);
+    }
+    Ok(())
+}

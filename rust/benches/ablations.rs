@@ -15,6 +15,7 @@ use quantpipe::data::EvalSet;
 use quantpipe::net::link::SimLink;
 use quantpipe::net::mbps;
 use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::net::transport::LinkSpec;
 use quantpipe::pipeline::{mock_stage_factory, run, LinkQuant, PipelineSpec, Workload};
 use quantpipe::quant::Method;
 use std::sync::Arc;
@@ -49,7 +50,7 @@ fn spec(
         stages: (0..2)
             .map(|_| mock_stage_factory(1.0, 0.0, vec![S, DIM], Duration::from_micros(200)))
             .collect(),
-        links: vec![Arc::new(SimLink::new(trace))],
+        links: vec![LinkSpec::Sim(Arc::new(SimLink::new(trace)))],
         quant: LinkQuant { method: Method::Pda, calib_every, initial_bits: 32 },
         adapt: Some(AdaptConfig { target_rate: target, microbatch: S, policy, raise_margin }),
         window,

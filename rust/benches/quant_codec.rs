@@ -48,7 +48,7 @@ fn main() -> quantpipe::Result<()> {
             format!("{}x compression", 32 / bits),
         ]);
         let mut out = Vec::new();
-        let (mean, _, _) = time(3, 20, || pack::unpack(&buf, n, bits, p.pack_offset(), &mut out));
+        let (mean, _, _) = time(3, 20, || pack::unpack(&buf, n, bits, p.pack_offset(), &mut out).unwrap());
         table.row(&[format!("unpack {bits}-bit"), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "".into()]);
     }
 
@@ -67,13 +67,16 @@ fn main() -> quantpipe::Result<()> {
     table.row(&["calibrate ds-aciq (deployed)".into(), fmt_dur(mean_ds), format!("{:.2}", bytes / mean_ds.as_secs_f64() / 1e9), "16k-sample fast path".into()]);
 
     // --- end-to-end codec --------------------------------------------------------
+    // Recycling the payload buffer makes steady-state encoding
+    // allocation-free (the driver's stage loop does the same).
     let mut codec = Codec::default();
     for bits in [2u8, 8] {
         let (mean, _, _) = time(3, 10, || {
             let enc = codec.encode(&x, Method::Pda, bits).unwrap();
             std::hint::black_box(&enc);
+            codec.recycle(enc);
         });
-        table.row(&[format!("encode e2e {bits}-bit (pda)"), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "calib+quant+pack".into()]);
+        table.row(&[format!("encode e2e {bits}-bit (pda)"), fmt_dur(mean), format!("{:.2}", bytes / mean.as_secs_f64() / 1e9), "calib+quant+pack, recycled".into()]);
     }
 
     // --- HLO (AOT Pallas kernel) backend ----------------------------------------

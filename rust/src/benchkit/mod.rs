@@ -6,6 +6,7 @@
 use crate::config::Config;
 use crate::data::EvalSet;
 use crate::net::link::SimLink;
+use crate::net::transport::LinkSpec;
 use crate::pipeline::{hlo_stage_factory, LinkQuant, PipelineSpec};
 use crate::runtime::Manifest;
 use crate::Result;
@@ -111,11 +112,11 @@ pub fn hlo_spec(
         links: traces
             .into_iter()
             .map(|t| {
-                Arc::new(SimLink::with_faults(
+                LinkSpec::Sim(Arc::new(SimLink::with_faults(
                     t,
                     Duration::from_micros(cfg.net.latency_us),
                     cfg.link_faults(),
-                ))
+                )))
             })
             .collect(),
         quant,

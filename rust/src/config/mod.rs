@@ -13,6 +13,7 @@ use crate::quant::Method;
 use crate::util::json::Value;
 use crate::Result;
 use std::path::Path;
+use std::time::Duration;
 
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -21,6 +22,7 @@ pub struct Config {
     pub adapt: AdaptSection,
     pub net: NetSection,
     pub run: RunSection,
+    pub transport: TransportSection,
 }
 
 #[derive(Debug, Clone)]
@@ -82,6 +84,36 @@ pub struct RunSection {
     pub artifacts: String,
     /// Write the Fig-5 style timeline CSV here ("" = don't).
     pub timeline_csv: String,
+    /// Write the machine-readable run report JSON here ("" = don't).
+    pub report_json: String,
+}
+
+/// Multi-process deployment topology (`quantpipe worker` / `coordinate`).
+#[derive(Debug, Clone)]
+pub struct TransportSection {
+    /// "inproc" (single process, SimLink shaping — the default) or "tcp"
+    /// (stages in separate processes over real sockets).
+    pub mode: String,
+    /// Worker k's listen address, in pipeline order (stage k's upstream
+    /// connects here).
+    pub stage_addrs: Vec<String>,
+    /// Coordinator's return-path listen address (the last stage connects
+    /// here with the logits stream).
+    pub sink_addr: String,
+    /// Delay between connect attempts, ms (startup is order-independent).
+    pub connect_retry_ms: u64,
+    /// Total connect budget, ms.
+    pub connect_timeout_ms: u64,
+}
+
+impl TransportSection {
+    pub fn connect_retry(&self) -> Duration {
+        Duration::from_millis(self.connect_retry_ms.max(1))
+    }
+
+    pub fn connect_timeout(&self) -> Duration {
+        Duration::from_millis(self.connect_timeout_ms)
+    }
 }
 
 impl Default for Config {
@@ -113,6 +145,19 @@ impl Default for Config {
                 microbatches: 0,
                 artifacts: "artifacts".into(),
                 timeline_csv: String::new(),
+                report_json: String::new(),
+            },
+            transport: TransportSection {
+                mode: "inproc".into(),
+                stage_addrs: vec![
+                    "127.0.0.1:7711".into(),
+                    "127.0.0.1:7712".into(),
+                    "127.0.0.1:7713".into(),
+                    "127.0.0.1:7714".into(),
+                ],
+                sink_addr: "127.0.0.1:7710".into(),
+                connect_retry_ms: 100,
+                connect_timeout_ms: 10_000,
             },
         }
     }
@@ -174,6 +219,27 @@ impl Config {
             if let Some(x) = r.get("microbatches") { cfg.run.microbatches = x.as_u64()?; }
             if let Some(x) = r.get("artifacts") { cfg.run.artifacts = x.as_str()?.into(); }
             if let Some(x) = r.get("timeline_csv") { cfg.run.timeline_csv = x.as_str()?.into(); }
+            if let Some(x) = r.get("report_json") { cfg.run.report_json = x.as_str()?.into(); }
+        }
+        if let Some(t) = v.get("transport") {
+            if let Some(x) = t.get("mode") {
+                let mode = x.as_str()?;
+                anyhow::ensure!(
+                    mode == "inproc" || mode == "tcp",
+                    "transport.mode must be \"inproc\" or \"tcp\", got {mode:?}"
+                );
+                cfg.transport.mode = mode.into();
+            }
+            if let Some(x) = t.get("stage_addrs") {
+                cfg.transport.stage_addrs = x
+                    .as_arr()?
+                    .iter()
+                    .map(|a| Ok(a.as_str()?.to_string()))
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(x) = t.get("sink_addr") { cfg.transport.sink_addr = x.as_str()?.into(); }
+            if let Some(x) = t.get("connect_retry_ms") { cfg.transport.connect_retry_ms = x.as_u64()?; }
+            if let Some(x) = t.get("connect_timeout_ms") { cfg.transport.connect_timeout_ms = x.as_u64()?; }
         }
         Ok(cfg)
     }
@@ -276,5 +342,29 @@ mod tests {
     #[test]
     fn bad_method_rejected() {
         assert!(Config::parse(r#"{"quant": {"method": "zap"}}"#).is_err());
+    }
+
+    #[test]
+    fn transport_section_parses() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.transport.mode, "inproc");
+        assert_eq!(c.transport.sink_addr, "127.0.0.1:7710");
+        let text = r#"{
+            "transport": {
+                "mode": "tcp",
+                "stage_addrs": ["10.0.0.1:9000", "10.0.0.2:9000", "10.0.0.3:9000"],
+                "sink_addr": "10.0.0.100:9100",
+                "connect_retry_ms": 50,
+                "connect_timeout_ms": 3000
+            }
+        }"#;
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.transport.mode, "tcp");
+        assert_eq!(c.transport.stage_addrs.len(), 3);
+        assert_eq!(c.transport.stage_addrs[2], "10.0.0.3:9000");
+        assert_eq!(c.transport.sink_addr, "10.0.0.100:9100");
+        assert_eq!(c.transport.connect_retry(), Duration::from_millis(50));
+        assert_eq!(c.transport.connect_timeout(), Duration::from_millis(3000));
+        assert!(Config::parse(r#"{"transport": {"mode": "carrier-pigeon"}}"#).is_err());
     }
 }

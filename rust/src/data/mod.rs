@@ -64,6 +64,23 @@ impl EvalSet {
     pub fn microbatches(&self, s: usize) -> usize {
         self.count / s
     }
+
+    /// Synthetic one-hot eval set: image `i` is the one-hot vector of its
+    /// label over `classes` dims, so a passthrough pipeline classifies it
+    /// perfectly. Used by transport tests and artifact-free demos
+    /// (`quantpipe coordinate --synthetic`).
+    pub fn synthetic_onehot(count: usize, classes: usize) -> EvalSet {
+        let mut images = Vec::with_capacity(count * classes);
+        let mut labels = Vec::with_capacity(count);
+        for i in 0..count {
+            let lab = i % classes;
+            for c in 0..classes {
+                images.push(if c == lab { 1.0 } else { 0.0 });
+            }
+            labels.push(lab as u32);
+        }
+        EvalSet { images, labels, count, dims: (1, 1, classes) }
+    }
 }
 
 /// Calibration boundary activations exported by aot.py.

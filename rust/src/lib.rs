@@ -22,17 +22,37 @@
 //! | module | paper role |
 //! |---|---|
 //! | [`quant`] | §3 PTQ/ACIQ/DS-ACIQ math, bit packing, tensor codec |
-//! | [`net`] | edge network substrate: shaped links, traces, framing, transports |
+//! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets, traces, wire framing |
 //! | [`monitor`] | §3 runtime monitor (windowed bandwidth / output-rate) |
 //! | [`adapt`] | §3 adaptive PDA module (Eq. 2 bitwidth policy) |
-//! | [`pipeline`] | distributed pipeline driver: stage threads, scheduling, backpressure |
+//! | [`pipeline`] | transport-agnostic pipeline driver (stage threads, scheduling, backpressure) + multi-process worker/coordinator endpoints |
 //! | [`partition`] | PipeEdge [15] optimal partition DP |
 //! | [`runtime`] | PJRT engine: load + execute AOT HLO artifacts |
 //! | [`tensor`] | host tensors (f32 / i32) |
 //! | [`data`] | eval/calibration set loaders, accuracy |
 //! | [`metrics`] | throughput / latency instrumentation, Fig 5 timelines |
-//! | [`config`] | JSON config + experiment presets |
+//! | [`config`] | JSON config + experiment presets (incl. the `transport` topology section) |
 //! | [`util`] | offline-substitute utilities (JSON, RNG, prop testing) |
+//!
+//! ## Running over real TCP
+//!
+//! The pipeline driver is transport-agnostic: every stage boundary is a
+//! [`net::transport::LinkSpec`] — either a bandwidth-shaped in-process
+//! channel (`Sim`, the measurement substrate) or a pre-connected real
+//! socket (`Tcp`). In TCP mode nothing simulates bandwidth: the
+//! `WindowMonitor` feeds on measured *write-stall* time (a full kernel
+//! send buffer blocks the writer), so the adaptive controller reacts to
+//! genuine network backpressure.
+//!
+//! Single process, real loopback sockets:
+//! `cargo run --release --example tcp_pipeline`.
+//!
+//! One process per stage (the paper's testbed topology): start
+//! `quantpipe coordinate` plus one `quantpipe worker --stage k` per
+//! stage, in any order — connects retry. Addresses come from the config
+//! `transport` section (see `configs/tcp_demo.json`) or
+//! `--listen`/`--connect` flags; `--mock`/`--synthetic` run the topology
+//! without AOT artifacts.
 
 pub mod adapt;
 pub mod benchkit;

@@ -1,13 +1,22 @@
 //! QuantPipe CLI — the launcher.
 //!
 //! ```text
-//! quantpipe run       [--config F] [--trace T] [--microbatches N]
-//!                     [--method M] [--fixed-bits B] [--target-rate R]
-//!                     [--timeline-csv F] [--codec-backend native|hlo]
-//! quantpipe sweep     [--config F] [--bits 32,16,8,6,4,2]
-//! quantpipe partition <profile.json> [--devices N]
-//! quantpipe inspect   [--artifacts DIR]
+//! quantpipe run        [--config F] [--trace T] [--microbatches N]
+//!                      [--method M] [--fixed-bits B] [--target-rate R]
+//!                      [--timeline-csv F] [--report-json F]
+//!                      [--codec-backend native|hlo]
+//! quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2]
+//! quantpipe worker     --stage K [--listen A] [--connect A] [--mock SxD]
+//! quantpipe coordinate [--config F] [--synthetic CxD] [--microbatches N]
+//! quantpipe partition  <profile.json> [--devices N]
+//! quantpipe inspect    [--artifacts DIR]
 //! ```
+//!
+//! `run`/`sweep` drive the single-process pipeline over shaped in-proc
+//! links. `worker`/`coordinate` deploy the same pipeline across real TCP
+//! sockets, one stage per process (config `transport` section or
+//! `--listen`/`--connect` flags); bandwidth is then *measured* from
+//! socket backpressure, never simulated.
 //!
 //! Arg parsing is hand-rolled (offline build: no clap).
 
@@ -15,23 +24,40 @@ use quantpipe::adapt::AdaptConfig;
 use quantpipe::config::Config;
 use quantpipe::data::EvalSet;
 use quantpipe::net::link::SimLink;
+use quantpipe::net::tcp;
+use quantpipe::net::transport::LinkSpec;
 use quantpipe::partition::CostModel;
-use quantpipe::pipeline::{self, hlo_stage_factory, LinkQuant, PipelineSpec, Workload};
+use quantpipe::pipeline::{
+    self, hlo_stage_factory, mock_stage_factory, run_coordinator, run_worker, LinkQuant,
+    PipelineSpec, StageFactory, WorkerConfig, Workload,
+};
 use quantpipe::quant::Method;
 use quantpipe::runtime::Manifest;
 use quantpipe::util::json::Value;
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
 const USAGE: &str = "\
 quantpipe — adaptive PTQ for distributed transformer pipelines (QuantPipe reproduction)
 
 USAGE:
-  quantpipe run       [--config F] [--trace T] [--microbatches N] [--method M]
-                      [--fixed-bits B] [--target-rate R] [--timeline-csv F]
-                      [--codec-backend native|hlo] [--artifacts DIR]
-  quantpipe sweep     [--config F] [--bits 32,16,8,6,4,2] [--artifacts DIR]
-  quantpipe partition <profile.json> [--devices N]
-  quantpipe inspect   [--artifacts DIR]
+  quantpipe run        [--config F] [--trace T] [--microbatches N] [--method M]
+                       [--fixed-bits B] [--target-rate R] [--timeline-csv F]
+                       [--report-json F] [--codec-backend native|hlo] [--artifacts DIR]
+  quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2] [--artifacts DIR]
+  quantpipe worker     --stage K [--config F] [--listen ADDR] [--connect ADDR]
+                       [--stages N] [--mock SxD] [--fixed-bits B] [--target-rate R]
+                       [--artifacts DIR]
+  quantpipe coordinate [--config F] [--microbatches N] [--synthetic CxD]
+                       [--artifacts DIR]
+  quantpipe partition  <profile.json> [--devices N]
+  quantpipe inspect    [--artifacts DIR]
+
+Multi-process mode: start `coordinate` plus one `worker` per stage (any
+order; connects retry). Worker k listens on transport.stage_addrs[k] and
+connects to stage k+1 (the last worker connects to transport.sink_addr).
+`--mock 64x16` / `--synthetic 256x16` run without AOT artifacts.
 ";
 
 /// Tiny flag parser: --key value pairs + positionals.
@@ -80,6 +106,8 @@ fn main() {
     let result = match cmd.as_str() {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "worker" => cmd_worker(&args),
+        "coordinate" => cmd_coordinate(&args),
         "partition" => cmd_partition(&args),
         "inspect" => cmd_inspect(&args),
         other => {
@@ -117,6 +145,9 @@ fn load_config(args: &Args) -> quantpipe::Result<Config> {
     if let Some(f) = args.get("timeline-csv") {
         cfg.run.timeline_csv = f.to_string();
     }
+    if let Some(f) = args.get("report-json") {
+        cfg.run.report_json = f.to_string();
+    }
     if let Some(cb) = args.get("codec-backend") {
         cfg.pipeline.codec_backend = cb.to_string();
     }
@@ -145,11 +176,11 @@ fn build_spec(cfg: &Config, manifest: &Manifest, dir: &std::path::Path) -> quant
         .collect();
     let links = (0..n - 1)
         .map(|i| {
-            Ok(Arc::new(SimLink::with_faults(
+            Ok(LinkSpec::Sim(Arc::new(SimLink::with_faults(
                 cfg.trace_for_link(i)?,
                 std::time::Duration::from_micros(cfg.net.latency_us),
                 cfg.link_faults(),
-            )))
+            ))))
         })
         .collect::<quantpipe::Result<_>>()?;
     let quant = LinkQuant {
@@ -174,8 +205,20 @@ fn build_spec(cfg: &Config, manifest: &Manifest, dir: &std::path::Path) -> quant
     })
 }
 
+/// `run`/`sweep` drive the single-process simulated pipeline; reject a
+/// multi-process config instead of silently simulating it.
+fn ensure_inproc(cfg: &Config, cmd: &str) -> quantpipe::Result<()> {
+    anyhow::ensure!(
+        cfg.transport.mode != "tcp",
+        "transport.mode is \"tcp\": use `quantpipe coordinate` + `quantpipe worker` \
+         for multi-process runs (`{cmd}` drives the single-process simulated pipeline)"
+    );
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> quantpipe::Result<()> {
     let cfg = load_config(args)?;
+    ensure_inproc(&cfg, "run")?;
     let (manifest, dir) = Manifest::load(&cfg.run.artifacts)?;
     let eval = Arc::new(EvalSet::load(dir.join(&manifest.eval.file))?);
     let spec = build_spec(&cfg, &manifest, &dir)?;
@@ -212,15 +255,185 @@ fn cmd_run(args: &Args) -> quantpipe::Result<()> {
         println!("final bits (l0)   {bits}");
         println!("bits sequence     {:?}", report.timeline.bits_sequence(0));
     }
+    if !report.errors.is_empty() {
+        eprintln!("link/stage failures during the run:");
+        for e in &report.errors {
+            eprintln!("  - {e}");
+        }
+    }
     if !cfg.run.timeline_csv.is_empty() {
         std::fs::write(&cfg.run.timeline_csv, report.timeline.to_csv())?;
         println!("timeline          -> {}", cfg.run.timeline_csv);
     }
+    if !cfg.run.report_json.is_empty() {
+        std::fs::write(&cfg.run.report_json, report.to_json().to_string_pretty())?;
+        println!("report            -> {}", cfg.run.report_json);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process mode: one stage per `worker` process, `coordinate` is
+// source + sink. See the `transport` config section for the topology.
+// ---------------------------------------------------------------------------
+
+/// Parse "AxB" (e.g. `--mock 64x16`, `--synthetic 256x16`).
+fn parse_pair(s: &str, what: &str) -> quantpipe::Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("{what} wants AxB (e.g. 64x16), got {s:?}"))?;
+    Ok((a.trim().parse()?, b.trim().parse()?))
+}
+
+fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
+    let cfg = load_config(args)?;
+    let stage: usize = args
+        .get("stage")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --stage K"))?
+        .parse()?;
+
+    // Stage compute: a real HLO shard, or a mock for artifact-free runs.
+    let (factory, n_stages, microbatch): (StageFactory, usize, usize) =
+        if let Some(shape) = args.get("mock") {
+            let (s, d) = parse_pair(shape, "--mock")?;
+            let n: usize = args
+                .get("stages")
+                .map(str::parse::<usize>)
+                .transpose()?
+                .unwrap_or(cfg.pipeline.stages);
+            (mock_stage_factory(1.0, 0.0, vec![s, d], Duration::ZERO), n, s)
+        } else {
+            let (manifest, dir) = Manifest::load(&cfg.run.artifacts)?;
+            let hlo_codec = cfg.pipeline.codec_backend == "hlo";
+            let n = manifest.stages.len();
+            anyhow::ensure!(stage < n, "stage {stage} out of range (artifacts have {n})");
+            let mb = manifest.microbatch;
+            (hlo_stage_factory(dir, manifest, stage, hlo_codec), n, mb)
+        };
+    anyhow::ensure!(stage < n_stages, "stage {stage} out of range ({n_stages} stages)");
+    let is_last = stage + 1 == n_stages;
+
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| cfg.transport.stage_addrs.get(stage).cloned())
+        .ok_or_else(|| anyhow::anyhow!("worker {stage} needs --listen or transport.stage_addrs[{stage}]"))?;
+    let connect = args
+        .get("connect")
+        .map(str::to_string)
+        .or_else(|| {
+            if is_last {
+                Some(cfg.transport.sink_addr.clone())
+            } else {
+                cfg.transport.stage_addrs.get(stage + 1).cloned()
+            }
+        })
+        .ok_or_else(|| anyhow::anyhow!("worker {stage} needs --connect or a transport address for stage {}", stage + 1))?;
+
+    let listener = TcpListener::bind(&listen)?;
+    eprintln!("[worker {stage}] listening on {listen}, downstream {connect} (last={is_last})");
+    let (_up_tx, up_rx) = tcp::accept_one(&listener)?;
+    let (down_tx, _down_rx) = tcp::connect_retry(
+        &connect,
+        cfg.transport.connect_timeout(),
+        cfg.transport.connect_retry(),
+    )?;
+    eprintln!("[worker {stage}] chain connected");
+
+    let quant = LinkQuant {
+        method: cfg.quant.method,
+        calib_every: cfg.quant.calib_every,
+        initial_bits: if cfg.adapt.enabled { 32 } else { cfg.adapt.fixed_bits },
+    };
+    let adapt: Option<AdaptConfig> = if cfg.adapt.enabled {
+        let mut a = cfg.adapt_config()?;
+        a.microbatch = microbatch;
+        Some(a)
+    } else {
+        None
+    };
+    let wcfg = WorkerConfig {
+        stage,
+        quant,
+        adapt,
+        window: cfg.adapt.window,
+        microbatch,
+        quantize_output: !is_last,
+        inflight: cfg.pipeline.inflight,
+    };
+    let report = run_worker(factory, wcfg, Box::new(up_rx), Box::new(down_tx))?;
+
+    println!("== worker {stage} done ==");
+    println!("frames            {}", report.frames);
+    println!("mean compute      {:.2} ms", report.mean_compute_s * 1e3);
+    println!("out mean bytes    {:.0} B/frame", report.out_mean_bytes);
+    if !is_last {
+        println!("bits sequence     {:?}", report.timeline.bits_sequence(stage));
+    }
+    for e in &report.errors {
+        eprintln!("  link failure: {e}");
+    }
+    anyhow::ensure!(report.errors.is_empty(), "worker {stage} saw link failures");
+    Ok(())
+}
+
+fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
+    let cfg = load_config(args)?;
+    let (eval, microbatch) = if let Some(spec) = args.get("synthetic") {
+        let (count, classes) = parse_pair(spec, "--synthetic")?;
+        (Arc::new(EvalSet::synthetic_onehot(count, classes)), cfg.pipeline.microbatch)
+    } else {
+        let (manifest, dir) = Manifest::load(&cfg.run.artifacts)?;
+        let eval = Arc::new(EvalSet::load(dir.join(&manifest.eval.file))?);
+        (eval, manifest.microbatch)
+    };
+    anyhow::ensure!(microbatch > 0 && eval.count >= microbatch, "eval set smaller than one microbatch");
+
+    // Bind the return listener BEFORE connecting so the last worker's
+    // connect-retry always has a target.
+    let listener = TcpListener::bind(&cfg.transport.sink_addr)?;
+    let first = cfg
+        .transport
+        .stage_addrs
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("transport.stage_addrs must name stage 0"))?;
+    eprintln!("[coordinator] feeding {first}, sink on {}", cfg.transport.sink_addr);
+    let (feed_tx, _feed_rx) = tcp::connect_retry(
+        first,
+        cfg.transport.connect_timeout(),
+        cfg.transport.connect_retry(),
+    )?;
+    let (_ret_tx, ret_rx) = tcp::accept_one(&listener)?;
+    eprintln!("[coordinator] chain connected");
+
+    let workload = if cfg.run.microbatches == 0 {
+        Workload::one_pass(eval, microbatch)
+    } else {
+        Workload::repeat(eval, microbatch, cfg.run.microbatches)
+    };
+    let report = run_coordinator(workload, Box::new(feed_tx), Box::new(ret_rx))?;
+
+    println!("== QuantPipe coordinate (tcp) ==");
+    println!("microbatches      {}", report.microbatches);
+    println!("images            {}", report.images);
+    println!("wall              {:.2}s", report.wall_secs);
+    println!("throughput        {:.1} img/s", report.throughput);
+    println!("top-1 accuracy    {:.2}%", report.accuracy * 100.0);
+    println!(
+        "p50/p99 latency   {:?} / {:?}",
+        report.latency.quantile(0.5),
+        report.latency.quantile(0.99)
+    );
+    for e in &report.errors {
+        eprintln!("  link failure: {e}");
+    }
+    anyhow::ensure!(report.errors.is_empty(), "coordinator saw link failures");
     Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> quantpipe::Result<()> {
     let cfg = load_config(args)?;
+    ensure_inproc(&cfg, "sweep")?;
     let bits: Vec<u8> = args
         .get("bits")
         .unwrap_or("32,16,8,6,4,2")

@@ -103,6 +103,32 @@ impl Timeline {
         s
     }
 
+    /// JSON array of window points. An unconstrained link measures
+    /// "infinite" bandwidth (see `monitor`); JSON has no Infinity, so a
+    /// non-finite bandwidth is *omitted* from its point — the document
+    /// must stay parseable for downstream plotting tools.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        use std::collections::BTreeMap;
+        Value::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut m = BTreeMap::new();
+                    m.insert("t".to_string(), Value::Num(p.t));
+                    m.insert("stage".to_string(), Value::Num(p.stage as f64));
+                    if p.bandwidth_bps.is_finite() {
+                        m.insert("bandwidth_bps".to_string(), Value::Num(p.bandwidth_bps));
+                    }
+                    m.insert("rate".to_string(), Value::Num(p.rate));
+                    m.insert("bits".to_string(), Value::Num(p.bits as f64));
+                    m.insert("util".to_string(), Value::Num(p.util));
+                    Value::Obj(m)
+                })
+                .collect(),
+        )
+    }
+
     /// Bits in effect at the end of the run for a given stage link.
     pub fn final_bits(&self, stage: usize) -> Option<u8> {
         self.points.iter().rev().find(|p| p.stage == stage).map(|p| p.bits)
@@ -189,6 +215,19 @@ mod tests {
         assert!(csv.starts_with("t,stage"));
         assert!(csv.contains("-1.00")); // inf encoded as -1
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_timeline_stays_valid_with_infinite_bandwidth() {
+        let mut t = Timeline::default();
+        t.push(TimelinePoint { t: 0.5, stage: 0, bandwidth_bps: f64::INFINITY, rate: 10.0, bits: 32, util: 0.0 });
+        t.push(TimelinePoint { t: 1.0, stage: 0, bandwidth_bps: 5e6, rate: 20.0, bits: 8, util: 0.9 });
+        let s = t.to_json().to_string_pretty();
+        let back = crate::util::json::Value::parse(&s).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert!(arr[0].get("bandwidth_bps").is_none(), "{s}");
+        assert_eq!(arr[1].at("bandwidth_bps").unwrap().as_f64().unwrap(), 5e6);
+        assert_eq!(arr[1].at("bits").unwrap().as_u64().unwrap(), 8);
     }
 
     #[test]

@@ -22,6 +22,11 @@ use std::time::Instant;
 #[derive(Debug, Clone, Copy)]
 pub struct WindowStats {
     /// Measured output bandwidth, bits/sec (wire bytes ÷ link busy time).
+    /// `f64::INFINITY` when the link was never measurably busy — an
+    /// *intentional* in-memory sentinel the controller branches on
+    /// ("unconstrained link"). Serialization boundaries must clamp or
+    /// omit it: JSON has no Infinity (`Timeline::to_json` omits, the CSV
+    /// encodes -1).
     pub bandwidth_bps: f64,
     /// Achieved output rate, images/sec over the window wall time.
     pub rate: f64,

@@ -10,8 +10,11 @@
 //!   jitter and loss injection.
 //! * [`frame`] — the wire format for (possibly quantized) activations:
 //!   self-describing header + CRC32-protected payload.
-//! * [`transport`] — async transports between stages: in-process (shaped
-//!   by a [`link::SimLink`]) and real TCP sockets for multi-process mode.
+//! * [`transport`] — the `FrameTx`/`FrameRx` abstraction the pipeline
+//!   drives: in-process channels (shaped by a [`link::SimLink`]) and real
+//!   TCP sockets ([`tcp`]) behind one pair of traits, selected per stage
+//!   boundary by [`transport::LinkSpec`]. On TCP the bandwidth signal is
+//!   measured write-stall time, not simulation.
 
 pub mod frame;
 pub mod link;

@@ -5,15 +5,28 @@
 //!
 //! Frames go over the socket length-prefixed (`u32 LE length || frame
 //! bytes`); the frame's own header/CRC provide integrity. Bandwidth is
-//! whatever the real network (or an external `tc` config) provides — this
-//! path exists to show the system runs across real sockets, while the
-//! simulated in-proc transport is the measurement substrate.
+//! whatever the real network (or an external `tc` config) provides; the
+//! adaptive controller infers it from measured write-stall time — a full
+//! kernel send buffer blocks `write`, and that backpressure IS the
+//! congestion signal, exactly as on the paper's testbed.
+//!
+//! Receive-side error taxonomy (see [`TcpFrameReceiver::recv`]):
+//! * `Ok(Some(frame))` — next frame;
+//! * `Ok(None)` — clean shutdown: the peer closed between frames;
+//! * `Err(..)` — link failure: I/O error, EOF mid-frame, or a corrupt
+//!   length prefix. The driver reports these instead of treating them as
+//!   a quiet end of stream.
 
 use super::frame::Frame;
+use super::transport::{FrameRx, FrameTx};
 use crate::Result;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Upper bound on an incoming frame's length prefix; anything larger is a
+/// corrupt or hostile stream, not a real activation frame.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
 
 pub struct TcpFrameSender {
     stream: TcpStream,
@@ -39,10 +52,46 @@ pub fn connect(addr: &str) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     framed(TcpStream::connect(addr)?)
 }
 
+/// Connect with retries until `timeout` elapses (multi-process startup is
+/// order-independent: workers and the coordinator may launch in any order).
+pub fn connect_retry(
+    addr: &str,
+    timeout: Duration,
+    interval: Duration,
+) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return framed(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("connect to {addr} timed out after {timeout:?}: {e}");
+                }
+                std::thread::sleep(interval.max(Duration::from_millis(1)));
+            }
+        }
+    }
+}
+
 /// Accept one upstream connection.
 pub fn accept_one(listener: &TcpListener) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     let (stream, _) = listener.accept()?;
     framed(stream)
+}
+
+/// A connected localhost socket pair: `(connector side, acceptor side)`.
+/// Single-process deployments of the TCP path (tests, demos) use one
+/// direction of it per stage boundary.
+pub fn loopback_pair(
+) -> Result<((TcpFrameSender, TcpFrameReceiver), (TcpFrameSender, TcpFrameReceiver))> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let connector = std::thread::spawn(move || TcpStream::connect(addr));
+    let (accepted, _) = listener.accept()?;
+    let connected = connector
+        .join()
+        .map_err(|_| anyhow::anyhow!("loopback connect thread panicked"))??;
+    Ok((framed(connected)?, framed(accepted)?))
 }
 
 impl Drop for TcpFrameSender {
@@ -66,23 +115,80 @@ impl TcpFrameSender {
     }
 }
 
+impl FrameTx for TcpFrameSender {
+    fn send(&mut self, frame: Frame) -> Result<f64> {
+        TcpFrameSender::send(self, frame)
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+enum Prefix {
+    Len(usize),
+    CleanEof,
+}
+
 impl TcpFrameReceiver {
-    /// Next frame; `None` on EOF/abort. CRC failures skip the frame.
-    pub fn recv(&mut self) -> Option<Frame> {
+    /// Next frame. `Ok(None)` = clean shutdown (EOF exactly on a frame
+    /// boundary); `Err` = I/O failure, EOF mid-frame, or corrupt length
+    /// prefix. Frames failing CRC are skipped (the in-proc path does the
+    /// same; corruption of a single frame is recoverable, a desynced
+    /// stream is not).
+    pub fn recv(&mut self) -> Result<Option<Frame>> {
         loop {
-            let mut len = [0u8; 4];
-            self.stream.read_exact(&mut len).ok()?;
-            let n = u32::from_le_bytes(len) as usize;
-            if n > 1 << 30 {
-                return None; // absurd length: treat as corrupt stream
+            let n = match self.read_prefix()? {
+                Prefix::CleanEof => return Ok(None),
+                Prefix::Len(n) => n,
+            };
+            if n > MAX_FRAME_BYTES {
+                anyhow::bail!(
+                    "corrupt stream: frame length prefix {n} exceeds {MAX_FRAME_BYTES}"
+                );
             }
             self.buf.resize(n, 0);
-            self.stream.read_exact(&mut self.buf).ok()?;
+            self.stream.read_exact(&mut self.buf).map_err(|e| {
+                anyhow::anyhow!("link failed mid-frame ({n}-byte frame): {e}")
+            })?;
             match Frame::from_bytes(&self.buf) {
-                Ok(f) => return Some(f),
+                Ok(f) => return Ok(Some(f)),
                 Err(_) => continue,
             }
         }
+    }
+
+    /// Read the 4-byte length prefix, distinguishing EOF on the boundary
+    /// (clean shutdown) from EOF inside it (truncated stream).
+    fn read_prefix(&mut self) -> Result<Prefix> {
+        let mut len = [0u8; 4];
+        let mut filled = 0usize;
+        while filled < len.len() {
+            match self.stream.read(&mut len[filled..]) {
+                Ok(0) => {
+                    if filled == 0 {
+                        return Ok(Prefix::CleanEof);
+                    }
+                    anyhow::bail!(
+                        "link truncated mid-length-prefix ({filled}/4 bytes read)"
+                    );
+                }
+                Ok(k) => filled += k,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(anyhow::anyhow!("socket read failed: {e}")),
+            }
+        }
+        Ok(Prefix::Len(u32::from_le_bytes(len) as usize))
+    }
+}
+
+impl FrameRx for TcpFrameReceiver {
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        TcpFrameReceiver::recv(self)
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
     }
 }
 
@@ -105,7 +211,7 @@ mod tests {
         let server = std::thread::spawn(move || {
             let (_tx, mut rx) = accept_one(&listener).unwrap();
             let mut seqs = Vec::new();
-            while let Some(f) = rx.recv() {
+            while let Some(f) = rx.recv().unwrap() {
                 seqs.push(f.seq);
                 if seqs.len() == 5 {
                     break;
@@ -126,7 +232,7 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let server = std::thread::spawn(move || {
             let (_tx, mut rx) = accept_one(&listener).unwrap();
-            rx.recv().unwrap()
+            rx.recv().unwrap().unwrap()
         });
         let (mut tx, _rx) = connect(&addr).unwrap();
         let f = frame(9, 1024 * 256); // 256k elements, 4-bit → 128 KB payload
@@ -135,7 +241,7 @@ mod tests {
     }
 
     #[test]
-    fn tcp_eof_returns_none() {
+    fn tcp_eof_is_clean_none() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let server = std::thread::spawn(move || {
@@ -144,6 +250,100 @@ mod tests {
         });
         let (tx, _rx) = connect(&addr).unwrap();
         drop(tx); // close without sending
-        assert!(server.join().unwrap().is_none());
+        assert!(server.join().unwrap().unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_mid_frame_is_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv()
+        });
+        // Claim a 100-byte frame, deliver 10, then close: not a clean EOF.
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&100u32.to_le_bytes()).unwrap();
+        raw.write_all(&[0u8; 10]).unwrap();
+        drop(raw);
+        let err = server.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("mid-frame"), "{err:#}");
+    }
+
+    #[test]
+    fn truncation_mid_prefix_is_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv()
+        });
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&[7u8, 7]).unwrap(); // 2 of 4 prefix bytes
+        drop(raw);
+        let err = server.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("mid-length-prefix"), "{err:#}");
+    }
+
+    #[test]
+    fn absurd_length_is_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv()
+        });
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = server.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("corrupt stream"), "{err:#}");
+        drop(raw);
+    }
+
+    #[test]
+    fn crc_corrupt_frame_skipped_next_delivered() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv()
+        });
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        let mut bad = frame(0, 64).to_bytes();
+        let n = bad.len();
+        bad[n - 1] ^= 0xff; // payload corruption -> CRC mismatch
+        raw.write_all(&(bad.len() as u32).to_le_bytes()).unwrap();
+        raw.write_all(&bad).unwrap();
+        let good = frame(1, 64);
+        let good_bytes = good.to_bytes();
+        raw.write_all(&(good_bytes.len() as u32).to_le_bytes()).unwrap();
+        raw.write_all(&good_bytes).unwrap();
+        assert_eq!(server.join().unwrap().unwrap().unwrap().seq, 1);
+        drop(raw);
+    }
+
+    #[test]
+    fn loopback_pair_is_connected_both_ways() {
+        let ((mut a_tx, mut a_rx), (mut b_tx, mut b_rx)) = loopback_pair().unwrap();
+        a_tx.send(frame(3, 32)).unwrap();
+        assert_eq!(b_rx.recv().unwrap().unwrap().seq, 3);
+        b_tx.send(frame(4, 32)).unwrap();
+        assert_eq!(a_rx.recv().unwrap().unwrap().seq, 4);
+    }
+
+    #[test]
+    fn connect_retry_times_out_cleanly() {
+        // Nothing listens on this freshly-bound-then-dropped port.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = connect_retry(
+            &addr,
+            Duration::from_millis(80),
+            Duration::from_millis(20),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err:#}");
     }
 }

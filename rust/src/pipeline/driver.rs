@@ -1,11 +1,11 @@
-//! The pipeline driver: wires stage threads, shaped links, monitors and
+//! The pipeline driver: wires stage threads, transports, monitors and
 //! the adaptive controller into a running system (paper Fig 2).
 //!
 //! Topology for n stages:
 //!
 //! ```text
 //! source thread ─sync_channel─▶ [stage0 thread] ─▶ {sender thread 0:
-//!   SimLink shaping, WindowMonitor, AdaptivePda} ─▶ [stage1 thread]
+//!   FrameTx transport, WindowMonitor, AdaptivePda} ─▶ [stage1 thread]
 //!   ─▶ … ─▶ [stage n-1 thread] ─sync_channel─▶ sink (caller thread)
 //! ```
 //!
@@ -14,26 +14,33 @@
 //!   then calibrate + encode outgoing frames at the bitwidth currently
 //!   published by their link's controller (an `AtomicU8` — the paper's
 //!   control/data split inside the adaptive PDA module).
-//! * Sender threads serialize frames through the shaped [`SimLink`], feed
-//!   the [`WindowMonitor`], and run the Eq. 2 controller at window
-//!   boundaries.
+//! * Sender threads ship frames through a [`FrameTx`] transport — a shaped
+//!   `SimLink` channel or a real TCP socket ([`LinkSpec`]) — feed the
+//!   [`WindowMonitor`] with the measured busy time (serialization delay
+//!   in-proc, write-stall under socket backpressure on TCP), and run the
+//!   Eq. 2 controller at window boundaries. The control loop is identical
+//!   over either transport.
 //! * Labels bypass the pipeline (eval-only) and join at the sink.
-//! * Bounded `sync_channel`s give GPipe-style in-flight caps.
+//! * Bounded `sync_channel`s give GPipe-style in-flight caps (TCP mode
+//!   additionally rides the kernel's socket buffers).
+//!
+//! Transport failures (a TCP stream truncated mid-frame, a socket error)
+//! surface in [`RunReport::errors`] instead of silently ending the run.
 
 use crate::adapt::{AdaptConfig, AdaptivePda};
 use crate::data::{AccuracyMeter, EvalSet};
 use crate::metrics::{LatencyHisto, Timeline, TimelinePoint};
 use crate::monitor::WindowMonitor;
 use crate::net::frame::Frame;
-use crate::net::link::SimLink;
-use crate::net::transport::{inproc_pair, InProcReceiver};
+use crate::net::transport::{FrameRx, FrameTx, LinkSpec};
 use crate::pipeline::stage::StageFactory;
 use crate::quant::codec::Codec;
 use crate::quant::{calibrate, Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
+use crate::util::json::Value;
 use crate::Result;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -57,8 +64,9 @@ impl Default for LinkQuant {
 /// Full pipeline specification.
 pub struct PipelineSpec {
     pub stages: Vec<StageFactory>,
-    /// One link per stage boundary (len = stages - 1).
-    pub links: Vec<Arc<SimLink>>,
+    /// One transport per stage boundary (len = stages - 1): a shaped
+    /// in-process channel or a pre-connected real TCP socket.
+    pub links: Vec<LinkSpec>,
     pub quant: LinkQuant,
     /// Adaptive controller config; `None` pins `quant.initial_bits`.
     pub adapt: Option<AdaptConfig>,
@@ -66,6 +74,26 @@ pub struct PipelineSpec {
     pub window: u64,
     /// In-flight frames per channel (backpressure bound).
     pub inflight: usize,
+}
+
+/// Per-link wire counters fed by the sender thread. Transport-agnostic
+/// replacement for reading `SimLink`'s internal counters (a TCP link has
+/// no `SimLink`).
+#[derive(Debug, Default)]
+pub struct LinkCounters {
+    pub bytes: AtomicU64,
+    pub frames: AtomicU64,
+}
+
+impl LinkCounters {
+    pub fn mean_frame_bytes(&self) -> f64 {
+        let frames = self.frames.load(Ordering::Relaxed);
+        if frames == 0 {
+            0.0
+        } else {
+            self.bytes.load(Ordering::Relaxed) as f64 / frames as f64
+        }
+    }
 }
 
 struct SourceMsg {
@@ -80,7 +108,7 @@ struct SinkMsg {
 
 enum StageIn {
     Source(Receiver<SourceMsg>),
-    Upstream(InProcReceiver),
+    Upstream(Box<dyn FrameRx>),
 }
 
 enum StageOut {
@@ -112,6 +140,51 @@ pub struct RunReport {
     pub link0_mean_bytes: f64,
     /// Per-stage mean compute seconds (profiling/partitioning input).
     pub stage_compute_s: Vec<f64>,
+    /// Transport/stage failures observed during the run ("link 1: stream
+    /// truncated mid-frame"). Empty on a clean run; a non-empty list with
+    /// `microbatches < workload.total` explains the shortfall.
+    pub errors: Vec<String>,
+}
+
+impl RunReport {
+    /// Machine-readable report. Non-finite values (an unconstrained link
+    /// measures "infinite" bandwidth) are mapped to `null` — JSON has no
+    /// Infinity/NaN, and downstream tooling must get a parseable document.
+    pub fn to_json(&self) -> Value {
+        fn num(v: f64) -> Value {
+            if v.is_finite() {
+                Value::Num(v)
+            } else {
+                Value::Null
+            }
+        }
+        let mut m = BTreeMap::new();
+        m.insert("images".into(), Value::Num(self.images as f64));
+        m.insert("microbatches".into(), Value::Num(self.microbatches as f64));
+        m.insert("wall_secs".into(), num(self.wall_secs));
+        m.insert("throughput".into(), num(self.throughput));
+        m.insert("accuracy".into(), num(self.accuracy));
+        m.insert("link0_mean_bytes".into(), num(self.link0_mean_bytes));
+        m.insert(
+            "window_accuracy".into(),
+            Value::Arr(
+                self.window_accuracy
+                    .iter()
+                    .map(|&(t, a)| Value::Arr(vec![num(t), num(a)]))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "stage_compute_s".into(),
+            Value::Arr(self.stage_compute_s.iter().map(|&s| num(s)).collect()),
+        );
+        m.insert("timeline".into(), self.timeline.to_json());
+        m.insert(
+            "errors".into(),
+            Value::Arr(self.errors.iter().map(|e| Value::Str(e.clone())).collect()),
+        );
+        Value::Obj(m)
+    }
 }
 
 /// Workload: which microbatches to feed.
@@ -136,72 +209,85 @@ impl Workload {
 /// Run the pipeline to completion and report. Blocking (the caller thread
 /// acts as the sink).
 pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
-    let n = spec.stages.len();
+    let PipelineSpec { stages, links, quant, adapt, window, inflight } = spec;
+    let n = stages.len();
     anyhow::ensure!(n >= 1, "need at least one stage");
     anyhow::ensure!(
-        spec.links.len() + 1 == n,
+        links.len() + 1 == n,
         "need {} links for {} stages, got {}",
         n - 1,
         n,
-        spec.links.len()
+        links.len()
     );
 
     let start = Instant::now();
     let timeline = Arc::new(Mutex::new(Timeline::default()));
     let send_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
     let label_map: Arc<Mutex<HashMap<u64, Vec<u32>>>> = Arc::new(Mutex::new(HashMap::new()));
-    let inflight = spec.inflight.max(1);
+    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let inflight = inflight.max(1);
 
     let (src_tx, src_rx) = sync_channel::<SourceMsg>(inflight);
     let (sink_tx, sink_rx) = sync_channel::<SinkMsg>(inflight);
     let stage_secs: Arc<Mutex<Vec<(f64, u64)>>> = Arc::new(Mutex::new(vec![(0.0, 0); n]));
 
     let link_bits: Vec<Arc<AtomicU8>> = (0..n - 1)
-        .map(|_| Arc::new(AtomicU8::new(spec.quant.initial_bits)))
+        .map(|_| Arc::new(AtomicU8::new(quant.initial_bits)))
+        .collect();
+    let link_counters: Vec<Arc<LinkCounters>> = (0..n - 1)
+        .map(|_| Arc::new(LinkCounters::default()))
         .collect();
 
     // --- stage + sender threads ----------------------------------------------
     let mut threads = Vec::new();
     let mut stage_input = StageIn::Source(src_rx);
+    let mut link_iter = links.into_iter();
 
-    for (i, factory) in spec.stages.into_iter().enumerate() {
+    for (i, factory) in stages.into_iter().enumerate() {
         let is_last = i == n - 1;
         let input = std::mem::replace(&mut stage_input, StageIn::Source(sync_channel(1).1));
         let secs = stage_secs.clone();
+        let errs = errors.clone();
 
         if is_last {
             let out = StageOut::Sink(sink_tx.clone());
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("qp-stage-{i}"))
-                    .spawn(move || stage_thread(i, factory, input, out, secs))?,
+                    .spawn(move || stage_thread(i, factory, input, out, secs, errs))?,
             );
         } else {
             let (frame_tx, frame_rx) = sync_channel::<Frame>(inflight);
-            let (link_tx, link_rx) = inproc_pair(spec.links[i].clone(), inflight);
+            let (link_tx, link_rx) = link_iter
+                .next()
+                .expect("link count checked above")
+                .into_endpoints(inflight);
             let out = StageOut::Downstream {
                 frame_tx,
                 bits: link_bits[i].clone(),
-                quant: spec.quant,
+                quant,
             };
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("qp-stage-{i}"))
-                    .spawn(move || stage_thread(i, factory, input, out, secs))?,
+                    .spawn(move || stage_thread(i, factory, input, out, secs, errs))?,
             );
 
-            // Sender thread: shaping + monitoring + adaptation for link i.
+            // Sender thread: transport + monitoring + adaptation for link i.
             let bits = link_bits[i].clone();
+            let counters = link_counters[i].clone();
             let tl = timeline.clone();
-            let adapt_cfg = spec.adapt;
-            let window = spec.window;
+            let errs = errors.clone();
             let batch = workload.microbatch;
-            let initial_bits = spec.quant.initial_bits;
+            let initial_bits = quant.initial_bits;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("qp-send-{i}"))
                     .spawn(move || {
-                        sender_thread(i, frame_rx, link_tx, window, batch, adapt_cfg, initial_bits, bits, tl, start)
+                        sender_thread(
+                            i, frame_rx, link_tx, window, batch, adapt, initial_bits,
+                            bits, tl, counters, errs, start,
+                        )
                     })?,
             );
             stage_input = StageIn::Upstream(link_rx);
@@ -252,7 +338,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
             latency.record(t0.elapsed());
         }
         done += 1;
-        if done % spec.window == 0 {
+        if done % window == 0 {
             window_accuracy.push((start.elapsed().as_secs_f64(), window_meter.take()));
         }
         if done >= workload.total {
@@ -269,12 +355,10 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         let _ = t.join();
     }
 
-    let link0_mean_bytes = if !spec.links.is_empty() {
-        let (bytes, frames, _) = spec.links[0].counters();
-        bytes as f64 / frames.max(1) as f64
-    } else {
-        0.0
-    };
+    let link0_mean_bytes = link_counters
+        .first()
+        .map(|c| c.mean_frame_bytes())
+        .unwrap_or(0.0);
 
     let timeline = Arc::try_unwrap(timeline)
         .map(|m| m.into_inner().unwrap())
@@ -287,6 +371,8 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         .map(|&(s, c)| if c > 0 { s / c as f64 } else { 0.0 })
         .collect();
 
+    let errors = std::mem::take(&mut *errors.lock().unwrap());
+
     Ok(RunReport {
         images,
         microbatches: done,
@@ -298,6 +384,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         latency,
         link0_mean_bytes,
         stage_compute_s,
+        errors,
     })
 }
 
@@ -311,8 +398,10 @@ fn stage_thread(
     input: StageIn,
     output: StageOut,
     secs: Arc<Mutex<Vec<(f64, u64)>>>,
+    errors: Arc<Mutex<Vec<String>>>,
 ) {
     if let Err(e) = stage_loop(idx, factory, input, output, secs) {
+        errors.lock().unwrap().push(format!("stage {idx}: {e:#}"));
         eprintln!("[quantpipe] stage {idx} exited with error: {e:#}");
     }
 }
@@ -339,11 +428,16 @@ fn stage_loop(
                 Err(_) => return Ok(()),
             },
             StageIn::Upstream(rx) => match rx.recv() {
-                Some(frame) => {
+                Ok(Some(frame)) => {
                     codec.decode(&frame.enc, &mut decode_buf)?;
-                    (frame.seq, Tensor::new(decode_buf.clone(), frame.shape.clone()))
+                    let Frame { seq, shape, enc } = frame;
+                    codec.recycle(enc); // reuse the payload allocation for our own encodes
+                    (seq, Tensor::new(decode_buf.clone(), shape))
                 }
-                None => return Ok(()),
+                Ok(None) => return Ok(()), // clean upstream shutdown
+                Err(e) => {
+                    return Err(e.context("upstream link failed (reporting, not ending quietly)"))
+                }
             },
         };
 
@@ -362,22 +456,9 @@ fn stage_loop(
                 }
             }
             StageOut::Downstream { frame_tx, bits, quant } => {
-                let bits_now = bits.load(Ordering::Relaxed);
-                let enc = if bits_now >= BITS_NONE {
-                    cached = None;
-                    codec.encode(&out.data, quant.method, BITS_NONE)?
-                } else {
-                    let need_calib = match cached {
-                        Some(p) => p.bits != bits_now || since_calib >= quant.calib_every,
-                        None => true,
-                    };
-                    if need_calib {
-                        cached = Some(calibrate(&out.data, quant.method, bits_now));
-                        since_calib = 0;
-                    }
-                    since_calib += 1;
-                    codec.encode_with_params(&out.data, cached.unwrap())?
-                };
+                let enc = encode_at_current_bits(
+                    &mut codec, &out.data, quant, bits, &mut cached, &mut since_calib,
+                )?;
                 let frame = Frame::new(seq, out.shape.clone(), enc);
                 if frame_tx.send(frame).is_err() {
                     return Ok(());
@@ -387,21 +468,55 @@ fn stage_loop(
     }
 }
 
+/// Encode one activation at the bitwidth currently published by the link's
+/// controller, amortizing calibration across `calib_every` sends. Shared
+/// by the in-driver stage loop and the multi-process worker endpoint.
+pub(crate) fn encode_at_current_bits(
+    codec: &mut Codec,
+    data: &[f32],
+    quant: &LinkQuant,
+    bits: &AtomicU8,
+    cached: &mut Option<QuantParams>,
+    since_calib: &mut u32,
+) -> Result<crate::quant::codec::Encoded> {
+    let bits_now = bits.load(Ordering::Relaxed);
+    if bits_now >= BITS_NONE {
+        *cached = None;
+        return codec.encode(data, quant.method, BITS_NONE);
+    }
+    let need_calib = match cached {
+        Some(p) => p.bits != bits_now || *since_calib >= quant.calib_every,
+        None => true,
+    };
+    if need_calib {
+        *cached = Some(calibrate(data, quant.method, bits_now));
+        *since_calib = 0;
+    }
+    *since_calib += 1;
+    codec.encode_with_params(data, cached.unwrap())
+}
+
 // -----------------------------------------------------------------------------
-// Sender thread: link shaping + window monitor + Eq.2 controller
+// Sender thread: transport + window monitor + Eq.2 controller
 // -----------------------------------------------------------------------------
 
+/// Ship frames through any [`FrameTx`], feeding the monitor with measured
+/// busy time and running the adaptive controller at window boundaries.
+/// Used by the in-process driver and the multi-process worker endpoint —
+/// the control loop never knows which transport it's on.
 #[allow(clippy::too_many_arguments)]
-fn sender_thread(
+pub(crate) fn sender_thread(
     stage: usize,
     frame_rx: Receiver<Frame>,
-    link_tx: crate::net::transport::InProcSender,
+    mut link_tx: Box<dyn FrameTx>,
     window: u64,
     batch: usize,
     adapt: Option<AdaptConfig>,
     initial_bits: u8,
     bits: Arc<AtomicU8>,
     timeline: Arc<Mutex<Timeline>>,
+    counters: Arc<LinkCounters>,
+    errors: Arc<Mutex<Vec<String>>>,
     start: Instant,
 ) {
     let mut monitor = WindowMonitor::new(window, batch);
@@ -414,8 +529,16 @@ fn sender_thread(
         let wire = frame.wire_len();
         let busy = match link_tx.send(frame) {
             Ok(b) => b,
-            Err(_) => return, // downstream gone
+            Err(e) => {
+                errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("link {stage} ({}): send failed: {e:#}", link_tx.kind()));
+                return;
+            }
         };
+        counters.bytes.fetch_add(wire as u64, Ordering::Relaxed);
+        counters.frames.fetch_add(1, Ordering::Relaxed);
         if let Some(stats) = monitor.record_send(wire, busy) {
             let decided = if let Some(c) = &mut ctl {
                 let d = c.on_window(&stats);

@@ -2,15 +2,22 @@
 //!
 //! * [`stage`] — stage compute (AOT HLO shard via PJRT, or mocks) and the
 //!   per-thread construction discipline PJRT requires.
-//! * [`driver`] — the event loop: source → stage threads → shaped links
-//!   with monitors + adaptive PDA controllers → sink; produces a
-//!   [`driver::RunReport`] with the Fig 5 timeline, accuracy, throughput
-//!   and latency.
+//! * [`driver`] — the event loop: source → stage threads → transports
+//!   ([`crate::net::transport::LinkSpec`]: shaped in-proc channels or real
+//!   TCP sockets) with monitors + adaptive PDA controllers → sink;
+//!   produces a [`driver::RunReport`] with the Fig 5 timeline, accuracy,
+//!   throughput and latency.
+//! * [`remote`] — multi-process endpoints: [`remote::run_worker`] runs one
+//!   stage over arbitrary transports, [`remote::run_coordinator`] is the
+//!   source+sink process (CLI: `quantpipe worker` / `quantpipe coordinate`).
 
 pub mod driver;
+pub mod remote;
 pub mod stage;
 
-pub use driver::{run, LinkQuant, PipelineSpec, RunReport, Workload};
+pub use crate::net::transport::LinkSpec;
+pub use driver::{run, LinkCounters, LinkQuant, PipelineSpec, RunReport, Workload};
+pub use remote::{run_coordinator, run_worker, CoordinatorReport, WorkerConfig, WorkerReport};
 pub use stage::{hlo_stage_factory, mock_stage_factory, StageBundle, StageCompute, StageFactory};
 
 #[cfg(test)]
@@ -27,16 +34,7 @@ mod tests {
     /// Tiny synthetic eval set: one-hot "images" so passthrough logits'
     /// argmax equals the label exactly.
     fn tiny_eval(count: usize, classes: usize) -> Arc<EvalSet> {
-        let mut images = Vec::new();
-        let mut labels = Vec::new();
-        for i in 0..count {
-            let lab = i % classes;
-            for c in 0..classes {
-                images.push(if c == lab { 1.0 } else { 0.0 });
-            }
-            labels.push(lab as u32);
-        }
-        Arc::new(EvalSet { images, labels, count, dims: (1, 1, classes) })
+        Arc::new(EvalSet::synthetic_onehot(count, classes))
     }
 
     fn spec_with_links(
@@ -52,7 +50,7 @@ mod tests {
             .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
             .collect();
         let links = (0..n_stages - 1)
-            .map(|_| Arc::new(SimLink::new(trace.clone())))
+            .map(|_| LinkSpec::Sim(Arc::new(SimLink::new(trace.clone()))))
             .collect();
         PipelineSpec { stages, links, quant, adapt, window, inflight: 2 }
     }
@@ -64,6 +62,7 @@ mod tests {
         let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
         assert_eq!(report.microbatches, 8);
         assert_eq!(report.images, 64);
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
         // Passthrough at 32-bit: logits == one-hot images, so accuracy = 1.
         assert!((report.accuracy - 1.0).abs() < 1e-12, "{report:?}");
     }
@@ -161,7 +160,7 @@ mod tests {
         ];
         let spec = PipelineSpec {
             stages,
-            links: vec![Arc::new(SimLink::unlimited())],
+            links: vec![LinkSpec::unlimited()],
             quant: LinkQuant::default(),
             adapt: None,
             window: 2,
@@ -170,5 +169,19 @@ mod tests {
         let report = run(spec, Workload::one_pass(eval, 4)).unwrap();
         assert!(report.stage_compute_s[0] > report.stage_compute_s[1]);
         assert!(report.stage_compute_s[0] >= 0.004, "{:?}", report.stage_compute_s);
+    }
+
+    #[test]
+    fn run_report_json_is_parseable() {
+        // Including the infinite-bandwidth windows an unconstrained link
+        // produces: the JSON must stay valid (non-finite → null/omitted).
+        let eval = tiny_eval(64, 4);
+        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+        let spec = spec_with_links(2, 4, 8, BandwidthTrace::unlimited(), quant, None, 2);
+        let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
+        let text = report.to_json().to_string_pretty();
+        let back = crate::util::json::Value::parse(&text).unwrap();
+        assert_eq!(back.at("microbatches").unwrap().as_u64().unwrap(), 8);
+        assert!(back.at("timeline").unwrap().as_arr().is_ok());
     }
 }

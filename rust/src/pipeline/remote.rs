@@ -1,0 +1,307 @@
+//! Multi-process deployment endpoints (the paper's actual testbed shape:
+//! stages on separate processes/devices, the coordinator feeding images
+//! and collecting logits).
+//!
+//! A **worker** owns exactly one stage. It decodes frames from its
+//! upstream transport, runs the shard, re-encodes at the bitwidth its own
+//! adaptive controller currently publishes, and ships downstream through
+//! a sender thread — the same [`sender_thread`] the in-process driver
+//! uses, so the WindowMonitor/AdaptivePda loop is byte-for-byte the same
+//! code over TCP. In TCP mode the bandwidth signal is measured
+//! write-stall time under real socket backpressure; no `SimLink` exists
+//! anywhere in the process.
+//!
+//! The **coordinator** is source + sink: it streams raw-f32 frames into
+//! stage 0 and scores the logits frames returning from the last stage.
+//! TCP's own flow control is the in-flight bound between processes.
+//!
+//! Wiring (CLI: `quantpipe worker` / `quantpipe coordinate`):
+//!
+//! ```text
+//! coordinator ──connect──▶ worker 0 ──connect──▶ … ──▶ worker n-1
+//!      ▲                                                   │
+//!      └────────────── sink listener ◀──────connect────────┘
+//! ```
+
+use crate::adapt::AdaptConfig;
+use crate::data::AccuracyMeter;
+use crate::metrics::{LatencyHisto, Timeline};
+use crate::net::frame::Frame;
+use crate::net::transport::{FrameRx, FrameTx};
+use crate::pipeline::driver::{
+    encode_at_current_bits, sender_thread, LinkCounters, LinkQuant, Workload,
+};
+use crate::pipeline::stage::StageFactory;
+use crate::quant::codec::Codec;
+use crate::quant::{Method, QuantParams, BITS_NONE};
+use crate::tensor::Tensor;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::AtomicU8;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One worker's role in the pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerConfig {
+    /// Stage index (for logs/timeline labelling).
+    pub stage: usize,
+    /// Output-link quantization behaviour.
+    pub quant: LinkQuant,
+    /// Adaptive controller for the output link; `None` pins
+    /// `quant.initial_bits`. Ignored when `quantize_output` is false.
+    pub adapt: Option<AdaptConfig>,
+    /// Monitor window in microbatches.
+    pub window: u64,
+    /// Images per microbatch (the monitor's rate track).
+    pub microbatch: usize,
+    /// Quantize the output link. The last stage sets this false: logits
+    /// return to the coordinator raw.
+    pub quantize_output: bool,
+    /// Frames buffered between compute and the transport writer.
+    pub inflight: usize,
+}
+
+/// What a worker measured over its lifetime.
+#[derive(Debug)]
+pub struct WorkerReport {
+    /// Microbatches processed.
+    pub frames: u64,
+    /// Window-by-window monitor/controller track for the output link.
+    pub timeline: Timeline,
+    /// Mean compute seconds per microbatch.
+    pub mean_compute_s: f64,
+    /// Mean wire bytes per frame on the output link.
+    pub out_mean_bytes: f64,
+    /// Transport failures observed (empty on a clean run).
+    pub errors: Vec<String>,
+}
+
+/// Run one stage over arbitrary transports until the upstream closes.
+/// Blocking; the calling thread is the stage's compute thread (PJRT is
+/// thread-pinned), a spawned sender thread owns the output transport.
+pub fn run_worker(
+    factory: StageFactory,
+    cfg: WorkerConfig,
+    rx: Box<dyn FrameRx>,
+    tx: Box<dyn FrameTx>,
+) -> Result<WorkerReport> {
+    let start = Instant::now();
+    let initial_bits = if cfg.quantize_output { cfg.quant.initial_bits } else { BITS_NONE };
+    let bits = Arc::new(AtomicU8::new(initial_bits));
+    let timeline = Arc::new(Mutex::new(Timeline::default()));
+    let counters = Arc::new(LinkCounters::default());
+    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let (frame_tx, frame_rx) = sync_channel::<Frame>(cfg.inflight.max(1));
+
+    let sender = {
+        let adapt = if cfg.quantize_output { cfg.adapt } else { None };
+        let bits = bits.clone();
+        let tl = timeline.clone();
+        let counters = counters.clone();
+        let errs = errors.clone();
+        let (stage, window, batch) = (cfg.stage, cfg.window, cfg.microbatch);
+        std::thread::Builder::new()
+            .name(format!("qp-worker-send-{stage}"))
+            .spawn(move || {
+                sender_thread(
+                    stage, frame_rx, tx, window, batch, adapt, initial_bits,
+                    bits, tl, counters, errs, start,
+                )
+            })?
+    };
+
+    let (loop_result, frames, compute_secs) = worker_stage_loop(cfg, rx, frame_tx, bits, factory);
+    // frame_tx was moved into the loop and is dropped by now, so the
+    // sender drains its channel and exits.
+    let _ = sender.join();
+
+    let mut errors = std::mem::take(&mut *errors.lock().unwrap());
+    if let Err(e) = loop_result {
+        // Keep the progress counters: "stopped with an error after frame
+        // 500" is what lets an operator correlate the shortfall.
+        errors.push(format!("worker stage {}: {e:#}", cfg.stage));
+    }
+
+    Ok(WorkerReport {
+        frames,
+        timeline: take_timeline(timeline),
+        mean_compute_s: if frames > 0 { compute_secs / frames as f64 } else { 0.0 },
+        out_mean_bytes: counters.mean_frame_bytes(),
+        errors,
+    })
+}
+
+fn take_timeline(timeline: Arc<Mutex<Timeline>>) -> Timeline {
+    Arc::try_unwrap(timeline)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default()
+}
+
+/// Returns the loop outcome WITH the progress counters — a failure after
+/// frame 500 still reports 500 frames of progress.
+fn worker_stage_loop(
+    cfg: WorkerConfig,
+    mut rx: Box<dyn FrameRx>,
+    frame_tx: SyncSender<Frame>,
+    bits: Arc<AtomicU8>,
+    factory: StageFactory,
+) -> (Result<()>, u64, f64) {
+    let mut frames = 0u64;
+    let mut compute_secs = 0f64;
+    let result = (|| -> Result<()> {
+        let bundle = factory()?;
+        let mut compute = bundle.compute;
+        let mut codec = Codec::new(bundle.quant_backend);
+        let mut decode_buf: Vec<f32> = Vec::new();
+        let mut cached: Option<QuantParams> = None;
+        let mut since_calib: u32 = 0;
+
+        loop {
+            let frame = match rx.recv() {
+                Ok(Some(f)) => f,
+                Ok(None) => return Ok(()), // clean upstream shutdown
+                Err(e) => return Err(e.context("upstream link failed")),
+            };
+            codec.decode(&frame.enc, &mut decode_buf)?;
+            let Frame { seq, shape, enc } = frame;
+            codec.recycle(enc);
+            let tensor = Tensor::new(decode_buf.clone(), shape);
+
+            let t0 = Instant::now();
+            let out = compute.run(&tensor)?;
+            compute_secs += t0.elapsed().as_secs_f64();
+
+            let enc = encode_at_current_bits(
+                &mut codec, &out.data, &cfg.quant, &bits, &mut cached, &mut since_calib,
+            )?;
+            if frame_tx.send(Frame::new(seq, out.shape.clone(), enc)).is_err() {
+                // Sender died (downstream link failure, already recorded).
+                return Ok(());
+            }
+            frames += 1;
+        }
+    })();
+    (result, frames, compute_secs)
+}
+
+// -----------------------------------------------------------------------------
+// Coordinator: source + sink over real transports
+// -----------------------------------------------------------------------------
+
+/// What the coordinator measured end-to-end.
+#[derive(Debug)]
+pub struct CoordinatorReport {
+    pub images: u64,
+    pub microbatches: u64,
+    pub wall_secs: f64,
+    /// End-to-end images/sec.
+    pub throughput: f64,
+    /// Top-1 accuracy over all returned microbatches.
+    pub accuracy: f64,
+    /// End-to-end microbatch latency (feed → logits return).
+    pub latency: LatencyHisto,
+    /// Transport failures observed (empty on a clean run).
+    pub errors: Vec<String>,
+}
+
+/// Feed the workload into stage 0 (`feed`) and score logits returning
+/// from the last stage (`ret`). Blocking; a spawned thread feeds while
+/// the calling thread sinks, so TCP flow control — not lockstep — paces
+/// the pipeline.
+pub fn run_coordinator(
+    workload: Workload,
+    feed: Box<dyn FrameTx>,
+    mut ret: Box<dyn FrameRx>,
+) -> Result<CoordinatorReport> {
+    let start = Instant::now();
+    let label_map: Arc<Mutex<HashMap<u64, Vec<u32>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let send_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let feeder = {
+        let eval = workload.eval.clone();
+        let s = workload.microbatch;
+        let total = workload.total;
+        let labels = label_map.clone();
+        let times = send_times.clone();
+        let errs = errors.clone();
+        std::thread::Builder::new()
+            .name("qp-coord-feed".into())
+            .spawn(move || {
+                let mut feed = feed;
+                let mut codec = Codec::default();
+                let per_pass = eval.microbatches(s).max(1);
+                for seq in 0..total {
+                    let i = (seq as usize) % per_pass;
+                    let tensor = eval.microbatch(i, s);
+                    labels.lock().unwrap().insert(seq, eval.labels_for(i, s).to_vec());
+                    times.lock().unwrap().insert(seq, Instant::now());
+                    let enc = match codec.encode(&tensor.data, Method::Pda, BITS_NONE) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            errs.lock().unwrap().push(format!("coordinator: encode failed: {e:#}"));
+                            break;
+                        }
+                    };
+                    if let Err(e) = feed.send(Frame::new(seq, tensor.shape.clone(), enc)) {
+                        errs.lock().unwrap().push(format!("coordinator: feed link failed: {e:#}"));
+                        break;
+                    }
+                }
+                // `feed` drops here; on TCP that half-closes the socket and
+                // stage 0 sees a clean EOF after draining.
+            })?
+    };
+
+    let mut acc = AccuracyMeter::default();
+    let mut latency = LatencyHisto::default();
+    let mut codec = Codec::default();
+    let mut logits_buf: Vec<f32> = Vec::new();
+    let mut done = 0u64;
+    let mut images = 0u64;
+    while done < workload.total {
+        match ret.recv() {
+            Ok(Some(frame)) => {
+                if let Err(e) = codec.decode(&frame.enc, &mut logits_buf) {
+                    errors
+                        .lock()
+                        .unwrap()
+                        .push(format!("coordinator: logits decode failed: {e:#}"));
+                    continue;
+                }
+                let logits = Tensor::new(logits_buf.clone(), frame.shape.clone());
+                if let Some(labels) = label_map.lock().unwrap().remove(&frame.seq) {
+                    images += labels.len() as u64;
+                    acc.add(&logits, &labels);
+                }
+                if let Some(t0) = send_times.lock().unwrap().remove(&frame.seq) {
+                    latency.record(t0.elapsed());
+                }
+                done += 1;
+            }
+            Ok(None) => break, // pipeline closed early
+            Err(e) => {
+                errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("coordinator: return link failed: {e:#}"));
+                break;
+            }
+        }
+    }
+    let _ = feeder.join();
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    let errors = std::mem::take(&mut *errors.lock().unwrap());
+
+    Ok(CoordinatorReport {
+        images,
+        microbatches: done,
+        wall_secs: wall,
+        throughput: images as f64 / wall,
+        accuracy: acc.value(),
+        latency,
+        errors,
+    })
+}

@@ -67,11 +67,21 @@ impl Encoded {
     }
 }
 
-/// Stateful encoder/decoder with reusable scratch buffers (zero allocation
-/// in steady state).
+/// Stateful encoder/decoder with reusable scratch buffers. `encode*`
+/// draws its payload storage from a recycled buffer ([`Codec::recycle`]
+/// returns a consumed frame's payload to the codec), so a stage that
+/// recycles what it receives encodes with zero allocation in steady
+/// state *when its output payloads fit the recycled capacity* (equal or
+/// lower bitwidth than the input link). When the output link runs at a
+/// wider bitwidth than the input, each encode grows the recycled buffer
+/// — one copy-free allocation per frame (the buffer is empty when it
+/// grows), which is the unavoidable cost of shipping the larger buffer
+/// away with the frame.
 pub struct Codec {
     backend: Box<dyn QuantBackend>,
     codes: Vec<i32>,
+    /// Recycled payload storage for the next `encode*` call.
+    spare: Vec<u8>,
 }
 
 impl Default for Codec {
@@ -82,18 +92,34 @@ impl Default for Codec {
 
 impl Codec {
     pub fn new(backend: Box<dyn QuantBackend>) -> Self {
-        Codec { backend, codes: Vec::new() }
+        Codec { backend, codes: Vec::new(), spare: Vec::new() }
     }
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// Hand a consumed [`Encoded`]'s payload buffer back for reuse by the
+    /// next `encode*` call. Callers that can't return buffers just drop
+    /// them (correct, one allocation per encode).
+    pub fn recycle(&mut self, enc: Encoded) {
+        if enc.payload.capacity() > self.spare.capacity() {
+            self.spare = enc.payload;
+        }
+    }
+
+    fn take_payload(&mut self) -> Vec<u8> {
+        let mut p = std::mem::take(&mut self.spare);
+        p.clear();
+        p
+    }
+
     /// Calibrate on `x` and encode it at `bits` using `method`.
     /// `bits == 32` bypasses quantization entirely (raw f32 LE payload).
     pub fn encode(&mut self, x: &[f32], method: Method, bits: u8) -> Result<Encoded> {
         if bits >= BITS_NONE {
-            let mut payload = Vec::with_capacity(x.len() * 4);
+            let mut payload = self.take_payload();
+            payload.reserve(x.len() * 4);
             for v in x {
                 payload.extend_from_slice(&v.to_le_bytes());
             }
@@ -108,12 +134,13 @@ impl Codec {
     pub fn encode_with_params(&mut self, x: &[f32], params: QuantParams) -> Result<Encoded> {
         self.codes.resize(x.len(), 0);
         self.backend.quantize(x, &params, &mut self.codes)?;
-        let mut payload = Vec::new();
+        let mut payload = self.take_payload();
         pack::pack(&self.codes, params.bits, params.pack_offset(), &mut payload);
         Ok(Encoded { params: Some(params), elems: x.len(), payload })
     }
 
     /// Decode into `out` (resized to the tensor's element count).
+    /// Truncated payloads are errors (see [`pack::unpack`]), never panics.
     pub fn decode(&mut self, enc: &Encoded, out: &mut Vec<f32>) -> Result<()> {
         out.resize(enc.elems, 0.0);
         match enc.params {
@@ -129,12 +156,7 @@ impl Codec {
                 }
             }
             Some(p) => {
-                anyhow::ensure!(
-                    enc.payload.len() >= pack::packed_len(enc.elems, p.bits),
-                    "packed payload truncated"
-                );
-                self.codes.clear();
-                pack::unpack(&enc.payload, enc.elems, p.bits, p.pack_offset(), &mut self.codes);
+                pack::unpack(&enc.payload, enc.elems, p.bits, p.pack_offset(), &mut self.codes)?;
                 self.backend.dequantize(&self.codes, &p, out)?;
             }
         }
@@ -219,5 +241,33 @@ mod tests {
         enc.payload.truncate(10);
         let mut out = Vec::new();
         assert!(c.decode(&enc, &mut out).is_err());
+        // Sub-byte widths too (this path used to panic in pack::unpack).
+        let mut enc = c.encode(&x, Method::Aciq, 4).unwrap();
+        enc.payload.truncate(enc.payload.len() - 1);
+        assert!(c.decode(&enc, &mut out).is_err());
+    }
+
+    #[test]
+    fn recycle_reuses_payload_allocation() {
+        // The "zero allocation in steady state" claim, verified: after
+        // recycling, the next encode writes into the same buffer.
+        let x = test_tensor(1024);
+        let mut c = Codec::default();
+        let e1 = c.encode(&x, Method::Aciq, 8).unwrap();
+        let ptr = e1.payload.as_ptr();
+        let cap = e1.payload.capacity();
+        c.recycle(e1);
+        let e2 = c.encode(&x, Method::Aciq, 8).unwrap();
+        assert_eq!(e2.payload.as_ptr(), ptr);
+        assert_eq!(e2.payload.capacity(), cap);
+        // Raw passthrough reuses it as well (after growing once).
+        c.recycle(e2);
+        let e3 = c.encode(&x, Method::Pda, 32).unwrap();
+        c.recycle(e3);
+        let e4 = c.encode(&x, Method::Pda, 32).unwrap();
+        let p4 = e4.payload.as_ptr();
+        c.recycle(e4);
+        let e5 = c.encode(&x, Method::Pda, 32).unwrap();
+        assert_eq!(e5.payload.as_ptr(), p4);
     }
 }

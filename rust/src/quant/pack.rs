@@ -10,6 +10,11 @@
 //! unsigned; the receiver adds `lo` back. Layout: element `i` occupies bits
 //! `[i*q, (i+1)*q)` of the stream, bit `k` of the stream is bit `k % 8` of
 //! byte `k / 8`. 8- and 16-bit widths take byte-aligned fast paths.
+//!
+//! [`unpack`] validates the input length up front: a truncated wire
+//! payload is an error, never a panic or a silently-short output.
+
+use crate::Result;
 
 /// Packed size in bytes for `n` codes at `bits` per code.
 pub fn packed_len(n: usize, bits: u8) -> usize {
@@ -55,7 +60,18 @@ pub fn pack(codes: &[i32], bits: u8, lo: i32, out: &mut Vec<u8>) {
 }
 
 /// Unpack `n` codes from a bitstream produced by [`pack`].
-pub fn unpack(bytes: &[u8], n: usize, bits: u8, lo: i32, out: &mut Vec<i32>) {
+///
+/// Errors when `bytes` is too short to hold `n` codes at `bits` each —
+/// truncated payloads (a cut TCP stream, a corrupt frame) must surface as
+/// decode failures the driver can report, not as panics or as fewer than
+/// `n` codes.
+pub fn unpack(bytes: &[u8], n: usize, bits: u8, lo: i32, out: &mut Vec<i32>) -> Result<()> {
+    let need = packed_len(n, bits);
+    anyhow::ensure!(
+        bytes.len() >= need,
+        "bitstream truncated: {n} codes at {bits} bits need {need} bytes, got {}",
+        bytes.len()
+    );
     out.clear();
     out.reserve(n);
     match bits {
@@ -77,7 +93,9 @@ pub fn unpack(bytes: &[u8], n: usize, bits: u8, lo: i32, out: &mut Vec<i32>) {
             let mut iter = bytes.iter();
             for _ in 0..n {
                 while nbits < bits as u32 {
-                    acc |= (*iter.next().expect("bitstream truncated") as u32) << nbits;
+                    // Cannot run dry: the length check above guarantees
+                    // `packed_len(n, bits)` bytes are present.
+                    acc |= (*iter.next().expect("unpack length invariant") as u32) << nbits;
                     nbits += 8;
                 }
                 out.push((acc & mask) as i32 + lo);
@@ -86,6 +104,7 @@ pub fn unpack(bytes: &[u8], n: usize, bits: u8, lo: i32, out: &mut Vec<i32>) {
             }
         }
     }
+    Ok(())
 }
 
 /// Allocating wrappers (tests / non-hot-path callers).
@@ -95,10 +114,10 @@ pub fn pack_vec(codes: &[i32], bits: u8, lo: i32) -> Vec<u8> {
     out
 }
 
-pub fn unpack_vec(bytes: &[u8], n: usize, bits: u8, lo: i32) -> Vec<i32> {
+pub fn unpack_vec(bytes: &[u8], n: usize, bits: u8, lo: i32) -> Result<Vec<i32>> {
     let mut out = Vec::new();
-    unpack(bytes, n, bits, lo, &mut out);
-    out
+    unpack(bytes, n, bits, lo, &mut out)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -111,7 +130,7 @@ mod tests {
         let codes: Vec<i32> = (0..n).map(|_| lo + rng.usize(0, span) as i32).collect();
         let bytes = pack_vec(&codes, bits, lo);
         assert_eq!(bytes.len(), packed_len(n, bits));
-        let back = unpack_vec(&bytes, n, bits, lo);
+        let back = unpack_vec(&bytes, n, bits, lo).unwrap();
         assert_eq!(back, codes, "bits={bits} lo={lo} n={n}");
     }
 
@@ -152,7 +171,7 @@ mod tests {
         // stream bits: 000001 | 000010 | 000011 | 000100 (LSB-first)
         // byte0 = 10_000001, byte1 = 0011_0000, byte2 = 000100_00
         assert_eq!(bytes, vec![0b1000_0001, 0b0011_0000, 0b0001_0000]);
-        assert_eq!(unpack_vec(&bytes, 4, 6, 0), codes);
+        assert_eq!(unpack_vec(&bytes, 4, 6, 0).unwrap(), codes);
     }
 
     #[test]
@@ -161,7 +180,35 @@ mod tests {
             let lo = -(1i32 << (bits - 1));
             let hi = (1i32 << (bits - 1)) - 1;
             let codes = vec![lo, hi, lo, hi, 0];
-            assert_eq!(unpack_vec(&pack_vec(&codes, bits, lo), 5, bits, lo), codes);
+            assert_eq!(unpack_vec(&pack_vec(&codes, bits, lo), 5, bits, lo).unwrap(), codes);
         }
+    }
+
+    #[test]
+    fn truncated_subbyte_bitstream_is_error() {
+        // Used to panic via expect("bitstream truncated").
+        let codes: Vec<i32> = (0..10).map(|i| i % 4).collect();
+        for bits in [2u8, 4, 6] {
+            let bytes = pack_vec(&codes, bits, 0);
+            let mut out = Vec::new();
+            let err = unpack(&bytes[..bytes.len() - 1], 10, bits, 0, &mut out).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "bits={bits}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn short_byte_aligned_payloads_are_errors_not_short_outputs() {
+        let codes: Vec<i32> = (0..10).collect();
+        // 8-bit: 5 of 10 bytes used to silently yield 5 codes.
+        let bytes = pack_vec(&codes, 8, 0);
+        let mut out = Vec::new();
+        assert!(unpack(&bytes[..5], 10, 8, 0, &mut out).is_err());
+        // 16-bit: 6 of 20 bytes used to silently yield 3 codes.
+        let bytes = pack_vec(&codes, 16, 0);
+        assert!(unpack(&bytes[..6], 10, 16, 0, &mut out).is_err());
+        // Exact length decodes all n codes.
+        unpack(&bytes, 10, 16, 0, &mut out).unwrap();
+        assert_eq!(out.len(), 10);
+        assert_eq!(out, codes);
     }
 }

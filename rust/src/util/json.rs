@@ -101,7 +101,13 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no Infinity/NaN; `{n}` would emit "inf" and
+                    // corrupt the document (e.g. a WindowMonitor measuring
+                    // an unconstrained link reports infinite bandwidth).
+                    // Emit null so the output always re-parses.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -384,6 +390,24 @@ mod tests {
         assert!(v.at("missing").is_err());
         assert!(v.at("a").unwrap().as_str().is_err());
         assert_eq!(v.at("a").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        let v = Value::Arr(vec![
+            Value::Num(f64::INFINITY),
+            Value::Num(f64::NEG_INFINITY),
+            Value::Num(f64::NAN),
+            Value::Num(1.5),
+        ]);
+        let s = v.to_string_pretty();
+        assert!(!s.contains("inf") && !s.contains("NaN"), "{s}");
+        let back = Value::parse(&s).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr[0], Value::Null);
+        assert_eq!(arr[1], Value::Null);
+        assert_eq!(arr[2], Value::Null);
+        assert_eq!(arr[3], Value::Num(1.5));
     }
 
     #[test]

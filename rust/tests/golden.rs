@@ -3,16 +3,26 @@
 //! artifacts/golden.json by `make artifacts`.
 //!
 //! Run after `make artifacts` (the Makefile's `test` target does).
+//! Without the artifacts these tests SKIP with a notice; set
+//! `QUANTPIPE_REQUIRE_ARTIFACTS=1` to make a missing golden.json fail.
 
 use quantpipe::quant::{aciq, calibrate, ds_aciq, uniform, Method, QuantParams};
 use quantpipe::runtime::Manifest;
 use quantpipe::util::json::Value;
 
-fn load_golden() -> Value {
+fn load_golden() -> Option<Value> {
     let dir = Manifest::default_dir();
-    let text = std::fs::read_to_string(dir.join("golden.json"))
-        .expect("artifacts/golden.json missing — run `make artifacts` first");
-    Value::parse(&text).expect("golden.json parses")
+    let text = match std::fs::read_to_string(dir.join("golden.json")) {
+        Ok(t) => t,
+        Err(e) if std::env::var_os("QUANTPIPE_REQUIRE_ARTIFACTS").is_some() => {
+            panic!("artifacts/golden.json required but unavailable: {e}")
+        }
+        Err(e) => {
+            eprintln!("SKIP (artifacts/golden.json missing — run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    Some(Value::parse(&text).expect("golden.json parses"))
 }
 
 fn f32s(v: &Value) -> Vec<f32> {
@@ -34,7 +44,7 @@ fn f32s(v: &Value) -> Vec<f32> {
 /// boundary slice reconstructed from calib.bin.
 #[test]
 fn aciq_ratio_matches_python() {
-    let g = load_golden();
+    let Some(g) = load_golden() else { return };
     for case in g.at("cases").unwrap().as_arr().unwrap() {
         let q = case.at("q").unwrap().as_u64().unwrap() as u8;
         let py_ratio = case.at("aciq_ratio").unwrap().as_f64().unwrap();
@@ -52,9 +62,12 @@ fn aciq_ratio_matches_python() {
 
 #[test]
 fn boundary_slice_statistics_match() {
-    let g = load_golden();
+    let Some(g) = load_golden() else { return };
     let dir = Manifest::default_dir();
-    let (manifest, dir) = Manifest::load(&dir).unwrap();
+    let Ok((manifest, dir)) = Manifest::load(&dir) else {
+        eprintln!("SKIP (artifacts manifest missing)");
+        return;
+    };
     let calib = quantpipe::data::load_calib(dir.join(&manifest.calib.file)).unwrap();
     let slice: Vec<f32> = calib[0].data.iter().take(4096).copied().collect();
 
@@ -107,7 +120,7 @@ fn boundary_slice_statistics_match() {
 
 #[test]
 fn exact_code_vectors_match() {
-    let g = load_golden();
+    let Some(g) = load_golden() else { return };
     let x = f32s(g.at("x_small").unwrap());
     for case in g.at("exact").unwrap().as_arr().unwrap() {
         let q = case.at("q").unwrap().as_u64().unwrap() as u8;

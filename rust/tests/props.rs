@@ -43,8 +43,15 @@ fn prop_pack_unpack_identity() {
         let codes: Vec<i32> = (0..n).map(|_| lo + rng.usize(0, span) as i32).collect();
         let packed = pack::pack_vec(&codes, bits, lo);
         prop_assert!(packed.len() == pack::packed_len(n, bits), "len");
-        let back = pack::unpack_vec(&packed, n, bits, lo);
+        let back = pack::unpack_vec(&packed, n, bits, lo).unwrap();
         prop_assert!(back == codes, "roundtrip bits={bits} n={n}");
+        // Any shorter payload must be a length error, never a short output.
+        if !packed.is_empty() {
+            prop_assert!(
+                pack::unpack_vec(&packed[..packed.len() - 1], n, bits, lo).is_err(),
+                "truncated payload accepted bits={bits} n={n}"
+            );
+        }
         Ok(())
     });
 }

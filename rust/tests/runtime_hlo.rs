@@ -6,7 +6,10 @@
 //! * eval-set accuracy through the runtime matches the manifest's
 //!   recorded fp32 top-1.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`. Without the artifacts (or the PJRT CPU
+//! plugin) these tests SKIP with a notice instead of failing the suite;
+//! set `QUANTPIPE_REQUIRE_ARTIFACTS=1` (CI with artifacts) to turn a
+//! missing setup back into a hard failure.
 
 use quantpipe::data::EvalSet;
 use quantpipe::quant::codec::{NativeBackend, QuantBackend};
@@ -15,16 +18,30 @@ use quantpipe::runtime::{Engine, HloQuantBackend, Manifest};
 use quantpipe::tensor::Tensor;
 use quantpipe::util::rng::Rng;
 
-fn setup() -> (Manifest, std::path::PathBuf, Engine) {
-    let (manifest, dir) = Manifest::load(Manifest::default_dir())
-        .expect("run `make artifacts` before integration tests");
-    let engine = Engine::cpu().expect("PJRT CPU client");
-    (manifest, dir, engine)
+fn setup() -> Option<(Manifest, std::path::PathBuf, Engine)> {
+    let required = std::env::var_os("QUANTPIPE_REQUIRE_ARTIFACTS").is_some();
+    let (manifest, dir) = match Manifest::load(Manifest::default_dir()) {
+        Ok(v) => v,
+        Err(e) if required => panic!("artifacts required but unavailable: {e:#}"),
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing — run `make artifacts`): {e:#}");
+            return None;
+        }
+    };
+    let engine = match Engine::cpu() {
+        Ok(v) => v,
+        Err(e) if required => panic!("PJRT CPU client required but unavailable: {e:#}"),
+        Err(e) => {
+            eprintln!("SKIP (PJRT CPU client unavailable): {e:#}");
+            return None;
+        }
+    };
+    Some((manifest, dir, engine))
 }
 
 #[test]
 fn staged_equals_full_model() {
-    let (manifest, dir, engine) = setup();
+    let Some((manifest, dir, engine)) = setup() else { return };
     let eval = EvalSet::load(dir.join(&manifest.eval.file)).unwrap();
     let s = manifest.microbatch;
     let img = eval.microbatch(0, s);
@@ -53,7 +70,7 @@ fn staged_equals_full_model() {
 
 #[test]
 fn hlo_quant_kernel_matches_native() {
-    let (manifest, dir, engine) = setup();
+    let Some((manifest, dir, engine)) = setup() else { return };
     let n = manifest.quant.rows * manifest.quant.cols;
     let mut hlo = HloQuantBackend::load(&engine, &dir, &manifest).unwrap();
     let mut native = NativeBackend;
@@ -95,7 +112,7 @@ fn hlo_quant_kernel_matches_native() {
 
 #[test]
 fn runtime_accuracy_matches_manifest() {
-    let (manifest, dir, engine) = setup();
+    let Some((manifest, dir, engine)) = setup() else { return };
     let eval = EvalSet::load(dir.join(&manifest.eval.file)).unwrap();
     let s = manifest.microbatch;
     let full = engine.load_hlo(dir.join(&manifest.full_model.file)).unwrap();
@@ -123,7 +140,7 @@ fn runtime_accuracy_matches_manifest() {
 
 #[test]
 fn executable_rejects_wrong_shape() {
-    let (manifest, dir, engine) = setup();
+    let Some((manifest, dir, engine)) = setup() else { return };
     let exe = engine.load_hlo(dir.join(&manifest.stages[0].file)).unwrap();
     let bad = Tensor::zeros(&[1, 2, 3]);
     assert!(exe.run_f32(&[&bad], &manifest.stages[0].out_shape).is_err());

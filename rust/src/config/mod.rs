@@ -104,6 +104,19 @@ pub struct TransportSection {
     pub connect_retry_ms: u64,
     /// Total connect budget, ms.
     pub connect_timeout_ms: u64,
+    /// Fault-tolerant links (`net::resilient`): survive transient
+    /// connection drops via reconnect + sequenced replay, with an
+    /// explicit FIN/FIN_ACK drain at shutdown. Both ends of every link
+    /// must agree on this flag.
+    pub resilient: bool,
+    /// Sent-but-unacked frames kept for replay per link.
+    pub replay_capacity: usize,
+    /// Budget to get a failed link back before reporting a hard error, ms.
+    pub reconnect_timeout_ms: u64,
+    /// First reconnect backoff delay, ms (doubles per attempt, jittered).
+    pub backoff_base_ms: u64,
+    /// Reconnect backoff cap, ms.
+    pub backoff_max_ms: u64,
 }
 
 impl TransportSection {
@@ -113,6 +126,22 @@ impl TransportSection {
 
     pub fn connect_timeout(&self) -> Duration {
         Duration::from_millis(self.connect_timeout_ms)
+    }
+
+    /// Resilient-layer tuning derived from this section. The first
+    /// connection of a session uses the startup connect budget
+    /// (`connect_timeout_ms` — peers launch in any order); only later
+    /// re-establishments use the tighter `reconnect_timeout_ms`.
+    pub fn resilience_config(&self) -> crate::net::resilient::ResilienceConfig {
+        let d = crate::net::resilient::ResilienceConfig::default();
+        crate::net::resilient::ResilienceConfig {
+            replay_capacity: self.replay_capacity.max(1),
+            reconnect_timeout: Duration::from_millis(self.reconnect_timeout_ms.max(1)),
+            initial_timeout: self.connect_timeout(),
+            backoff_base: Duration::from_millis(self.backoff_base_ms.max(1)),
+            backoff_max: Duration::from_millis(self.backoff_max_ms.max(1)),
+            ..d
+        }
     }
 }
 
@@ -158,6 +187,11 @@ impl Default for Config {
                 sink_addr: "127.0.0.1:7710".into(),
                 connect_retry_ms: 100,
                 connect_timeout_ms: 10_000,
+                resilient: false,
+                replay_capacity: 128,
+                reconnect_timeout_ms: 10_000,
+                backoff_base_ms: 10,
+                backoff_max_ms: 1_000,
             },
         }
     }
@@ -240,6 +274,11 @@ impl Config {
             if let Some(x) = t.get("sink_addr") { cfg.transport.sink_addr = x.as_str()?.into(); }
             if let Some(x) = t.get("connect_retry_ms") { cfg.transport.connect_retry_ms = x.as_u64()?; }
             if let Some(x) = t.get("connect_timeout_ms") { cfg.transport.connect_timeout_ms = x.as_u64()?; }
+            if let Some(x) = t.get("resilient") { cfg.transport.resilient = x.as_bool()?; }
+            if let Some(x) = t.get("replay_capacity") { cfg.transport.replay_capacity = x.as_usize()?; }
+            if let Some(x) = t.get("reconnect_timeout_ms") { cfg.transport.reconnect_timeout_ms = x.as_u64()?; }
+            if let Some(x) = t.get("backoff_base_ms") { cfg.transport.backoff_base_ms = x.as_u64()?; }
+            if let Some(x) = t.get("backoff_max_ms") { cfg.transport.backoff_max_ms = x.as_u64()?; }
         }
         Ok(cfg)
     }
@@ -366,5 +405,31 @@ mod tests {
         assert_eq!(c.transport.connect_retry(), Duration::from_millis(50));
         assert_eq!(c.transport.connect_timeout(), Duration::from_millis(3000));
         assert!(Config::parse(r#"{"transport": {"mode": "carrier-pigeon"}}"#).is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_parse_and_default() {
+        let c = Config::parse("{}").unwrap();
+        assert!(!c.transport.resilient, "resilience is opt-in");
+        assert_eq!(c.transport.replay_capacity, 128);
+        let text = r#"{
+            "transport": {
+                "mode": "tcp",
+                "resilient": true,
+                "replay_capacity": 32,
+                "reconnect_timeout_ms": 2500,
+                "backoff_base_ms": 5,
+                "backoff_max_ms": 250
+            }
+        }"#;
+        let c = Config::parse(text).unwrap();
+        assert!(c.transport.resilient);
+        let r = c.transport.resilience_config();
+        assert_eq!(r.replay_capacity, 32);
+        assert_eq!(r.reconnect_timeout, Duration::from_millis(2500));
+        // First connect rides the startup budget, not the reconnect one.
+        assert_eq!(r.initial_timeout, Duration::from_millis(10_000));
+        assert_eq!(r.backoff_base, Duration::from_millis(5));
+        assert_eq!(r.backoff_max, Duration::from_millis(250));
     }
 }

@@ -22,7 +22,7 @@
 //! | module | paper role |
 //! |---|---|
 //! | [`quant`] | §3 PTQ/ACIQ/DS-ACIQ math, bit packing, tensor codec |
-//! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets, traces, wire framing |
+//! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets, the fault-tolerant link layer (`net::resilient`: reconnect + sequenced replay + FIN/FIN_ACK drain), traces, wire framing |
 //! | [`monitor`] | §3 runtime monitor (windowed bandwidth / output-rate) |
 //! | [`adapt`] | §3 adaptive PDA module (Eq. 2 bitwidth policy) |
 //! | [`pipeline`] | transport-agnostic pipeline driver (stage threads, scheduling, backpressure) + multi-process worker/coordinator endpoints |
@@ -53,6 +53,14 @@
 //! `transport` section (see `configs/tcp_demo.json`) or
 //! `--listen`/`--connect` flags; `--mock`/`--synthetic` run the topology
 //! without AOT artifacts.
+//!
+//! With `transport.resilient` (or `--resilient true`) every stage
+//! boundary survives transient link failures: the connecting side
+//! redials with backoff + jitter, a `HELLO{next_expected_seq}` handshake
+//! resyncs the two ends, the sender replays the unacked tail from its
+//! replay buffer, and shutdown is an explicit FIN/FIN_ACK drain. The
+//! reconnect stall feeds the `WindowMonitor` as busy time, so the
+//! controller sheds bits during an outage instead of the run aborting.
 
 pub mod adapt;
 pub mod benchkit;

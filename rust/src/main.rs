@@ -23,9 +23,11 @@
 use quantpipe::adapt::AdaptConfig;
 use quantpipe::config::Config;
 use quantpipe::data::EvalSet;
+use quantpipe::metrics::ResilienceStats;
 use quantpipe::net::link::SimLink;
+use quantpipe::net::resilient::{ReconnectingRx, ReconnectingTx};
 use quantpipe::net::tcp;
-use quantpipe::net::transport::LinkSpec;
+use quantpipe::net::transport::{FrameRx, FrameTx, LinkSpec};
 use quantpipe::partition::CostModel;
 use quantpipe::pipeline::{
     self, hlo_stage_factory, mock_stage_factory, run_coordinator, run_worker, LinkQuant,
@@ -48,9 +50,9 @@ USAGE:
   quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2] [--artifacts DIR]
   quantpipe worker     --stage K [--config F] [--listen ADDR] [--connect ADDR]
                        [--stages N] [--mock SxD] [--fixed-bits B] [--target-rate R]
-                       [--artifacts DIR]
+                       [--resilient BOOL] [--artifacts DIR]
   quantpipe coordinate [--config F] [--microbatches N] [--synthetic CxD]
-                       [--artifacts DIR]
+                       [--resilient BOOL] [--artifacts DIR]
   quantpipe partition  <profile.json> [--devices N]
   quantpipe inspect    [--artifacts DIR]
 
@@ -58,6 +60,9 @@ Multi-process mode: start `coordinate` plus one `worker` per stage (any
 order; connects retry). Worker k listens on transport.stage_addrs[k] and
 connects to stage k+1 (the last worker connects to transport.sink_addr).
 `--mock 64x16` / `--synthetic 256x16` run without AOT artifacts.
+`--resilient true` (or transport.resilient) survives transient link
+failures: reconnect + sequenced replay + FIN/FIN_ACK drain; every
+process in the chain must agree on the flag.
 ";
 
 /// Tiny flag parser: --key value pairs + positionals.
@@ -154,7 +159,18 @@ fn load_config(args: &Args) -> quantpipe::Result<Config> {
     if let Some(a) = args.get("artifacts") {
         cfg.run.artifacts = a.to_string();
     }
+    if let Some(r) = args.get("resilient") {
+        cfg.transport.resilient = parse_bool(r)?;
+    }
     Ok(cfg)
+}
+
+fn parse_bool(s: &str) -> quantpipe::Result<bool> {
+    match s {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => anyhow::bail!("expected a boolean (true/false), got {other:?}"),
+    }
 }
 
 fn parse_method(s: &str) -> quantpipe::Result<Method> {
@@ -331,14 +347,36 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("worker {stage} needs --connect or a transport address for stage {}", stage + 1))?;
 
     let listener = TcpListener::bind(&listen)?;
-    eprintln!("[worker {stage}] listening on {listen}, downstream {connect} (last={is_last})");
-    let (_up_tx, up_rx) = tcp::accept_one(&listener)?;
-    let (down_tx, _down_rx) = tcp::connect_retry(
-        &connect,
-        cfg.transport.connect_timeout(),
-        cfg.transport.connect_retry(),
-    )?;
-    eprintln!("[worker {stage}] chain connected");
+    eprintln!(
+        "[worker {stage}] listening on {listen}, downstream {connect} (last={is_last}, resilient={})",
+        cfg.transport.resilient
+    );
+    let (up_rx, down_tx): (Box<dyn FrameRx>, Box<dyn FrameTx>) = if cfg.transport.resilient {
+        // Fault-tolerant endpoints: the listener is kept so a failed
+        // upstream can come back; the downstream dial redials with
+        // backoff. Connections are established lazily on first use.
+        let rcfg = cfg.transport.resilience_config();
+        let up = ReconnectingRx::accept_on(
+            Arc::new(listener),
+            rcfg.clone(),
+            Arc::new(ResilienceStats::default()),
+        );
+        let down = ReconnectingTx::connect_to(
+            connect.clone(),
+            rcfg,
+            Arc::new(ResilienceStats::default()),
+        );
+        (Box::new(up), Box::new(down))
+    } else {
+        let (_up_tx, up_rx) = tcp::accept_one(&listener)?;
+        let (down_tx, _down_rx) = tcp::connect_retry(
+            &connect,
+            cfg.transport.connect_timeout(),
+            cfg.transport.connect_retry(),
+        )?;
+        eprintln!("[worker {stage}] chain connected");
+        (Box::new(up_rx), Box::new(down_tx))
+    };
 
     let quant = LinkQuant {
         method: cfg.quant.method,
@@ -361,7 +399,7 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
         quantize_output: !is_last,
         inflight: cfg.pipeline.inflight,
     };
-    let report = run_worker(factory, wcfg, Box::new(up_rx), Box::new(down_tx))?;
+    let report = run_worker(factory, wcfg, up_rx, down_tx)?;
 
     println!("== worker {stage} done ==");
     println!("frames            {}", report.frames);
@@ -369,6 +407,13 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
     println!("out mean bytes    {:.0} B/frame", report.out_mean_bytes);
     if !is_last {
         println!("bits sequence     {:?}", report.timeline.bits_sequence(stage));
+    }
+    if cfg.transport.resilient {
+        let r = report.resilience;
+        println!(
+            "resilience        {} reconnects / {} re-accepts, {} replayed, {} deduped, {:.2}s stalled",
+            r.reconnects, r.reaccepts, r.replayed, r.deduped, r.stall_secs
+        );
     }
     for e in &report.errors {
         eprintln!("  link failure: {e}");
@@ -397,21 +442,40 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
         .stage_addrs
         .first()
         .ok_or_else(|| anyhow::anyhow!("transport.stage_addrs must name stage 0"))?;
-    eprintln!("[coordinator] feeding {first}, sink on {}", cfg.transport.sink_addr);
-    let (feed_tx, _feed_rx) = tcp::connect_retry(
-        first,
-        cfg.transport.connect_timeout(),
-        cfg.transport.connect_retry(),
-    )?;
-    let (_ret_tx, ret_rx) = tcp::accept_one(&listener)?;
-    eprintln!("[coordinator] chain connected");
+    eprintln!(
+        "[coordinator] feeding {first}, sink on {} (resilient={})",
+        cfg.transport.sink_addr, cfg.transport.resilient
+    );
+    let (feed_tx, ret_rx): (Box<dyn FrameTx>, Box<dyn FrameRx>) = if cfg.transport.resilient {
+        let rcfg = cfg.transport.resilience_config();
+        let feed = ReconnectingTx::connect_to(
+            first.clone(),
+            rcfg.clone(),
+            Arc::new(ResilienceStats::default()),
+        );
+        let ret = ReconnectingRx::accept_on(
+            Arc::new(listener),
+            rcfg,
+            Arc::new(ResilienceStats::default()),
+        );
+        (Box::new(feed), Box::new(ret))
+    } else {
+        let (feed_tx, _feed_rx) = tcp::connect_retry(
+            first,
+            cfg.transport.connect_timeout(),
+            cfg.transport.connect_retry(),
+        )?;
+        let (_ret_tx, ret_rx) = tcp::accept_one(&listener)?;
+        eprintln!("[coordinator] chain connected");
+        (Box::new(feed_tx), Box::new(ret_rx))
+    };
 
     let workload = if cfg.run.microbatches == 0 {
         Workload::one_pass(eval, microbatch)
     } else {
         Workload::repeat(eval, microbatch, cfg.run.microbatches)
     };
-    let report = run_coordinator(workload, Box::new(feed_tx), Box::new(ret_rx))?;
+    let report = run_coordinator(workload, feed_tx, ret_rx)?;
 
     println!("== QuantPipe coordinate (tcp) ==");
     println!("microbatches      {}", report.microbatches);
@@ -424,6 +488,13 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
         report.latency.quantile(0.5),
         report.latency.quantile(0.99)
     );
+    if cfg.transport.resilient {
+        let r = report.resilience;
+        println!(
+            "resilience        {} reconnects / {} re-accepts, {} replayed, {} deduped, {:.2}s stalled",
+            r.reconnects, r.reaccepts, r.replayed, r.deduped, r.stall_secs
+        );
+    }
     for e in &report.errors {
         eprintln!("  link failure: {e}");
     }

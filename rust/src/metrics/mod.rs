@@ -1,7 +1,89 @@
-//! Lightweight metrics: throughput meters, latency histograms, and the
-//! timeline recorder behind the Fig 5 reproduction.
+//! Lightweight metrics: throughput meters, latency histograms, the
+//! timeline recorder behind the Fig 5 reproduction, and the resilience
+//! counters fed by the fault-tolerant link layer
+//! ([`crate::net::resilient`]).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Live counters a resilient link endpoint updates while it runs. Shared
+/// (`Arc`) between the endpoint — which may be moved into a stage/sender
+/// thread — and whoever assembles the run report.
+#[derive(Debug, Default)]
+pub struct ResilienceStats {
+    /// Successful redials by the connecting side after a link failure
+    /// (the first connect of a session is not a reconnect).
+    pub reconnects: AtomicU64,
+    /// Successful re-accepts by the listening side after a link failure.
+    /// Counted apart from `reconnects` so one outage on a link whose two
+    /// ends share a stats block (loopback) still reads as one reconnect.
+    pub reaccepts: AtomicU64,
+    /// Frames re-sent from the replay buffer after a reconnect handshake.
+    pub replayed: AtomicU64,
+    /// Duplicate frames (seq already delivered) discarded by the receiver.
+    pub deduped: AtomicU64,
+    /// Microseconds the *dialing* side spent re-establishing failed
+    /// connections — the stall the adaptive controller sees as collapsed
+    /// bandwidth (the acceptor's overlapping wait is not double-charged).
+    pub stall_us: AtomicU64,
+}
+
+impl ResilienceStats {
+    pub fn snapshot(&self) -> ResilienceSummary {
+        ResilienceSummary {
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            reaccepts: self.reaccepts.load(Ordering::Relaxed),
+            replayed: self.replayed.load(Ordering::Relaxed),
+            deduped: self.deduped.load(Ordering::Relaxed),
+            stall_secs: self.stall_us.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+/// Aggregated resilience counters for a finished run (all links, both
+/// endpoint roles).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResilienceSummary {
+    pub reconnects: u64,
+    pub reaccepts: u64,
+    pub replayed: u64,
+    pub deduped: u64,
+    pub stall_secs: f64,
+}
+
+impl ResilienceSummary {
+    pub fn merge(&mut self, other: &ResilienceSummary) {
+        self.reconnects += other.reconnects;
+        self.reaccepts += other.reaccepts;
+        self.replayed += other.replayed;
+        self.deduped += other.deduped;
+        self.stall_secs += other.stall_secs;
+    }
+
+    /// Aggregate over every endpoint's live counters.
+    pub fn collect<'a>(stats: impl IntoIterator<Item = &'a Arc<ResilienceStats>>) -> Self {
+        let mut out = ResilienceSummary::default();
+        for s in stats {
+            out.merge(&s.snapshot());
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("reconnects".into(), Value::Num(self.reconnects as f64));
+        m.insert("reaccepts".into(), Value::Num(self.reaccepts as f64));
+        m.insert("replayed".into(), Value::Num(self.replayed as f64));
+        m.insert("deduped".into(), Value::Num(self.deduped as f64));
+        m.insert(
+            "stall_secs".into(),
+            if self.stall_secs.is_finite() { Value::Num(self.stall_secs) } else { Value::Null },
+        );
+        Value::Obj(m)
+    }
+}
 
 /// Exponential-bucket latency histogram (1 µs … ~64 s).
 #[derive(Debug, Clone)]
@@ -88,6 +170,16 @@ pub struct Timeline {
 impl Timeline {
     pub fn push(&mut self, p: TimelinePoint) {
         self.points.push(p);
+    }
+
+    /// Take the recorded points out of a shared timeline, regardless of
+    /// how many `Arc` clones are still alive or whether a panicked writer
+    /// poisoned the mutex. `Arc::try_unwrap(..).unwrap_or_default()` —
+    /// the obvious spelling — silently returns an *empty* timeline
+    /// whenever a thread still holds a clone, losing the whole Fig 5
+    /// record; this never does.
+    pub fn take_shared(shared: &Arc<Mutex<Timeline>>) -> Timeline {
+        std::mem::take(&mut *crate::util::sync::lock(shared))
     }
 
     /// CSV dump (t, stage, bandwidth_mbps, rate, bits, util).
@@ -228,6 +320,56 @@ mod tests {
         assert!(arr[0].get("bandwidth_bps").is_none(), "{s}");
         assert_eq!(arr[1].at("bandwidth_bps").unwrap().as_f64().unwrap(), 5e6);
         assert_eq!(arr[1].at("bits").unwrap().as_u64().unwrap(), 8);
+    }
+
+    #[test]
+    fn take_shared_survives_leaked_arc_and_poison() {
+        // Regression: a stage thread that leaks its Arc (or dies holding
+        // the lock) must not erase the timeline.
+        let shared = Arc::new(Mutex::new(Timeline::default()));
+        shared.lock().unwrap().push(TimelinePoint {
+            t: 1.0,
+            stage: 0,
+            bandwidth_bps: 1e6,
+            rate: 10.0,
+            bits: 8,
+            util: 0.5,
+        });
+        let leaked = shared.clone(); // a worker thread still holds this
+        let got = Timeline::take_shared(&shared);
+        assert_eq!(got.points.len(), 1, "points lost to a leaked Arc");
+        drop(leaked);
+
+        // Poisoned by a panicking writer: still recoverable.
+        let shared = Arc::new(Mutex::new(Timeline::default()));
+        let s2 = shared.clone();
+        let _ = std::thread::spawn(move || {
+            let mut g = s2.lock().unwrap();
+            g.push(TimelinePoint { t: 2.0, stage: 1, bandwidth_bps: 1.0, rate: 1.0, bits: 2, util: 0.0 });
+            panic!("poison");
+        })
+        .join();
+        assert_eq!(Timeline::take_shared(&shared).points.len(), 1);
+    }
+
+    #[test]
+    fn resilience_summary_merges_and_serializes() {
+        let a = Arc::new(ResilienceStats::default());
+        a.reconnects.store(2, Ordering::Relaxed);
+        a.replayed.store(5, Ordering::Relaxed);
+        a.stall_us.store(1_500_000, Ordering::Relaxed);
+        let b = Arc::new(ResilienceStats::default());
+        b.reconnects.store(1, Ordering::Relaxed);
+        b.deduped.store(3, Ordering::Relaxed);
+        let sum = ResilienceSummary::collect([&a, &b]);
+        assert_eq!(sum.reconnects, 3);
+        assert_eq!(sum.replayed, 5);
+        assert_eq!(sum.deduped, 3);
+        assert!((sum.stall_secs - 1.5).abs() < 1e-9);
+        let json = sum.to_json().to_string_pretty();
+        let back = crate::util::json::Value::parse(&json).unwrap();
+        assert_eq!(back.at("reconnects").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(back.at("deduped").unwrap().as_u64().unwrap(), 3);
     }
 
     #[test]

@@ -15,9 +15,15 @@
 //!   TCP sockets ([`tcp`]) behind one pair of traits, selected per stage
 //!   boundary by [`transport::LinkSpec`]. On TCP the bandwidth signal is
 //!   measured write-stall time, not simulation.
+//! * [`resilient`] — the fault-tolerant link layer over [`tcp`]:
+//!   reconnect with backoff+jitter, sequenced replay from a bounded
+//!   buffer, receiver-side dedup, and an explicit FIN/FIN_ACK drain so a
+//!   transient link failure stalls the pipeline (feeding the adaptive
+//!   controller) instead of killing it.
 
 pub mod frame;
 pub mod link;
+pub mod resilient;
 pub mod tcp;
 pub mod trace;
 pub mod transport;

@@ -52,6 +52,68 @@ pub fn connect(addr: &str) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     framed(TcpStream::connect(addr)?)
 }
 
+/// Exponential backoff with deterministic jitter, shared by startup
+/// connect-retry and the resilient layer's mid-run reconnects. Delays
+/// double from `base` up to `max`; each is scaled by a factor drawn
+/// uniformly from `[1 - jitter, 1]` so a fleet of peers retrying the same
+/// dead link doesn't thundering-herd it back up in lockstep.
+#[derive(Debug)]
+pub struct Backoff {
+    next: Duration,
+    base: Duration,
+    max: Duration,
+    jitter: f64,
+    rng: crate::util::rng::Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, max: Duration, jitter: f64, seed: u64) -> Self {
+        let base = base.max(Duration::from_millis(1));
+        Backoff {
+            next: base,
+            base,
+            max: max.max(base),
+            jitter: jitter.clamp(0.0, 1.0),
+            rng: crate::util::rng::Rng::seed(seed),
+        }
+    }
+
+    /// Fixed-interval "backoff" (the startup connect-retry behaviour).
+    pub fn constant(interval: Duration) -> Self {
+        Backoff::new(interval, interval, 0.0, 0)
+    }
+
+    /// Next sleep, advancing the schedule.
+    pub fn next_delay(&mut self) -> Duration {
+        let d = self.next;
+        self.next = (self.next * 2).min(self.max);
+        let scale = 1.0 - self.jitter * self.rng.f64();
+        Duration::from_secs_f64(d.as_secs_f64() * scale).max(Duration::from_millis(1))
+    }
+
+    /// Back to the initial delay (call after a successful attempt).
+    pub fn reset(&mut self) {
+        self.next = self.base;
+    }
+}
+
+/// Dial `addr` until it succeeds or `deadline` passes, sleeping per the
+/// backoff schedule between attempts. The raw-stream primitive under both
+/// [`connect_retry`] and the resilient layer's reconnect loop.
+pub fn connect_until(addr: &str, deadline: Instant, backoff: &mut Backoff) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("connect to {addr} timed out: {e}");
+                }
+                std::thread::sleep(backoff.next_delay());
+            }
+        }
+    }
+}
+
 /// Connect with retries until `timeout` elapses (multi-process startup is
 /// order-independent: workers and the coordinator may launch in any order).
 pub fn connect_retry(
@@ -60,17 +122,10 @@ pub fn connect_retry(
     interval: Duration,
 ) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     let deadline = Instant::now() + timeout;
-    loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => return framed(s),
-            Err(e) => {
-                if Instant::now() >= deadline {
-                    anyhow::bail!("connect to {addr} timed out after {timeout:?}: {e}");
-                }
-                std::thread::sleep(interval.max(Duration::from_millis(1)));
-            }
-        }
-    }
+    let mut backoff = Backoff::constant(interval);
+    let stream = connect_until(addr, deadline, &mut backoff)
+        .map_err(|e| anyhow::anyhow!("{e} (gave up after {timeout:?})"))?;
+    framed(stream)
 }
 
 /// Accept one upstream connection.
@@ -329,6 +384,32 @@ mod tests {
         assert_eq!(b_rx.recv().unwrap().unwrap().seq, 3);
         b_tx.send(frame(4, 32)).unwrap();
         assert_eq!(a_rx.recv().unwrap().unwrap().seq, 4);
+    }
+
+    #[test]
+    fn backoff_doubles_caps_and_jitters_down_only() {
+        let mut b = Backoff::new(
+            Duration::from_millis(10),
+            Duration::from_millis(80),
+            0.5,
+            7,
+        );
+        let mut expected = 10u64;
+        for _ in 0..6 {
+            let d = b.next_delay().as_secs_f64();
+            let nominal = expected as f64 / 1e3;
+            assert!(d <= nominal + 1e-9, "jitter must never extend the delay: {d} > {nominal}");
+            assert!(d >= nominal * 0.5 - 1e-9, "jitter floor violated: {d} < {}", nominal * 0.5);
+            expected = (expected * 2).min(80);
+        }
+        b.reset();
+        assert!(b.next_delay() <= Duration::from_millis(10));
+        // Deterministic per seed.
+        let seq = |seed| {
+            let mut b = Backoff::new(Duration::from_millis(5), Duration::from_millis(40), 0.9, seed);
+            (0..5).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(3), seq(3));
     }
 
     #[test]

@@ -22,7 +22,9 @@
 
 use super::frame::Frame;
 use super::link::SimLink;
+use super::resilient::{resilient_loopback_pair, ReconnectingRx, ReconnectingTx, ResilienceConfig};
 use super::tcp::{TcpFrameReceiver, TcpFrameSender};
+use crate::metrics::ResilienceStats;
 use crate::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -32,12 +34,23 @@ use std::time::Duration;
 ///
 /// `send` returns the seconds the underlying link was busy shipping the
 /// frame — serialization time on a shaped [`SimLink`], write-stall time on
-/// a real socket. That number feeds the `WindowMonitor`, so "measured
-/// output bandwidth" means the same thing on either transport.
+/// a real socket, reconnect stall on a resilient link. That number feeds
+/// the `WindowMonitor`, so "measured output bandwidth" means the same
+/// thing on every transport.
 pub trait FrameTx: Send {
     fn send(&mut self, frame: Frame) -> Result<f64>;
     /// Transport name for logs/reports.
     fn kind(&self) -> &'static str;
+    /// Negotiate a clean end of stream after the last frame. Resilient
+    /// links run their FIN/FIN_ACK drain here so the peer can tell
+    /// shutdown from failure; other transports close on drop.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+    /// Live reconnect/replay counters, when the transport has them.
+    fn resilience(&self) -> Option<Arc<ResilienceStats>> {
+        None
+    }
 }
 
 /// Blocking receiver half of a stage-to-stage transport.
@@ -49,6 +62,10 @@ pub trait FrameRx: Send {
     fn recv(&mut self) -> Result<Option<Frame>>;
     /// Transport name for logs/reports.
     fn kind(&self) -> &'static str;
+    /// Live reconnect/dedup counters, when the transport has them.
+    fn resilience(&self) -> Option<Arc<ResilienceStats>> {
+        None
+    }
 }
 
 /// One stage boundary of a [`crate::pipeline::PipelineSpec`]: how frames
@@ -59,6 +76,11 @@ pub enum LinkSpec {
     /// Pre-connected real TCP endpoints: the sender thread writes `tx`,
     /// the downstream stage reads `rx` (the accepted peer of `tx`).
     Tcp(TcpFrameSender, TcpFrameReceiver),
+    /// Fault-tolerant TCP endpoints ([`super::resilient`]): same socket
+    /// substrate, but the boundary survives transient link failures via
+    /// reconnect + sequenced replay, and shuts down through an explicit
+    /// FIN/FIN_ACK drain.
+    ResilientTcp(ReconnectingTx, ReconnectingRx),
 }
 
 impl LinkSpec {
@@ -80,6 +102,24 @@ impl LinkSpec {
         Ok(LinkSpec::Tcp(tx, rx))
     }
 
+    /// Fault-tolerant real-socket boundary over localhost: the receiver
+    /// keeps its listener, so the link survives mid-stream connection
+    /// kills. Multi-process deployments build their endpoints from
+    /// `ReconnectingTx::connect_to` / `ReconnectingRx::accept_on`.
+    pub fn tcp_loopback_resilient(cfg: ResilienceConfig) -> Result<Self> {
+        let (tx, rx) = resilient_loopback_pair(&cfg)?;
+        Ok(LinkSpec::ResilientTcp(tx, rx))
+    }
+
+    /// The link's resilience counters, when it has any (shared by both
+    /// loopback endpoints; snapshot them after the run for the report).
+    pub fn resilience(&self) -> Option<Arc<ResilienceStats>> {
+        match self {
+            LinkSpec::ResilientTcp(tx, _) => Some(tx.stats()),
+            _ => None,
+        }
+    }
+
     /// Split into boxed trait endpoints. `depth` bounds in-flight frames
     /// for the in-proc channel (TCP relies on socket buffers).
     pub fn into_endpoints(self, depth: usize) -> (Box<dyn FrameTx>, Box<dyn FrameRx>) {
@@ -89,6 +129,7 @@ impl LinkSpec {
                 (Box::new(tx), Box::new(rx))
             }
             LinkSpec::Tcp(tx, rx) => (Box::new(tx), Box::new(rx)),
+            LinkSpec::ResilientTcp(tx, rx) => (Box::new(tx), Box::new(rx)),
         }
     }
 }
@@ -277,25 +318,36 @@ mod tests {
     }
 
     #[test]
-    fn trait_objects_cover_both_transports() {
-        // The same driver-side code must run over either substrate.
+    fn trait_objects_cover_all_transports() {
+        // The same driver-side code must run over any substrate.
         fn ship(mut tx: Box<dyn FrameTx>, mut rx: Box<dyn FrameRx>, n: u64) {
             let sender = std::thread::spawn(move || {
                 for seq in 0..n {
                     tx.send(frame(seq)).unwrap();
                 }
+                tx.finish().unwrap(); // no-op except on resilient links
             });
             for seq in 0..n {
                 assert_eq!(rx.recv().unwrap().unwrap().seq, seq);
             }
-            sender.join().unwrap();
+            // Read the end-of-stream FIRST: on a resilient link this is
+            // what acks the sender's FIN and lets its drain return.
             assert!(rx.recv().unwrap().is_none());
+            sender.join().unwrap();
         }
         let (tx, rx) = LinkSpec::unlimited().into_endpoints(4);
         assert_eq!(tx.kind(), "inproc");
+        assert!(tx.resilience().is_none());
         ship(tx, rx, 6);
         let (tx, rx) = LinkSpec::tcp_loopback().unwrap().into_endpoints(4);
         assert_eq!(tx.kind(), "tcp");
         ship(tx, rx, 6);
+        let spec = LinkSpec::tcp_loopback_resilient(ResilienceConfig::default()).unwrap();
+        let stats = spec.resilience().expect("resilient link exposes stats");
+        let (tx, rx) = spec.into_endpoints(4);
+        assert_eq!(tx.kind(), "tcp+resilient");
+        assert!(tx.resilience().is_some());
+        ship(tx, rx, 6);
+        assert_eq!(stats.snapshot().reconnects, 0, "clean run must not reconnect");
     }
 }

@@ -29,7 +29,7 @@
 
 use crate::adapt::{AdaptConfig, AdaptivePda};
 use crate::data::{AccuracyMeter, EvalSet};
-use crate::metrics::{LatencyHisto, Timeline, TimelinePoint};
+use crate::metrics::{LatencyHisto, ResilienceStats, ResilienceSummary, Timeline, TimelinePoint};
 use crate::monitor::WindowMonitor;
 use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx, LinkSpec};
@@ -38,6 +38,7 @@ use crate::quant::codec::Codec;
 use crate::quant::{calibrate, Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
+use crate::util::sync::lock;
 use crate::Result;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
@@ -144,6 +145,9 @@ pub struct RunReport {
     /// truncated mid-frame"). Empty on a clean run; a non-empty list with
     /// `microbatches < workload.total` explains the shortfall.
     pub errors: Vec<String>,
+    /// Reconnect/replay/dedup counters aggregated over the resilient
+    /// links (all zero when none is resilient, or nothing failed).
+    pub resilience: ResilienceSummary,
 }
 
 impl RunReport {
@@ -179,6 +183,7 @@ impl RunReport {
             Value::Arr(self.stage_compute_s.iter().map(|&s| num(s)).collect()),
         );
         m.insert("timeline".into(), self.timeline.to_json());
+        m.insert("resilience".into(), self.resilience.to_json());
         m.insert(
             "errors".into(),
             Value::Arr(self.errors.iter().map(|e| Value::Str(e.clone())).collect()),
@@ -237,6 +242,11 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
     let link_counters: Vec<Arc<LinkCounters>> = (0..n - 1)
         .map(|_| Arc::new(LinkCounters::default()))
         .collect();
+
+    // Keep a handle on every resilient link's counters before the specs
+    // are consumed into thread-owned endpoints.
+    let resilience_stats: Vec<Arc<ResilienceStats>> =
+        links.iter().filter_map(|l| l.resilience()).collect();
 
     // --- stage + sender threads ----------------------------------------------
     let mut threads = Vec::new();
@@ -310,8 +320,8 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
                     for seq in 0..total {
                         let i = (seq as usize) % per_pass;
                         let tensor = eval.microbatch(i, s);
-                        labels.lock().unwrap().insert(seq, eval.labels_for(i, s).to_vec());
-                        times.lock().unwrap().insert(seq, Instant::now());
+                        lock(&labels).insert(seq, eval.labels_for(i, s).to_vec());
+                        lock(&times).insert(seq, Instant::now());
                         if src_tx.send(SourceMsg { seq, tensor }).is_err() {
                             break; // pipeline died; sink reports what completed
                         }
@@ -328,13 +338,13 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
     let mut done: u64 = 0;
     let mut images: u64 = 0;
     while let Ok(msg) = sink_rx.recv() {
-        let labels = label_map.lock().unwrap().remove(&msg.seq);
+        let labels = lock(&label_map).remove(&msg.seq);
         if let Some(labels) = labels {
             images += labels.len() as u64;
             acc.add(&msg.logits, &labels);
             window_meter.add(&msg.logits, &labels);
         }
-        if let Some(t0) = send_times.lock().unwrap().remove(&msg.seq) {
+        if let Some(t0) = lock(&send_times).remove(&msg.seq) {
             latency.record(t0.elapsed());
         }
         done += 1;
@@ -360,18 +370,16 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         .map(|c| c.mean_frame_bytes())
         .unwrap_or(0.0);
 
-    let timeline = Arc::try_unwrap(timeline)
-        .map(|m| m.into_inner().unwrap())
-        .unwrap_or_default();
+    // NOT Arc::try_unwrap: a stage/sender thread that leaked its clone
+    // (or died holding the lock) would silently erase the whole timeline.
+    let timeline = Timeline::take_shared(&timeline);
 
-    let stage_compute_s = stage_secs
-        .lock()
-        .unwrap()
+    let stage_compute_s = lock(&stage_secs)
         .iter()
         .map(|&(s, c)| if c > 0 { s / c as f64 } else { 0.0 })
         .collect();
 
-    let errors = std::mem::take(&mut *errors.lock().unwrap());
+    let errors = std::mem::take(&mut *lock(&errors));
 
     Ok(RunReport {
         images,
@@ -385,6 +393,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         link0_mean_bytes,
         stage_compute_s,
         errors,
+        resilience: ResilienceSummary::collect(&resilience_stats),
     })
 }
 
@@ -401,7 +410,10 @@ fn stage_thread(
     errors: Arc<Mutex<Vec<String>>>,
 ) {
     if let Err(e) = stage_loop(idx, factory, input, output, secs) {
-        errors.lock().unwrap().push(format!("stage {idx}: {e:#}"));
+        // Poison-tolerant: if another thread panicked holding this lock,
+        // still record the error we actually saw (the root cause must not
+        // drown in a poisoned-mutex cascade).
+        lock(&errors).push(format!("stage {idx}: {e:#}"));
         eprintln!("[quantpipe] stage {idx} exited with error: {e:#}");
     }
 }
@@ -444,7 +456,7 @@ fn stage_loop(
         let t0 = Instant::now();
         let out = compute.run(&tensor)?;
         {
-            let mut s = secs.lock().unwrap();
+            let mut s = lock(&secs);
             s[idx].0 += t0.elapsed().as_secs_f64();
             s[idx].1 += 1;
         }
@@ -527,12 +539,15 @@ pub(crate) fn sender_thread(
     });
     while let Ok(frame) = frame_rx.recv() {
         let wire = frame.wire_len();
+        // On a resilient link `send` rides out transient failures
+        // internally: the reconnect stall comes back as busy time, the
+        // monitor turns it into collapsed measured bandwidth, and the
+        // controller sheds bits for the outage. Only a hard failure
+        // (reconnect budget exhausted) reaches the error path.
         let busy = match link_tx.send(frame) {
             Ok(b) => b,
             Err(e) => {
-                errors
-                    .lock()
-                    .unwrap()
+                lock(&errors)
                     .push(format!("link {stage} ({}): send failed: {e:#}", link_tx.kind()));
                 return;
             }
@@ -547,7 +562,7 @@ pub(crate) fn sender_thread(
             } else {
                 bits.load(Ordering::Relaxed)
             };
-            timeline.lock().unwrap().push(TimelinePoint {
+            lock(&timeline).push(TimelinePoint {
                 t: start.elapsed().as_secs_f64(),
                 stage,
                 bandwidth_bps: stats.bandwidth_bps,
@@ -556,5 +571,10 @@ pub(crate) fn sender_thread(
                 util: stats.link_utilization,
             });
         }
+    }
+    // Upstream is done: negotiate the clean drain so the peer can tell
+    // shutdown from failure (FIN/FIN_ACK on resilient links, no-op else).
+    if let Err(e) = link_tx.finish() {
+        lock(&errors).push(format!("link {stage} ({}): drain failed: {e:#}", link_tx.kind()));
     }
 }

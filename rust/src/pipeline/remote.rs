@@ -25,7 +25,7 @@
 
 use crate::adapt::AdaptConfig;
 use crate::data::AccuracyMeter;
-use crate::metrics::{LatencyHisto, Timeline};
+use crate::metrics::{LatencyHisto, ResilienceSummary, Timeline};
 use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx};
 use crate::pipeline::driver::{
@@ -35,9 +35,10 @@ use crate::pipeline::stage::StageFactory;
 use crate::quant::codec::Codec;
 use crate::quant::{Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
+use crate::util::sync::lock;
 use crate::Result;
 use std::collections::HashMap;
-use std::sync::atomic::AtomicU8;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -76,6 +77,9 @@ pub struct WorkerReport {
     pub out_mean_bytes: f64,
     /// Transport failures observed (empty on a clean run).
     pub errors: Vec<String>,
+    /// Reconnect/replay/dedup counters from resilient transports (both
+    /// the upstream rx and the downstream tx; zero otherwise).
+    pub resilience: ResilienceSummary,
 }
 
 /// Run one stage over arbitrary transports until the upstream closes.
@@ -88,6 +92,9 @@ pub fn run_worker(
     tx: Box<dyn FrameTx>,
 ) -> Result<WorkerReport> {
     let start = Instant::now();
+    // Counter handles outlive the endpoints, which move into threads.
+    let resilience_handles: Vec<_> =
+        rx.resilience().into_iter().chain(tx.resilience()).collect();
     let initial_bits = if cfg.quantize_output { cfg.quant.initial_bits } else { BITS_NONE };
     let bits = Arc::new(AtomicU8::new(initial_bits));
     let timeline = Arc::new(Mutex::new(Timeline::default()));
@@ -114,10 +121,10 @@ pub fn run_worker(
 
     let (loop_result, frames, compute_secs) = worker_stage_loop(cfg, rx, frame_tx, bits, factory);
     // frame_tx was moved into the loop and is dropped by now, so the
-    // sender drains its channel and exits.
+    // sender drains its channel, runs the downstream drain, and exits.
     let _ = sender.join();
 
-    let mut errors = std::mem::take(&mut *errors.lock().unwrap());
+    let mut errors = std::mem::take(&mut *lock(&errors));
     if let Err(e) = loop_result {
         // Keep the progress counters: "stopped with an error after frame
         // 500" is what lets an operator correlate the shortfall.
@@ -126,17 +133,14 @@ pub fn run_worker(
 
     Ok(WorkerReport {
         frames,
-        timeline: take_timeline(timeline),
+        // take_shared, not Arc::try_unwrap: a sender thread that leaked
+        // its clone must not erase the timeline.
+        timeline: Timeline::take_shared(&timeline),
         mean_compute_s: if frames > 0 { compute_secs / frames as f64 } else { 0.0 },
         out_mean_bytes: counters.mean_frame_bytes(),
         errors,
+        resilience: ResilienceSummary::collect(&resilience_handles),
     })
-}
-
-fn take_timeline(timeline: Arc<Mutex<Timeline>>) -> Timeline {
-    Arc::try_unwrap(timeline)
-        .map(|m| m.into_inner().unwrap())
-        .unwrap_or_default()
 }
 
 /// Returns the loop outcome WITH the progress counters — a failure after
@@ -204,6 +208,9 @@ pub struct CoordinatorReport {
     pub latency: LatencyHisto,
     /// Transport failures observed (empty on a clean run).
     pub errors: Vec<String>,
+    /// Reconnect/replay/dedup counters from resilient transports (feed
+    /// and return links; zero otherwise).
+    pub resilience: ResilienceSummary,
 }
 
 /// Feed the workload into stage 0 (`feed`) and score logits returning
@@ -219,6 +226,14 @@ pub fn run_coordinator(
     let label_map: Arc<Mutex<HashMap<u64, Vec<u32>>>> = Arc::new(Mutex::new(HashMap::new()));
     let send_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
     let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let resilience_handles: Vec<_> =
+        feed.resilience().into_iter().chain(ret.resilience()).collect();
+    // Feed-failure propagation into the sink/drain path: how many
+    // microbatches actually went out, and whether the feeder is done.
+    // Without this the sink would keep waiting for `total` returns that
+    // can never come after a hard feed failure.
+    let fed = Arc::new(AtomicU64::new(0));
+    let feed_done = Arc::new(AtomicBool::new(false));
 
     let feeder = {
         let eval = workload.eval.clone();
@@ -227,31 +242,51 @@ pub fn run_coordinator(
         let labels = label_map.clone();
         let times = send_times.clone();
         let errs = errors.clone();
+        let fed = fed.clone();
+        let feed_done = feed_done.clone();
         std::thread::Builder::new()
             .name("qp-coord-feed".into())
             .spawn(move || {
                 let mut feed = feed;
                 let mut codec = Codec::default();
                 let per_pass = eval.microbatches(s).max(1);
+                let mut failed = false;
                 for seq in 0..total {
                     let i = (seq as usize) % per_pass;
                     let tensor = eval.microbatch(i, s);
-                    labels.lock().unwrap().insert(seq, eval.labels_for(i, s).to_vec());
-                    times.lock().unwrap().insert(seq, Instant::now());
+                    lock(&labels).insert(seq, eval.labels_for(i, s).to_vec());
+                    lock(&times).insert(seq, Instant::now());
                     let enc = match codec.encode(&tensor.data, Method::Pda, BITS_NONE) {
                         Ok(e) => e,
                         Err(e) => {
-                            errs.lock().unwrap().push(format!("coordinator: encode failed: {e:#}"));
+                            lock(&errs).push(format!("coordinator: encode failed: {e:#}"));
+                            failed = true;
                             break;
                         }
                     };
+                    // The FIRST hard send error ends the feed: every later
+                    // microbatch would fail the same way, and one error per
+                    // remaining microbatch only buries the root cause.
+                    // (Resilient links absorb transient failures internally;
+                    // an error here means the reconnect budget is gone.)
                     if let Err(e) = feed.send(Frame::new(seq, tensor.shape.clone(), enc)) {
-                        errs.lock().unwrap().push(format!("coordinator: feed link failed: {e:#}"));
+                        lock(&errs).push(format!("coordinator: feed link failed: {e:#}"));
+                        failed = true;
                         break;
                     }
+                    fed.fetch_add(1, Ordering::Release);
                 }
-                // `feed` drops here; on TCP that half-closes the socket and
-                // stage 0 sees a clean EOF after draining.
+                if !failed {
+                    // Clean drain (FIN/FIN_ACK on resilient links) so
+                    // stage 0 sees an explicit shutdown, not an EOF it
+                    // might mistake for a failure.
+                    if let Err(e) = feed.finish() {
+                        lock(&errs).push(format!("coordinator: feed drain failed: {e:#}"));
+                    }
+                }
+                feed_done.store(true, Ordering::Release);
+                // `feed` drops here; on plain TCP that half-closes the
+                // socket and stage 0 sees a clean EOF after draining.
             })?
     };
 
@@ -262,38 +297,47 @@ pub fn run_coordinator(
     let mut done = 0u64;
     let mut images = 0u64;
     while done < workload.total {
+        // A failed feed caps what can ever return: stop once everything
+        // that was actually sent is accounted for.
+        if feed_done.load(Ordering::Acquire) && done >= fed.load(Ordering::Acquire) {
+            break;
+        }
         match ret.recv() {
             Ok(Some(frame)) => {
                 if let Err(e) = codec.decode(&frame.enc, &mut logits_buf) {
-                    errors
-                        .lock()
-                        .unwrap()
-                        .push(format!("coordinator: logits decode failed: {e:#}"));
+                    lock(&errors).push(format!("coordinator: logits decode failed: {e:#}"));
                     continue;
                 }
                 let logits = Tensor::new(logits_buf.clone(), frame.shape.clone());
-                if let Some(labels) = label_map.lock().unwrap().remove(&frame.seq) {
+                if let Some(labels) = lock(&label_map).remove(&frame.seq) {
                     images += labels.len() as u64;
                     acc.add(&logits, &labels);
                 }
-                if let Some(t0) = send_times.lock().unwrap().remove(&frame.seq) {
+                if let Some(t0) = lock(&send_times).remove(&frame.seq) {
                     latency.record(t0.elapsed());
                 }
                 done += 1;
             }
             Ok(None) => break, // pipeline closed early
             Err(e) => {
-                errors
-                    .lock()
-                    .unwrap()
-                    .push(format!("coordinator: return link failed: {e:#}"));
+                lock(&errors).push(format!("coordinator: return link failed: {e:#}"));
                 break;
             }
         }
     }
+    if done >= workload.total {
+        // Workload complete: consume the return link's end-of-stream.
+        // On a resilient link this reads the last worker's FIN and sends
+        // the FIN_ACK its drain is blocked on — stopping at `total` and
+        // dropping the receiver would strand that worker in its drain
+        // until the timeout and report a spurious failure. On plain TCP
+        // this is a prompt EOF. Skipped on the error paths above: there
+        // the link may never close and this would block.
+        while let Ok(Some(_)) = ret.recv() {}
+    }
     let _ = feeder.join();
     let wall = start.elapsed().as_secs_f64().max(1e-9);
-    let errors = std::mem::take(&mut *errors.lock().unwrap());
+    let errors = std::mem::take(&mut *lock(&errors));
 
     Ok(CoordinatorReport {
         images,
@@ -303,5 +347,6 @@ pub fn run_coordinator(
         accuracy: acc.value(),
         latency,
         errors,
+        resilience: ResilienceSummary::collect(&resilience_handles),
     })
 }

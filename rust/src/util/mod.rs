@@ -1,8 +1,9 @@
 //! In-tree utilities replacing unavailable ecosystem crates (the build
 //! environment is fully offline): a JSON parser/writer, a seedable RNG
-//! with the distributions the tests need, and a micro property-testing
-//! harness.
+//! with the distributions the tests need, a micro property-testing
+//! harness, and poison-tolerant locking.
 
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;

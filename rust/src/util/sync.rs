@@ -1,0 +1,39 @@
+//! Poison-tolerant locking.
+//!
+//! A panicked stage or sender thread poisons every mutex it held; the
+//! default `lock().unwrap()` then turns that single panic into a cascade
+//! of `PoisonError` panics across unrelated threads, and the *original*
+//! failure drowns in the noise. All the pipeline's shared maps hold plain
+//! data (counters, timelines, label maps) whose invariants survive a
+//! mid-update panic, so the right move is to take the data anyway and let
+//! `RunReport.errors` report the root cause.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard from a poisoned mutex instead of
+/// panicking. Use for shared state that stays valid across a peer
+/// thread's panic.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_survives_poison() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        // The helper still yields the data.
+        lock(&m).push(4);
+        assert_eq!(*lock(&m), vec![1, 2, 3, 4]);
+    }
+}

@@ -13,15 +13,17 @@
 
 use quantpipe::adapt::{AdaptConfig, Policy};
 use quantpipe::data::EvalSet;
+use quantpipe::net::frame::Frame;
+use quantpipe::net::resilient::{resilient_loopback_pair, ResilienceConfig};
 use quantpipe::net::tcp;
-use quantpipe::net::transport::LinkSpec;
+use quantpipe::net::transport::{FrameRx, FrameTx, LinkSpec};
 use quantpipe::pipeline::{
     mock_stage_factory, run, run_coordinator, run_worker, LinkQuant, PipelineSpec, WorkerConfig,
     Workload,
 };
 use quantpipe::quant::Method;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn eval(count: usize, classes: usize) -> Arc<EvalSet> {
     Arc::new(EvalSet::synthetic_onehot(count, classes))
@@ -29,6 +31,21 @@ fn eval(count: usize, classes: usize) -> Arc<EvalSet> {
 
 fn tcp_links(n: usize) -> Vec<LinkSpec> {
     (0..n).map(|_| LinkSpec::tcp_loopback().unwrap()).collect()
+}
+
+/// Resilience tuning for tests: short budgets, fast backoff.
+fn fast_resilience() -> ResilienceConfig {
+    ResilienceConfig {
+        replay_capacity: 32,
+        reconnect_timeout: Duration::from_secs(5),
+        initial_timeout: Duration::from_secs(5),
+        backoff_base: Duration::from_millis(2),
+        backoff_max: Duration::from_millis(20),
+        jitter: 0.5,
+        hello_timeout: Duration::from_millis(500),
+        drain_timeout: Duration::from_secs(5),
+        seed: 7,
+    }
 }
 
 /// One direction of a loopback socket pair (the unused halves drop).
@@ -174,6 +191,278 @@ fn worker_chain_over_real_sockets() {
         assert_eq!(r.frames, total, "worker {i}");
         assert!(r.errors.is_empty(), "worker {i}: {:?}", r.errors);
     }
+}
+
+#[test]
+fn resilient_pipeline_survives_mid_stream_socket_kill() {
+    // The acceptance scenario: a 3-stage adaptive pipeline over resilient
+    // loopback links; link 0's active socket is killed repeatedly for
+    // ~150 ms mid-stream. The run must complete with zero microbatch loss
+    // or duplication, RunReport must show the reconnects, and the
+    // controller must keep running — shedding bits during the outage
+    // (the reconnect stall IS the bandwidth signal) instead of aborting.
+    let classes = 16;
+    let s = 8usize;
+    let total = 80u64;
+    let link0 = LinkSpec::tcp_loopback_resilient(fast_resilience()).unwrap();
+    let link1 = LinkSpec::tcp_loopback_resilient(fast_resilience()).unwrap();
+    let stats0 = link0.resilience().unwrap();
+    let kill = match &link0 {
+        LinkSpec::ResilientTcp(tx, _) => tx.kill_switch(),
+        _ => unreachable!(),
+    };
+
+    // Kill storm: wait until the link is live, then shoot down every new
+    // connection for 150 ms. Each re-establishment lands its stall in the
+    // in-flight send's busy time.
+    let killer = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while !kill.kill() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let storm = Instant::now();
+        while storm.elapsed() < Duration::from_millis(150) {
+            kill.kill();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    });
+
+    let spec = PipelineSpec {
+        stages: vec![
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::from_millis(2)),
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+        ],
+        links: vec![link0, link1],
+        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 },
+        adapt: Some(AdaptConfig {
+            // 4 ms budget per microbatch: satisfied on a healthy loopback
+            // (the 2 ms stage bounds steady state), hopeless across a
+            // 150 ms outage — the stalled window must shed bits.
+            target_rate: 2000.0,
+            microbatch: s,
+            policy: Policy::Ladder,
+            raise_margin: 1.1,
+        }),
+        window: 4,
+        inflight: 2,
+    };
+    let report = run(spec, Workload::repeat(eval(64, classes), s, total)).unwrap();
+    killer.join().unwrap();
+
+    // (1) zero loss / zero duplication end to end.
+    assert_eq!(report.microbatches, total, "{report:?}");
+    assert_eq!(report.images, total * s as u64);
+    assert!(report.errors.is_empty(), "outage must not surface as an error: {:?}", report.errors);
+    assert!((report.accuracy - 1.0).abs() < 1e-12, "payload corrupted: {report:?}");
+    assert_eq!(report.latency.count(), total);
+    // (2) the report records the reconnects (and the stall behind them).
+    assert!(
+        report.resilience.reconnects >= 1,
+        "kill storm must force at least one reconnect: {:?}",
+        report.resilience
+    );
+    assert_eq!(
+        report.resilience.reconnects,
+        stats0.snapshot().reconnects,
+        "report must aggregate the link counters"
+    );
+    // (3) the controller kept running and shed bits during the outage.
+    let seq = report.timeline.bits_sequence(0);
+    assert!(
+        seq.iter().any(|&b| b < 32),
+        "controller never shed bits across the outage: {seq:?}"
+    );
+}
+
+#[test]
+fn resilient_pipeline_clean_shutdown_reports_no_errors() {
+    // The FIN/FIN_ACK drain: a clean end of stream must not look like a
+    // failure to the resilient receiver (which treats bare EOF as an
+    // outage), so a no-fault run ends with zero errors and zero
+    // reconnects.
+    let classes = 16;
+    let s = 8usize;
+    let total = 24u64;
+    let links: Vec<LinkSpec> = (0..2)
+        .map(|_| LinkSpec::tcp_loopback_resilient(fast_resilience()).unwrap())
+        .collect();
+    let stats: Vec<_> = links.iter().map(|l| l.resilience().unwrap()).collect();
+    let spec = PipelineSpec {
+        stages: (0..3)
+            .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
+            .collect(),
+        links,
+        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        adapt: None,
+        window: 4,
+        inflight: 2,
+    };
+    let report = run(spec, Workload::repeat(eval(64, classes), s, total)).unwrap();
+    assert_eq!(report.microbatches, total, "{report:?}");
+    assert!(report.errors.is_empty(), "clean FIN drain must not error: {:?}", report.errors);
+    assert!((report.accuracy - 1.0).abs() < 1e-12);
+    assert_eq!(report.resilience.reconnects, 0, "clean shutdown misread as failure");
+    for (i, st) in stats.iter().enumerate() {
+        assert_eq!(st.snapshot().reconnects, 0, "link {i} reconnected on a clean run");
+    }
+}
+
+#[test]
+fn resilient_worker_chain_survives_link_kill() {
+    // Multi-process topology over resilient links: coordinator → w0 → w1
+    // → w2 → coordinator, with the w0→w1 connection killed mid-run. The
+    // workload must arrive complete and the reports must show the
+    // recovery.
+    let classes = 16;
+    let s = 8usize;
+    let total = 60u64;
+    let (c2w0_tx, c2w0_rx) = resilient_loopback_pair(&fast_resilience()).unwrap();
+    let (w01_tx, w01_rx) = resilient_loopback_pair(&fast_resilience()).unwrap();
+    let (w12_tx, w12_rx) = resilient_loopback_pair(&fast_resilience()).unwrap();
+    let (w2c_tx, w2c_rx) = resilient_loopback_pair(&fast_resilience()).unwrap();
+    let kill = w01_tx.kill_switch();
+
+    let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+    let cfg = |stage: usize, last: bool| WorkerConfig {
+        stage,
+        quant,
+        adapt: None,
+        window: 4,
+        microbatch: s,
+        quantize_output: !last,
+        inflight: 2,
+    };
+    let (cfg0, cfg1, cfg2) = (cfg(0, false), cfg(1, false), cfg(2, true));
+
+    let w0 = std::thread::spawn(move || {
+        run_worker(
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+            cfg0,
+            Box::new(c2w0_rx),
+            Box::new(w01_tx),
+        )
+    });
+    let w1 = std::thread::spawn(move || {
+        run_worker(
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::from_millis(2)),
+            cfg1,
+            Box::new(w01_rx),
+            Box::new(w12_tx),
+        )
+    });
+    let w2 = std::thread::spawn(move || {
+        run_worker(
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+            cfg2,
+            Box::new(w12_rx),
+            Box::new(w2c_tx),
+        )
+    });
+    let killer = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while !kill.kill() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
+
+    let report = run_coordinator(
+        Workload::repeat(eval(64, classes), s, total),
+        Box::new(c2w0_tx),
+        Box::new(w2c_rx),
+    )
+    .unwrap();
+    killer.join().unwrap();
+
+    assert_eq!(report.microbatches, total, "{report:?}");
+    assert!(report.errors.is_empty(), "{:?}", report.errors);
+    assert!((report.accuracy - 1.0).abs() < 1e-12, "{report:?}");
+    assert_eq!(report.latency.count(), total);
+
+    let mut chain_reconnects = 0;
+    for (i, w) in vec![w0, w1, w2].into_iter().enumerate() {
+        let r = w.join().unwrap().unwrap();
+        assert_eq!(r.frames, total, "worker {i}");
+        assert!(r.errors.is_empty(), "worker {i}: {:?}", r.errors);
+        chain_reconnects += r.resilience.reconnects;
+    }
+    assert!(chain_reconnects >= 1, "the killed w0→w1 link must have reconnected");
+}
+
+/// Feed stub that forwards frames into an echo channel, then fails hard.
+/// Panics if `send` is ever called again after the injected failure —
+/// the coordinator's feed loop must stop at the FIRST hard error instead
+/// of spamming one error per remaining microbatch.
+struct FlakyFeed {
+    sent: u64,
+    fail_after: u64,
+    echo: std::sync::mpsc::SyncSender<Frame>,
+    failed: bool,
+}
+
+impl FrameTx for FlakyFeed {
+    fn send(&mut self, frame: Frame) -> quantpipe::Result<f64> {
+        assert!(!self.failed, "feed loop kept sending after a hard link failure");
+        if self.sent >= self.fail_after {
+            self.failed = true;
+            return Err(
+                std::io::Error::new(std::io::ErrorKind::Other, "injected hard feed failure").into(),
+            );
+        }
+        self.sent += 1;
+        self.echo.send(frame).expect("echo receiver alive");
+        Ok(0.0)
+    }
+
+    fn kind(&self) -> &'static str {
+        "flaky-stub"
+    }
+}
+
+/// Return-path stub: hands back whatever the feed echoed, then reports a
+/// clean end of stream once the feed side is gone.
+struct EchoReturn(std::sync::mpsc::Receiver<Frame>);
+
+impl FrameRx for EchoReturn {
+    fn recv(&mut self) -> quantpipe::Result<Option<Frame>> {
+        match self.0.recv_timeout(Duration::from_secs(5)) {
+            Ok(f) => Ok(Some(f)),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                panic!("sink never stopped waiting after the feed failed")
+            }
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "echo-stub"
+    }
+}
+
+#[test]
+fn coordinator_stops_feeding_after_first_hard_send_error() {
+    let s = 8usize;
+    let classes = 16;
+    let (echo_tx, echo_rx) = std::sync::mpsc::sync_channel::<Frame>(16);
+    let feed = FlakyFeed { sent: 0, fail_after: 3, echo: echo_tx, failed: false };
+    let report = run_coordinator(
+        Workload::repeat(eval(64, classes), s, 20),
+        Box::new(feed),
+        Box::new(EchoReturn(echo_rx)),
+    )
+    .unwrap();
+    // The 3 echoed microbatches came back; the failure is reported once,
+    // not once per remaining microbatch, and the sink did not hang
+    // waiting for the other 17.
+    assert_eq!(report.microbatches, 3, "{report:?}");
+    assert_eq!(
+        report.errors.len(),
+        1,
+        "exactly one feed failure expected: {:?}",
+        report.errors
+    );
+    assert!(report.errors[0].contains("feed link failed"), "{:?}", report.errors);
+    assert!((report.accuracy - 1.0).abs() < 1e-12, "{report:?}");
 }
 
 #[test]

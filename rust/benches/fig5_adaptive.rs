@@ -15,11 +15,12 @@
 //! `B_min(q) = full_bits·(q/32) / (S/R)`.
 
 use quantpipe::adapt::AdaptConfig;
-use quantpipe::benchkit::{hlo_spec, load_artifacts, section, Table};
+use quantpipe::benchkit::{hlo_spec, load_artifacts, section, write_bench_json, Table};
 use quantpipe::config::Config;
 use quantpipe::net::trace::BandwidthTrace;
 use quantpipe::pipeline::{run, LinkQuant, Workload};
 use quantpipe::quant::Method;
+use quantpipe::util::json::Value;
 
 fn main() -> quantpipe::Result<()> {
     let (manifest, dir, eval) = load_artifacts()?;
@@ -131,6 +132,36 @@ fn main() -> quantpipe::Result<()> {
     println!();
     std::fs::write("fig5_timeline.csv", report.timeline.to_csv())?;
     println!("timeline -> fig5_timeline.csv");
+
+    // Machine-readable result for the perf trajectory: the adaptive run's
+    // headline numbers plus the bitwidth track, in one parseable file.
+    let bits_seq = Value::Arr(
+        report
+            .timeline
+            .bits_sequence(0)
+            .iter()
+            .map(|&b| Value::Num(b as f64))
+            .collect(),
+    );
+    let bench_path = write_bench_json(
+        "fig5",
+        &[
+            ("throughput_img_s", report.throughput),
+            ("accuracy", report.accuracy),
+            ("wall_secs", report.wall_secs),
+            ("microbatches", report.microbatches as f64),
+            ("images", report.images as f64),
+            ("target_rate_img_s", target),
+            ("nominal_img_s", nominal),
+            ("p50_latency_s", report.latency.quantile(0.5).as_secs_f64()),
+            ("p99_latency_s", report.latency.quantile(0.99).as_secs_f64()),
+            ("final_bits_link0", report.timeline.final_bits(0).unwrap_or(32) as f64),
+            ("bits_steps_link0", report.timeline.bits_sequence(0).len() as f64),
+            ("window_points", report.timeline.points.len() as f64),
+        ],
+        &[("bits_sequence_link0", bits_seq)],
+    )?;
+    println!("bench json -> {}", bench_path.display());
     println!("\npaper's track: 32 → 16 → 2 → 6 → 8 → 32 with the rate recovering each phase.");
     Ok(())
 }

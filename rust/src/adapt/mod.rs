@@ -92,8 +92,15 @@ impl AdaptivePda {
         // Budget: what the link moves in one microbatch period at target R.
         let budget_bits = (self.cfg.microbatch as f64 / self.cfg.target_rate) * w.bandwidth_bps;
 
-        let ratio = if budget_bits.is_infinite() || budget_bits <= 0.0 && w.bandwidth_bps.is_infinite() {
-            0.0 // unconstrained link
+        // Unconstrained when the budget itself is infinite, OR when the
+        // budget degenerated to <= 0 (S = 0, R = inf) on a link that
+        // measures infinite bandwidth — an unconstrained link must never
+        // be punished for a meaningless budget. A zero/negative budget on
+        // a *finite* link is the opposite: nothing fits, full compression.
+        let unconstrained =
+            budget_bits.is_infinite() || (budget_bits <= 0.0 && w.bandwidth_bps.is_infinite());
+        let ratio = if unconstrained {
+            0.0
         } else if budget_bits <= 0.0 {
             f64::INFINITY
         } else {
@@ -180,6 +187,47 @@ mod tests {
         let d = c.on_window(&window(FULL_BYTES, f64::INFINITY));
         assert_eq!(d.bits, 32);
         assert!(!d.changed);
+    }
+
+    #[test]
+    fn zero_budget_window_forces_full_compression() {
+        // Degenerate budget on a FINITE link (S = 0 ⇒ budget_bits = 0):
+        // nothing fits in a zero budget, so the ratio is infinite and the
+        // controller floors the bitwidth. The unconstrained-link escape
+        // must NOT fire here — the link is measurably finite.
+        let mut c = AdaptivePda::new(AdaptConfig {
+            target_rate: 100.0,
+            microbatch: 0,
+            policy: Policy::Ladder,
+            raise_margin: 1.0,
+        });
+        c.set_bits(32);
+        let d = c.on_window(&window(FULL_BYTES, 50e6));
+        assert_eq!(d.bits, 2, "{d:?}");
+        assert!(d.required_compression.is_infinite(), "{d:?}");
+    }
+
+    #[test]
+    fn infinite_bandwidth_window_is_unconstrained() {
+        // An unconstrained link (never measurably busy ⇒ bandwidth = inf)
+        // must settle at full precision regardless of the current width.
+        let mut c = ctl(Policy::Ladder);
+        c.set_bits(4);
+        let d = c.on_window(&window(FULL_BYTES * 4.0 / 32.0, f64::INFINITY));
+        assert_eq!(d.bits, 32, "{d:?}");
+        assert_eq!(d.required_compression, 0.0, "{d:?}");
+    }
+
+    #[test]
+    fn zero_bandwidth_window_floors_the_bitwidth() {
+        // A dead link (measured bandwidth 0 ⇒ budget 0) cannot carry any
+        // volume: shed to the 2-bit floor immediately, never divide by
+        // zero into NaN.
+        let mut c = ctl(Policy::Ladder);
+        c.set_bits(32);
+        let d = c.on_window(&window(FULL_BYTES, 0.0));
+        assert_eq!(d.bits, 2, "{d:?}");
+        assert!(d.required_compression.is_infinite(), "{d:?}");
     }
 
     #[test]

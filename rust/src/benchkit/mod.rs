@@ -131,6 +131,32 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Write a machine-readable bench result (`BENCH_<name>.json`): a flat
+/// object of numeric fields plus an optional nested value (e.g. a
+/// bits-sequence array). Non-finite numbers map to `null` — JSON has no
+/// Infinity/NaN and downstream perf tooling must get a parseable
+/// document. Returns the path written.
+pub fn write_bench_json(
+    name: &str,
+    fields: &[(&str, f64)],
+    extra: &[(&str, crate::util::json::Value)],
+) -> Result<PathBuf> {
+    use crate::util::json::Value;
+    let mut m = std::collections::BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(
+            k.to_string(),
+            if v.is_finite() { Value::Num(*v) } else { Value::Null },
+        );
+    }
+    for (k, v) in extra {
+        m.insert(k.to_string(), v.clone());
+    }
+    let path = PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, Value::Obj(m).to_string_pretty())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +180,23 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into(), "x".into()]);
         t.print();
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_maps_nonfinite_to_null() {
+        use crate::util::json::Value;
+        // Written to the cwd like a real bench run; cleaned up after.
+        let path = write_bench_json(
+            "benchkit_selftest",
+            &[("throughput", 123.5), ("bandwidth", f64::INFINITY)],
+            &[("bits", Value::Arr(vec![Value::Num(32.0), Value::Num(8.0)]))],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back.at("throughput").unwrap().as_f64().unwrap(), 123.5);
+        assert_eq!(back.at("bandwidth").unwrap(), &Value::Null);
+        assert_eq!(back.at("bits").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -109,6 +109,14 @@ pub struct TransportSection {
     /// explicit FIN/FIN_ACK drain at shutdown. Both ends of every link
     /// must agree on this flag.
     pub resilient: bool,
+    /// TCP connections per stage boundary (`net::stripe`). 1 = the plain
+    /// single-connection link; N > 1 stripes every boundary over N
+    /// connections sharing one sequence space (requires `resilient`,
+    /// whose session protocol carries the striping). All stripes dial the
+    /// same stage address — the receiver multiplexes its one listener, so
+    /// no per-stripe ports are needed. Every process in the chain must
+    /// agree on this value.
+    pub stripes: usize,
     /// Sent-but-unacked frames kept for replay per link.
     pub replay_capacity: usize,
     /// Budget to get a failed link back before reporting a hard error, ms.
@@ -188,6 +196,7 @@ impl Default for Config {
                 connect_retry_ms: 100,
                 connect_timeout_ms: 10_000,
                 resilient: false,
+                stripes: 1,
                 replay_capacity: 128,
                 reconnect_timeout_ms: 10_000,
                 backoff_base_ms: 10,
@@ -275,11 +284,20 @@ impl Config {
             if let Some(x) = t.get("connect_retry_ms") { cfg.transport.connect_retry_ms = x.as_u64()?; }
             if let Some(x) = t.get("connect_timeout_ms") { cfg.transport.connect_timeout_ms = x.as_u64()?; }
             if let Some(x) = t.get("resilient") { cfg.transport.resilient = x.as_bool()?; }
+            if let Some(x) = t.get("stripes") {
+                cfg.transport.stripes = x.as_usize()?;
+                anyhow::ensure!(cfg.transport.stripes >= 1, "transport.stripes must be >= 1");
+            }
             if let Some(x) = t.get("replay_capacity") { cfg.transport.replay_capacity = x.as_usize()?; }
             if let Some(x) = t.get("reconnect_timeout_ms") { cfg.transport.reconnect_timeout_ms = x.as_u64()?; }
             if let Some(x) = t.get("backoff_base_ms") { cfg.transport.backoff_base_ms = x.as_u64()?; }
             if let Some(x) = t.get("backoff_max_ms") { cfg.transport.backoff_max_ms = x.as_u64()?; }
         }
+        anyhow::ensure!(
+            cfg.transport.stripes == 1 || cfg.transport.resilient,
+            "transport.stripes > 1 requires transport.resilient: the striped boundary rides \
+             the resilient session protocol (shared sequence space, replay, HELLO resync)"
+        );
         Ok(cfg)
     }
 
@@ -405,6 +423,20 @@ mod tests {
         assert_eq!(c.transport.connect_retry(), Duration::from_millis(50));
         assert_eq!(c.transport.connect_timeout(), Duration::from_millis(3000));
         assert!(Config::parse(r#"{"transport": {"mode": "carrier-pigeon"}}"#).is_err());
+    }
+
+    #[test]
+    fn stripes_knob_parses_validates_and_defaults() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.transport.stripes, 1, "striping is opt-in");
+        let c = Config::parse(
+            r#"{"transport": {"mode": "tcp", "resilient": true, "stripes": 4}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.transport.stripes, 4);
+        // Striping rides the resilient session protocol.
+        assert!(Config::parse(r#"{"transport": {"stripes": 4}}"#).is_err());
+        assert!(Config::parse(r#"{"transport": {"resilient": true, "stripes": 0}}"#).is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! | module | paper role |
 //! |---|---|
 //! | [`quant`] | §3 PTQ/ACIQ/DS-ACIQ math, bit packing, tensor codec |
-//! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets, the fault-tolerant link layer (`net::resilient`: reconnect + sequenced replay + FIN/FIN_ACK drain), traces, wire framing |
+//! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets; the layered reliability stack (`net::session` protocol state machine → `net::conduit` connections → `net::stripe` N-connection striped boundaries, with `net::resilient` as the 1-conduit case); traces, wire framing |
 //! | [`monitor`] | §3 runtime monitor (windowed bandwidth / output-rate) |
 //! | [`adapt`] | §3 adaptive PDA module (Eq. 2 bitwidth policy) |
 //! | [`pipeline`] | transport-agnostic pipeline driver (stage threads, scheduling, backpressure) + multi-process worker/coordinator endpoints |
@@ -61,6 +61,14 @@
 //! replay buffer, and shutdown is an explicit FIN/FIN_ACK drain. The
 //! reconnect stall feeds the `WindowMonitor` as busy time, so the
 //! controller sheds bits during an outage instead of the run aborting.
+//!
+//! With `transport.stripes: N` (or `--stripes N`; requires resilient)
+//! every boundary is additionally **striped** over N TCP connections
+//! sharing one sequence space ([`net::stripe`]) — for high-BDP or
+//! multi-path edge links where a single connection leaves bandwidth on
+//! the table. The receiver reorders across stripes, replay/ACK resync is
+//! session-scoped (any conduit can recover any gap), and a lost stripe
+//! reads as partial bandwidth collapse rather than an outage.
 
 pub mod adapt;
 pub mod benchkit;

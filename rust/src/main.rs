@@ -26,6 +26,7 @@ use quantpipe::data::EvalSet;
 use quantpipe::metrics::ResilienceStats;
 use quantpipe::net::link::SimLink;
 use quantpipe::net::resilient::{ReconnectingRx, ReconnectingTx};
+use quantpipe::net::stripe::{StripedRx, StripedTx};
 use quantpipe::net::tcp;
 use quantpipe::net::transport::{FrameRx, FrameTx, LinkSpec};
 use quantpipe::partition::CostModel;
@@ -50,9 +51,9 @@ USAGE:
   quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2] [--artifacts DIR]
   quantpipe worker     --stage K [--config F] [--listen ADDR] [--connect ADDR]
                        [--stages N] [--mock SxD] [--fixed-bits B] [--target-rate R]
-                       [--resilient BOOL] [--artifacts DIR]
+                       [--resilient BOOL] [--stripes N] [--artifacts DIR]
   quantpipe coordinate [--config F] [--microbatches N] [--synthetic CxD]
-                       [--resilient BOOL] [--artifacts DIR]
+                       [--resilient BOOL] [--stripes N] [--artifacts DIR]
   quantpipe partition  <profile.json> [--devices N]
   quantpipe inspect    [--artifacts DIR]
 
@@ -63,6 +64,10 @@ connects to stage k+1 (the last worker connects to transport.sink_addr).
 `--resilient true` (or transport.resilient) survives transient link
 failures: reconnect + sequenced replay + FIN/FIN_ACK drain; every
 process in the chain must agree on the flag.
+`--stripes N` (or transport.stripes; requires resilient) fans every stage
+boundary over N TCP connections sharing one sequence space — for
+high-BDP/multi-path edge links. All stripes dial the same stage address;
+every process in the chain must agree on the value.
 ";
 
 /// Tiny flag parser: --key value pairs + positionals.
@@ -162,6 +167,17 @@ fn load_config(args: &Args) -> quantpipe::Result<Config> {
     if let Some(r) = args.get("resilient") {
         cfg.transport.resilient = parse_bool(r)?;
     }
+    if let Some(s) = args.get("stripes") {
+        cfg.transport.stripes = s.parse()?;
+        anyhow::ensure!(cfg.transport.stripes >= 1, "--stripes must be >= 1");
+    }
+    // Re-validate after CLI overrides (the config parser enforces the
+    // same invariant for file-borne settings).
+    anyhow::ensure!(
+        cfg.transport.stripes == 1 || cfg.transport.resilient,
+        "--stripes > 1 requires resilient links (--resilient true): the striped boundary \
+         rides the resilient session protocol"
+    );
     Ok(cfg)
 }
 
@@ -348,10 +364,27 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
 
     let listener = TcpListener::bind(&listen)?;
     eprintln!(
-        "[worker {stage}] listening on {listen}, downstream {connect} (last={is_last}, resilient={})",
-        cfg.transport.resilient
+        "[worker {stage}] listening on {listen}, downstream {connect} (last={is_last}, resilient={}, stripes={})",
+        cfg.transport.resilient, cfg.transport.stripes
     );
-    let (up_rx, down_tx): (Box<dyn FrameRx>, Box<dyn FrameTx>) = if cfg.transport.resilient {
+    let (up_rx, down_tx): (Box<dyn FrameRx>, Box<dyn FrameTx>) = if cfg.transport.stripes > 1 {
+        // Striped boundary: one session, N connections per link. The
+        // upstream listener multiplexes however many stripes dial in;
+        // the downstream side dials `stripes` conduits to one address.
+        let rcfg = cfg.transport.resilience_config();
+        let up = StripedRx::accept_on(
+            Arc::new(listener),
+            rcfg.clone(),
+            Arc::new(ResilienceStats::default()),
+        );
+        let down = StripedTx::connect_to(
+            connect.clone(),
+            cfg.transport.stripes,
+            rcfg,
+            Arc::new(ResilienceStats::default()),
+        );
+        (Box::new(up), Box::new(down))
+    } else if cfg.transport.resilient {
         // Fault-tolerant endpoints: the listener is kept so a failed
         // upstream can come back; the downstream dial redials with
         // backoff. Connections are established lazily on first use.
@@ -415,6 +448,12 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
             r.reconnects, r.reaccepts, r.replayed, r.deduped, r.stall_secs
         );
     }
+    for (i, s) in report.stripes.iter().enumerate() {
+        println!(
+            "stripe {i:<2}         {} frames, {} B, {} reconnects, {:.2}s stalled",
+            s.frames, s.bytes, s.reconnects, s.stall_secs
+        );
+    }
     for e in &report.errors {
         eprintln!("  link failure: {e}");
     }
@@ -443,10 +482,24 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
         .first()
         .ok_or_else(|| anyhow::anyhow!("transport.stage_addrs must name stage 0"))?;
     eprintln!(
-        "[coordinator] feeding {first}, sink on {} (resilient={})",
-        cfg.transport.sink_addr, cfg.transport.resilient
+        "[coordinator] feeding {first}, sink on {} (resilient={}, stripes={})",
+        cfg.transport.sink_addr, cfg.transport.resilient, cfg.transport.stripes
     );
-    let (feed_tx, ret_rx): (Box<dyn FrameTx>, Box<dyn FrameRx>) = if cfg.transport.resilient {
+    let (feed_tx, ret_rx): (Box<dyn FrameTx>, Box<dyn FrameRx>) = if cfg.transport.stripes > 1 {
+        let rcfg = cfg.transport.resilience_config();
+        let feed = StripedTx::connect_to(
+            first.clone(),
+            cfg.transport.stripes,
+            rcfg.clone(),
+            Arc::new(ResilienceStats::default()),
+        );
+        let ret = StripedRx::accept_on(
+            Arc::new(listener),
+            rcfg,
+            Arc::new(ResilienceStats::default()),
+        );
+        (Box::new(feed), Box::new(ret))
+    } else if cfg.transport.resilient {
         let rcfg = cfg.transport.resilience_config();
         let feed = ReconnectingTx::connect_to(
             first.clone(),
@@ -493,6 +546,12 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
         println!(
             "resilience        {} reconnects / {} re-accepts, {} replayed, {} deduped, {:.2}s stalled",
             r.reconnects, r.reaccepts, r.replayed, r.deduped, r.stall_secs
+        );
+    }
+    for (i, s) in report.stripes.iter().enumerate() {
+        println!(
+            "stripe {i:<2}         {} frames, {} B, {} reconnects, {:.2}s stalled",
+            s.frames, s.bytes, s.reconnects, s.stall_secs
         );
     }
     for e in &report.errors {

@@ -85,6 +85,71 @@ impl ResilienceSummary {
     }
 }
 
+/// Live per-stripe counters a striped boundary updates while it runs —
+/// one block per conduit of a [`crate::net::stripe`] link, shared (`Arc`)
+/// between the sender thread and whoever assembles the run report.
+#[derive(Debug, Default)]
+pub struct StripeStats {
+    /// Frames this stripe carried (replays included: a replayed frame is
+    /// real wire traffic, and for the first frame of a session its only
+    /// transmission).
+    pub frames: AtomicU64,
+    /// Wire bytes this stripe carried.
+    pub bytes: AtomicU64,
+    /// Successful re-establishments of this stripe after a failure.
+    pub reconnects: AtomicU64,
+    /// Microseconds spent re-establishing (or failing to re-establish)
+    /// this stripe — the per-stripe share of the partial bandwidth
+    /// collapse the adaptive controller sees.
+    pub stall_us: AtomicU64,
+}
+
+impl StripeStats {
+    pub fn snapshot(&self) -> StripeSummary {
+        StripeSummary {
+            frames: self.frames.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            stall_secs: self.stall_us.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+/// One stripe's counters for a finished run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StripeSummary {
+    pub frames: u64,
+    pub bytes: u64,
+    pub reconnects: u64,
+    pub stall_secs: f64,
+}
+
+impl StripeSummary {
+    /// Snapshot every live per-stripe block, preserving stripe order.
+    pub fn collect<'a>(stats: impl IntoIterator<Item = &'a Arc<StripeStats>>) -> Vec<Self> {
+        stats.into_iter().map(|s| s.snapshot()).collect()
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("frames".into(), Value::Num(self.frames as f64));
+        m.insert("bytes".into(), Value::Num(self.bytes as f64));
+        m.insert("reconnects".into(), Value::Num(self.reconnects as f64));
+        m.insert(
+            "stall_secs".into(),
+            if self.stall_secs.is_finite() { Value::Num(self.stall_secs) } else { Value::Null },
+        );
+        Value::Obj(m)
+    }
+
+    /// JSON array for a whole boundary (or every striped boundary of a
+    /// run, concatenated in link order).
+    pub fn list_to_json(list: &[StripeSummary]) -> crate::util::json::Value {
+        crate::util::json::Value::Arr(list.iter().map(|s| s.to_json()).collect())
+    }
+}
+
 /// Exponential-bucket latency histogram (1 µs … ~64 s).
 #[derive(Debug, Clone)]
 pub struct LatencyHisto {
@@ -370,6 +435,26 @@ mod tests {
         let back = crate::util::json::Value::parse(&json).unwrap();
         assert_eq!(back.at("reconnects").unwrap().as_u64().unwrap(), 3);
         assert_eq!(back.at("deduped").unwrap().as_u64().unwrap(), 3);
+    }
+
+    #[test]
+    fn stripe_summary_snapshots_in_order_and_serializes() {
+        let a = Arc::new(StripeStats::default());
+        a.frames.store(10, Ordering::Relaxed);
+        a.bytes.store(5000, Ordering::Relaxed);
+        let b = Arc::new(StripeStats::default());
+        b.reconnects.store(2, Ordering::Relaxed);
+        b.stall_us.store(250_000, Ordering::Relaxed);
+        let list = StripeSummary::collect([&a, &b]);
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].frames, 10);
+        assert_eq!(list[1].reconnects, 2);
+        assert!((list[1].stall_secs - 0.25).abs() < 1e-9);
+        let json = StripeSummary::list_to_json(&list).to_string_pretty();
+        let back = crate::util::json::Value::parse(&json).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr[0].at("bytes").unwrap().as_u64().unwrap(), 5000);
+        assert_eq!(arr[1].at("reconnects").unwrap().as_u64().unwrap(), 2);
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! The **conduit layer**: one physical connection of a reliability
+//! session. A conduit knows how to dial (with backoff + jitter), how to
+//! read whatever bytes are available without committing to a blocking
+//! wait, and how to die quietly — every protocol decision (what those
+//! bytes mean, what must be replayed) lives in [`super::session`].
+//!
+//! A stage boundary owns 1..N conduits ([`super::stripe`]); the plain
+//! resilient link is simply the 1-conduit case ([`super::resilient`]).
+
+use super::session::{ctrl_record, CTRL_LEN};
+use super::tcp::{connect_until, Backoff};
+use crate::util::sync::lock;
+use crate::Result;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Test/ops lever: force-kill a conduit's active socket to simulate a
+/// transient failure (both ends observe it and run their resync paths).
+/// Cloned handles share the same slot; a striped boundary hands out one
+/// switch per stripe.
+#[derive(Clone, Default)]
+pub struct LinkKillSwitch(Arc<Mutex<Option<TcpStream>>>);
+
+impl LinkKillSwitch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shut down the currently registered connection. Returns `false` if
+    /// the conduit has never connected.
+    pub fn kill(&self) -> bool {
+        match &*lock(&self.0) {
+            Some(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub(crate) fn register(&self, stream: &TcpStream) {
+        *lock(&self.0) = stream.try_clone().ok();
+    }
+}
+
+/// Per-endpoint jitter-seed nonce: endpoints sharing one config (the
+/// normal case — one config file per fleet) must still draw DIFFERENT
+/// backoff jitter, or a fleet-wide outage retries in lockstep and the
+/// jitter defends nothing. Process id decorrelates across processes, the
+/// counter decorrelates endpoints within one.
+pub(crate) fn endpoint_nonce() -> u64 {
+    static COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    (std::process::id() as u64) << 32 | n
+}
+
+/// Write one length-prefixed record (a serialized frame).
+pub(crate) fn write_frame_bytes(s: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
+    s.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    s.write_all(bytes)?;
+    s.flush()
+}
+
+/// Write one 13-byte control record.
+pub(crate) fn write_ctrl(s: &mut TcpStream, kind: u8, seq: u64) -> std::io::Result<()> {
+    s.write_all(&ctrl_record(kind, seq))?;
+    s.flush()
+}
+
+/// Write a prebuilt record verbatim (HELLO/FIN records the session layer
+/// already serialized).
+pub(crate) fn write_raw(s: &mut TcpStream, rec: &[u8]) -> std::io::Result<()> {
+    s.write_all(rec)?;
+    s.flush()
+}
+
+/// Outcome of a non-blocking read sweep.
+pub(crate) enum ReadSweep {
+    /// Bytes (possibly zero) drained; the connection is still alive.
+    Alive,
+    /// EOF or I/O error: the connection is gone (whatever was read
+    /// before the end is still in `into`).
+    Dead,
+}
+
+/// Drain whatever is available on `stream` into `into` without blocking
+/// (the stream is returned to blocking mode before this returns).
+pub(crate) fn read_available(stream: &mut TcpStream, into: &mut Vec<u8>) -> ReadSweep {
+    if stream.set_nonblocking(true).is_err() {
+        return ReadSweep::Dead;
+    }
+    let mut tmp = [0u8; 4096];
+    let alive = loop {
+        match stream.read(&mut tmp) {
+            Ok(0) => break false,
+            Ok(n) => into.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break false,
+        }
+    };
+    if !alive || stream.set_nonblocking(false).is_err() {
+        return ReadSweep::Dead;
+    }
+    ReadSweep::Alive
+}
+
+/// Read exactly one control record with a bounded blocking wait (the
+/// dialer waiting for the receiver's `HELLO` on a fresh connection).
+pub(crate) fn read_ctrl_timeout(stream: &mut TcpStream, budget: Duration) -> Result<[u8; CTRL_LEN]> {
+    stream
+        .set_read_timeout(Some(budget.max(Duration::from_millis(1))))
+        .ok();
+    let mut rec = [0u8; CTRL_LEN];
+    stream
+        .read_exact(&mut rec)
+        .map_err(|e| anyhow::anyhow!("no HELLO from peer: {e}"))?;
+    stream.set_read_timeout(None).ok();
+    Ok(rec)
+}
+
+/// Accept every connection currently queued on `listener` without
+/// blocking (a striped receiver greets however many stripes dial in).
+pub(crate) fn accept_pending(listener: &TcpListener) -> Vec<TcpStream> {
+    let mut out = Vec::new();
+    if listener.set_nonblocking(true).is_err() {
+        return out;
+    }
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => out.push(stream),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break, // WouldBlock or a real error: stop sweeping
+        }
+    }
+    listener.set_nonblocking(false).ok();
+    out
+}
+
+/// Dialing side of one connection: the socket slot plus redial
+/// bookkeeping. The owning boundary decides when to dial and performs
+/// the session handshake on the fresh stream.
+pub(crate) struct DialConduit {
+    pub conn: Option<TcpStream>,
+    /// Incremental decoder over inbound control bytes from the current
+    /// connection (one wire parser for both directions — see
+    /// [`super::session::WireDecoder`]).
+    pub decoder: super::session::WireDecoder,
+    pub kill: LinkKillSwitch,
+    /// Decorrelates this conduit's backoff jitter from its fleet-mates'.
+    pub nonce: u64,
+    pub dials: u64,
+    pub ever_connected: bool,
+    /// When the conduit went down (None while connected or never used).
+    pub down_since: Option<Instant>,
+    /// Earliest next opportunistic revival attempt while other stripes
+    /// keep the boundary alive.
+    pub next_retry: Option<Instant>,
+    retry_delay: Duration,
+    /// EWMA of recent write stall, µs (the least-stalled stripe bias).
+    pub stall_ewma_us: f64,
+}
+
+impl Default for DialConduit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DialConduit {
+    pub fn new() -> Self {
+        DialConduit {
+            conn: None,
+            decoder: super::session::WireDecoder::new(),
+            kill: LinkKillSwitch::new(),
+            nonce: endpoint_nonce(),
+            dials: 0,
+            ever_connected: false,
+            down_since: None,
+            next_retry: None,
+            retry_delay: Duration::from_millis(1),
+            stall_ewma_us: 0.0,
+        }
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.conn.is_some()
+    }
+
+    /// Drop the connection and start the revival schedule.
+    pub fn mark_down(&mut self, base: Duration) {
+        if let Some(s) = &self.conn {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.conn = None;
+        self.decoder = super::session::WireDecoder::new();
+        let now = Instant::now();
+        if self.down_since.is_none() {
+            self.down_since = Some(now);
+        }
+        self.retry_delay = base.max(Duration::from_millis(1));
+        self.next_retry = Some(now + self.retry_delay);
+    }
+
+    /// A revival attempt failed: back off the schedule.
+    pub fn retry_failed(&mut self, max: Duration) {
+        self.retry_delay = (self.retry_delay * 2).min(max.max(Duration::from_millis(1)));
+        self.next_retry = Some(Instant::now() + self.retry_delay);
+    }
+
+    /// Is an opportunistic revival attempt due?
+    pub fn revival_due(&self) -> bool {
+        !self.is_connected() && self.next_retry.map_or(false, |t| Instant::now() >= t)
+    }
+
+    /// Install a freshly handshaken stream.
+    pub fn install(&mut self, stream: TcpStream) {
+        self.kill.register(&stream);
+        self.conn = Some(stream);
+        self.down_since = None;
+        self.next_retry = None;
+        self.ever_connected = true;
+    }
+
+    /// Fold one measured write stall into the bias EWMA.
+    pub fn note_stall(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.stall_ewma_us = 0.8 * self.stall_ewma_us + 0.2 * us;
+    }
+
+    /// One quick, bounded dial (revival while other stripes carry the
+    /// boundary — must never stall the send path for long).
+    pub fn dial_quick(&mut self, peer: &str, budget: Duration) -> std::io::Result<TcpStream> {
+        self.dials += 1;
+        let addr = peer
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut a| a.next())
+            .ok_or_else(|| std::io::Error::new(ErrorKind::InvalidInput, "unresolvable peer"))?;
+        TcpStream::connect_timeout(&addr, budget.max(Duration::from_millis(1)))
+    }
+
+    /// Dial until `deadline`, sleeping per the backoff schedule (the
+    /// full-outage path: nothing else is carrying the boundary).
+    pub fn dial_blocking(
+        &mut self,
+        peer: &str,
+        deadline: Instant,
+        backoff: &mut Backoff,
+    ) -> Result<TcpStream> {
+        self.dials += 1;
+        connect_until(peer, deadline, backoff)
+    }
+}
+
+impl Drop for DialConduit {
+    fn drop(&mut self) {
+        // Without an explicit drain the peer sees EOF-without-FIN and
+        // treats it as the failure it is. Never block in drop.
+        if let Some(s) = &self.conn {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Accepted side of one connection: the stream plus its incremental
+/// decode buffer (a striped receiver cannot block on one conduit while
+/// another has data, so all reads are sweeps).
+pub(crate) struct AcceptedConduit {
+    pub stream: TcpStream,
+    pub decoder: super::session::WireDecoder,
+}
+
+impl AcceptedConduit {
+    pub fn new(stream: TcpStream) -> Self {
+        AcceptedConduit { stream, decoder: super::session::WireDecoder::new() }
+    }
+}
+
+impl Drop for AcceptedConduit {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}

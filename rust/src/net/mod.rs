@@ -15,15 +15,31 @@
 //!   TCP sockets ([`tcp`]) behind one pair of traits, selected per stage
 //!   boundary by [`transport::LinkSpec`]. On TCP the bandwidth signal is
 //!   measured write-stall time, not simulation.
+//! * [`session`] — the reliability protocol itself (shared sequence
+//!   space, bounded replay buffer, cumulative ACK trimming, HELLO resync,
+//!   dedup/reorder window, FIN/FIN_ACK drain) as a pure state machine
+//!   with no socket types in scope — unit/property-testable offline.
+//! * [`conduit`] — one physical connection of a session: dial/accept
+//!   lifecycle, backoff bookkeeping, raw non-blocking byte I/O.
+//! * [`stripe`] — a stage boundary fanning one session over N conduits
+//!   (connection striping for high-BDP/multi-path edge links): round-robin
+//!   with a least-stalled bias on the sender, reordering through the
+//!   shared sequence space on the receiver, aggregate busy time feeding
+//!   the adaptive controller so a lost stripe reads as partial bandwidth
+//!   collapse.
 //! * [`resilient`] — the fault-tolerant link layer over [`tcp`]:
 //!   reconnect with backoff+jitter, sequenced replay from a bounded
 //!   buffer, receiver-side dedup, and an explicit FIN/FIN_ACK drain so a
 //!   transient link failure stalls the pipeline (feeding the adaptive
-//!   controller) instead of killing it.
+//!   controller) instead of killing it. Implemented as the 1-conduit
+//!   instantiation of [`stripe`].
 
+pub mod conduit;
 pub mod frame;
 pub mod link;
 pub mod resilient;
+pub mod session;
+pub mod stripe;
 pub mod tcp;
 pub mod trace;
 pub mod transport;

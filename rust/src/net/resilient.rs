@@ -20,29 +20,31 @@
 //!   or duplicated as long as the outage is shorter than the budget.
 //! * **Drain protocol** — shutdown is explicit: the sender ends with
 //!   `FIN{end_seq}` and waits for `FIN_ACK`. A bare EOF therefore always
-//!   means *failure* (reconnect), never "peer finished" — the ambiguity
-//!   that makes half-open TCP shutdowns indistinguishable from crashes is
-//!   gone from both ends.
+//!   means *failure* (reconnect), never "peer finished".
+//!
+//! Since the boundary-session refactor this module is the **1-conduit
+//! instantiation** of the layered stack:
+//!
+//! * [`super::session`] — every protocol decision (replay buffer,
+//!   cumulative ACK trimming, HELLO resync, dedup, FIN/FIN_ACK), with no
+//!   socket types in scope;
+//! * [`super::conduit`] — per-connection dial/accept/backoff and raw
+//!   byte I/O;
+//! * [`super::stripe`] — the boundary glue fanning one session over N
+//!   conduits. [`ReconnectingTx`]/[`ReconnectingRx`] are `StripedTx`/
+//!   `StripedRx` with N = 1 and a strict (reorder-free) receiver, so the
+//!   single-link and striped paths can never drift apart.
 //!
 //! The adaptive loop needs no special case: `send` returns the seconds it
 //! was busy, reconnect stalls included, so the `WindowMonitor` sees an
 //! outage as collapsed measured bandwidth and the `AdaptivePda` sheds
 //! bits instead of the run aborting.
 //!
-//! Wire format: data frames are length-prefixed exactly as in
-//! [`super::tcp`]; control records use the impossible length prefix
-//! `u32::MAX` (> [`MAX_FRAME_BYTES`]) as a marker, followed by one kind
-//! byte and a `u64` sequence number — 13 bytes total:
-//!
-//! ```text
-//! marker u32 = 0xFFFF_FFFF | kind u8 | seq u64 LE
-//! kind: 1 HELLO{next_expected}  receiver → sender, on every (re)connect
-//!       2 ACK{next_expected}    receiver → sender, cumulative
-//!       3 FIN{end_seq}          sender → receiver, after the last frame
-//!       4 FIN_ACK{end_seq}      receiver → sender, everything delivered
-//! ```
-//!
-//! Both directions of one socket are used: data + FIN flow forward,
+//! Wire format (see [`super::session`] for the byte layout): data frames
+//! are length-prefixed exactly as in [`super::tcp`]; control records use
+//! the impossible length prefix `u32::MAX` as a marker, followed by one
+//! kind byte and a `u64` sequence number — 13 bytes total. Both
+//! directions of one socket are used: data + FIN flow forward,
 //! HELLO/ACK/FIN_ACK flow backward. Roles are fixed by who dials:
 //! [`ReconnectingTx`] connects (and redials), [`ReconnectingRx`] accepts
 //! (and re-accepts). Both ends must run the resilient layer — mixing a
@@ -50,177 +52,21 @@
 //! first control record.
 
 use super::frame::Frame;
-use super::tcp::{connect_until, Backoff, MAX_FRAME_BYTES};
+use super::stripe::{StripedRx, StripedTx};
 use super::transport::{FrameRx, FrameTx};
 use crate::metrics::ResilienceStats;
-use crate::util::sync::lock;
 use crate::Result;
-use std::collections::VecDeque;
-use std::io::{ErrorKind, Read, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::net::TcpListener;
+use std::sync::Arc;
 
-/// Length-prefix value marking a control record (can never be a frame
-/// length: it exceeds [`MAX_FRAME_BYTES`]).
-const CTRL_MARKER: u32 = u32::MAX;
-const CTRL_LEN: usize = 13; // marker u32 + kind u8 + seq u64
-
-const K_HELLO: u8 = 1;
-const K_ACK: u8 = 2;
-const K_FIN: u8 = 3;
-const K_FIN_ACK: u8 = 4;
-
-/// Tuning for the resilient layer. Defaults suit LAN/edge deployments;
-/// tests shrink every duration.
-#[derive(Debug, Clone)]
-pub struct ResilienceConfig {
-    /// Sent-but-unacked frames kept for replay. A full buffer blocks the
-    /// sender until the receiver acks (backpressure), so no unacked frame
-    /// is ever evicted — the no-loss guarantee depends on that. Both ends
-    /// of a link should share this value: the receiver batches its
-    /// cumulative acks once per `replay_capacity / 4` frames.
-    pub replay_capacity: usize,
-    /// Total budget to get a link back after a failure; exhausted ⇒ the
-    /// outage is reported as a hard error.
-    pub reconnect_timeout: Duration,
-    /// Budget for the FIRST connection of the session. Multi-process
-    /// startup is order-independent, so the initial peer wait must be as
-    /// generous as the plain-TCP connect retry — not the (typically
-    /// tighter) mid-run reconnect budget.
-    pub initial_timeout: Duration,
-    /// First redial delay (doubles per attempt).
-    pub backoff_base: Duration,
-    /// Redial delay cap.
-    pub backoff_max: Duration,
-    /// Jitter fraction in `[0, 1]`: each delay is scaled by a factor from
-    /// `[1 - jitter, 1]`.
-    pub jitter: f64,
-    /// How long the dialer waits for the peer's `HELLO` on a fresh
-    /// connection before treating the attempt as failed.
-    pub hello_timeout: Duration,
-    /// Budget for the FIN/FIN_ACK drain at shutdown (includes any final
-    /// reconnect + replay needed to deliver the tail).
-    pub drain_timeout: Duration,
-    /// Seed for the jitter RNG (deterministic schedules in tests).
-    pub seed: u64,
-}
-
-impl Default for ResilienceConfig {
-    fn default() -> Self {
-        ResilienceConfig {
-            replay_capacity: 128,
-            reconnect_timeout: Duration::from_secs(10),
-            initial_timeout: Duration::from_secs(30),
-            backoff_base: Duration::from_millis(10),
-            backoff_max: Duration::from_secs(1),
-            jitter: 0.5,
-            hello_timeout: Duration::from_secs(2),
-            drain_timeout: Duration::from_secs(10),
-            seed: 0x5150_1ead,
-        }
-    }
-}
-
-/// Test/ops lever: force-kill the link's active socket to simulate a
-/// transient failure (both ends observe it and run their reconnect
-/// paths). Cloned handles share the same slot.
-#[derive(Clone, Default)]
-pub struct LinkKillSwitch(Arc<Mutex<Option<TcpStream>>>);
-
-impl LinkKillSwitch {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Shut down the currently registered connection. Returns `false` if
-    /// the link has never connected.
-    pub fn kill(&self) -> bool {
-        match &*lock(&self.0) {
-            Some(s) => {
-                let _ = s.shutdown(Shutdown::Both);
-                true
-            }
-            None => false,
-        }
-    }
-
-    fn register(&self, stream: &TcpStream) {
-        *lock(&self.0) = stream.try_clone().ok();
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Shared wire helpers
-// ---------------------------------------------------------------------------
-
-fn write_frame_bytes(s: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
-    s.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    s.write_all(bytes)?;
-    s.flush()
-}
-
-fn write_ctrl(s: &mut TcpStream, kind: u8, seq: u64) -> std::io::Result<()> {
-    let mut rec = [0u8; CTRL_LEN];
-    rec[0..4].copy_from_slice(&CTRL_MARKER.to_le_bytes());
-    rec[4] = kind;
-    rec[5..13].copy_from_slice(&seq.to_le_bytes());
-    s.write_all(&rec)?;
-    s.flush()
-}
-
-/// Parse the record at `rec` (13 bytes, marker already implied checked by
-/// the caller): `(kind, seq)`.
-fn parse_ctrl(rec: &[u8]) -> (u8, u64) {
-    (rec[4], u64::from_le_bytes(rec[5..13].try_into().unwrap()))
-}
-
-// ---------------------------------------------------------------------------
-// Sender: ReconnectingTx
-// ---------------------------------------------------------------------------
+pub use super::conduit::LinkKillSwitch;
+pub use super::session::ResilienceConfig;
 
 /// Fault-tolerant sender half. Dials `peer` lazily on first send, keeps a
 /// replay buffer of unacked frames, redials with backoff on failure, and
-/// ends with the FIN/FIN_ACK drain in [`ReconnectingTx::finish`].
-pub struct ReconnectingTx {
-    peer: String,
-    cfg: ResilienceConfig,
-    stats: Arc<ResilienceStats>,
-    conn: Option<TcpStream>,
-    /// Unparsed inbound control bytes from the current connection.
-    rdbuf: Vec<u8>,
-    /// `(seq, serialized frame)` for every sent-but-unacked frame,
-    /// ascending and contiguous.
-    replay: VecDeque<(u64, Vec<u8>)>,
-    /// Receiver's cumulative ack: everything below this is delivered.
-    acked: u64,
-    /// One past the highest seq handed to `send` (the FIN boundary).
-    next_seq: u64,
-    fin_acked: bool,
-    finished: bool,
-    ever_connected: bool,
-    dials: u64,
-    sends_since_pump: u32,
-    /// Decorrelates this endpoint's backoff jitter from its fleet-mates'.
-    nonce: u64,
-    kill: LinkKillSwitch,
-}
-
-/// Drain inbound acks at most every this many sends (sooner when the
-/// replay buffer passes half capacity) — the drain costs syscalls and the
-/// ACK scheme is cumulative, so per-send pumping buys nothing.
-const PUMP_EVERY: u32 = 16;
-
-/// Per-endpoint jitter-seed nonce: endpoints sharing one config (the
-/// normal case — one config file per fleet) must still draw DIFFERENT
-/// backoff jitter, or a fleet-wide outage retries in lockstep and the
-/// jitter defends nothing. Process id decorrelates across processes, the
-/// counter decorrelates endpoints within one.
-fn endpoint_nonce() -> u64 {
-    static COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    let n = COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    (std::process::id() as u64) << 32 | n
-}
+/// ends with the FIN/FIN_ACK drain in [`ReconnectingTx::finish`]. One
+/// conduit of the striped boundary ([`super::stripe::StripedTx`]).
+pub struct ReconnectingTx(StripedTx);
 
 impl ReconnectingTx {
     /// Lazily-connecting sender toward `peer` (e.g. `"10.0.0.2:9000"`).
@@ -229,44 +75,27 @@ impl ReconnectingTx {
         cfg: ResilienceConfig,
         stats: Arc<ResilienceStats>,
     ) -> Self {
-        ReconnectingTx {
-            peer: peer.into(),
-            cfg,
-            stats,
-            conn: None,
-            rdbuf: Vec::new(),
-            replay: VecDeque::new(),
-            acked: 0,
-            next_seq: 0,
-            fin_acked: false,
-            finished: false,
-            ever_connected: false,
-            dials: 0,
-            sends_since_pump: 0,
-            nonce: endpoint_nonce(),
-            kill: LinkKillSwitch::new(),
-        }
+        ReconnectingTx(StripedTx::connect_to(peer, 1, cfg, stats))
     }
 
     pub fn stats(&self) -> Arc<ResilienceStats> {
-        self.stats.clone()
+        self.0.stats()
     }
 
     /// Handle that can kill the active socket (fault injection).
     pub fn kill_switch(&self) -> LinkKillSwitch {
-        self.kill.clone()
+        self.0.kill_switch_for(0)
     }
 
     /// Frames sent but not yet acknowledged by the peer.
     pub fn unacked(&self) -> usize {
-        self.replay.len()
+        self.0.unacked()
     }
 
     /// Drain any acks the peer has pushed without blocking. `send` does
-    /// this itself on a schedule (every [`PUMP_EVERY`] sends, or sooner
-    /// when the replay buffer passes half capacity).
+    /// this itself on a schedule.
     pub fn pump(&mut self) {
-        self.pump_nonblocking();
+        self.0.pump()
     }
 
     /// Ship one frame. Blocks through replay-buffer backpressure and any
@@ -274,38 +103,7 @@ impl ReconnectingTx {
     /// busy time the `WindowMonitor` turns into measured bandwidth — an
     /// outage therefore *is* the bandwidth signal.
     pub fn send(&mut self, frame: Frame) -> Result<f64> {
-        anyhow::ensure!(!self.finished, "send on a finished resilient link");
-        let t0 = Instant::now();
-        let seq = frame.seq;
-        let bytes = frame.to_bytes();
-        self.sends_since_pump += 1;
-        if self.sends_since_pump >= PUMP_EVERY
-            || self.replay.len() + 1 >= self.cfg.replay_capacity / 2
-        {
-            self.pump_nonblocking();
-            self.sends_since_pump = 0;
-        }
-        self.wait_for_room()?;
-        self.replay.push_back((seq, bytes));
-        if self.next_seq <= seq {
-            self.next_seq = seq + 1;
-        }
-        loop {
-            if self.conn.is_none() {
-                // establish replays the whole unacked tail — including the
-                // frame just queued — so there is nothing left to write.
-                let deadline = Instant::now() + self.connect_budget();
-                self.establish_by(deadline)?;
-                break;
-            }
-            let stream = self.conn.as_mut().unwrap();
-            let buf = &self.replay.back().unwrap().1;
-            match write_frame_bytes(stream, buf) {
-                Ok(()) => break,
-                Err(_) => self.conn = None, // loop → reconnect + replay
-            }
-        }
-        Ok(t0.elapsed().as_secs_f64())
+        self.0.send(frame)
     }
 
     /// Drain protocol: make sure every frame is delivered, send
@@ -313,278 +111,13 @@ impl ReconnectingTx {
     /// `recv` has returned `Ok(None)` — a clean shutdown, observably
     /// different from a failure on both ends.
     pub fn finish(&mut self) -> Result<()> {
-        if self.finished {
-            return Ok(());
-        }
-        let deadline = Instant::now() + self.cfg.drain_timeout;
-        self.fin_acked = false;
-        loop {
-            anyhow::ensure!(
-                Instant::now() < deadline,
-                "drain of link to {} timed out after {:?} ({} frames unacked)",
-                self.peer,
-                self.cfg.drain_timeout,
-                self.replay.len()
-            );
-            if self.conn.is_none() {
-                self.establish_by(deadline)?;
-            }
-            if write_ctrl(self.conn.as_mut().unwrap(), K_FIN, self.next_seq).is_err() {
-                self.conn = None;
-                continue;
-            }
-            while !self.fin_acked && self.conn.is_some() && Instant::now() < deadline {
-                self.pump_blocking(Duration::from_millis(20));
-            }
-            if self.fin_acked {
-                self.finished = true;
-                if let Some(s) = &self.conn {
-                    let _ = s.shutdown(Shutdown::Both);
-                }
-                self.conn = None;
-                return Ok(());
-            }
-            // Connection died mid-drain (or FIN_ACK hasn't arrived):
-            // reconnect, replay the tail, re-FIN.
-        }
-    }
-
-    /// Budget for (re)establishing: the first connection of a session is
-    /// startup (order-independent, generous); later ones are outages.
-    fn connect_budget(&self) -> Duration {
-        if self.ever_connected {
-            self.cfg.reconnect_timeout
-        } else {
-            self.cfg.initial_timeout.max(self.cfg.reconnect_timeout)
-        }
-    }
-
-    /// Redial + handshake + replay, bounded by `deadline`.
-    fn establish_by(&mut self, deadline: Instant) -> Result<()> {
-        let was_connected = self.ever_connected;
-        let t0 = Instant::now();
-        self.conn = None;
-        self.rdbuf.clear();
-        let mut backoff = Backoff::new(
-            self.cfg.backoff_base,
-            self.cfg.backoff_max,
-            self.cfg.jitter,
-            self.cfg.seed ^ self.dials ^ self.nonce,
-        );
-        loop {
-            self.dials += 1;
-            let stream = connect_until(&self.peer, deadline, &mut backoff).map_err(|e| {
-                anyhow::anyhow!(
-                    "link to {} down: {e} ({} frames awaiting replay)",
-                    self.peer,
-                    self.replay.len()
-                )
-            })?;
-            match self.handshake(stream, deadline) {
-                Ok(()) => {
-                    if was_connected {
-                        self.stats
-                            .reconnects
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        self.stats.stall_us.fetch_add(
-                            t0.elapsed().as_micros() as u64,
-                            std::sync::atomic::Ordering::Relaxed,
-                        );
-                    }
-                    self.ever_connected = true;
-                    return Ok(());
-                }
-                Err(e) => {
-                    // Handshake failures are transient (half-dead peer,
-                    // stale backlog entry) — retry until the deadline,
-                    // then surface the real reason.
-                    if Instant::now() >= deadline {
-                        return Err(e.context(format!(
-                            "link to {} down: handshake kept failing",
-                            self.peer
-                        )));
-                    }
-                    std::thread::sleep(backoff.next_delay());
-                }
-            }
-        }
-    }
-
-    /// On a fresh connection: read the receiver's `HELLO`, trim the
-    /// replay buffer to its cumulative position, replay the tail.
-    fn handshake(&mut self, mut stream: TcpStream, deadline: Instant) -> Result<()> {
-        stream.set_nodelay(true).ok();
-        let budget = self
-            .cfg
-            .hello_timeout
-            .min(deadline.saturating_duration_since(Instant::now()))
-            .max(Duration::from_millis(1));
-        stream.set_read_timeout(Some(budget)).ok();
-        let mut rec = [0u8; CTRL_LEN];
-        stream
-            .read_exact(&mut rec)
-            .map_err(|e| anyhow::anyhow!("no HELLO from peer: {e}"))?;
-        anyhow::ensure!(
-            u32::from_le_bytes(rec[0..4].try_into().unwrap()) == CTRL_MARKER,
-            "peer is not speaking the resilient protocol (bad HELLO marker)"
-        );
-        let (kind, next_expected) = parse_ctrl(&rec);
-        anyhow::ensure!(kind == K_HELLO, "expected HELLO, got control kind {kind}");
-        anyhow::ensure!(
-            next_expected <= self.next_seq,
-            "peer expects seq {next_expected} but only {} were ever sent",
-            self.next_seq
-        );
-        while self.replay.front().map_or(false, |(q, _)| *q < next_expected) {
-            self.replay.pop_front();
-        }
-        if let Some((front, _)) = self.replay.front() {
-            // Contiguity means the trimmed buffer starts exactly where the
-            // receiver resumes; anything else is an unrecoverable gap
-            // (e.g. a peer that lost acknowledged state).
-            anyhow::ensure!(
-                *front == next_expected,
-                "replay buffer cannot cover the receiver's position: have seq {front}, peer needs {next_expected}"
-            );
-        }
-        self.acked = self.acked.max(next_expected);
-        let mut replayed = 0u64;
-        for (_, bytes) in &self.replay {
-            write_frame_bytes(&mut stream, bytes)
-                .map_err(|e| anyhow::anyhow!("replay write failed: {e}"))?;
-            replayed += 1;
-        }
-        if self.ever_connected && replayed > 0 {
-            self.stats
-                .replayed
-                .fetch_add(replayed, std::sync::atomic::Ordering::Relaxed);
-        }
-        stream.set_read_timeout(None).ok();
-        self.kill.register(&stream);
-        self.conn = Some(stream);
-        Ok(())
-    }
-
-    /// Block until the replay buffer has room. A full buffer on a
-    /// HEALTHY link is ordinary backpressure — exactly like a full
-    /// kernel send buffer blocking `write` in plain-TCP mode — so it is
-    /// never an error and never times out. Only a DEAD link is bounded:
-    /// each re-establish gets the reconnect budget, and exhausting that
-    /// is the hard error.
-    fn wait_for_room(&mut self) -> Result<()> {
-        while self.replay.len() >= self.cfg.replay_capacity {
-            if self.conn.is_none() {
-                // The handshake's HELLO doubles as a cumulative ack.
-                let deadline = Instant::now() + self.cfg.reconnect_timeout;
-                self.establish_by(deadline)?;
-                continue;
-            }
-            self.pump_blocking(Duration::from_millis(20));
-        }
-        Ok(())
-    }
-
-    /// Read whatever control bytes are available without blocking.
-    fn pump_nonblocking(&mut self) {
-        let Some(stream) = &self.conn else { return };
-        if stream.set_nonblocking(true).is_err() {
-            self.conn = None;
-            return;
-        }
-        let mut alive = true;
-        let mut tmp = [0u8; 256];
-        loop {
-            match self.conn.as_mut().unwrap().read(&mut tmp) {
-                Ok(0) => {
-                    alive = false;
-                    break;
-                }
-                Ok(n) => self.rdbuf.extend_from_slice(&tmp[..n]),
-                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(_) => {
-                    alive = false;
-                    break;
-                }
-            }
-        }
-        if alive {
-            if let Some(s) = &self.conn {
-                alive = s.set_nonblocking(false).is_ok();
-            }
-        }
-        // Parse even when the connection died: an ack that arrived just
-        // before the EOF still trims the replay buffer.
-        let parsed = self.parse_ctrl_buf();
-        if !alive || !parsed {
-            self.conn = None;
-        }
-    }
-
-    /// One blocking read (bounded by `timeout`) for control traffic.
-    fn pump_blocking(&mut self, timeout: Duration) {
-        let Some(stream) = &self.conn else { return };
-        stream
-            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
-            .ok();
-        let mut tmp = [0u8; 256];
-        let alive = match self.conn.as_mut().unwrap().read(&mut tmp) {
-            Ok(0) => false,
-            Ok(n) => {
-                self.rdbuf.extend_from_slice(&tmp[..n]);
-                true
-            }
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => true,
-            Err(e) if e.kind() == ErrorKind::Interrupted => true,
-            Err(_) => false,
-        };
-        let parsed = self.parse_ctrl_buf();
-        if !alive || !parsed {
-            self.conn = None;
-        }
-    }
-
-    /// Consume complete control records; `false` ⇒ stream desynced.
-    fn parse_ctrl_buf(&mut self) -> bool {
-        let mut consumed = 0;
-        while self.rdbuf.len() - consumed >= CTRL_LEN {
-            let rec = &self.rdbuf[consumed..consumed + CTRL_LEN];
-            if u32::from_le_bytes(rec[0..4].try_into().unwrap()) != CTRL_MARKER {
-                return false;
-            }
-            let (kind, seq) = parse_ctrl(rec);
-            consumed += CTRL_LEN;
-            match kind {
-                // A mid-stream HELLO can't happen, but as a cumulative
-                // position it is safe to treat like an ack.
-                K_ACK | K_HELLO => {
-                    while self.replay.front().map_or(false, |(q, _)| *q < seq) {
-                        self.replay.pop_front();
-                    }
-                    self.acked = self.acked.max(seq);
-                }
-                K_FIN_ACK => self.fin_acked = true,
-                _ => {} // unknown kinds: ignore (forward compatibility)
-            }
-        }
-        self.rdbuf.drain(..consumed);
-        true
-    }
-}
-
-impl Drop for ReconnectingTx {
-    fn drop(&mut self) {
-        // Without an explicit finish() the peer sees EOF-without-FIN and
-        // treats it as the failure it is. Never block in drop.
-        if let Some(s) = &self.conn {
-            let _ = s.shutdown(Shutdown::Both);
-        }
+        self.0.finish()
     }
 }
 
 impl FrameTx for ReconnectingTx {
     fn send(&mut self, frame: Frame) -> Result<f64> {
-        ReconnectingTx::send(self, frame)
+        self.0.send(frame)
     }
 
     fn kind(&self) -> &'static str {
@@ -592,45 +125,23 @@ impl FrameTx for ReconnectingTx {
     }
 
     fn finish(&mut self) -> Result<()> {
-        ReconnectingTx::finish(self)
+        self.0.finish()
     }
 
     fn resilience(&self) -> Option<Arc<ResilienceStats>> {
-        Some(self.stats.clone())
+        Some(self.0.stats())
     }
-}
-
-// ---------------------------------------------------------------------------
-// Receiver: ReconnectingRx
-// ---------------------------------------------------------------------------
-
-enum WireItem {
-    Frame(Frame),
-    Fin(u64),
+    // stripes() stays None: a single-conduit link reports through the
+    // resilience counters only, keeping pre-striping reports unchanged.
 }
 
 /// Fault-tolerant receiver half. Keeps its listener so a failed peer can
 /// come back; speaks `HELLO{next_expected}` on every (re)accept, acks
 /// cumulatively, dedups replayed frames, and turns `FIN` into the clean
-/// `Ok(None)` end-of-stream.
-pub struct ReconnectingRx {
-    listener: Arc<TcpListener>,
-    cfg: ResilienceConfig,
-    stats: Arc<ResilienceStats>,
-    conn: Option<TcpStream>,
-    frame_buf: Vec<u8>,
-    next_expected: u64,
-    /// Cumulative position last written as an `ACK` (or `HELLO`).
-    last_acked: u64,
-    /// Ack once per this many delivered frames. Derived as a quarter of
-    /// `replay_capacity`, so with both ends on one config the sender's
-    /// buffer can never fill before the next ack boundary is crossed —
-    /// per-frame ack packets would be pure overhead (the scheme is
-    /// cumulative and `HELLO` re-syncs any lost tail).
-    ack_every: u64,
-    done: bool,
-    ever_connected: bool,
-}
+/// `Ok(None)` end-of-stream. One conduit of the striped boundary, with
+/// the strict in-order receiver (a single ordered connection can never
+/// legitimately skip ahead, so a sequence gap is a protocol error).
+pub struct ReconnectingRx(StripedRx);
 
 impl ReconnectingRx {
     /// Receiver that (re-)accepts peers on `listener`.
@@ -639,212 +150,24 @@ impl ReconnectingRx {
         cfg: ResilienceConfig,
         stats: Arc<ResilienceStats>,
     ) -> Self {
-        let ack_every = (cfg.replay_capacity as u64 / 4).max(1);
-        ReconnectingRx {
-            listener,
-            cfg,
-            stats,
-            conn: None,
-            frame_buf: Vec::new(),
-            next_expected: 0,
-            last_acked: 0,
-            ack_every,
-            done: false,
-            ever_connected: false,
-        }
+        ReconnectingRx(StripedRx::accept_on_ordered(listener, cfg, stats))
     }
 
     pub fn stats(&self) -> Arc<ResilienceStats> {
-        self.stats.clone()
+        self.0.stats()
     }
 
     /// Next in-order frame; `Ok(None)` only after the peer's `FIN` (clean
     /// drain). Link failures trigger re-accept + resync internally and
     /// only surface as `Err` once `reconnect_timeout` is exhausted.
     pub fn recv(&mut self) -> Result<Option<Frame>> {
-        if self.done {
-            return Ok(None);
-        }
-        loop {
-            if self.conn.is_none() {
-                self.accept_peer()?;
-            }
-            match self.read_item() {
-                Err(()) => self.conn = None, // failure → re-accept + HELLO
-                Ok(WireItem::Fin(end)) => {
-                    anyhow::ensure!(
-                        end == self.next_expected,
-                        "peer finished at seq {end} but only {} frames were delivered: frames lost",
-                        self.next_expected
-                    );
-                    match self.conn.as_mut().map(|s| write_ctrl(s, K_FIN_ACK, end)) {
-                        Some(Ok(())) => {
-                            self.done = true;
-                            return Ok(None);
-                        }
-                        _ => {
-                            // FIN_ACK visibly didn't go out: stay
-                            // acceptable instead of vanishing, so the
-                            // sender's reconnect + re-FIN finds us and the
-                            // drain completes (everything is delivered;
-                            // only the acknowledgement is missing).
-                            self.conn = None;
-                        }
-                    }
-                }
-                Ok(WireItem::Frame(f)) => {
-                    if f.seq < self.next_expected {
-                        // Replayed frame we already delivered: drop it and
-                        // re-ack immediately so the sender resyncs.
-                        self.stats
-                            .deduped
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        self.ack(true);
-                        continue;
-                    }
-                    anyhow::ensure!(
-                        f.seq == self.next_expected,
-                        "sequence gap: got frame {}, expected {} (peer could not replay the tail)",
-                        f.seq,
-                        self.next_expected
-                    );
-                    self.next_expected += 1;
-                    self.ack(false);
-                    return Ok(Some(f));
-                }
-            }
-        }
-    }
-
-    /// Write a cumulative `ACK` — on every ack-batch boundary, or
-    /// unconditionally when `force`d (dedup resync).
-    fn ack(&mut self, force: bool) {
-        if !force && self.next_expected.saturating_sub(self.last_acked) < self.ack_every {
-            return;
-        }
-        if let Some(s) = self.conn.as_mut() {
-            if write_ctrl(s, K_ACK, self.next_expected).is_ok() {
-                self.last_acked = self.next_expected;
-            } else {
-                // Frame is already delivered; the lost ack is recovered by
-                // the next connection's HELLO.
-                self.conn = None;
-            }
-        }
-    }
-
-    /// Wait (bounded) for the peer to (re)connect, then greet it with our
-    /// resume position.
-    fn accept_peer(&mut self) -> Result<()> {
-        let was_connected = self.ever_connected;
-        let t0 = Instant::now();
-        // First accept of the session = startup (peers may launch in any
-        // order, as generous as the plain connect retry); later ones are
-        // outage recovery.
-        let budget = if was_connected {
-            self.cfg.reconnect_timeout
-        } else {
-            self.cfg.initial_timeout.max(self.cfg.reconnect_timeout)
-        };
-        let deadline = t0 + budget;
-        self.listener.set_nonblocking(true).ok();
-        let result = loop {
-            match self.listener.accept() {
-                Ok((mut stream, _)) => {
-                    stream.set_nodelay(true).ok();
-                    if write_ctrl(&mut stream, K_HELLO, self.next_expected).is_err() {
-                        continue; // stale backlog entry; try the next one
-                    }
-                    break Ok(stream);
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        let what = if was_connected {
-                            "peer did not reconnect"
-                        } else {
-                            "no peer connected"
-                        };
-                        break Err(anyhow::anyhow!(
-                            "{what} within {budget:?} (listening on {})",
-                            self.listener
-                                .local_addr()
-                                .map(|a| a.to_string())
-                                .unwrap_or_else(|_| "?".into())
-                        ));
-                    }
-                    std::thread::sleep(Duration::from_millis(2));
-                }
-                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(e) => break Err(anyhow::anyhow!("listener failed: {e}")),
-            }
-        };
-        self.listener.set_nonblocking(false).ok();
-        let stream = result?;
-        if was_connected {
-            // Re-accepts count separately from the dialer's reconnects:
-            // a loopback link shares one stats block between both ends,
-            // and one outage must not read as two. Stall is charged on
-            // the dialing side only (the two waits overlap).
-            self.stats
-                .reaccepts
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        }
-        // The HELLO just written is a cumulative ack.
-        self.last_acked = self.next_expected;
-        self.ever_connected = true;
-        self.conn = Some(stream);
-        Ok(())
-    }
-
-    /// Next wire item from the current connection. `Err(())` covers every
-    /// link-level problem — I/O error, EOF (which without FIN is always a
-    /// failure), desynced or corrupt stream — all cured by reconnecting:
-    /// unacked frames replay, so skipping nothing is safe.
-    fn read_item(&mut self) -> std::result::Result<WireItem, ()> {
-        loop {
-            let stream = self.conn.as_mut().ok_or(())?;
-            let mut pre = [0u8; 4];
-            stream.read_exact(&mut pre).map_err(|_| ())?;
-            let len = u32::from_le_bytes(pre);
-            if len == CTRL_MARKER {
-                let mut rest = [0u8; CTRL_LEN - 4];
-                stream.read_exact(&mut rest).map_err(|_| ())?;
-                let kind = rest[0];
-                let seq = u64::from_le_bytes(rest[1..9].try_into().unwrap());
-                match kind {
-                    K_FIN => return Ok(WireItem::Fin(seq)),
-                    _ => continue, // not meaningful inbound; skip
-                }
-            }
-            let len = len as usize;
-            if len > MAX_FRAME_BYTES {
-                return Err(()); // desynced stream; reconnect resyncs
-            }
-            self.frame_buf.resize(len, 0);
-            let stream = self.conn.as_mut().ok_or(())?;
-            stream.read_exact(&mut self.frame_buf).map_err(|_| ())?;
-            return match Frame::from_bytes(&self.frame_buf) {
-                Ok(f) => Ok(WireItem::Frame(f)),
-                // Corrupt frame: unlike the plain receiver we must not
-                // skip it (that would be loss) — reconnect and let the
-                // sender replay it.
-                Err(_) => Err(()),
-            };
-        }
-    }
-}
-
-impl Drop for ReconnectingRx {
-    fn drop(&mut self) {
-        if let Some(s) = &self.conn {
-            let _ = s.shutdown(Shutdown::Both);
-        }
+        self.0.recv()
     }
 }
 
 impl FrameRx for ReconnectingRx {
     fn recv(&mut self) -> Result<Option<Frame>> {
-        ReconnectingRx::recv(self)
+        self.0.recv()
     }
 
     fn kind(&self) -> &'static str {
@@ -852,7 +175,7 @@ impl FrameRx for ReconnectingRx {
     }
 
     fn resilience(&self) -> Option<Arc<ResilienceStats>> {
-        Some(self.stats.clone())
+        Some(self.0.stats())
     }
 }
 
@@ -872,8 +195,13 @@ pub fn resilient_loopback_pair(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::conduit::{write_ctrl, write_frame_bytes};
+    use crate::net::session::{parse_ctrl, CTRL_LEN, CTRL_MARKER, K_ACK, K_FIN, K_FIN_ACK, K_HELLO};
     use crate::quant::codec::Codec;
     use crate::quant::Method;
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
 
     fn fast_cfg() -> ResilienceConfig {
         ResilienceConfig {

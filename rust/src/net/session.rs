@@ -1,0 +1,676 @@
+//! The reliability **session layer**: every protocol decision of the
+//! fault-tolerant link, with *no socket types in scope*.
+//!
+//! [`SessionTx`]/[`SessionRx`] own the shared sequence space of one stage
+//! boundary — the bounded replay buffer, cumulative-ACK trimming, the
+//! `HELLO{next_expected}` resync contract, the receive-side dedup/reorder
+//! window and the FIN/FIN_ACK drain handshake. They operate purely on
+//! frames and 13-byte control records; the **conduit layer**
+//! ([`super::conduit`]) moves those bytes over real connections, and the
+//! boundary glue ([`super::stripe`], [`super::resilient`]) decides *which*
+//! connection carries *which* record.
+//!
+//! Because a session is independent of its conduits, one session can span
+//! N of them (connection striping): every conduit that (re)appears is
+//! greeted with the same cumulative `HELLO`, replays from the same
+//! buffer, and feeds the same reorder window — losing a conduit is a
+//! resync, never a new sequence space.
+//!
+//! Wire format (unchanged from the pre-split resilient layer): data
+//! frames are length-prefixed (`u32 LE || frame bytes`); control records
+//! use the impossible length prefix `u32::MAX` as a marker:
+//!
+//! ```text
+//! marker u32 = 0xFFFF_FFFF | kind u8 | seq u64 LE      (13 bytes)
+//! kind: 1 HELLO{next_expected}  receiver → sender, on every (re)connect
+//!       2 ACK{next_expected}    receiver → sender, cumulative
+//!       3 FIN{end_seq}          sender → receiver, after the last frame
+//!       4 FIN_ACK{end_seq}      receiver → sender, everything received
+//! ```
+
+use super::frame::Frame;
+use crate::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Duration;
+
+/// Length-prefix value marking a control record (can never be a frame
+/// length: it exceeds [`MAX_FRAME_BYTES`]).
+pub const CTRL_MARKER: u32 = u32::MAX;
+/// Control record size: marker u32 + kind u8 + seq u64.
+pub const CTRL_LEN: usize = 13;
+
+/// Upper bound on an incoming frame's length prefix; anything larger is a
+/// corrupt or hostile stream, not a real activation frame.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+pub const K_HELLO: u8 = 1;
+pub const K_ACK: u8 = 2;
+pub const K_FIN: u8 = 3;
+pub const K_FIN_ACK: u8 = 4;
+
+/// Serialize one control record.
+pub fn ctrl_record(kind: u8, seq: u64) -> [u8; CTRL_LEN] {
+    let mut rec = [0u8; CTRL_LEN];
+    rec[0..4].copy_from_slice(&CTRL_MARKER.to_le_bytes());
+    rec[4] = kind;
+    rec[5..13].copy_from_slice(&seq.to_le_bytes());
+    rec
+}
+
+/// Parse the record at `rec` (13 bytes, marker already checked by the
+/// caller): `(kind, seq)`.
+pub fn parse_ctrl(rec: &[u8]) -> (u8, u64) {
+    (rec[4], u64::from_le_bytes(rec[5..13].try_into().unwrap()))
+}
+
+/// Tuning for the reliability session and its conduits. Defaults suit
+/// LAN/edge deployments; tests shrink every duration.
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Sent-but-unacked frames kept for replay. A full buffer blocks the
+    /// sender until the receiver acks (backpressure), so no unacked frame
+    /// is ever evicted — the no-loss guarantee depends on that. Both ends
+    /// of a link should share this value: the receiver batches its
+    /// cumulative acks once per `replay_capacity / 4` frames, and a
+    /// striped receiver bounds its reorder window by it.
+    pub replay_capacity: usize,
+    /// Total budget to get a link back after a failure; exhausted ⇒ the
+    /// outage is reported as a hard error.
+    pub reconnect_timeout: Duration,
+    /// Budget for the FIRST connection of the session. Multi-process
+    /// startup is order-independent, so the initial peer wait must be as
+    /// generous as the plain-TCP connect retry — not the (typically
+    /// tighter) mid-run reconnect budget.
+    pub initial_timeout: Duration,
+    /// First redial delay (doubles per attempt).
+    pub backoff_base: Duration,
+    /// Redial delay cap.
+    pub backoff_max: Duration,
+    /// Jitter fraction in `[0, 1]`: each delay is scaled by a factor from
+    /// `[1 - jitter, 1]`.
+    pub jitter: f64,
+    /// How long the dialer waits for the peer's `HELLO` on a fresh
+    /// connection before treating the attempt as failed.
+    pub hello_timeout: Duration,
+    /// Budget for the FIN/FIN_ACK drain at shutdown (includes any final
+    /// reconnect + replay needed to deliver the tail).
+    pub drain_timeout: Duration,
+    /// Seed for the jitter RNG (deterministic schedules in tests).
+    pub seed: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            replay_capacity: 128,
+            reconnect_timeout: Duration::from_secs(10),
+            initial_timeout: Duration::from_secs(30),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_secs(1),
+            jitter: 0.5,
+            hello_timeout: Duration::from_secs(2),
+            drain_timeout: Duration::from_secs(10),
+            seed: 0x5150_1ead,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental wire decoder
+// ---------------------------------------------------------------------------
+
+/// One parsed item off a conduit's byte stream.
+#[derive(Debug)]
+pub enum WireItem {
+    Frame(Frame),
+    /// `(kind, seq)` control record.
+    Ctrl(u8, u64),
+}
+
+/// Incremental parser for the session wire format. Conduits read whatever
+/// bytes are available (striped receivers cannot block on one connection
+/// while another has data) and feed them here; complete items pop out as
+/// they materialize. Any desync — a non-marker prefix that exceeds
+/// [`MAX_FRAME_BYTES`], or a frame that fails its own header/CRC checks —
+/// is an error: the conduit must be dropped and resynced (replay makes
+/// that lossless), never skipped over.
+#[derive(Debug, Default)]
+pub struct WireDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WireDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes read off a conduit.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // Compact lazily so the buffer doesn't grow without bound.
+        if self.pos > 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn available(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    /// Next complete item, if the buffer holds one.
+    pub fn next(&mut self) -> Result<Option<WireItem>> {
+        let avail = self.available();
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let prefix = u32::from_le_bytes(avail[0..4].try_into().unwrap());
+        if prefix == CTRL_MARKER {
+            if avail.len() < CTRL_LEN {
+                return Ok(None);
+            }
+            let (kind, seq) = parse_ctrl(&avail[..CTRL_LEN]);
+            self.pos += CTRL_LEN;
+            return Ok(Some(WireItem::Ctrl(kind, seq)));
+        }
+        let len = prefix as usize;
+        anyhow::ensure!(
+            len <= MAX_FRAME_BYTES,
+            "corrupt stream: frame length prefix {len} exceeds {MAX_FRAME_BYTES}"
+        );
+        if avail.len() < 4 + len {
+            return Ok(None);
+        }
+        // A corrupt frame is an error, not a skip: the resilient contract
+        // is zero loss, and the sender's replay buffer still holds it.
+        let frame = Frame::from_bytes(&avail[4..4 + len])?;
+        self.pos += 4 + len;
+        Ok(Some(WireItem::Frame(frame)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sender-side session state
+// ---------------------------------------------------------------------------
+
+/// Sender half of the session: the bounded replay buffer plus the
+/// cumulative-ACK / HELLO-resync / FIN bookkeeping. Owns no I/O: callers
+/// record what they are about to write, apply the control records they
+/// read, and iterate [`SessionTx::replay_tail`] after each resync.
+#[derive(Debug)]
+pub struct SessionTx {
+    /// `(seq, serialized frame)` for every sent-but-unacked frame,
+    /// ascending and contiguous.
+    replay: VecDeque<(u64, Vec<u8>)>,
+    capacity: usize,
+    /// Receiver's cumulative position: everything below is delivered.
+    acked: u64,
+    /// One past the highest seq ever recorded (the FIN boundary).
+    next_seq: u64,
+    fin_acked: bool,
+}
+
+impl SessionTx {
+    pub fn new(replay_capacity: usize) -> Self {
+        SessionTx {
+            replay: VecDeque::new(),
+            capacity: replay_capacity.max(1),
+            acked: 0,
+            next_seq: 0,
+            fin_acked: false,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Frames recorded but not yet acknowledged by the peer.
+    pub fn unacked(&self) -> usize {
+        self.replay.len()
+    }
+
+    /// Room for another frame? A full buffer is backpressure: the caller
+    /// must pump acks (or resync a conduit) before recording more.
+    pub fn has_room(&self) -> bool {
+        self.replay.len() < self.capacity
+    }
+
+    /// One past the highest recorded seq — the FIN boundary.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Receiver's cumulative ack position.
+    pub fn acked(&self) -> u64 {
+        self.acked
+    }
+
+    /// Record a frame about to go on the wire. Fails on a full buffer
+    /// (callers block for room first) or a non-ascending seq (the replay
+    /// buffer's contiguity is what makes `HELLO` resync sound).
+    pub fn record_send(&mut self, seq: u64, bytes: Vec<u8>) -> Result<()> {
+        anyhow::ensure!(self.has_room(), "replay buffer full ({} frames)", self.capacity);
+        anyhow::ensure!(
+            self.replay.back().map_or(true, |(q, _)| *q < seq),
+            "non-ascending seq {seq} recorded into the replay buffer"
+        );
+        self.replay.push_back((seq, bytes));
+        if self.next_seq <= seq {
+            self.next_seq = seq + 1;
+        }
+        Ok(())
+    }
+
+    /// The bytes of the most recently recorded frame (what `send` is
+    /// about to write).
+    pub fn latest(&self) -> Option<&[u8]> {
+        self.replay.back().map(|(_, b)| b.as_slice())
+    }
+
+    /// Cumulative ack: drop everything below `next_expected`.
+    pub fn on_ack(&mut self, next_expected: u64) {
+        while self.replay.front().map_or(false, |(q, _)| *q < next_expected) {
+            self.replay.pop_front();
+        }
+        self.acked = self.acked.max(next_expected);
+    }
+
+    /// A (re)connecting conduit's `HELLO{next_expected}`: trim to the
+    /// receiver's cumulative position and validate that the replay buffer
+    /// can cover the tail. After this the caller writes every frame from
+    /// [`SessionTx::replay_tail`] onto that conduit.
+    pub fn on_hello(&mut self, next_expected: u64) -> Result<()> {
+        anyhow::ensure!(
+            next_expected <= self.next_seq,
+            "peer expects seq {next_expected} but only {} were ever sent",
+            self.next_seq
+        );
+        self.on_ack(next_expected);
+        if let Some((front, _)) = self.replay.front() {
+            // Contiguity means the trimmed buffer starts exactly where the
+            // receiver resumes; anything else is an unrecoverable gap
+            // (e.g. a peer that lost acknowledged state).
+            anyhow::ensure!(
+                *front == next_expected,
+                "replay buffer cannot cover the receiver's position: have seq {front}, peer needs {next_expected}"
+            );
+        }
+        Ok(())
+    }
+
+    /// The unacked tail, in order — what a freshly resynced conduit must
+    /// carry before any new frame.
+    pub fn replay_tail(&self) -> impl Iterator<Item = &[u8]> {
+        self.replay.iter().map(|(_, b)| b.as_slice())
+    }
+
+    /// Apply one inbound control record. A mid-stream `HELLO` cannot
+    /// happen on a healthy conduit, but as a cumulative position it is
+    /// safe to treat like an ack. Unknown kinds are ignored (forward
+    /// compatibility).
+    pub fn apply_ctrl(&mut self, kind: u8, seq: u64) {
+        match kind {
+            K_ACK | K_HELLO => self.on_ack(seq),
+            K_FIN_ACK => self.fin_acked = true,
+            _ => {}
+        }
+    }
+
+    /// Has the peer confirmed the drain?
+    pub fn fin_acked(&self) -> bool {
+        self.fin_acked
+    }
+
+    /// Reset the drain confirmation (a `finish` retry re-FINs).
+    pub fn clear_fin_ack(&mut self) {
+        self.fin_acked = false;
+    }
+
+    /// The `FIN{end_seq}` record closing this session.
+    pub fn fin_record(&self) -> [u8; CTRL_LEN] {
+        ctrl_record(K_FIN, self.next_seq)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Receiver-side session state
+// ---------------------------------------------------------------------------
+
+/// What [`SessionRx::on_frame`] did with a frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RxStep {
+    /// At least one frame became deliverable — drain [`SessionRx::pop_ready`].
+    Delivered,
+    /// Already have it (replay overlap) — drop it and force an ack so the
+    /// sender resyncs its buffer.
+    Duplicate,
+    /// Ahead of the in-order point (striped arrival) — parked in the
+    /// reorder window.
+    Buffered,
+}
+
+/// Receiver half of the session: in-order delivery point, dedup/reorder
+/// window, cumulative-ack batching, and the FIN bookkeeping. Owns no I/O:
+/// the caller writes the records this hands back ([`SessionRx::hello_record`],
+/// [`SessionRx::ack_due`], FIN_ACK via [`SessionRx::fin_due`]) and commits
+/// them only once the write succeeded — a failed write costs nothing, the
+/// next conduit's `HELLO` re-establishes the cumulative position.
+#[derive(Debug)]
+pub struct SessionRx {
+    next_expected: u64,
+    /// Cumulative position last successfully written as ACK (or HELLO).
+    last_acked: u64,
+    /// Ack once per this many delivered frames. Derived as a quarter of
+    /// `replay_capacity`, so with both ends on one config the sender's
+    /// buffer can never fill before the next ack boundary is crossed —
+    /// per-frame ack packets would be pure overhead (the scheme is
+    /// cumulative and `HELLO` re-syncs any lost tail).
+    ack_every: u64,
+    /// Out-of-order arrivals (striped conduits race); keyed by seq.
+    pending: BTreeMap<u64, Frame>,
+    /// Reorder bound: 0 = strict in-order (a single ordered conduit can
+    /// never legitimately skip ahead, so a gap is a protocol error);
+    /// striped boundaries bound it by `replay_capacity` (the sender can
+    /// never be further ahead than its own unacked window).
+    reorder_window: usize,
+    /// In-order frames awaiting `pop_ready`.
+    ready: VecDeque<Frame>,
+    /// `FIN{end_seq}` received; FIN_ACK owed once everything below is in.
+    fin_at: Option<u64>,
+    /// FIN_ACK successfully written: the session is cleanly closed.
+    fin_acked: bool,
+}
+
+impl SessionRx {
+    /// `reorder_window` = 0 for a single ordered conduit, the sender's
+    /// `replay_capacity` for a striped boundary.
+    pub fn new(replay_capacity: usize, reorder_window: usize) -> Self {
+        SessionRx {
+            next_expected: 0,
+            last_acked: 0,
+            ack_every: (replay_capacity as u64 / 4).max(1),
+            pending: BTreeMap::new(),
+            reorder_window,
+            ready: VecDeque::new(),
+            fin_at: None,
+            fin_acked: false,
+        }
+    }
+
+    /// The in-order delivery point (next seq this session still needs).
+    pub fn next_expected(&self) -> u64 {
+        self.next_expected
+    }
+
+    /// The greeting for a (re)connecting conduit. Once written, the
+    /// caller commits it with [`SessionRx::mark_acked`] — HELLO doubles
+    /// as a cumulative ack.
+    pub fn hello_record(&self) -> [u8; CTRL_LEN] {
+        ctrl_record(K_HELLO, self.next_expected)
+    }
+
+    /// One inbound frame from any conduit.
+    pub fn on_frame(&mut self, f: Frame) -> Result<RxStep> {
+        if f.seq < self.next_expected || self.pending.contains_key(&f.seq) {
+            return Ok(RxStep::Duplicate);
+        }
+        if f.seq > self.next_expected {
+            anyhow::ensure!(
+                self.reorder_window > 0,
+                "sequence gap: got frame {}, expected {} (peer could not replay the tail)",
+                f.seq,
+                self.next_expected
+            );
+            anyhow::ensure!(
+                self.pending.len() < self.reorder_window,
+                "reorder window overflow: {} frames parked, still missing seq {}",
+                self.pending.len(),
+                self.next_expected
+            );
+        }
+        self.pending.insert(f.seq, f);
+        let mut delivered = false;
+        while let Some(f) = self.pending.remove(&self.next_expected) {
+            self.ready.push_back(f);
+            self.next_expected += 1;
+            delivered = true;
+        }
+        Ok(if delivered { RxStep::Delivered } else { RxStep::Buffered })
+    }
+
+    /// Next in-order frame ready for the application.
+    pub fn pop_ready(&mut self) -> Option<Frame> {
+        self.ready.pop_front()
+    }
+
+    pub fn has_ready(&self) -> bool {
+        !self.ready.is_empty()
+    }
+
+    /// The cumulative ack that should go out now, if any: every ack-batch
+    /// boundary, or unconditionally when `force`d (dedup resync). Commit
+    /// with [`SessionRx::mark_acked`] after a successful write.
+    pub fn ack_due(&self, force: bool) -> Option<u64> {
+        if !force && self.next_expected.saturating_sub(self.last_acked) < self.ack_every {
+            return None;
+        }
+        Some(self.next_expected)
+    }
+
+    /// Record that a cumulative position went out on the wire (ACK or
+    /// HELLO written successfully).
+    pub fn mark_acked(&mut self, pos: u64) {
+        self.last_acked = self.last_acked.max(pos);
+    }
+
+    /// `FIN{end_seq}` arrived (on any conduit — stripes finish out of
+    /// order, so frames above `next_expected` may still be in flight
+    /// elsewhere; FIN_ACK waits for them via [`SessionRx::fin_due`]).
+    pub fn on_fin(&mut self, end: u64) -> Result<()> {
+        if self.reorder_window == 0 {
+            // Single ordered conduit: FIN follows every frame/replay on
+            // the same stream, so any mismatch means loss.
+            anyhow::ensure!(
+                end == self.next_expected,
+                "peer finished at seq {end} but only {} frames were delivered: frames lost",
+                self.next_expected
+            );
+        } else {
+            anyhow::ensure!(
+                end >= self.next_expected,
+                "peer finished at seq {end} but {} frames were already delivered: frames lost",
+                self.next_expected
+            );
+            if let Some(prev) = self.fin_at {
+                anyhow::ensure!(
+                    prev == end,
+                    "conflicting FIN boundaries: {prev} vs {end}"
+                );
+            }
+        }
+        self.fin_at = Some(end);
+        Ok(())
+    }
+
+    /// `Some(end)` when everything up to the FIN boundary has been
+    /// received and the FIN_ACK has not been sent yet. Commit with
+    /// [`SessionRx::mark_fin_acked`] after a successful write.
+    pub fn fin_due(&self) -> Option<u64> {
+        match self.fin_at {
+            Some(end) if !self.fin_acked && self.next_expected == end => Some(end),
+            _ => None,
+        }
+    }
+
+    /// FIN_ACK went out: the session is cleanly closed (frames still in
+    /// the ready queue drain to the application first).
+    pub fn mark_fin_acked(&mut self) {
+        self.fin_acked = true;
+    }
+
+    /// Cleanly closed (FIN received, everything delivered, FIN_ACK sent)?
+    pub fn finished(&self) -> bool {
+        self.fin_acked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codec::Codec;
+    use crate::quant::Method;
+
+    fn frame(seq: u64, n: usize) -> Frame {
+        let x: Vec<f32> = (0..n).map(|i| ((i + seq as usize) as f32).sin()).collect();
+        let mut c = Codec::default();
+        Frame::new(seq, vec![n], c.encode(&x, Method::Pda, 8).unwrap())
+    }
+
+    #[test]
+    fn tx_records_trims_and_replays() {
+        let mut tx = SessionTx::new(8);
+        for seq in 0..4 {
+            tx.record_send(seq, frame(seq, 16).to_bytes()).unwrap();
+        }
+        assert_eq!(tx.unacked(), 4);
+        assert_eq!(tx.next_seq(), 4);
+        tx.on_ack(2);
+        assert_eq!(tx.unacked(), 2, "ACK{{2}} trims exactly seqs 0 and 1");
+        tx.on_hello(3).unwrap();
+        assert_eq!(tx.unacked(), 1);
+        let tail: Vec<_> = tx.replay_tail().collect();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(Frame::from_bytes(tail[0]).unwrap().seq, 3);
+    }
+
+    #[test]
+    fn tx_rejects_uncoverable_hello_and_future_hello() {
+        let mut tx = SessionTx::new(8);
+        tx.record_send(0, frame(0, 16).to_bytes()).unwrap();
+        tx.record_send(1, frame(1, 16).to_bytes()).unwrap();
+        // Peer claims to expect more than was ever sent.
+        assert!(tx.on_hello(5).is_err());
+        // Ack 1 away, then a HELLO asking for 0 again: the buffer no
+        // longer covers seq 0.
+        tx.on_ack(1);
+        assert!(tx.on_hello(0).is_err());
+    }
+
+    #[test]
+    fn tx_full_buffer_is_backpressure_not_eviction() {
+        let mut tx = SessionTx::new(2);
+        tx.record_send(0, vec![0]).unwrap();
+        tx.record_send(1, vec![1]).unwrap();
+        assert!(!tx.has_room());
+        assert!(tx.record_send(2, vec![2]).is_err(), "full buffer must refuse, never evict");
+        tx.on_ack(1);
+        assert!(tx.has_room());
+        tx.record_send(2, vec![2]).unwrap();
+    }
+
+    #[test]
+    fn rx_strict_mode_errors_on_gap() {
+        let mut rx = SessionRx::new(16, 0);
+        assert_eq!(rx.on_frame(frame(0, 16)).unwrap(), RxStep::Delivered);
+        let err = rx.on_frame(frame(2, 16)).unwrap_err();
+        assert!(err.to_string().contains("sequence gap"), "{err:#}");
+    }
+
+    #[test]
+    fn rx_reorders_across_stripes_and_dedups() {
+        let mut rx = SessionRx::new(16, 16);
+        assert_eq!(rx.on_frame(frame(1, 16)).unwrap(), RxStep::Buffered);
+        assert_eq!(rx.on_frame(frame(2, 16)).unwrap(), RxStep::Buffered);
+        assert_eq!(rx.on_frame(frame(1, 16)).unwrap(), RxStep::Duplicate, "parked frame re-arrives");
+        assert_eq!(rx.on_frame(frame(0, 16)).unwrap(), RxStep::Delivered);
+        let got: Vec<u64> = std::iter::from_fn(|| rx.pop_ready()).map(|f| f.seq).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(rx.on_frame(frame(0, 16)).unwrap(), RxStep::Duplicate, "delivered frame re-arrives");
+        assert_eq!(rx.next_expected(), 3);
+    }
+
+    #[test]
+    fn rx_ack_batching_and_force() {
+        let mut rx = SessionRx::new(16, 0); // ack_every = 4
+        for seq in 0..3 {
+            rx.on_frame(frame(seq, 16)).unwrap();
+        }
+        assert_eq!(rx.ack_due(false), None, "below the batch boundary");
+        assert_eq!(rx.ack_due(true), Some(3), "forced ack is unconditional");
+        rx.on_frame(frame(3, 16)).unwrap();
+        assert_eq!(rx.ack_due(false), Some(4));
+        rx.mark_acked(4);
+        assert_eq!(rx.ack_due(false), None);
+    }
+
+    #[test]
+    fn rx_fin_waits_for_out_of_order_stripes() {
+        // The striped drain: FIN rides one conduit while the last frames
+        // are still in flight on another. FIN_ACK must wait for them.
+        let mut rx = SessionRx::new(16, 16);
+        rx.on_frame(frame(0, 16)).unwrap();
+        rx.on_frame(frame(2, 16)).unwrap(); // stripe B finished first
+        rx.on_fin(3).unwrap();
+        assert_eq!(rx.fin_due(), None, "seq 1 still missing");
+        rx.on_frame(frame(1, 16)).unwrap();
+        assert_eq!(rx.fin_due(), Some(3));
+        rx.mark_fin_acked();
+        assert!(rx.finished());
+        let got: Vec<u64> = std::iter::from_fn(|| rx.pop_ready()).map(|f| f.seq).collect();
+        assert_eq!(got, vec![0, 1, 2], "ready frames still drain after the FIN_ACK");
+    }
+
+    #[test]
+    fn rx_strict_fin_mismatch_is_loss() {
+        let mut rx = SessionRx::new(16, 0);
+        rx.on_frame(frame(0, 16)).unwrap();
+        let err = rx.on_fin(3).unwrap_err();
+        assert!(err.to_string().contains("frames lost"), "{err:#}");
+    }
+
+    #[test]
+    fn decoder_splits_frames_and_ctrl_across_arbitrary_chunks() {
+        let f0 = frame(0, 64);
+        let f1 = frame(1, 64);
+        let mut wire = Vec::new();
+        let b = f0.to_bytes();
+        wire.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&b);
+        wire.extend_from_slice(&ctrl_record(K_ACK, 7));
+        let b = f1.to_bytes();
+        wire.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&b);
+        wire.extend_from_slice(&ctrl_record(K_FIN, 2));
+        // Feed one byte at a time: items must pop out exactly in order.
+        let mut dec = WireDecoder::new();
+        let mut items = Vec::new();
+        for byte in wire {
+            dec.extend(&[byte]);
+            while let Some(item) = dec.next().unwrap() {
+                items.push(item);
+            }
+        }
+        assert_eq!(items.len(), 4);
+        assert!(matches!(&items[0], WireItem::Frame(f) if f.seq == 0));
+        assert!(matches!(&items[1], WireItem::Ctrl(K_ACK, 7)));
+        assert!(matches!(&items[2], WireItem::Frame(f) if f.seq == 1));
+        assert!(matches!(&items[3], WireItem::Ctrl(K_FIN, 2)));
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_prefix_and_corrupt_frame() {
+        let mut dec = WireDecoder::new();
+        dec.extend(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        assert!(dec.next().is_err(), "oversized prefix is a desync");
+
+        let mut dec = WireDecoder::new();
+        let mut b = frame(0, 64).to_bytes();
+        let n = b.len();
+        b[n - 1] ^= 0xff; // CRC mismatch
+        dec.extend(&(b.len() as u32).to_le_bytes());
+        dec.extend(&b);
+        assert!(dec.next().is_err(), "corrupt frame must force a resync, not a skip");
+    }
+}

@@ -1,0 +1,915 @@
+//! Connection **striping**: one reliability session fanned out over N
+//! conduits per stage boundary.
+//!
+//! QuantPipe's premise is that the edge link — not compute — bounds
+//! pipeline throughput, so the transport must extract every bit the link
+//! offers. On high-BDP or multi-path edge links a single TCP connection
+//! leaves bandwidth on the table: one congestion window, one head-of-line
+//! queue. [`StripedTx`]/[`StripedRx`] stripe a boundary across N
+//! connections while keeping the session semantics of the resilient
+//! layer — the [`super::session`] sequence space is *shared*, so the
+//! receiver reorders across conduits, replay/ACK resync works no matter
+//! which conduit died, and the FIN/FIN_ACK drain completes even when
+//! stripes finish out of order.
+//!
+//! Scheduling: the sender round-robins frames over connected conduits
+//! with a least-stalled bias (a conduit whose recent writes stalled well
+//! above its siblings is skipped until it recovers). All stall time —
+//! ordinary write backpressure, opportunistic revival dials, full-outage
+//! reconnects — returns from `send` as busy time, so the `WindowMonitor`
+//! measures the *aggregate* bandwidth of the boundary and the
+//! `AdaptivePda` sees a lost stripe as partial bandwidth collapse:
+//!
+//! * while the session has replay slack, frames keep flowing over the
+//!   surviving stripes and only the (bounded) revival attempts stall;
+//! * once the dead stripe's unacked tail jams the cumulative ACK stream,
+//!   the replay buffer fills and `send` blocks — the same collapsed-
+//!   bandwidth signal a single-link outage produces — until a revived
+//!   conduit's `HELLO` handshake replays the gap.
+//!
+//! The single-connection resilient link ([`super::resilient`]) is exactly
+//! this machinery with N = 1 and a strict (reorder-free) receiver.
+
+use super::conduit::{
+    accept_pending, read_available, read_ctrl_timeout, write_ctrl, write_frame_bytes, write_raw,
+    AcceptedConduit, DialConduit, LinkKillSwitch, ReadSweep,
+};
+use super::frame::Frame;
+use super::session::{
+    parse_ctrl, ResilienceConfig, RxStep, SessionRx, SessionTx, WireItem, CTRL_MARKER, K_ACK,
+    K_FIN, K_FIN_ACK, K_HELLO,
+};
+use super::tcp::Backoff;
+use super::transport::{FrameRx, FrameTx};
+use crate::metrics::{ResilienceStats, StripeStats};
+use crate::Result;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Drain inbound acks at most every this many sends (sooner when the
+/// replay buffer passes half capacity) — the drain costs syscalls and the
+/// ACK scheme is cumulative, so per-send pumping buys nothing.
+const PUMP_EVERY: u32 = 16;
+
+/// Budget for one opportunistic revival dial while other stripes carry
+/// the boundary: long enough for a LAN SYN/ACK, short enough that a dead
+/// stripe costs bounded stall per attempt (the backoff schedule spaces
+/// the attempts out).
+const REVIVAL_DIAL_BUDGET: Duration = Duration::from_millis(250);
+
+// ---------------------------------------------------------------------------
+// Sender: StripedTx
+// ---------------------------------------------------------------------------
+
+/// Striped sender half: one [`SessionTx`] fanned over N dialing conduits.
+pub struct StripedTx {
+    peer: String,
+    cfg: ResilienceConfig,
+    stats: Arc<ResilienceStats>,
+    stripe_stats: Vec<Arc<StripeStats>>,
+    session: SessionTx,
+    conduits: Vec<DialConduit>,
+    /// Round-robin cursor over connected conduits.
+    rr: usize,
+    /// Session-level: the first establish uses the generous startup
+    /// budget (order-independent launch), later ones are outages.
+    ever_connected: bool,
+    /// A conduit died while frames were unacked — some of them may have
+    /// died in its kernel buffers, so the next handshake must replay the
+    /// tail. Cleared once a handshake has replayed. Keeps clean startups
+    /// replay-free: bringing up extra stripes must not echo frames the
+    /// first stripe already carried (the dedup counter means "a replay
+    /// event happened", and a clean run must report zero).
+    dirty: bool,
+    finished: bool,
+    sends_since_pump: u32,
+    /// Read-sweep scratch shared across pumps.
+    scratch: Vec<u8>,
+}
+
+impl StripedTx {
+    /// Lazily-connecting striped sender toward `peer`: all `stripes`
+    /// conduits dial the same address (the receiver multiplexes its one
+    /// listener), so no per-stripe port plumbing is needed.
+    pub fn connect_to(
+        peer: impl Into<String>,
+        stripes: usize,
+        cfg: ResilienceConfig,
+        stats: Arc<ResilienceStats>,
+    ) -> Self {
+        let stripes = stripes.max(1);
+        StripedTx {
+            peer: peer.into(),
+            session: SessionTx::new(cfg.replay_capacity),
+            cfg,
+            stats,
+            stripe_stats: (0..stripes).map(|_| Arc::new(StripeStats::default())).collect(),
+            conduits: (0..stripes).map(|_| DialConduit::new()).collect(),
+            rr: 0,
+            ever_connected: false,
+            dirty: false,
+            finished: false,
+            sends_since_pump: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ResilienceStats> {
+        self.stats.clone()
+    }
+
+    /// Live per-stripe counters (one per conduit, stable order).
+    pub fn stripe_stats(&self) -> Vec<Arc<StripeStats>> {
+        self.stripe_stats.clone()
+    }
+
+    pub fn stripes(&self) -> usize {
+        self.conduits.len()
+    }
+
+    /// Handle that can kill stripe `i`'s active socket (fault injection).
+    pub fn kill_switch_for(&self, i: usize) -> LinkKillSwitch {
+        self.conduits[i].kill.clone()
+    }
+
+    /// Frames recorded but not yet acknowledged by the peer.
+    pub fn unacked(&self) -> usize {
+        self.session.unacked()
+    }
+
+    /// Drain any acks the peer has pushed without blocking. `send` does
+    /// this itself on a schedule (every [`PUMP_EVERY`] sends, or sooner
+    /// when the replay buffer passes half capacity).
+    pub fn pump(&mut self) {
+        self.pump_all();
+    }
+
+    /// Ship one frame over the least-stalled connected stripe. Blocks
+    /// through replay-buffer backpressure and any reconnect + replay
+    /// cycle; returns the seconds spent, which is the busy time the
+    /// `WindowMonitor` turns into measured bandwidth — a full outage *is*
+    /// the bandwidth signal, and a single lost stripe shows up as the
+    /// partial collapse its revival stalls add up to.
+    pub fn send(&mut self, frame: Frame) -> Result<f64> {
+        anyhow::ensure!(!self.finished, "send on a finished striped link");
+        let t0 = Instant::now();
+        let seq = frame.seq;
+        let bytes = frame.to_bytes();
+        self.sends_since_pump += 1;
+        if self.sends_since_pump >= PUMP_EVERY
+            || self.session.unacked() + 1 >= self.session.capacity() / 2
+        {
+            self.pump_all();
+            self.sends_since_pump = 0;
+        }
+        self.wait_for_room()?;
+        self.session.record_send(seq, bytes)?;
+        loop {
+            if !self.any_connected() {
+                let deadline = Instant::now() + self.connect_budget();
+                if self.establish_by(deadline)? {
+                    // The handshake replayed the unacked tail — including
+                    // the frame just recorded — nothing left to write.
+                    break;
+                }
+                // Clean session on a fresh conduit (no replay owed):
+                // fall through and write the frame directly.
+                continue;
+            }
+            self.revive_due();
+            let i = self.pick_conduit().expect("a conduit is connected");
+            let wt0 = Instant::now();
+            let wire = self.session.latest().expect("frame just recorded").len();
+            let ok = {
+                let stream = self.conduits[i].conn.as_mut().unwrap();
+                write_frame_bytes(stream, self.session.latest().unwrap()).is_ok()
+            };
+            if ok {
+                self.conduits[i].note_stall(wt0.elapsed());
+                let s = &self.stripe_stats[i];
+                s.frames.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                s.bytes.fetch_add(wire as u64, std::sync::atomic::Ordering::Relaxed);
+                break;
+            }
+            self.down(i); // loop → reroute / reconnect
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Drain protocol: make sure every frame is delivered, send
+    /// `FIN{next_seq}` (on every connected stripe — any of them may carry
+    /// the FIN_ACK back) and wait for the confirmation. The receiver
+    /// holds its FIN_ACK until the frames still in flight on *other*
+    /// stripes have arrived, so an out-of-order stripe finish drains
+    /// cleanly.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.cfg.drain_timeout;
+        self.session.clear_fin_ack();
+        loop {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "drain of link to {} timed out after {:?} ({} frames unacked)",
+                self.peer,
+                self.cfg.drain_timeout,
+                self.session.unacked()
+            );
+            if !self.any_connected() {
+                self.establish_by(deadline)?;
+            }
+            let fin = self.session.fin_record();
+            for i in 0..self.conduits.len() {
+                if !self.conduits[i].is_connected() {
+                    continue;
+                }
+                let ok = {
+                    let stream = self.conduits[i].conn.as_mut().unwrap();
+                    write_raw(stream, &fin).is_ok()
+                };
+                if !ok {
+                    self.down(i);
+                }
+            }
+            // Wait one bounded slice for FIN_ACK; a stripe that died
+            // holding undelivered frames is revived (its handshake
+            // replays the tail), then the outer loop re-FINs — FIN is
+            // idempotent on the receiver.
+            let slice_end = Instant::now() + Duration::from_millis(50);
+            while !self.session.fin_acked()
+                && self.any_connected()
+                && Instant::now() < slice_end.min(deadline)
+            {
+                self.pump_all();
+                if self.session.fin_acked() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            self.revive_due();
+            if self.session.fin_acked() {
+                self.finished = true;
+                for c in &mut self.conduits {
+                    c.mark_down(self.cfg.backoff_base);
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    fn any_connected(&self) -> bool {
+        self.conduits.iter().any(|c| c.is_connected())
+    }
+
+    /// Take conduit `i` down. If frames were unacked at death, some of
+    /// them may have been lost in its buffers — mark the session dirty so
+    /// the next handshake replays the tail.
+    fn down(&mut self, i: usize) {
+        if self.session.unacked() > 0 {
+            self.dirty = true;
+        }
+        self.conduits[i].mark_down(self.cfg.backoff_base);
+    }
+
+    /// Budget for (re)establishing from a full outage: the first
+    /// connection of a session is startup (order-independent, generous);
+    /// later ones are outages.
+    fn connect_budget(&self) -> Duration {
+        if self.ever_connected {
+            self.cfg.reconnect_timeout
+        } else {
+            self.cfg.initial_timeout.max(self.cfg.reconnect_timeout)
+        }
+    }
+
+    /// Round-robin over connected conduits, skipping any whose recent
+    /// write stall sits well above the best sibling's (the least-stalled
+    /// bias; an absolute 1 ms slack keeps noise from defeating the
+    /// rotation).
+    fn pick_conduit(&mut self) -> Option<usize> {
+        let connected: Vec<usize> = (0..self.conduits.len())
+            .filter(|&i| self.conduits[i].is_connected())
+            .collect();
+        if connected.is_empty() {
+            return None;
+        }
+        let min_ewma = connected
+            .iter()
+            .map(|&i| self.conduits[i].stall_ewma_us)
+            .fold(f64::INFINITY, f64::min);
+        self.rr = self.rr.wrapping_add(1);
+        let start = self.rr % connected.len();
+        for k in 0..connected.len() {
+            let i = connected[(start + k) % connected.len()];
+            if self.conduits[i].stall_ewma_us <= min_ewma * 2.0 + 1e3 {
+                return Some(i);
+            }
+        }
+        Some(connected[start])
+    }
+
+    /// Read whatever control bytes are available on every connected
+    /// conduit, applying acks to the shared session. One [`WireDecoder`]
+    /// per conduit parses both directions' wire format; a data frame
+    /// arriving at the *sender* is a desynced peer, cured by reconnect.
+    fn pump_all(&mut self) {
+        for i in 0..self.conduits.len() {
+            if !self.conduits[i].is_connected() {
+                continue;
+            }
+            self.scratch.clear();
+            let sweep = {
+                let c = &mut self.conduits[i];
+                read_available(c.conn.as_mut().unwrap(), &mut self.scratch)
+            };
+            if !self.scratch.is_empty() {
+                self.conduits[i].decoder.extend(&self.scratch);
+            }
+            // Parse even when the connection died: an ack that arrived
+            // just before the EOF still trims the replay buffer.
+            let mut desynced = false;
+            loop {
+                match self.conduits[i].decoder.next() {
+                    Ok(Some(WireItem::Ctrl(kind, seq))) => self.session.apply_ctrl(kind, seq),
+                    Ok(None) => break,
+                    Ok(Some(WireItem::Frame(_))) | Err(_) => {
+                        desynced = true;
+                        break;
+                    }
+                }
+            }
+            if matches!(sweep, ReadSweep::Dead) || desynced {
+                self.down(i);
+            }
+        }
+    }
+
+    /// Block until the replay buffer has room. A full buffer on a healthy
+    /// boundary is ordinary backpressure — exactly like a full kernel
+    /// send buffer blocking `write` in plain-TCP mode — so it is never an
+    /// error and never times out. Two failure shapes are bounded: a full
+    /// outage (no conduit connected) gets the reconnect budget per
+    /// re-establish, and a dead stripe whose unacked tail has jammed the
+    /// cumulative ACK stream for the whole reconnect budget is a hard
+    /// error (its frames are the blocker and it isn't coming back).
+    fn wait_for_room(&mut self) -> Result<()> {
+        if self.session.has_room() {
+            return Ok(());
+        }
+        let mut last_acked = self.session.acked();
+        let mut stalled_since = Instant::now();
+        loop {
+            self.pump_all();
+            if self.session.has_room() {
+                return Ok(());
+            }
+            if self.session.acked() != last_acked {
+                last_acked = self.session.acked();
+                stalled_since = Instant::now();
+            }
+            if !self.any_connected() {
+                // The handshake's HELLO doubles as a cumulative ack.
+                let deadline = Instant::now() + self.cfg.reconnect_timeout;
+                self.establish_by(deadline)?;
+                continue;
+            }
+            self.revive_due();
+            if stalled_since.elapsed() > self.cfg.reconnect_timeout {
+                if let Some(i) = (0..self.conduits.len())
+                    .find(|&i| !self.conduits[i].is_connected())
+                {
+                    let down_for = self.conduits[i]
+                        .down_since
+                        .map(|t| t.elapsed())
+                        .unwrap_or_default();
+                    anyhow::bail!(
+                        "link to {} down: stripe {i} unreachable for {down_for:?} with the \
+                         replay buffer full and no ack progress for {:?} ({} frames unacked)",
+                        self.peer,
+                        self.cfg.reconnect_timeout,
+                        self.session.unacked()
+                    );
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Full-outage re-establish: dial one conduit blocking (backoff +
+    /// jitter, bounded by `deadline`), handshake, replay what must be
+    /// replayed. Returns whether that handshake replayed the unacked tail
+    /// (the caller's pending frame is then already on the wire). On the
+    /// very first establish of the session the remaining stripes are
+    /// brought up too (the peer is reachable, so quick dials land
+    /// immediately); any that fail go on the revival schedule.
+    fn establish_by(&mut self, deadline: Instant) -> Result<bool> {
+        let first_session = !self.ever_connected;
+        let target = (0..self.conduits.len())
+            .find(|&i| !self.conduits[i].is_connected())
+            .unwrap_or(0);
+        let t0 = Instant::now();
+        let mut backoff = Backoff::new(
+            self.cfg.backoff_base,
+            self.cfg.backoff_max,
+            self.cfg.jitter,
+            self.cfg.seed ^ self.conduits[target].dials ^ self.conduits[target].nonce,
+        );
+        let covered = loop {
+            let peer = self.peer.clone();
+            let stream = self.conduits[target]
+                .dial_blocking(&peer, deadline, &mut backoff)
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "link to {} down: {e} ({} frames awaiting replay)",
+                        self.peer,
+                        self.session.unacked()
+                    )
+                })?;
+            let was = self.conduits[target].ever_connected;
+            match self.handshake(target, stream, deadline) {
+                Ok(replayed) => {
+                    if was {
+                        self.note_reconnect(target, t0.elapsed());
+                    }
+                    self.ever_connected = true;
+                    break replayed;
+                }
+                Err(e) => {
+                    // Handshake failures are transient (half-dead peer,
+                    // stale backlog entry) — retry until the deadline,
+                    // then surface the real reason.
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!(
+                            "link to {} down: handshake kept failing",
+                            self.peer
+                        )));
+                    }
+                    std::thread::sleep(backoff.next_delay());
+                }
+            }
+        };
+        if first_session {
+            for i in 0..self.conduits.len() {
+                if self.conduits[i].is_connected() {
+                    continue;
+                }
+                self.try_revive(i);
+            }
+        }
+        Ok(covered)
+    }
+
+    /// Attempt one bounded revival dial for every down conduit whose
+    /// backoff schedule says it's due. Never blocks beyond the quick-dial
+    /// budget — the surviving stripes keep the boundary moving, and the
+    /// attempt's cost returns from `send` as the partial-collapse stall.
+    fn revive_due(&mut self) {
+        for i in 0..self.conduits.len() {
+            if self.conduits[i].revival_due() {
+                self.try_revive(i);
+            }
+        }
+    }
+
+    fn try_revive(&mut self, i: usize) {
+        let t0 = Instant::now();
+        let peer = self.peer.clone();
+        let was = self.conduits[i].ever_connected;
+        let budget = REVIVAL_DIAL_BUDGET
+            .min(self.cfg.backoff_max)
+            .max(Duration::from_millis(10));
+        let dialed = self.conduits[i].dial_quick(&peer, budget);
+        let result = match dialed {
+            Ok(stream) => self.handshake(i, stream, Instant::now() + self.cfg.hello_timeout),
+            Err(e) => Err(e.into()),
+        };
+        match result {
+            Ok(_) => {
+                if was {
+                    self.note_reconnect(i, t0.elapsed());
+                }
+                self.ever_connected = true;
+            }
+            Err(_) => {
+                self.conduits[i].retry_failed(self.cfg.backoff_max);
+                if was {
+                    // The failed attempt is real stall the controller
+                    // should see as (partially) collapsed bandwidth.
+                    let us = t0.elapsed().as_micros() as u64;
+                    self.stats.stall_us.fetch_add(us, std::sync::atomic::Ordering::Relaxed);
+                    self.stripe_stats[i]
+                        .stall_us
+                        .fetch_add(us, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    fn note_reconnect(&self, i: usize, stall: Duration) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let us = stall.as_micros() as u64;
+        self.stats.reconnects.fetch_add(1, Relaxed);
+        self.stats.stall_us.fetch_add(us, Relaxed);
+        self.stripe_stats[i].reconnects.fetch_add(1, Relaxed);
+        self.stripe_stats[i].stall_us.fetch_add(us, Relaxed);
+    }
+
+    /// On a fresh connection: read the receiver's `HELLO`, resync the
+    /// shared session to its cumulative position, and — when the session
+    /// may have lost frames (`dirty`, or this conduit itself reconnected)
+    /// — replay the unacked tail on this conduit (the receiver dedups
+    /// whatever other stripes already delivered). A clean session on a
+    /// fresh conduit replays nothing: bringing up extra stripes at
+    /// startup must not echo frames the first stripe carried. Returns
+    /// whether the tail was replayed.
+    fn handshake(&mut self, i: usize, mut stream: TcpStream, deadline: Instant) -> Result<bool> {
+        stream.set_nodelay(true).ok();
+        let budget = self
+            .cfg
+            .hello_timeout
+            .min(deadline.saturating_duration_since(Instant::now()))
+            .max(Duration::from_millis(1));
+        let rec = read_ctrl_timeout(&mut stream, budget)?;
+        anyhow::ensure!(
+            u32::from_le_bytes(rec[0..4].try_into().unwrap()) == CTRL_MARKER,
+            "peer is not speaking the resilient protocol (bad HELLO marker)"
+        );
+        let (kind, next_expected) = parse_ctrl(&rec);
+        anyhow::ensure!(kind == K_HELLO, "expected HELLO, got control kind {kind}");
+        self.session.on_hello(next_expected)?;
+        let replay_owed = self.dirty || self.conduits[i].ever_connected;
+        let mut replayed = 0u64;
+        let mut replayed_bytes = 0u64;
+        if replay_owed {
+            for bytes in self.session.replay_tail() {
+                write_frame_bytes(&mut stream, bytes)
+                    .map_err(|e| anyhow::anyhow!("replay write failed: {e}"))?;
+                replayed += 1;
+                replayed_bytes += bytes.len() as u64;
+            }
+        }
+        if self.conduits[i].ever_connected && replayed > 0 {
+            self.stats
+                .replayed
+                .fetch_add(replayed, std::sync::atomic::Ordering::Relaxed);
+        }
+        if replayed > 0 {
+            // Replays are wire traffic this stripe carried.
+            use std::sync::atomic::Ordering::Relaxed;
+            self.stripe_stats[i].frames.fetch_add(replayed, Relaxed);
+            self.stripe_stats[i].bytes.fetch_add(replayed_bytes, Relaxed);
+        }
+        self.conduits[i].install(stream);
+        if replay_owed {
+            // Everything unacked is back on the wire via this conduit;
+            // nothing is lost anymore until the next death-with-unacked.
+            self.dirty = false;
+        }
+        Ok(replay_owed)
+    }
+}
+
+impl FrameTx for StripedTx {
+    fn send(&mut self, frame: Frame) -> Result<f64> {
+        StripedTx::send(self, frame)
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp+striped"
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        StripedTx::finish(self)
+    }
+
+    fn resilience(&self) -> Option<Arc<ResilienceStats>> {
+        Some(self.stats.clone())
+    }
+
+    fn stripes(&self) -> Option<Vec<Arc<StripeStats>>> {
+        Some(self.stripe_stats.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Receiver: StripedRx
+// ---------------------------------------------------------------------------
+
+/// Striped receiver half: one [`SessionRx`] fed by every conduit the kept
+/// listener accepts. Conduits are polled (a blocking read on one would
+/// starve the others); frames reorder through the session's shared
+/// sequence space, so in-order delivery holds no matter how the stripes
+/// interleave.
+pub struct StripedRx {
+    listener: Arc<TcpListener>,
+    cfg: ResilienceConfig,
+    stats: Arc<ResilienceStats>,
+    session: SessionRx,
+    conduits: Vec<AcceptedConduit>,
+    /// Conduit deaths not yet replaced by an accept — the next accepts
+    /// count as re-accepts (a clean striped startup accepts N conduits
+    /// without a single death, so none of those count).
+    deaths: u64,
+    ever_connected: bool,
+    done: bool,
+    scratch: Vec<u8>,
+}
+
+impl StripedRx {
+    /// Striped receiver on `listener`: accepts however many stripes dial
+    /// in and reorders across them (window bounded by `replay_capacity`).
+    pub fn accept_on(
+        listener: Arc<TcpListener>,
+        cfg: ResilienceConfig,
+        stats: Arc<ResilienceStats>,
+    ) -> Self {
+        let reorder = cfg.replay_capacity.max(1);
+        Self::with_reorder_window(listener, cfg, stats, reorder)
+    }
+
+    /// Strict single-conduit receiver (the classic resilient link): any
+    /// sequence gap is a protocol error, never parked.
+    pub fn accept_on_ordered(
+        listener: Arc<TcpListener>,
+        cfg: ResilienceConfig,
+        stats: Arc<ResilienceStats>,
+    ) -> Self {
+        Self::with_reorder_window(listener, cfg, stats, 0)
+    }
+
+    fn with_reorder_window(
+        listener: Arc<TcpListener>,
+        cfg: ResilienceConfig,
+        stats: Arc<ResilienceStats>,
+        reorder: usize,
+    ) -> Self {
+        StripedRx {
+            listener,
+            session: SessionRx::new(cfg.replay_capacity, reorder),
+            cfg,
+            stats,
+            conduits: Vec::new(),
+            deaths: 0,
+            ever_connected: false,
+            done: false,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ResilienceStats> {
+        self.stats.clone()
+    }
+
+    /// Next in-order frame; `Ok(None)` only after the peer's `FIN` (clean
+    /// drain). Conduit failures trigger re-accept + resync internally and
+    /// only surface as `Err` once every conduit is gone and the
+    /// reconnect budget is exhausted.
+    pub fn recv(&mut self) -> Result<Option<Frame>> {
+        loop {
+            if let Some(f) = self.session.pop_ready() {
+                self.try_ack(false);
+                return Ok(Some(f));
+            }
+            if self.done {
+                return Ok(None);
+            }
+            self.accept_new();
+            if self.conduits.is_empty() {
+                self.await_peer()?;
+                continue;
+            }
+            let progressed = self.poll_conduits()?;
+            self.try_ack(false);
+            self.try_fin_ack();
+            if !progressed && !self.session.has_ready() && !self.done {
+                if self.conduits.len() == 1 {
+                    self.block_on_single();
+                } else {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// With exactly one conduit (the resilient N = 1 default), idle time
+    /// is spent in one bounded blocking read instead of a poll sleep — no
+    /// busy wakeups and no added per-frame latency on a quiet link.
+    /// EOF/errors are left for the next poll sweep to classify (EOF is
+    /// sticky), and the 20 ms bound keeps re-accept sweeps responsive.
+    fn block_on_single(&mut self) {
+        use std::io::Read;
+        let c = &mut self.conduits[0];
+        if c.stream.set_read_timeout(Some(Duration::from_millis(20))).is_err() {
+            return;
+        }
+        let mut tmp = [0u8; 4096];
+        if let Ok(n) = c.stream.read(&mut tmp) {
+            if n > 0 {
+                c.decoder.extend(&tmp[..n]);
+            }
+        }
+        c.stream.set_read_timeout(None).ok();
+    }
+
+    /// Greet every connection waiting on the listener (non-blocking).
+    fn accept_new(&mut self) {
+        for stream in accept_pending(&self.listener) {
+            self.adopt(stream);
+        }
+    }
+
+    fn adopt(&mut self, mut stream: TcpStream) {
+        stream.set_nodelay(true).ok();
+        let hello = self.session.hello_record();
+        if write_raw(&mut stream, &hello).is_err() {
+            return; // stale backlog entry; the dialer will retry
+        }
+        // The HELLO just written is a cumulative ack.
+        let pos = self.session.next_expected();
+        self.session.mark_acked(pos);
+        if self.ever_connected && self.deaths > 0 {
+            // Re-accepts count separately from the dialer's reconnects:
+            // a loopback link shares one stats block between both ends,
+            // and one outage must not read as two. Stall is charged on
+            // the dialing side only (the two waits overlap).
+            self.stats
+                .reaccepts
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.deaths -= 1;
+        }
+        self.ever_connected = true;
+        self.conduits.push(AcceptedConduit::new(stream));
+    }
+
+    /// Block (bounded) until at least one conduit connects — the
+    /// zero-conduit state is the striped analogue of the single link
+    /// being down.
+    fn await_peer(&mut self) -> Result<()> {
+        let was_connected = self.ever_connected;
+        // First accept of the session = startup (peers may launch in any
+        // order, as generous as the plain connect retry); later ones are
+        // outage recovery.
+        let budget = if was_connected {
+            self.cfg.reconnect_timeout
+        } else {
+            self.cfg.initial_timeout.max(self.cfg.reconnect_timeout)
+        };
+        let deadline = Instant::now() + budget;
+        while self.conduits.is_empty() {
+            self.accept_new();
+            if !self.conduits.is_empty() {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                let what = if was_connected {
+                    "peer did not reconnect"
+                } else {
+                    "no peer connected"
+                };
+                anyhow::bail!(
+                    "{what} within {budget:?} (listening on {})",
+                    self.listener
+                        .local_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".into())
+                );
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(())
+    }
+
+    /// Sweep every conduit for available bytes and feed the session.
+    /// Returns whether anything moved. Dead conduits are dropped (their
+    /// unacked frames replay on the next accept); protocol violations
+    /// (an uncoverable gap, a mismatched FIN) are hard errors.
+    fn poll_conduits(&mut self) -> Result<bool> {
+        let mut progressed = false;
+        let mut force_ack = false;
+        let mut i = 0;
+        while i < self.conduits.len() {
+            self.scratch.clear();
+            let sweep = {
+                let c = &mut self.conduits[i];
+                read_available(&mut c.stream, &mut self.scratch)
+            };
+            if !self.scratch.is_empty() {
+                self.conduits[i].decoder.extend(&self.scratch);
+            }
+            let mut dead = matches!(sweep, ReadSweep::Dead);
+            // Decode whatever arrived — even off a dead conduit, bytes
+            // that landed before the EOF still count.
+            loop {
+                let item = match self.conduits[i].decoder.next() {
+                    Ok(Some(item)) => item,
+                    Ok(None) => break,
+                    Err(_) => {
+                        // Desynced or corrupt stream: drop the conduit;
+                        // replay makes skipping nothing safe.
+                        dead = true;
+                        break;
+                    }
+                };
+                match item {
+                    WireItem::Frame(f) => match self.session.on_frame(f)? {
+                        RxStep::Delivered | RxStep::Buffered => progressed = true,
+                        RxStep::Duplicate => {
+                            // Replayed frame we already have: drop it and
+                            // re-ack immediately so the sender resyncs.
+                            self.stats
+                                .deduped
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            force_ack = true;
+                        }
+                    },
+                    WireItem::Ctrl(K_FIN, end) => {
+                        self.session.on_fin(end)?;
+                        progressed = true;
+                    }
+                    WireItem::Ctrl(_, _) => {} // not meaningful inbound; skip
+                }
+            }
+            if dead {
+                self.conduits.remove(i);
+                self.deaths += 1;
+            } else {
+                i += 1;
+            }
+        }
+        if force_ack {
+            self.try_ack(true);
+        }
+        Ok(progressed)
+    }
+
+    /// Write a cumulative `ACK` when one is due — on any live conduit; a
+    /// failed write drops that conduit (the frame is already delivered,
+    /// and the lost ack is recovered by the next connection's HELLO).
+    fn try_ack(&mut self, force: bool) {
+        let Some(pos) = self.session.ack_due(force) else {
+            return;
+        };
+        if self.write_ctrl_any(K_ACK, pos) {
+            self.session.mark_acked(pos);
+        }
+    }
+
+    /// Send the FIN_ACK once every frame below the FIN boundary is in.
+    /// On write failure stay acceptable instead of vanishing, so the
+    /// sender's reconnect + re-FIN finds us and the drain completes
+    /// (everything is received; only the acknowledgement is missing).
+    fn try_fin_ack(&mut self) {
+        let Some(end) = self.session.fin_due() else {
+            return;
+        };
+        if self.write_ctrl_any(K_FIN_ACK, end) {
+            self.session.mark_fin_acked();
+            self.done = true;
+        }
+    }
+
+    /// Write one control record on the first conduit that takes it,
+    /// dropping the ones that fail. `false` = no conduit took it.
+    fn write_ctrl_any(&mut self, kind: u8, seq: u64) -> bool {
+        let mut i = 0;
+        while i < self.conduits.len() {
+            if write_ctrl(&mut self.conduits[i].stream, kind, seq).is_ok() {
+                return true;
+            }
+            self.conduits.remove(i);
+            self.deaths += 1;
+        }
+        false
+    }
+}
+
+impl FrameRx for StripedRx {
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        StripedRx::recv(self)
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp+striped"
+    }
+
+    fn resilience(&self) -> Option<Arc<ResilienceStats>> {
+        Some(self.stats.clone())
+    }
+}
+
+/// A striped loopback boundary sharing one stats block: the Tx dials the
+/// Rx's kept listener with `stripes` conduits. Endpoints connect lazily
+/// on first use.
+pub fn striped_loopback_pair(
+    stripes: usize,
+    cfg: &ResilienceConfig,
+) -> Result<(StripedTx, StripedRx)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let stats = Arc::new(ResilienceStats::default());
+    let rx = StripedRx::accept_on(Arc::new(listener), cfg.clone(), stats.clone());
+    let tx = StripedTx::connect_to(addr, stripes, cfg.clone(), stats);
+    Ok((tx, rx))
+}

@@ -25,8 +25,10 @@ use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 /// Upper bound on an incoming frame's length prefix; anything larger is a
-/// corrupt or hostile stream, not a real activation frame.
-pub const MAX_FRAME_BYTES: usize = 1 << 30;
+/// corrupt or hostile stream, not a real activation frame. (Owned by the
+/// session layer, which shares the wire format; re-exported here for the
+/// plain-TCP receiver's historical import path.)
+pub use super::session::MAX_FRAME_BYTES;
 
 pub struct TcpFrameSender {
     stream: TcpStream,

@@ -23,8 +23,9 @@
 use super::frame::Frame;
 use super::link::SimLink;
 use super::resilient::{resilient_loopback_pair, ReconnectingRx, ReconnectingTx, ResilienceConfig};
+use super::stripe::{striped_loopback_pair, StripedRx, StripedTx};
 use super::tcp::{TcpFrameReceiver, TcpFrameSender};
-use crate::metrics::ResilienceStats;
+use crate::metrics::{ResilienceStats, StripeStats};
 use crate::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -49,6 +50,11 @@ pub trait FrameTx: Send {
     }
     /// Live reconnect/replay counters, when the transport has them.
     fn resilience(&self) -> Option<Arc<ResilienceStats>> {
+        None
+    }
+    /// Live per-stripe counters, when the boundary is striped across
+    /// multiple connections ([`super::stripe`]).
+    fn stripes(&self) -> Option<Vec<Arc<StripeStats>>> {
         None
     }
 }
@@ -81,6 +87,13 @@ pub enum LinkSpec {
     /// reconnect + sequenced replay, and shuts down through an explicit
     /// FIN/FIN_ACK drain.
     ResilientTcp(ReconnectingTx, ReconnectingRx),
+    /// Striped fault-tolerant boundary ([`super::stripe`]): one
+    /// reliability session fanned over N TCP connections, the receiver
+    /// reordering through the shared sequence space. For high-BDP or
+    /// multi-path edge links where a single connection leaves bandwidth
+    /// on the table; losing one stripe reads as partial bandwidth
+    /// collapse, not an outage.
+    Striped(StripedTx, StripedRx),
 }
 
 impl LinkSpec {
@@ -111,11 +124,29 @@ impl LinkSpec {
         Ok(LinkSpec::ResilientTcp(tx, rx))
     }
 
+    /// Striped fault-tolerant boundary over localhost: `stripes`
+    /// connections to one kept listener, one shared sequence space.
+    /// Multi-process deployments build their endpoints from
+    /// `StripedTx::connect_to` / `StripedRx::accept_on`.
+    pub fn tcp_loopback_striped(stripes: usize, cfg: ResilienceConfig) -> Result<Self> {
+        let (tx, rx) = striped_loopback_pair(stripes, &cfg)?;
+        Ok(LinkSpec::Striped(tx, rx))
+    }
+
     /// The link's resilience counters, when it has any (shared by both
     /// loopback endpoints; snapshot them after the run for the report).
     pub fn resilience(&self) -> Option<Arc<ResilienceStats>> {
         match self {
             LinkSpec::ResilientTcp(tx, _) => Some(tx.stats()),
+            LinkSpec::Striped(tx, _) => Some(tx.stats()),
+            _ => None,
+        }
+    }
+
+    /// The link's live per-stripe counters, when it is striped.
+    pub fn stripe_stats(&self) -> Option<Vec<Arc<StripeStats>>> {
+        match self {
+            LinkSpec::Striped(tx, _) => Some(tx.stripe_stats()),
             _ => None,
         }
     }
@@ -130,6 +161,7 @@ impl LinkSpec {
             }
             LinkSpec::Tcp(tx, rx) => (Box::new(tx), Box::new(rx)),
             LinkSpec::ResilientTcp(tx, rx) => (Box::new(tx), Box::new(rx)),
+            LinkSpec::Striped(tx, rx) => (Box::new(tx), Box::new(rx)),
         }
     }
 }
@@ -344,10 +376,28 @@ mod tests {
         ship(tx, rx, 6);
         let spec = LinkSpec::tcp_loopback_resilient(ResilienceConfig::default()).unwrap();
         let stats = spec.resilience().expect("resilient link exposes stats");
+        assert!(spec.stripe_stats().is_none(), "single-conduit link is not striped");
         let (tx, rx) = spec.into_endpoints(4);
         assert_eq!(tx.kind(), "tcp+resilient");
         assert!(tx.resilience().is_some());
+        assert!(tx.stripes().is_none());
         ship(tx, rx, 6);
         assert_eq!(stats.snapshot().reconnects, 0, "clean run must not reconnect");
+        let spec = LinkSpec::tcp_loopback_striped(3, ResilienceConfig::default()).unwrap();
+        let stats = spec.resilience().expect("striped link exposes stats");
+        let per_stripe = spec.stripe_stats().expect("striped link exposes stripe counters");
+        assert_eq!(per_stripe.len(), 3);
+        let (tx, rx) = spec.into_endpoints(4);
+        assert_eq!(tx.kind(), "tcp+striped");
+        assert!(tx.stripes().is_some());
+        ship(tx, rx, 6);
+        assert_eq!(stats.snapshot().reconnects, 0, "clean striped run must not reconnect");
+        // >= rather than ==: a transient reconnect would add replays,
+        // which also count as carried wire traffic.
+        let carried: u64 = per_stripe
+            .iter()
+            .map(|s| s.frames.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+        assert!(carried >= 6, "every frame must be carried by some stripe: {carried}");
     }
 }

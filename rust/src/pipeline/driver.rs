@@ -29,7 +29,10 @@
 
 use crate::adapt::{AdaptConfig, AdaptivePda};
 use crate::data::{AccuracyMeter, EvalSet};
-use crate::metrics::{LatencyHisto, ResilienceStats, ResilienceSummary, Timeline, TimelinePoint};
+use crate::metrics::{
+    LatencyHisto, ResilienceStats, ResilienceSummary, StripeStats, StripeSummary, Timeline,
+    TimelinePoint,
+};
 use crate::monitor::WindowMonitor;
 use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx, LinkSpec};
@@ -148,6 +151,9 @@ pub struct RunReport {
     /// Reconnect/replay/dedup counters aggregated over the resilient
     /// links (all zero when none is resilient, or nothing failed).
     pub resilience: ResilienceSummary,
+    /// Per-stripe wire counters for striped boundaries, concatenated in
+    /// link order (empty when no link is striped).
+    pub stripes: Vec<StripeSummary>,
 }
 
 impl RunReport {
@@ -184,6 +190,7 @@ impl RunReport {
         );
         m.insert("timeline".into(), self.timeline.to_json());
         m.insert("resilience".into(), self.resilience.to_json());
+        m.insert("stripes".into(), StripeSummary::list_to_json(&self.stripes));
         m.insert(
             "errors".into(),
             Value::Arr(self.errors.iter().map(|e| Value::Str(e.clone())).collect()),
@@ -243,10 +250,16 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         .map(|_| Arc::new(LinkCounters::default()))
         .collect();
 
-    // Keep a handle on every resilient link's counters before the specs
-    // are consumed into thread-owned endpoints.
+    // Keep a handle on every resilient link's counters (and the striped
+    // links' per-stripe blocks) before the specs are consumed into
+    // thread-owned endpoints.
     let resilience_stats: Vec<Arc<ResilienceStats>> =
         links.iter().filter_map(|l| l.resilience()).collect();
+    let stripe_handles: Vec<Arc<StripeStats>> = links
+        .iter()
+        .filter_map(|l| l.stripe_stats())
+        .flatten()
+        .collect();
 
     // --- stage + sender threads ----------------------------------------------
     let mut threads = Vec::new();
@@ -394,6 +407,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
         stage_compute_s,
         errors,
         resilience: ResilienceSummary::collect(&resilience_stats),
+        stripes: StripeSummary::collect(&stripe_handles),
     })
 }
 

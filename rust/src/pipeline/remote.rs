@@ -25,7 +25,7 @@
 
 use crate::adapt::AdaptConfig;
 use crate::data::AccuracyMeter;
-use crate::metrics::{LatencyHisto, ResilienceSummary, Timeline};
+use crate::metrics::{LatencyHisto, ResilienceSummary, StripeSummary, Timeline};
 use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx};
 use crate::pipeline::driver::{
@@ -80,6 +80,9 @@ pub struct WorkerReport {
     /// Reconnect/replay/dedup counters from resilient transports (both
     /// the upstream rx and the downstream tx; zero otherwise).
     pub resilience: ResilienceSummary,
+    /// Per-stripe wire counters when the output link is striped (empty
+    /// otherwise).
+    pub stripes: Vec<StripeSummary>,
 }
 
 /// Run one stage over arbitrary transports until the upstream closes.
@@ -95,6 +98,7 @@ pub fn run_worker(
     // Counter handles outlive the endpoints, which move into threads.
     let resilience_handles: Vec<_> =
         rx.resilience().into_iter().chain(tx.resilience()).collect();
+    let stripe_handles: Vec<_> = tx.stripes().into_iter().flatten().collect();
     let initial_bits = if cfg.quantize_output { cfg.quant.initial_bits } else { BITS_NONE };
     let bits = Arc::new(AtomicU8::new(initial_bits));
     let timeline = Arc::new(Mutex::new(Timeline::default()));
@@ -140,6 +144,7 @@ pub fn run_worker(
         out_mean_bytes: counters.mean_frame_bytes(),
         errors,
         resilience: ResilienceSummary::collect(&resilience_handles),
+        stripes: StripeSummary::collect(&stripe_handles),
     })
 }
 
@@ -211,6 +216,9 @@ pub struct CoordinatorReport {
     /// Reconnect/replay/dedup counters from resilient transports (feed
     /// and return links; zero otherwise).
     pub resilience: ResilienceSummary,
+    /// Per-stripe wire counters when the feed link is striped (empty
+    /// otherwise).
+    pub stripes: Vec<StripeSummary>,
 }
 
 /// Feed the workload into stage 0 (`feed`) and score logits returning
@@ -228,6 +236,7 @@ pub fn run_coordinator(
     let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
     let resilience_handles: Vec<_> =
         feed.resilience().into_iter().chain(ret.resilience()).collect();
+    let stripe_handles: Vec<_> = feed.stripes().into_iter().flatten().collect();
     // Feed-failure propagation into the sink/drain path: how many
     // microbatches actually went out, and whether the feeder is done.
     // Without this the sink would keep waiting for `total` returns that
@@ -348,5 +357,6 @@ pub fn run_coordinator(
         latency,
         errors,
         resilience: ResilienceSummary::collect(&resilience_handles),
+        stripes: StripeSummary::collect(&stripe_handles),
     })
 }

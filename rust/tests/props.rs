@@ -1,11 +1,13 @@
 //! Property-based tests (in-tree harness, see util::prop) over the
 //! coordinator invariants: codec/frame roundtrips, pack/unpack identity,
 //! controller monotonicity and ladder feasibility, partitioner optimality
-//! vs the reference DP, monitor arithmetic.
+//! vs the reference DP, monitor arithmetic, and the reliability session
+//! layer's exactly-once/in-order delivery under conduit churn.
 
 use quantpipe::adapt::{required_bits_eq2, required_bits_ladder, AdaptConfig, AdaptivePda, Policy};
 use quantpipe::monitor::WindowStats;
 use quantpipe::net::frame::Frame;
+use quantpipe::net::session::{parse_ctrl, RxStep, SessionRx, SessionTx, K_FIN, K_FIN_ACK};
 use quantpipe::partition::{partition, partition_dp, CostModel};
 use quantpipe::prop_assert;
 use quantpipe::quant::codec::Codec;
@@ -154,6 +156,150 @@ fn prop_controller_volume_invariance() {
         for cur in [16u8, 8, 6, 4, 2] {
             prop_assert!(mk(cur) == base, "invariance at cur={cur}");
         }
+        Ok(())
+    });
+}
+
+/// The session-layer invariant behind both the resilient link and the
+/// striped boundary: under ARBITRARY interleavings of sends, conduit
+/// kills, resyncs (HELLO + replay) and ack batches, the receiver delivers
+/// every sequence number exactly once and in order, and the sender's
+/// replay buffer never exceeds `replay_capacity`. Conduits are modeled as
+/// plain FIFOs of serialized frames (a kill drops the in-flight tail —
+/// exactly what a dead socket does); no socket types anywhere.
+#[test]
+fn prop_session_delivers_exactly_once_in_order_under_churn() {
+    fn small_frame(seq: u64) -> Vec<u8> {
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 + seq as f32).sin()).collect();
+        let mut c = Codec::default();
+        Frame::new(seq, vec![8], c.encode(&x, Method::Pda, 8).unwrap()).to_bytes()
+    }
+    forall(30, |rng| {
+        let capacity = rng.usize(2, 12);
+        let n_conduits = rng.usize(1, 5);
+        // A single ordered conduit runs the strict receiver; stripes get
+        // a reorder window bounded by the replay capacity.
+        let reorder = if n_conduits == 1 { 0 } else { capacity };
+        let mut tx = SessionTx::new(capacity);
+        let mut rx = SessionRx::new(capacity, reorder);
+        // Some(queue) = alive conduit with its in-flight FIFO.
+        let mut conduits: Vec<Option<std::collections::VecDeque<Vec<u8>>>> =
+            (0..n_conduits).map(|_| Some(Default::default())).collect();
+        let mut next_seq = 0u64;
+        let mut delivered: Vec<u64> = Vec::new();
+
+        let mut drain_ready = |rx: &mut SessionRx, delivered: &mut Vec<u64>| {
+            while let Some(f) = rx.pop_ready() {
+                delivered.push(f.seq);
+            }
+        };
+        for _ in 0..rng.usize(30, 150) {
+            match rng.usize(0, 100) {
+                // Send: record + enqueue on a random alive conduit.
+                0..=44 => {
+                    if !tx.has_room() {
+                        continue; // backpressure: the boundary would block here
+                    }
+                    let alive: Vec<usize> = (0..n_conduits)
+                        .filter(|&i| conduits[i].is_some())
+                        .collect();
+                    if alive.is_empty() {
+                        continue;
+                    }
+                    let bytes = small_frame(next_seq);
+                    prop_assert!(
+                        tx.record_send(next_seq, bytes.clone()).is_ok(),
+                        "record with room must succeed (seq {next_seq})"
+                    );
+                    let pick = alive[rng.usize(0, alive.len())];
+                    conduits[pick].as_mut().unwrap().push_back(bytes);
+                    next_seq += 1;
+                }
+                // Deliver: pop the head of a random non-empty conduit.
+                45..=74 => {
+                    let ready: Vec<usize> = (0..n_conduits)
+                        .filter(|&i| conduits[i].as_ref().map_or(false, |q| !q.is_empty()))
+                        .collect();
+                    if ready.is_empty() {
+                        continue;
+                    }
+                    let pick = ready[rng.usize(0, ready.len())];
+                    let bytes = conduits[pick].as_mut().unwrap().pop_front().unwrap();
+                    let f = Frame::from_bytes(&bytes).unwrap();
+                    match rx.on_frame(f) {
+                        Ok(RxStep::Delivered) => drain_ready(&mut rx, &mut delivered),
+                        Ok(RxStep::Duplicate) | Ok(RxStep::Buffered) => {}
+                        Err(e) => prop_assert!(false, "on_frame rejected a legal frame: {e:#}"),
+                    }
+                }
+                // Ack batch (sometimes forced, as after a dedup).
+                75..=84 => {
+                    if let Some(pos) = rx.ack_due(rng.f64() < 0.5) {
+                        tx.on_ack(pos);
+                        rx.mark_acked(pos);
+                    }
+                }
+                // Kill: the conduit dies, its in-flight frames are lost.
+                85..=92 => {
+                    let pick = rng.usize(0, n_conduits);
+                    conduits[pick] = None;
+                }
+                // Resync: a conduit (re)connects — HELLO + replay. The old
+                // FIFO is gone either way (a reconnect is a new socket).
+                _ => {
+                    let pick = rng.usize(0, n_conduits);
+                    conduits[pick] = Some(Default::default());
+                    let hello = rx.next_expected();
+                    prop_assert!(tx.on_hello(hello).is_ok(), "resync at {hello} must be coverable");
+                    for bytes in tx.replay_tail() {
+                        conduits[pick].as_mut().unwrap().push_back(bytes.to_vec());
+                    }
+                }
+            }
+            prop_assert!(
+                tx.unacked() <= capacity,
+                "replay buffer exceeded capacity: {} > {capacity}",
+                tx.unacked()
+            );
+        }
+
+        // Converge: final resyncs + delivery until everything arrived
+        // (every kill is eventually followed by a resync in the real
+        // boundary too — that is what the reconnect budget bounds).
+        let mut rounds = 0;
+        while (delivered.len() as u64) < next_seq {
+            rounds += 1;
+            prop_assert!(rounds < 64, "drain did not converge: {}/{next_seq}", delivered.len());
+            conduits[0] = Some(Default::default());
+            prop_assert!(tx.on_hello(rx.next_expected()).is_ok(), "final resync coverable");
+            let replay: Vec<Vec<u8>> = tx.replay_tail().map(|b| b.to_vec()).collect();
+            for bytes in replay {
+                let f = Frame::from_bytes(&bytes).unwrap();
+                match rx.on_frame(f) {
+                    Ok(RxStep::Delivered) => drain_ready(&mut rx, &mut delivered),
+                    Ok(RxStep::Duplicate) | Ok(RxStep::Buffered) => {}
+                    Err(e) => prop_assert!(false, "drain on_frame failed: {e:#}"),
+                }
+            }
+            if let Some(pos) = rx.ack_due(true) {
+                tx.on_ack(pos);
+                rx.mark_acked(pos);
+            }
+        }
+        prop_assert!(
+            delivered == (0..next_seq).collect::<Vec<u64>>(),
+            "delivery not exactly-once/in-order: {delivered:?} (sent {next_seq})"
+        );
+
+        // The drain handshake closes cleanly: FIN at the boundary, the
+        // FIN_ACK owed exactly then, and the sender observes it.
+        let (kind, end) = parse_ctrl(&tx.fin_record());
+        prop_assert!(kind == K_FIN && end == next_seq, "FIN at {end}, sent {next_seq}");
+        prop_assert!(rx.on_fin(end).is_ok(), "complete session must accept FIN");
+        prop_assert!(rx.fin_due() == Some(end), "FIN_ACK due once everything is in");
+        rx.mark_fin_acked();
+        tx.apply_ctrl(K_FIN_ACK, end);
+        prop_assert!(tx.fin_acked() && rx.finished(), "drain handshake incomplete");
         Ok(())
     });
 }

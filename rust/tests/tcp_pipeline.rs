@@ -15,6 +15,7 @@ use quantpipe::adapt::{AdaptConfig, Policy};
 use quantpipe::data::EvalSet;
 use quantpipe::net::frame::Frame;
 use quantpipe::net::resilient::{resilient_loopback_pair, ResilienceConfig};
+use quantpipe::net::stripe::striped_loopback_pair;
 use quantpipe::net::tcp;
 use quantpipe::net::transport::{FrameRx, FrameTx, LinkSpec};
 use quantpipe::pipeline::{
@@ -306,6 +307,186 @@ fn resilient_pipeline_clean_shutdown_reports_no_errors() {
     for (i, st) in stats.iter().enumerate() {
         assert_eq!(st.snapshot().reconnects, 0, "link {i} reconnected on a clean run");
     }
+}
+
+#[test]
+fn striped_pipeline_clean_run_reports_no_errors_and_per_stripe_counters() {
+    // A clean 3-stage run over 4-stripe boundaries: every microbatch
+    // arrives exactly once and in order even though consecutive frames
+    // ride different connections, the FIN/FIN_ACK drain completes with
+    // zero errors and zero reconnects, and the report carries per-stripe
+    // wire counters (JSON included).
+    let classes = 16;
+    let s = 8usize;
+    let total = 24u64;
+    let stripes = 4usize;
+    let links: Vec<LinkSpec> = (0..2)
+        .map(|_| LinkSpec::tcp_loopback_striped(stripes, fast_resilience()).unwrap())
+        .collect();
+    let spec = PipelineSpec {
+        stages: (0..3)
+            .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
+            .collect(),
+        links,
+        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        adapt: None,
+        window: 4,
+        inflight: 2,
+    };
+    let report = run(spec, Workload::repeat(eval(64, classes), s, total)).unwrap();
+    assert_eq!(report.microbatches, total, "{report:?}");
+    assert!(report.errors.is_empty(), "clean striped drain must not error: {:?}", report.errors);
+    assert!((report.accuracy - 1.0).abs() < 1e-12, "loss/dup/corruption across stripes: {report:?}");
+    assert_eq!(report.resilience.reconnects, 0, "clean striped run misread as failure");
+    assert_eq!(report.stripes.len(), 2 * stripes, "per-stripe counters for both boundaries");
+    let carried: u64 = report.stripes.iter().map(|st| st.frames).sum();
+    assert!(
+        carried >= 2 * total,
+        "each boundary must carry every frame on some stripe: {carried} < {}",
+        2 * total
+    );
+    // The machine-readable report includes the per-stripe counters.
+    let json = report.to_json().to_string_pretty();
+    let back = quantpipe::util::json::Value::parse(&json).unwrap();
+    let arr = back.at("stripes").unwrap();
+    assert_eq!(arr.as_arr().unwrap().len(), 2 * stripes, "{json}");
+}
+
+#[test]
+fn striped_pipeline_survives_individual_stripe_kills() {
+    // The acceptance scenario: a 3-stage adaptive pipeline whose first
+    // boundary is striped over 4 connections; stripe 0 is killed
+    // repeatedly for ~300 ms mid-stream. The run must complete with zero
+    // microbatch loss or duplication; the report must show the stripe's
+    // reconnects; and the controller must shed bits while the stripe is
+    // down — the dead stripe's unacked tail jams the cumulative ACK
+    // stream, the replay buffer fills, and the blocked sends read as
+    // collapsed measured bandwidth.
+    let classes = 256; // 8x256 f32 ≈ 8 KB per raw frame
+    let s = 8usize;
+    let total = 80u64;
+    let mut rcfg = fast_resilience();
+    rcfg.replay_capacity = 8; // small slack: a jammed stripe blocks the sender quickly
+    let link0 = LinkSpec::tcp_loopback_striped(4, rcfg).unwrap();
+    let link1 = LinkSpec::tcp_loopback_resilient(fast_resilience()).unwrap();
+    let stats0 = link0.resilience().unwrap();
+    let per_stripe = link0.stripe_stats().unwrap();
+    let kill = match &link0 {
+        LinkSpec::Striped(tx, _) => tx.kill_switch_for(0),
+        _ => unreachable!(),
+    };
+
+    // Kill storm on stripe 0 only: wait until it is live, then shoot down
+    // every revival for 300 ms. The other three stripes stay up.
+    let killer = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while !kill.kill() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let storm = Instant::now();
+        while storm.elapsed() < Duration::from_millis(300) {
+            kill.kill();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    });
+
+    let spec = PipelineSpec {
+        stages: vec![
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::from_millis(2)),
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+        ],
+        links: vec![link0, link1],
+        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 },
+        adapt: Some(AdaptConfig {
+            // 4 ms budget per microbatch: trivially satisfied on healthy
+            // loopback stripes, hopeless while the jammed replay buffer
+            // blocks sends for tens of ms — those windows must shed.
+            target_rate: 2000.0,
+            microbatch: s,
+            policy: Policy::Ladder,
+            raise_margin: 1.1,
+        }),
+        window: 4,
+        inflight: 2,
+    };
+    let report = run(spec, Workload::repeat(eval(64, classes), s, total)).unwrap();
+    killer.join().unwrap();
+
+    // (1) zero loss / zero duplication end to end.
+    assert_eq!(report.microbatches, total, "{report:?}");
+    assert_eq!(report.images, total * s as u64);
+    assert!(report.errors.is_empty(), "stripe outage must not surface as an error: {:?}", report.errors);
+    assert!((report.accuracy - 1.0).abs() < 1e-12, "payload corrupted: {report:?}");
+    assert_eq!(report.latency.count(), total);
+    // (2) the report records the stripe's reconnects, attributed to the
+    // killed stripe.
+    assert!(
+        report.resilience.reconnects >= 1,
+        "kill storm must force at least one stripe reconnect: {:?}",
+        report.resilience
+    );
+    assert!(
+        per_stripe[0].snapshot().reconnects >= 1,
+        "reconnects must be attributed to the killed stripe: {:?}",
+        report.stripes
+    );
+    assert_eq!(
+        stats0.snapshot().reconnects,
+        report.stripes.iter().map(|st| st.reconnects).sum::<u64>(),
+        "the boundary aggregate must equal the per-stripe attribution"
+    );
+    assert!(
+        report.resilience.reconnects >= stats0.snapshot().reconnects,
+        "the run report must include the striped boundary's reconnects"
+    );
+    // (3) the surviving stripes kept carrying traffic.
+    let alive: u64 = (1..4).map(|i| per_stripe[i].snapshot().frames).sum();
+    assert!(alive > 0, "surviving stripes must carry frames: {:?}", report.stripes);
+    // (4) the controller kept running and shed bits while the stripe was
+    // down (the jammed boundary reads as collapsed bandwidth).
+    let seq = report.timeline.bits_sequence(0);
+    assert!(
+        seq.iter().any(|&b| b < 32),
+        "controller never shed bits across the stripe outage: {seq:?}"
+    );
+}
+
+#[test]
+fn striped_drain_completes_when_stripes_finish_out_of_order() {
+    // Direct endpoint test of the striped FIN/FIN_ACK drain: the sender
+    // finishes immediately after its last frame, so the FIN races frames
+    // still in flight on other stripes (and the receiver only starts
+    // reading afterwards). The receiver must hold the FIN_ACK until the
+    // shared sequence space is complete, then close cleanly.
+    let (mut tx, mut rx) = striped_loopback_pair(3, &fast_resilience()).unwrap();
+    let stats = tx.stats();
+    let total = 12u64;
+    let sender = std::thread::spawn(move || {
+        for seq in 0..total {
+            let x: Vec<f32> = (0..64).map(|i| (i as f32 + seq as f32).sin()).collect();
+            let mut c = quantpipe::quant::codec::Codec::default();
+            let enc = c.encode(&x, Method::Aciq, 8).unwrap();
+            tx.send(Frame::new(seq, vec![64], enc)).unwrap();
+        }
+        tx.finish().unwrap(); // FIN goes out while frames sit on 3 conduits
+    });
+    // First recv completes the handshakes and unblocks the sender…
+    assert_eq!(rx.recv().unwrap().unwrap().seq, 0);
+    // …then a pause lets every remaining frame (and the FIN) pile up
+    // across the 3 conduits' kernel buffers, so the subsequent reads
+    // observe maximally out-of-order arrivals with the FIN racing them.
+    std::thread::sleep(Duration::from_millis(100));
+    for want in 1..total {
+        assert_eq!(rx.recv().unwrap().unwrap().seq, want, "reorder across stripes failed");
+    }
+    assert!(rx.recv().unwrap().is_none(), "FIN must close the striped boundary cleanly");
+    sender.join().unwrap();
+    assert_eq!(
+        stats.snapshot().reconnects,
+        0,
+        "clean out-of-order drain misread as a failure"
+    );
 }
 
 #[test]

@@ -38,7 +38,7 @@ fn main() -> quantpipe::Result<()> {
             let spec = hlo_spec(
                 &manifest, &dir, &cfg,
                 vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
-                LinkQuant { method, calib_every: 1, initial_bits: b },
+                LinkQuant { method, initial_bits: b, ..Default::default() },
                 None,
             );
             let report = run(spec, Workload::one_pass(eval.clone(), manifest.microbatch))?;

@@ -29,7 +29,7 @@ fn main() -> quantpipe::Result<()> {
         hlo_spec(
             &manifest, &dir, &cfg,
             vec![BandwidthTrace::unlimited(); n_links],
-            LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+            LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
             None,
         ),
         Workload::repeat(eval.clone(), manifest.microbatch, 40),
@@ -61,7 +61,7 @@ fn main() -> quantpipe::Result<()> {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         traces,
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         Some(AdaptConfig {
             target_rate: target,
             microbatch: manifest.microbatch,

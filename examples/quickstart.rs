@@ -27,7 +27,7 @@ fn main() -> quantpipe::Result<()> {
         &dir,
         &cfg,
         vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         Some(cfg.adapt_config()?),
     );
 

@@ -42,7 +42,7 @@ fn main() -> quantpipe::Result<()> {
             mock_stage_factory(1.0, 0.0, vec![s, 4], Duration::ZERO),
         ],
         links: vec![LinkSpec::tcp_loopback()?, LinkSpec::tcp_loopback()?],
-        quant: LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        quant: LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         adapt: Some(AdaptConfig {
             target_rate: 6400.0, // 5 ms budget per microbatch
             microbatch: s,

@@ -51,7 +51,7 @@ fn spec(
             .map(|_| mock_stage_factory(1.0, 0.0, vec![S, DIM], Duration::from_micros(200)))
             .collect(),
         links: vec![LinkSpec::Sim(Arc::new(SimLink::new(trace)))],
-        quant: LinkQuant { method: Method::Pda, calib_every, initial_bits: 32 },
+        quant: LinkQuant { method: Method::Pda, calib_every, initial_bits: 32, ..Default::default() },
         adapt: Some(AdaptConfig { target_rate: target, microbatch: S, policy, raise_margin }),
         window,
         inflight: 2,

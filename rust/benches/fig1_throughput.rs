@@ -27,7 +27,7 @@ fn main() -> quantpipe::Result<()> {
         &dir,
         &cfg,
         vec![BandwidthTrace::unlimited(); n_links],
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         None,
     );
     let ceiling = run(spec, Workload::repeat(eval.clone(), manifest.microbatch, microbatches))?;
@@ -63,7 +63,7 @@ fn main() -> quantpipe::Result<()> {
         let spec = hlo_spec(
             &manifest, &dir, &cfg,
             vec![trace(); n_links],
-            LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+            LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
             None,
         );
         let r = run(spec, Workload::repeat(eval.clone(), manifest.microbatch, microbatches))?;
@@ -73,7 +73,7 @@ fn main() -> quantpipe::Result<()> {
         let spec = hlo_spec(
             &manifest, &dir, &cfg,
             vec![trace(); n_links],
-            LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 8 },
+            LinkQuant { method: Method::Pda, initial_bits: 8, ..Default::default() },
             None,
         );
         let r8 = run(spec, Workload::repeat(eval.clone(), manifest.microbatch, microbatches))?;
@@ -91,7 +91,7 @@ fn main() -> quantpipe::Result<()> {
         let spec = hlo_spec(
             &manifest, &dir, &acfg,
             vec![trace(); n_links],
-            LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+            LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
             Some(adapt),
         );
         let ra = run(spec, Workload::repeat(eval.clone(), manifest.microbatch, microbatches))?;

@@ -39,7 +39,7 @@ fn main() -> quantpipe::Result<()> {
     let probe = hlo_spec(
         &manifest, &dir, &cfg,
         vec![BandwidthTrace::unlimited(); n_links],
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         None,
     );
     let probe_rep = run(probe, Workload::repeat(eval.clone(), s, 30))?;
@@ -98,7 +98,7 @@ fn main() -> quantpipe::Result<()> {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         traces,
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         Some(adapt),
     );
     let report = run(spec, Workload::repeat(eval.clone(), s, total))?;

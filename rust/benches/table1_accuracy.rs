@@ -33,7 +33,7 @@ fn main() -> quantpipe::Result<()> {
         let mut cells = vec![method.name().to_string()];
         for &b in &bits {
             let traces = vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1];
-            let quant = LinkQuant { method, calib_every: 1, initial_bits: b };
+            let quant = LinkQuant { method, initial_bits: b, ..Default::default() };
             let spec = hlo_spec(&manifest, &dir, &cfg, traces, quant, None);
             let report = run(spec, Workload::one_pass(eval.clone(), manifest.microbatch))?;
             cells.push(format!("{:.2}%", report.accuracy * 100.0));

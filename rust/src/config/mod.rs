@@ -35,6 +35,10 @@ pub struct PipelineSection {
     pub inflight: usize,
     /// Quantize/dequantize arithmetic: "native" or "hlo" (AOT Pallas kernel).
     pub codec_backend: String,
+    /// Worker threads for the fused encode of large boundary activations
+    /// (1 = serial, the default; only the native backend parallelizes).
+    /// Output is byte-identical for every value.
+    pub codec_threads: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -161,6 +165,7 @@ impl Default for Config {
                 microbatch: 64,
                 inflight: 2,
                 codec_backend: "native".into(),
+                codec_threads: 1,
             },
             quant: QuantSection { method: Method::Pda, calib_every: 1, ds_steps: 100 },
             adapt: AdaptSection {
@@ -231,6 +236,13 @@ impl Config {
             if let Some(x) = p.get("microbatch") { cfg.pipeline.microbatch = x.as_usize()?; }
             if let Some(x) = p.get("inflight") { cfg.pipeline.inflight = x.as_usize()?; }
             if let Some(x) = p.get("codec_backend") { cfg.pipeline.codec_backend = x.as_str()?.into(); }
+            if let Some(x) = p.get("codec_threads") {
+                cfg.pipeline.codec_threads = x.as_usize()?;
+                anyhow::ensure!(
+                    cfg.pipeline.codec_threads >= 1,
+                    "pipeline.codec_threads must be >= 1 (1 = serial encode)"
+                );
+            }
         }
         if let Some(q) = v.get("quant") {
             if let Some(x) = q.get("method") { cfg.quant.method = method_from_str(x.as_str()?)?; }
@@ -376,6 +388,15 @@ mod tests {
         assert_eq!(tr.at(15.0), 400e6);
         assert!((c.link_faults().loss_p - 0.01).abs() < 1e-12);
         assert_eq!(c.run.microbatches, 500);
+    }
+
+    #[test]
+    fn codec_threads_knob_parses_validates_and_defaults() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.pipeline.codec_threads, 1, "multicore encode is opt-in");
+        let c = Config::parse(r#"{"pipeline": {"codec_threads": 4}}"#).unwrap();
+        assert_eq!(c.pipeline.codec_threads, 4);
+        assert!(Config::parse(r#"{"pipeline": {"codec_threads": 0}}"#).is_err());
     }
 
     #[test]

@@ -219,6 +219,7 @@ fn build_spec(cfg: &Config, manifest: &Manifest, dir: &std::path::Path) -> quant
         method: cfg.quant.method,
         calib_every: cfg.quant.calib_every,
         initial_bits: if cfg.adapt.enabled { 32 } else { cfg.adapt.fixed_bits },
+        codec_threads: cfg.pipeline.codec_threads,
     };
     let adapt: Option<AdaptConfig> = if cfg.adapt.enabled {
         let mut a = cfg.adapt_config()?;
@@ -415,6 +416,7 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
         method: cfg.quant.method,
         calib_every: cfg.quant.calib_every,
         initial_bits: if cfg.adapt.enabled { 32 } else { cfg.adapt.fixed_bits },
+        codec_threads: cfg.pipeline.codec_threads,
     };
     let adapt: Option<AdaptConfig> = if cfg.adapt.enabled {
         let mut a = cfg.adapt_config()?;

@@ -47,9 +47,20 @@ impl Frame {
         4 + 1 + 1 + 1 + 1 + 8 + if self.enc.params.is_some() { 16 } else { 0 } + 4 * self.shape.len() + 4 + 4
     }
 
-    /// Serialize to bytes.
+    /// Serialize to a fresh buffer. Hot paths use [`Frame::write_into`]
+    /// with a per-link wire buffer instead.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_len());
+        self.write_into(&mut out);
+        out
+    }
+
+    /// Serialize into a reusable buffer (cleared first). Senders keep one
+    /// wire buffer per link (or draw from the session's recycled pool) so
+    /// steady-state framing allocates nothing.
+    pub fn write_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.wire_len());
         out.extend_from_slice(&MAGIC.to_le_bytes());
         out.push(VERSION);
         out.push(if self.enc.params.is_some() { 1 } else { 0 });
@@ -68,7 +79,6 @@ impl Frame {
         out.extend_from_slice(&(self.enc.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&crc32(&self.enc.payload).to_le_bytes());
         out.extend_from_slice(&self.enc.payload);
-        out
     }
 
     /// Parse from bytes (validates magic, version, CRC).
@@ -225,6 +235,24 @@ mod tests {
         let bytes = f.to_bytes();
         for cut in [3usize, 10, bytes.len() - 1] {
             assert!(Frame::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn write_into_matches_to_bytes_and_reuses_the_buffer() {
+        // Descending frame sizes: after the 32-bit frame grows the buffer
+        // once, every later (smaller or equal) frame must reuse it.
+        let mut wire = Vec::new();
+        let mut ptr = std::ptr::null();
+        for (i, bits) in [32u8, 8, 8, 2].into_iter().enumerate() {
+            let f = sample_frame(bits);
+            f.write_into(&mut wire);
+            assert_eq!(wire, f.to_bytes(), "bits={bits}");
+            assert_eq!(Frame::from_bytes(&wire).unwrap(), f);
+            if i > 0 {
+                assert_eq!(wire.as_ptr(), ptr, "bits={bits}: buffer must be reused");
+            }
+            ptr = wire.as_ptr();
         }
     }
 

@@ -194,10 +194,20 @@ impl WireDecoder {
 // Sender-side session state
 // ---------------------------------------------------------------------------
 
+/// Acked-frame serialization buffers kept for reuse by [`SessionTx::take_buf`].
+/// Small: the sender serializes one frame at a time, so one spare usually
+/// suffices; a few extra absorb ack batches without hoarding memory.
+const SPARE_BUFS: usize = 4;
+
 /// Sender half of the session: the bounded replay buffer plus the
 /// cumulative-ACK / HELLO-resync / FIN bookkeeping. Owns no I/O: callers
 /// record what they are about to write, apply the control records they
 /// read, and iterate [`SessionTx::replay_tail`] after each resync.
+///
+/// Serialization buffers are pooled: frames acknowledged (and therefore
+/// dropped from the replay buffer) hand their `Vec<u8>` back, and
+/// [`SessionTx::take_buf`] supplies it for the next frame — steady-state
+/// senders serialize without allocating.
 #[derive(Debug)]
 pub struct SessionTx {
     /// `(seq, serialized frame)` for every sent-but-unacked frame,
@@ -209,6 +219,8 @@ pub struct SessionTx {
     /// One past the highest seq ever recorded (the FIN boundary).
     next_seq: u64,
     fin_acked: bool,
+    /// Recycled serialization buffers (bounded by [`SPARE_BUFS`]).
+    spare: Vec<Vec<u8>>,
 }
 
 impl SessionTx {
@@ -219,7 +231,16 @@ impl SessionTx {
             acked: 0,
             next_seq: 0,
             fin_acked: false,
+            spare: Vec::new(),
         }
+    }
+
+    /// A recycled serialization buffer (or a fresh one), for
+    /// [`crate::net::frame::Frame::write_into`] before
+    /// [`SessionTx::record_send`]. Contents are stale; `write_into`
+    /// clears it.
+    pub fn take_buf(&mut self) -> Vec<u8> {
+        self.spare.pop().unwrap_or_default()
     }
 
     pub fn capacity(&self) -> usize {
@@ -269,10 +290,15 @@ impl SessionTx {
         self.replay.back().map(|(_, b)| b.as_slice())
     }
 
-    /// Cumulative ack: drop everything below `next_expected`.
+    /// Cumulative ack: drop everything below `next_expected`, recycling
+    /// the dropped frames' serialization buffers into the spare pool.
     pub fn on_ack(&mut self, next_expected: u64) {
         while self.replay.front().map_or(false, |(q, _)| *q < next_expected) {
-            self.replay.pop_front();
+            if let Some((_, buf)) = self.replay.pop_front() {
+                if self.spare.len() < SPARE_BUFS {
+                    self.spare.push(buf);
+                }
+            }
         }
         self.acked = self.acked.max(next_expected);
     }
@@ -556,6 +582,28 @@ mod tests {
         // longer covers seq 0.
         tx.on_ack(1);
         assert!(tx.on_hello(0).is_err());
+    }
+
+    #[test]
+    fn tx_recycles_acked_serialization_buffers() {
+        let mut tx = SessionTx::new(8);
+        // Steady state: serialize into take_buf, record, get acked — the
+        // acked frame's buffer must come back out of take_buf.
+        let mut buf = tx.take_buf();
+        frame(0, 64).write_into(&mut buf);
+        let ptr = buf.as_ptr();
+        tx.record_send(0, buf).unwrap();
+        assert!(tx.take_buf().is_empty(), "nothing acked yet: fresh buffer");
+        tx.on_ack(1);
+        let recycled = tx.take_buf();
+        assert_eq!(recycled.as_ptr(), ptr, "acked frame's buffer must be reused");
+        // The pool is bounded: flooding acks never hoards more than a few.
+        let mut tx = SessionTx::new(64);
+        for seq in 0..32u64 {
+            tx.record_send(seq, vec![0u8; 128]).unwrap();
+        }
+        tx.on_ack(32);
+        assert!(tx.spare.len() <= SPARE_BUFS);
     }
 
     #[test]

@@ -155,7 +155,11 @@ impl StripedTx {
         anyhow::ensure!(!self.finished, "send on a finished striped link");
         let t0 = Instant::now();
         let seq = frame.seq;
-        let bytes = frame.to_bytes();
+        // Serialize into a buffer recycled from previously acked frames —
+        // the replay buffer owns each frame's bytes until the cumulative
+        // ack releases them, so steady state allocates nothing per frame.
+        let mut bytes = self.session.take_buf();
+        frame.write_into(&mut bytes);
         self.sends_since_pump += 1;
         if self.sends_since_pump >= PUMP_EVERY
             || self.session.unacked() + 1 >= self.session.capacity() / 2

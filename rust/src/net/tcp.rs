@@ -32,6 +32,9 @@ pub use super::session::MAX_FRAME_BYTES;
 
 pub struct TcpFrameSender {
     stream: TcpStream,
+    /// Per-link wire buffer: frames serialize into it ([`Frame::write_into`])
+    /// instead of allocating a fresh `Vec` per frame.
+    wire: Vec<u8>,
 }
 
 pub struct TcpFrameReceiver {
@@ -44,7 +47,7 @@ pub fn framed(stream: TcpStream) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     stream.set_nodelay(true).ok();
     let rx_stream = stream.try_clone()?;
     Ok((
-        TcpFrameSender { stream },
+        TcpFrameSender { stream, wire: Vec::new() },
         TcpFrameReceiver { stream: rx_stream, buf: Vec::new() },
     ))
 }
@@ -161,12 +164,13 @@ impl Drop for TcpFrameSender {
 
 impl TcpFrameSender {
     /// Ship one frame; returns seconds spent writing (the socket's own
-    /// backpressure is the bandwidth signal in TCP mode).
+    /// backpressure is the bandwidth signal in TCP mode). Serializes into
+    /// the link's reused wire buffer — no per-frame allocation.
     pub fn send(&mut self, frame: Frame) -> Result<f64> {
-        let bytes = frame.to_bytes();
+        frame.write_into(&mut self.wire);
         let t0 = Instant::now();
-        self.stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
-        self.stream.write_all(&bytes)?;
+        self.stream.write_all(&(self.wire.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&self.wire)?;
         self.stream.flush()?;
         Ok(t0.elapsed().as_secs_f64())
     }

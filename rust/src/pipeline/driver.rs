@@ -57,11 +57,20 @@ pub struct LinkQuant {
     pub calib_every: u32,
     /// Initial bitwidth (the controller may change it at any window).
     pub initial_bits: u8,
+    /// Worker threads for large fused encodes (`pipeline.codec_threads`
+    /// in the config). 1 = serial; >1 chunks big boundary activations
+    /// across scoped threads with byte-identical output.
+    pub codec_threads: usize,
 }
 
 impl Default for LinkQuant {
     fn default() -> Self {
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: BITS_NONE }
+        LinkQuant {
+            method: Method::Pda,
+            calib_every: 1,
+            initial_bits: BITS_NONE,
+            codec_threads: 1,
+        }
     }
 }
 
@@ -442,7 +451,14 @@ fn stage_loop(
     let bundle = factory()?;
     let mut compute = bundle.compute;
     let mut codec = Codec::new(bundle.quant_backend);
-    let mut decode_buf: Vec<f32> = Vec::new();
+    if let StageOut::Downstream { quant, .. } = &output {
+        codec.set_threads(quant.codec_threads);
+    }
+    // One-slot pool of decoded-activation storage: each frame decodes
+    // into the pooled buffer, the buffer moves into the `Tensor` handed
+    // to compute, and comes back after — zero per-microbatch payload
+    // allocation in steady state (this used to be a full `clone()`).
+    let mut decode_pool: Vec<f32> = Vec::new();
     // Calibration cache: reused until `calib_every` sends or a bits change.
     let mut cached: Option<QuantParams> = None;
     let mut since_calib: u32 = 0;
@@ -455,10 +471,11 @@ fn stage_loop(
             },
             StageIn::Upstream(rx) => match rx.recv() {
                 Ok(Some(frame)) => {
-                    codec.decode(&frame.enc, &mut decode_buf)?;
+                    let mut data = std::mem::take(&mut decode_pool);
+                    codec.decode(&frame.enc, &mut data)?;
                     let Frame { seq, shape, enc } = frame;
                     codec.recycle(enc); // reuse the payload allocation for our own encodes
-                    (seq, Tensor::new(decode_buf.clone(), shape))
+                    (seq, Tensor::new(data, shape))
                 }
                 Ok(None) => return Ok(()), // clean upstream shutdown
                 Err(e) => {
@@ -474,6 +491,9 @@ fn stage_loop(
             s[idx].0 += t0.elapsed().as_secs_f64();
             s[idx].1 += 1;
         }
+        // Compute is done with the input: reclaim its buffer for the
+        // next frame's decode.
+        decode_pool = tensor.into_data();
 
         match &output {
             StageOut::Sink(tx) => {

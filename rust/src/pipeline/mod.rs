@@ -71,7 +71,7 @@ mod tests {
     fn quantized_passthrough_still_classifies() {
         // 8-bit ACIQ quantization of one-hot rows keeps argmax intact.
         let eval = tiny_eval(64, 4);
-        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+        let quant = LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() };
         let spec = spec_with_links(3, 4, 8, BandwidthTrace::unlimited(), quant, None, 4);
         let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
         assert!((report.accuracy - 1.0).abs() < 1e-12, "{report:?}");
@@ -103,7 +103,7 @@ mod tests {
         // 32-bit; give the link 60 kbps so the controller must compress.
         let eval = tiny_eval(160, 4);
         let trace = BandwidthTrace::constant(60e3);
-        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 };
+        let quant = LinkQuant { method: Method::Aciq, initial_bits: 32, ..Default::default() };
         let adapt = AdaptConfig {
             target_rate: 800.0,
             microbatch: 8,
@@ -123,7 +123,7 @@ mod tests {
         let eval = tiny_eval(64, 4);
         let s = 8usize;
         let trace = BandwidthTrace::constant(100e3); // 100 kbps
-        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 };
+        let quant = LinkQuant { method: Method::Aciq, initial_bits: 32, ..Default::default() };
         let spec = spec_with_links(2, 4, s, trace, quant, None, 4);
         let report = run(spec, Workload::repeat(eval, s, 20)).unwrap();
         // Frame ≈ 128 B payload + 44 B header = 1376 bits ⇒ ~72 fps ⇒
@@ -176,7 +176,7 @@ mod tests {
         // Including the infinite-bandwidth windows an unconstrained link
         // produces: the JSON must stay valid (non-finite → null/omitted).
         let eval = tiny_eval(64, 4);
-        let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+        let quant = LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() };
         let spec = spec_with_links(2, 4, 8, BandwidthTrace::unlimited(), quant, None, 2);
         let report = run(spec, Workload::one_pass(eval, 8)).unwrap();
         let text = report.to_json().to_string_pretty();

@@ -163,7 +163,11 @@ fn worker_stage_loop(
         let bundle = factory()?;
         let mut compute = bundle.compute;
         let mut codec = Codec::new(bundle.quant_backend);
-        let mut decode_buf: Vec<f32> = Vec::new();
+        codec.set_threads(cfg.quant.codec_threads);
+        // One-slot decoded-activation pool (see the driver's stage loop):
+        // decode into it, move it through the Tensor, reclaim after
+        // compute — no per-microbatch clone.
+        let mut decode_pool: Vec<f32> = Vec::new();
         let mut cached: Option<QuantParams> = None;
         let mut since_calib: u32 = 0;
 
@@ -173,14 +177,16 @@ fn worker_stage_loop(
                 Ok(None) => return Ok(()), // clean upstream shutdown
                 Err(e) => return Err(e.context("upstream link failed")),
             };
-            codec.decode(&frame.enc, &mut decode_buf)?;
+            let mut data = std::mem::take(&mut decode_pool);
+            codec.decode(&frame.enc, &mut data)?;
             let Frame { seq, shape, enc } = frame;
             codec.recycle(enc);
-            let tensor = Tensor::new(decode_buf.clone(), shape);
+            let tensor = Tensor::new(data, shape);
 
             let t0 = Instant::now();
             let out = compute.run(&tensor)?;
             compute_secs += t0.elapsed().as_secs_f64();
+            decode_pool = tensor.into_data();
 
             let enc = encode_at_current_bits(
                 &mut codec, &out.data, &cfg.quant, &bits, &mut cached, &mut since_calib,
@@ -302,7 +308,8 @@ pub fn run_coordinator(
     let mut acc = AccuracyMeter::default();
     let mut latency = LatencyHisto::default();
     let mut codec = Codec::default();
-    let mut logits_buf: Vec<f32> = Vec::new();
+    // One-slot logits-buffer pool, same shape as the stage loops'.
+    let mut logits_pool: Vec<f32> = Vec::new();
     let mut done = 0u64;
     let mut images = 0u64;
     while done < workload.total {
@@ -313,11 +320,13 @@ pub fn run_coordinator(
         }
         match ret.recv() {
             Ok(Some(frame)) => {
-                if let Err(e) = codec.decode(&frame.enc, &mut logits_buf) {
+                let mut data = std::mem::take(&mut logits_pool);
+                if let Err(e) = codec.decode(&frame.enc, &mut data) {
                     lock(&errors).push(format!("coordinator: logits decode failed: {e:#}"));
+                    logits_pool = data;
                     continue;
                 }
-                let logits = Tensor::new(logits_buf.clone(), frame.shape.clone());
+                let logits = Tensor::new(data, frame.shape.clone());
                 if let Some(labels) = lock(&label_map).remove(&frame.seq) {
                     images += labels.len() as u64;
                     acc.add(&logits, &labels);
@@ -326,6 +335,7 @@ pub fn run_coordinator(
                     latency.record(t0.elapsed());
                 }
                 done += 1;
+                logits_pool = logits.into_data();
             }
             Ok(None) => break, // pipeline closed early
             Err(e) => {

@@ -2,15 +2,24 @@
 //! dequantize on receive. This is the adaptive PDA module's data path.
 //!
 //! The quantize/dequantize arithmetic is pluggable via [`QuantBackend`]:
-//! * [`NativeBackend`] — the pure-rust loop in [`super::uniform`];
+//! * [`NativeBackend`] — the pure-rust arithmetic of [`super::uniform`].
+//!   Because its semantics are exactly `uniform`'s, the codec runs it
+//!   through the **fused single-pass kernels** ([`super::fused`]):
+//!   quantize+pack in one read of the tensor (optionally chunked across
+//!   [`Codec::set_threads`] worker threads), unpack+dequantize in one
+//!   pass on receive — no `i32` staging buffer anywhere.
 //! * `runtime::HloQuantBackend` — the AOT-compiled Pallas kernel executed
-//!   through PJRT (the architecture's L1 hot path).
+//!   through PJRT. External arithmetic, so the codec keeps the two-pass
+//!   path for it: backend quantize into `i32` codes, then
+//!   [`super::pack`].
 //! Both produce identical codes (cross-checked in tests/runtime_hlo.rs),
-//! so the choice is a deployment/perf knob (`codec_backend` in the config),
-//! benchmarked as an ablation.
+//! and the fused path is byte-identical to the two-pass path (cross-
+//! checked in tests and `tests/codec_hotpath.rs`), so the choice is a
+//! deployment/perf knob (`codec_backend` in the config), benchmarked in
+//! benches/quant_codec.rs (`BENCH_hotpath.json`).
 
 use super::pack;
-use super::{calibrate, Method, QuantParams, BITS_NONE};
+use super::{calibrate, fused, Method, QuantParams, BITS_NONE};
 use crate::Result;
 
 /// Pluggable quantize/dequantize arithmetic.
@@ -18,6 +27,14 @@ pub trait QuantBackend: Send {
     fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> Result<()>;
     fn dequantize(&mut self, codes: &[i32], p: &QuantParams, out: &mut [f32]) -> Result<()>;
     fn name(&self) -> &'static str;
+    /// Whether this backend's arithmetic is exactly [`super::uniform`]'s,
+    /// allowing the codec to run the fused quantize+pack / unpack+
+    /// dequantize kernels ([`super::fused`]) instead of staging `i32`
+    /// codes through the backend. Default `false`: an external backend
+    /// (e.g. the AOT Pallas HLO executable) keeps the two-pass path.
+    fn fused_ok(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-rust backend (no PJRT involvement).
@@ -37,6 +54,10 @@ impl QuantBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn fused_ok(&self) -> bool {
+        true
     }
 }
 
@@ -79,9 +100,13 @@ impl Encoded {
 /// away with the frame.
 pub struct Codec {
     backend: Box<dyn QuantBackend>,
+    /// `i32` staging for the two-pass (non-fused backend) path only.
     codes: Vec<i32>,
     /// Recycled payload storage for the next `encode*` call.
     spare: Vec<u8>,
+    /// Worker threads for large fused encodes (the `codec_threads` config
+    /// knob). 1 = serial, never spawns.
+    threads: usize,
 }
 
 impl Default for Codec {
@@ -92,11 +117,21 @@ impl Default for Codec {
 
 impl Codec {
     pub fn new(backend: Box<dyn QuantBackend>) -> Self {
-        Codec { backend, codes: Vec::new(), spare: Vec::new() }
+        Codec { backend, codes: Vec::new(), spare: Vec::new(), threads: 1 }
     }
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Worker threads for large fused encodes (`codec_threads` in the
+    /// config). Only the fused native path parallelizes; 1 disables.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Hand a consumed [`Encoded`]'s payload buffer back for reuse by the
@@ -108,10 +143,12 @@ impl Codec {
         }
     }
 
+    /// NOT cleared: every consumer fully overwrites it (`pack::pack`
+    /// clears internally; the fused kernels and `raw_f32_into` resize
+    /// and write every byte), and skipping the clear means a recycled
+    /// same-size buffer costs zero memset on the resize.
     fn take_payload(&mut self) -> Vec<u8> {
-        let mut p = std::mem::take(&mut self.spare);
-        p.clear();
-        p
+        std::mem::take(&mut self.spare)
     }
 
     /// Calibrate on `x` and encode it at `bits` using `method`.
@@ -119,10 +156,7 @@ impl Codec {
     pub fn encode(&mut self, x: &[f32], method: Method, bits: u8) -> Result<Encoded> {
         if bits >= BITS_NONE {
             let mut payload = self.take_payload();
-            payload.reserve(x.len() * 4);
-            for v in x {
-                payload.extend_from_slice(&v.to_le_bytes());
-            }
+            fused::raw_f32_into(x, &mut payload);
             return Ok(Encoded { params: None, elems: x.len(), payload });
         }
         let params = calibrate(x, method, bits);
@@ -130,12 +164,19 @@ impl Codec {
     }
 
     /// Encode with pre-derived params (used when calibration is amortized
-    /// across a window rather than per-microbatch).
+    /// across a window rather than per-microbatch). Native-arithmetic
+    /// backends run the fused single-pass quantize+pack kernel (chunked
+    /// over [`Codec::set_threads`] workers for large tensors); external
+    /// backends stage `i32` codes through [`QuantBackend::quantize`].
     pub fn encode_with_params(&mut self, x: &[f32], params: QuantParams) -> Result<Encoded> {
-        self.codes.resize(x.len(), 0);
-        self.backend.quantize(x, &params, &mut self.codes)?;
         let mut payload = self.take_payload();
-        pack::pack(&self.codes, params.bits, params.pack_offset(), &mut payload);
+        if self.backend.fused_ok() {
+            fused::encode_into_mt(x, &params, self.threads, &mut payload);
+        } else {
+            self.codes.resize(x.len(), 0);
+            self.backend.quantize(x, &params, &mut self.codes)?;
+            pack::pack(&self.codes, params.bits, params.pack_offset(), &mut payload);
+        }
         Ok(Encoded { params: Some(params), elems: x.len(), payload })
     }
 
@@ -156,8 +197,18 @@ impl Codec {
                 }
             }
             Some(p) => {
-                pack::unpack(&enc.payload, enc.elems, p.bits, p.pack_offset(), &mut self.codes)?;
-                self.backend.dequantize(&self.codes, &p, out)?;
+                if self.backend.fused_ok() {
+                    fused::decode_into(&enc.payload, &p, out)?;
+                } else {
+                    pack::unpack(
+                        &enc.payload,
+                        enc.elems,
+                        p.bits,
+                        p.pack_offset(),
+                        &mut self.codes,
+                    )?;
+                    self.backend.dequantize(&self.codes, &p, out)?;
+                }
             }
         }
         Ok(())
@@ -245,6 +296,65 @@ mod tests {
         let mut enc = c.encode(&x, Method::Aciq, 4).unwrap();
         enc.payload.truncate(enc.payload.len() - 1);
         assert!(c.decode(&enc, &mut out).is_err());
+    }
+
+    /// Native arithmetic behind a `fused_ok = false` flag: forces the
+    /// two-pass i32-staging path with identical math, so fused-vs-legacy
+    /// equality can be checked through the public `Codec` API alone.
+    struct TwoPassNative(NativeBackend);
+
+    impl QuantBackend for TwoPassNative {
+        fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> crate::Result<()> {
+            self.0.quantize(x, p, out)
+        }
+        fn dequantize(
+            &mut self,
+            codes: &[i32],
+            p: &QuantParams,
+            out: &mut [f32],
+        ) -> crate::Result<()> {
+            self.0.dequantize(codes, p, out)
+        }
+        fn name(&self) -> &'static str {
+            "two-pass-native"
+        }
+    }
+
+    #[test]
+    fn fused_and_two_pass_codecs_agree_exactly() {
+        let x = test_tensor(1537); // odd: exercises sub-byte tails
+        let mut fused_c = Codec::default();
+        assert!(fused_c.backend.fused_ok());
+        let mut legacy_c = Codec::new(Box::new(TwoPassNative(NativeBackend)));
+        assert!(!legacy_c.backend.fused_ok());
+        for m in Method::ALL {
+            for bits in SUPPORTED_BITS {
+                let a = fused_c.encode(&x, m, bits).unwrap();
+                let b = legacy_c.encode(&x, m, bits).unwrap();
+                assert_eq!(a, b, "{m:?}/{bits}: fused payload must be byte-identical");
+                let (mut da, mut db) = (Vec::new(), Vec::new());
+                fused_c.decode(&a, &mut da).unwrap();
+                legacy_c.decode(&b, &mut db).unwrap();
+                assert_eq!(da, db, "{m:?}/{bits}: fused decode must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn threads_knob_does_not_change_bytes() {
+        let x = test_tensor(crate::quant::fused::MT_MIN_CHUNK_ELEMS * 2 + 17);
+        let mut serial = Codec::default();
+        let mut parallel = Codec::default();
+        parallel.set_threads(4);
+        assert_eq!(parallel.threads(), 4);
+        for bits in SUPPORTED_BITS {
+            let a = serial.encode(&x, Method::Aciq, bits).unwrap();
+            let b = parallel.encode(&x, Method::Aciq, bits).unwrap();
+            assert_eq!(a, b, "bits={bits}: parallel encode must be byte-identical");
+        }
+        // 0 clamps to 1 (serial) rather than panicking or spawning nothing.
+        parallel.set_threads(0);
+        assert_eq!(parallel.threads(), 1);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! the bins — <1% of stage compute (measured in benches/quant_codec.rs,
 //! matching the paper's "<1% overhead" claim).
 
-use super::stats::{AbsHistogram, DEFAULT_BINS};
+use super::stats::{AbsHistogram, CalibScan, DEFAULT_BINS};
 
 /// `t` from the paper: number of directed-search steps.
 pub const DEFAULT_STEPS: usize = 100;
@@ -128,11 +128,13 @@ pub fn ds_search(hist: &AbsHistogram, b_e: f32, bits: u8, steps: usize) -> DsRes
 
 /// Full DS-ACIQ calibration for tensor `x` at `bits` (exact: full data,
 /// DEFAULT_BINS — matches ref.py bit-for-bit and is what the golden tests
-/// pin).
+/// pin). The fused [`CalibScan`] derives `b_E` and the histogram's top
+/// from one stats pass, so calibration is a stats pass + a binning pass
+/// instead of the old three separate scans (mean|x|, max|x|, binning) —
+/// numerically identical output.
 pub fn ds_aciq_b(x: &[f32], bits: u8, steps: usize) -> DsResult {
-    let b_e = super::aciq::laplace_b(x);
-    let hist = AbsHistogram::compute(x, DEFAULT_BINS);
-    ds_search(&hist, b_e, bits, steps)
+    let scan = CalibScan::compute(x, DEFAULT_BINS);
+    ds_search(&scan.hist, scan.b_e(), bits, steps)
 }
 
 /// Hot-path variant: build the search histogram from a strided subsample
@@ -141,15 +143,17 @@ pub fn ds_aciq_b(x: &[f32], bits: u8, steps: usize) -> DsResult {
 /// tests) while cutting the per-microbatch search cost ~4x — this is how
 /// the deployed PDA module keeps the paper's "<1% overhead" property even
 /// on testbeds with much faster stage compute than the paper's Jetsons.
+/// Full-tensor memory traffic is a single strided read (materializing the
+/// sample); the fused scan's stats and binning passes then run over the
+/// cache-resident ≤`max_n`-element sample.
 pub fn ds_aciq_b_sampled(x: &[f32], bits: u8, steps: usize, max_n: usize) -> DsResult {
     let stride = x.len().div_ceil(max_n.max(1)).max(1);
     if stride == 1 {
         return ds_aciq_b(x, bits, steps);
     }
     let sample: Vec<f32> = x.iter().step_by(stride).copied().collect();
-    let b_e = super::aciq::laplace_b(&sample);
-    let hist = AbsHistogram::compute(&sample, DEFAULT_BINS);
-    ds_search(&hist, b_e, bits, steps)
+    let scan = CalibScan::compute(&sample, DEFAULT_BINS);
+    ds_search(&scan.hist, scan.b_e(), bits, steps)
 }
 
 /// Subsample cap used by the pipeline's per-microbatch calibration.

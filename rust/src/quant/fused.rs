@@ -1,0 +1,531 @@
+//! Fused single-pass codec kernels: quantize+pack on encode, unpack+
+//! dequantize on decode — the native data path of [`super::codec::Codec`].
+//!
+//! The two-pass path ([`super::uniform::quantize_into`] then
+//! [`super::pack::pack`], and the mirror image on receive) walks the
+//! tensor twice and stages every element through an `i32` code buffer:
+//! ~12.5 bytes of memory traffic per element at 4-bit where the packed
+//! stream is half a byte. These kernels read the f32s once and emit the
+//! packed bytes directly (and symmetrically on decode), which is what
+//! makes the codec — the per-stage cost that bounds pipeline throughput
+//! once the wire stops being the bottleneck — memory-minimal.
+//!
+//! **Fusion invariants** (checked in tests and `tests/codec_hotpath.rs`):
+//!
+//! * the per-element arithmetic is *identical* to `uniform`'s —
+//!   `clamp(round(x/scale + zp), lo, hi)` spelled as `round().max(lo)
+//!   .min(hi)` in the same order, so the fused payload is **byte-identical**
+//!   to quantize-then-pack and the fused decode is **bit-identical** to
+//!   unpack-then-dequantize (the same contract the AOT Pallas backend
+//!   honors against `uniform`, which is why the codec can swap paths
+//!   freely for the native backend only);
+//! * sub-byte widths are processed in byte-aligned element groups
+//!   (`lcm(bits, 8) / bits` elements ↦ `lcm(bits, 8) / 8` bytes) with no
+//!   bit-accumulator carried across groups, so iterations are independent
+//!   (vectorizable) and any chunk split on a group boundary produces the
+//!   exact bytes of the serial kernel — the property the multicore encode
+//!   ([`encode_into_mt`]) is built on;
+//! * decode validates payload length up front exactly like
+//!   [`super::pack::unpack`]: a truncated payload is an error, never a
+//!   panic or a short output.
+//!
+//! [`encode_into_mt`] chunks large tensors across scoped worker threads
+//! (chunk boundaries aligned to the group size, each worker writing its
+//! own disjoint byte range), gated by the `codec_threads` config knob /
+//! [`super::codec::Codec::set_threads`]; `threads = 1` (the default) never
+//! spawns.
+
+use super::pack::packed_len;
+use super::QuantParams;
+use crate::Result;
+
+/// Elements per byte-aligned group at `bits`: `lcm(bits, 8) / bits`.
+/// Chunk boundaries for parallel encode must be multiples of this so the
+/// packed stream stays byte-exact vs the serial kernel. Generic over any
+/// width (2 → 4, 4 → 2, 6 → 4, 8/16 → 1, 3 → 8, …): since 8 = 2³,
+/// `lcm(bits, 8) / bits = 8 / gcd(bits, 8)`, and the gcd is the largest
+/// power of two ≤ 8 dividing `bits`.
+pub fn group_elems(bits: u8) -> usize {
+    let b = (bits as u32).max(1);
+    8 >> b.trailing_zeros().min(3)
+}
+
+/// Per-worker minimum chunk for the multicore encode. Scoped threads are
+/// spawned and joined on every call (no persistent pool — keeping the
+/// borrow story trivially safe), which costs tens of µs per worker on
+/// the stage thread's critical path each microbatch; a ≥64k-element
+/// chunk (~100 µs+ of encode work) keeps that overhead well amortized.
+/// Tensors below 2× this always encode serially regardless of
+/// `codec_threads`.
+pub const MT_MIN_CHUNK_ELEMS: usize = 1 << 16;
+
+/// The quantizer arithmetic, spelled exactly as
+/// [`super::uniform::quantize_into`] spells it (same ops, same order) so
+/// fused and two-pass codes can never differ.
+#[inline(always)]
+fn quantize_one(v: f32, inv: f32, zp: f32, lo: f32, hi: f32) -> i32 {
+    let c = (v * inv + zp).round();
+    c.max(lo).min(hi) as i32
+}
+
+/// The dequantizer arithmetic of [`super::uniform::dequantize_into`],
+/// applied to an unpacked field `u` (offset `off` restores the signed
+/// code, matching `pack::unpack`'s `+ lo`).
+#[inline(always)]
+fn dequantize_one(u: u32, off: i32, scale: f32, zp: f32) -> f32 {
+    ((u as i32 + off) as f32 - zp) * scale
+}
+
+/// Fused quantize+pack of `x` into `out` (cleared and resized to the
+/// packed length). Single-threaded; see [`encode_into_mt`] for the
+/// chunked multicore variant.
+pub fn encode_into(x: &[f32], p: &QuantParams, out: &mut Vec<u8>) {
+    // resize, not clear+resize: every output byte is written below, so
+    // stale contents never leak into the wire, and a recycled same-size
+    // buffer costs zero memset (clear() would zero-fill the whole
+    // buffer again on the resize).
+    out.resize(packed_len(x.len(), p.bits), 0);
+    encode_chunk(x, p, out);
+}
+
+/// Fused quantize+pack with up to `threads` scoped workers. Chunk
+/// boundaries are aligned to [`group_elems`], every worker writes its own
+/// disjoint byte range of `out`, and each chunk runs the same
+/// [`encode_chunk`] kernel — so the result is byte-identical to
+/// [`encode_into`] for every thread count (asserted in tests). Workers
+/// are capped so each gets at least [`MT_MIN_CHUNK_ELEMS`] elements;
+/// smaller tensors and `threads <= 1` stay serial (no spawn at all).
+pub fn encode_into_mt(x: &[f32], p: &QuantParams, threads: usize, out: &mut Vec<u8>) {
+    // resize, not clear+resize — see `encode_into`.
+    out.resize(packed_len(x.len(), p.bits), 0);
+    let workers = threads.min(x.len() / MT_MIN_CHUNK_ELEMS).max(1);
+    if workers == 1 {
+        encode_chunk(x, p, out);
+        return;
+    }
+    let group = group_elems(p.bits);
+    let per = x.len().div_ceil(workers).next_multiple_of(group);
+    std::thread::scope(|scope| {
+        let mut rest_x = x;
+        let mut rest_out: &mut [u8] = out;
+        loop {
+            let take = per.min(rest_x.len());
+            let (chunk_x, nx) = rest_x.split_at(take);
+            // Non-final chunks are group-aligned, so their packed length
+            // is exact (no partial byte); the final chunk takes the rest.
+            let split = packed_len(take, p.bits).min(rest_out.len());
+            let (chunk_out, no) = std::mem::take(&mut rest_out).split_at_mut(split);
+            rest_x = nx;
+            rest_out = no;
+            if rest_x.is_empty() {
+                // Final chunk runs on the calling thread, which would
+                // otherwise idle in the scope join — one fewer
+                // spawn/join per encode.
+                encode_chunk(chunk_x, p, chunk_out);
+                break;
+            }
+            scope.spawn(move || encode_chunk(chunk_x, p, chunk_out));
+        }
+    });
+}
+
+/// The fused kernel over one byte-aligned chunk. `out.len()` must equal
+/// `packed_len(x.len(), p.bits)`; every output byte is written.
+fn encode_chunk(x: &[f32], p: &QuantParams, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), packed_len(x.len(), p.bits));
+    let inv = 1.0 / p.scale;
+    let (zp, lo, hi) = (p.zero_point, p.lo, p.hi);
+    let off = p.pack_offset();
+    match p.bits {
+        8 => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = (quantize_one(v, inv, zp, lo, hi) - off) as u8;
+            }
+        }
+        16 => {
+            for (o, &v) in out.chunks_exact_mut(2).zip(x) {
+                let u = (quantize_one(v, inv, zp, lo, hi) - off) as u16;
+                o.copy_from_slice(&u.to_le_bytes());
+            }
+        }
+        2 => {
+            // 4 elements ↦ 1 byte, LSB-first (pack's bit order).
+            let groups = x.len() / 4;
+            for (o, g) in out[..groups].iter_mut().zip(x.chunks_exact(4)) {
+                let q0 = (quantize_one(g[0], inv, zp, lo, hi) - off) as u32 & 3;
+                let q1 = (quantize_one(g[1], inv, zp, lo, hi) - off) as u32 & 3;
+                let q2 = (quantize_one(g[2], inv, zp, lo, hi) - off) as u32 & 3;
+                let q3 = (quantize_one(g[3], inv, zp, lo, hi) - off) as u32 & 3;
+                *o = (q0 | (q1 << 2) | (q2 << 4) | (q3 << 6)) as u8;
+            }
+            encode_tail(&x[groups * 4..], p, &mut out[groups..]);
+        }
+        4 => {
+            // 2 elements ↦ 1 byte.
+            let groups = x.len() / 2;
+            for (o, g) in out[..groups].iter_mut().zip(x.chunks_exact(2)) {
+                let q0 = (quantize_one(g[0], inv, zp, lo, hi) - off) as u32 & 0xf;
+                let q1 = (quantize_one(g[1], inv, zp, lo, hi) - off) as u32 & 0xf;
+                *o = (q0 | (q1 << 4)) as u8;
+            }
+            encode_tail(&x[groups * 2..], p, &mut out[groups..]);
+        }
+        6 => {
+            // 4 elements ↦ 3 bytes (24 bits), LSB-first.
+            let groups = x.len() / 4;
+            for (o, g) in out[..groups * 3].chunks_exact_mut(3).zip(x.chunks_exact(4)) {
+                let q0 = (quantize_one(g[0], inv, zp, lo, hi) - off) as u32 & 0x3f;
+                let q1 = (quantize_one(g[1], inv, zp, lo, hi) - off) as u32 & 0x3f;
+                let q2 = (quantize_one(g[2], inv, zp, lo, hi) - off) as u32 & 0x3f;
+                let q3 = (quantize_one(g[3], inv, zp, lo, hi) - off) as u32 & 0x3f;
+                o[0] = (q0 | (q1 << 6)) as u8;
+                o[1] = ((q1 >> 2) | (q2 << 4)) as u8;
+                o[2] = ((q2 >> 4) | (q3 << 2)) as u8;
+            }
+            encode_tail(&x[groups * 4..], p, &mut out[groups * 3..]);
+        }
+        // Non-standard sub-byte widths: the generic accumulator (pack's
+        // own fallback shape, same `bits < 8` contract). Never hit by
+        // SUPPORTED_BITS; encode params always come from `calibrate`.
+        _ => {
+            debug_assert!((1..8).contains(&p.bits), "unsupported bitwidth {}", p.bits);
+            encode_tail(x, p, out);
+        }
+    }
+}
+
+/// Generic bit-accumulator encode for a (short) byte-aligned tail — the
+/// exact loop shape of [`super::pack::pack`]'s sub-byte branch, so tail
+/// bytes match the serial reference bit for bit.
+fn encode_tail(x: &[f32], p: &QuantParams, out: &mut [u8]) {
+    let inv = 1.0 / p.scale;
+    let (zp, lo, hi) = (p.zero_point, p.lo, p.hi);
+    let off = p.pack_offset();
+    let bits = p.bits as u32;
+    let mask = (1u32 << bits) - 1;
+    let mut acc: u32 = 0;
+    let mut nbits: u32 = 0;
+    let mut w = 0usize;
+    for &v in x {
+        let u = (quantize_one(v, inv, zp, lo, hi) - off) as u32 & mask;
+        acc |= u << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out[w] = (acc & 0xff) as u8;
+            w += 1;
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out[w] = (acc & 0xff) as u8;
+    }
+}
+
+/// Fused unpack+dequantize of `out.len()` elements from `bytes`.
+///
+/// Like [`super::pack::unpack`], the payload length is validated up
+/// front: a truncated payload (cut stream, corrupt frame) is an error the
+/// driver can report, never a panic or a silently-short output.
+pub fn decode_into(bytes: &[u8], p: &QuantParams, out: &mut [f32]) -> Result<()> {
+    let n = out.len();
+    let need = packed_len(n, p.bits);
+    anyhow::ensure!(
+        bytes.len() >= need,
+        "bitstream truncated: {n} codes at {} bits need {need} bytes, got {}",
+        p.bits,
+        bytes.len()
+    );
+    let (s, zp) = (p.scale, p.zero_point);
+    let off = p.pack_offset();
+    match p.bits {
+        8 => {
+            for (o, &b) in out.iter_mut().zip(bytes) {
+                *o = dequantize_one(b as u32, off, s, zp);
+            }
+        }
+        16 => {
+            for (o, ch) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                *o = dequantize_one(u16::from_le_bytes([ch[0], ch[1]]) as u32, off, s, zp);
+            }
+        }
+        2 => {
+            let groups = n / 4;
+            for (og, &b) in out[..groups * 4].chunks_exact_mut(4).zip(&bytes[..groups]) {
+                let b = b as u32;
+                og[0] = dequantize_one(b & 3, off, s, zp);
+                og[1] = dequantize_one((b >> 2) & 3, off, s, zp);
+                og[2] = dequantize_one((b >> 4) & 3, off, s, zp);
+                og[3] = dequantize_one((b >> 6) & 3, off, s, zp);
+            }
+            decode_tail(&bytes[groups..], p, &mut out[groups * 4..]);
+        }
+        4 => {
+            let groups = n / 2;
+            for (og, &b) in out[..groups * 2].chunks_exact_mut(2).zip(&bytes[..groups]) {
+                let b = b as u32;
+                og[0] = dequantize_one(b & 0xf, off, s, zp);
+                og[1] = dequantize_one((b >> 4) & 0xf, off, s, zp);
+            }
+            decode_tail(&bytes[groups..], p, &mut out[groups * 2..]);
+        }
+        6 => {
+            let groups = n / 4;
+            for (og, bg) in out[..groups * 4]
+                .chunks_exact_mut(4)
+                .zip(bytes[..groups * 3].chunks_exact(3))
+            {
+                let (b0, b1, b2) = (bg[0] as u32, bg[1] as u32, bg[2] as u32);
+                og[0] = dequantize_one(b0 & 0x3f, off, s, zp);
+                og[1] = dequantize_one(((b0 >> 6) | (b1 << 2)) & 0x3f, off, s, zp);
+                og[2] = dequantize_one(((b1 >> 4) | (b2 << 4)) & 0x3f, off, s, zp);
+                og[3] = dequantize_one((b2 >> 2) & 0x3f, off, s, zp);
+            }
+            decode_tail(&bytes[groups * 3..], p, &mut out[groups * 4..]);
+        }
+        // Decode params come off the wire: a frame claiming a bitwidth
+        // the generic accumulator can't handle (0, or >= 8 other than
+        // the explicit arms) is a corrupt/hostile stream — surface an
+        // error, never garbage.
+        bits => {
+            anyhow::ensure!((1..8).contains(&bits), "unsupported wire bitwidth {bits}");
+            decode_tail(bytes, p, out);
+        }
+    }
+    Ok(())
+}
+
+/// Generic bit-accumulator decode for a (short) byte-aligned tail — the
+/// exact loop shape of [`super::pack::unpack`]'s sub-byte branch.
+fn decode_tail(bytes: &[u8], p: &QuantParams, out: &mut [f32]) {
+    let (s, zp) = (p.scale, p.zero_point);
+    let off = p.pack_offset();
+    let bits = p.bits as u32;
+    let mask = (1u32 << bits) - 1;
+    let mut acc: u32 = 0;
+    let mut nbits: u32 = 0;
+    let mut iter = bytes.iter();
+    for o in out.iter_mut() {
+        while nbits < bits {
+            // Cannot run dry: the caller validated the payload length.
+            acc |= (*iter.next().expect("decode length invariant") as u32) << nbits;
+            nbits += 8;
+        }
+        *o = dequantize_one(acc & mask, off, s, zp);
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
+/// Bulk raw-f32 passthrough (`bits == 32`): one pre-sized copy into the
+/// payload buffer instead of per-element `extend_from_slice` pushes.
+/// `chunks_exact_mut(4)` + `copy_from_slice` compiles to straight-line
+/// 4-byte stores with no per-push capacity checks. resize, not
+/// clear+resize: the copy overwrites every byte, so a recycled
+/// same-size buffer costs no memset.
+pub fn raw_f32_into(x: &[f32], out: &mut Vec<u8>) {
+    out.resize(x.len() * 4, 0);
+    for (dst, v) in out.chunks_exact_mut(4).zip(x) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{pack, uniform, SUPPORTED_BITS};
+
+    fn test_tensor(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::seed(seed);
+        (0..n)
+            .map(|i| {
+                let v = rng.laplace(0.8) as f32;
+                if i % 113 == 0 {
+                    v * 9.0 // outliers exercise both clamp edges
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Both code-range conventions: symmetric signed (zp = 0, lo < 0, the
+    /// ACIQ family) and asymmetric unsigned (naive min/max, lo = 0).
+    fn param_set(x: &[f32], bits: u8) -> [QuantParams; 2] {
+        [
+            uniform::symmetric_params(1.5, bits),
+            uniform::naive_params(x, bits),
+        ]
+    }
+
+    fn legacy_encode(x: &[f32], p: &QuantParams) -> Vec<u8> {
+        let codes = uniform::quantize(x, p);
+        pack::pack_vec(&codes, p.bits, p.pack_offset())
+    }
+
+    fn legacy_decode(bytes: &[u8], n: usize, p: &QuantParams) -> Vec<f32> {
+        let codes = pack::unpack_vec(bytes, n, p.bits, p.pack_offset()).unwrap();
+        uniform::dequantize(&codes, p)
+    }
+
+    #[test]
+    fn fused_encode_byte_identical_to_two_pass() {
+        for bits in SUPPORTED_BITS {
+            for n in [0usize, 1, 3, 5, 7, 8, 31, 63, 97, 255, 1000, 1001] {
+                let x = test_tensor(n, 11 + n as u64);
+                for p in param_set(&x, bits) {
+                    let legacy = legacy_encode(&x, &p);
+                    let mut fusedv = Vec::new();
+                    encode_into(&x, &p, &mut fusedv);
+                    assert_eq!(fusedv, legacy, "bits={bits} n={n} lo={}", p.lo);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_decode_bit_identical_to_two_pass() {
+        for bits in SUPPORTED_BITS {
+            for n in [1usize, 3, 7, 63, 97, 1001] {
+                let x = test_tensor(n, 29 + n as u64);
+                for p in param_set(&x, bits) {
+                    let payload = legacy_encode(&x, &p);
+                    let legacy = legacy_decode(&payload, n, &p);
+                    let mut fusedv = vec![0f32; n];
+                    decode_into(&payload, &p, &mut fusedv).unwrap();
+                    // Bit-level equality, not approximate: the fused path
+                    // must be a drop-in for unpack+dequantize.
+                    let a: Vec<u32> = legacy.iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> = fusedv.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, b, "bits={bits} n={n} lo={}", p.lo);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_matches_uniform_roundtrip() {
+        for bits in SUPPORTED_BITS {
+            let x = test_tensor(513, 7);
+            let p = uniform::symmetric_params(1.0, bits);
+            let mut payload = Vec::new();
+            encode_into(&x, &p, &mut payload);
+            let mut back = vec![0f32; x.len()];
+            decode_into(&payload, &p, &mut back).unwrap();
+            assert_eq!(back, uniform::roundtrip(&x, &p), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn parallel_encode_equals_serial_bytes() {
+        // Odd length: the final chunk is unaligned and the tail crosses a
+        // partial byte at sub-byte widths.
+        let n = MT_MIN_CHUNK_ELEMS * 3 + 37;
+        let x = test_tensor(n, 3);
+        for bits in SUPPORTED_BITS {
+            for p in param_set(&x, bits) {
+                let mut serial = Vec::new();
+                encode_into(&x, &p, &mut serial);
+                for threads in [2usize, 3, 5, 16] {
+                    let mut par = Vec::new();
+                    encode_into_mt(&x, &p, threads, &mut par);
+                    assert_eq!(par, serial, "bits={bits} threads={threads}");
+                }
+            }
+        }
+        // Generic sub-byte widths (the accumulator fallback): chunk
+        // alignment must hold there too — group_elems(3) = 8, not 1.
+        for bits in [3u8, 5, 7] {
+            let p = uniform::symmetric_params(1.0, bits);
+            let mut serial = Vec::new();
+            encode_into(&x, &p, &mut serial);
+            for threads in [2usize, 3] {
+                let mut par = Vec::new();
+                encode_into_mt(&x, &p, threads, &mut par);
+                assert_eq!(par, serial, "bits={bits} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_tensors_stay_serial_and_equal() {
+        let x = test_tensor(1000, 5);
+        let p = uniform::symmetric_params(1.0, 4);
+        let mut serial = Vec::new();
+        encode_into(&x, &p, &mut serial);
+        let mut par = Vec::new();
+        encode_into_mt(&x, &p, 8, &mut par);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn truncated_payload_is_error() {
+        let x = test_tensor(100, 17);
+        for bits in SUPPORTED_BITS {
+            let p = uniform::symmetric_params(1.0, bits);
+            let mut payload = Vec::new();
+            encode_into(&x, &p, &mut payload);
+            let mut out = vec![0f32; x.len()];
+            let err = decode_into(&payload[..payload.len() - 1], &p, &mut out).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "bits={bits}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn hostile_wire_bitwidth_is_an_error_not_garbage() {
+        // A frame can claim any bits value; the generic fallback only
+        // handles sub-byte widths (pack's own contract) — anything else
+        // must surface as a decode error.
+        let mut p = uniform::symmetric_params(1.0, 4);
+        let bytes = vec![0u8; 64];
+        let mut out = vec![0f32; 16];
+        // bits = 0 would pass the length check trivially (0 bytes
+        // needed) and decode to constant garbage without the guard.
+        for bad in [0u8, 13, 24] {
+            p.bits = bad;
+            let err = decode_into(&bytes, &p, &mut out).unwrap_err();
+            assert!(err.to_string().contains("unsupported"), "bits={bad}: {err:#}");
+        }
+        // Odd-but-sub-byte widths still decode through the accumulator.
+        p.bits = 3;
+        assert!(decode_into(&bytes, &p, &mut out).is_ok());
+    }
+
+    #[test]
+    fn raw_passthrough_is_exact_le_bytes() {
+        let x = test_tensor(257, 23);
+        let mut out = Vec::new();
+        raw_f32_into(&x, &mut out);
+        assert_eq!(out.len(), x.len() * 4);
+        for (v, ch) in x.iter().zip(out.chunks_exact(4)) {
+            assert_eq!(ch, v.to_le_bytes());
+        }
+        // Buffer reuse: capacity survives a second fill.
+        let ptr = out.as_ptr();
+        raw_f32_into(&x, &mut out);
+        assert_eq!(out.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn group_alignment_constants() {
+        for bits in 1u8..=16 {
+            let g = group_elems(bits);
+            // lcm(bits, 8) / bits: groups end exactly on byte boundaries,
+            // and g is minimal (no smaller positive multiple aligns).
+            assert_eq!(
+                (g * bits as usize) % 8,
+                0,
+                "group of {g} elems at {bits}-bit must be byte-aligned"
+            );
+            for smaller in 1..g {
+                assert_ne!((smaller * bits as usize) % 8, 0, "g={g} not minimal at {bits}-bit");
+            }
+        }
+        assert_eq!(group_elems(2), 4);
+        assert_eq!(group_elems(4), 2);
+        assert_eq!(group_elems(6), 4);
+        assert_eq!(group_elems(8), 1);
+        assert_eq!(group_elems(16), 1);
+        assert_eq!(group_elems(3), 8);
+    }
+}

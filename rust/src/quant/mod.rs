@@ -19,10 +19,19 @@
 //! The numerical semantics of every function here are pinned to the python
 //! oracle `python/compile/kernels/ref.py` via `artifacts/golden.json`
 //! (tests/golden.rs) and to the Pallas kernel via the runtime tests.
+//!
+//! **Hot-path layout** (see ROADMAP "Codec hot path"): the deployed data
+//! path is [`fused`] — single-pass quantize+pack / unpack+dequantize
+//! kernels (optionally multicore on encode) that are byte-identical to
+//! the reference two-pass [`uniform`]+[`pack`] route; calibration runs
+//! through [`stats::CalibScan`], one fused stats+histogram scan. The
+//! two-pass modules remain the numerical reference and the staging path
+//! for external backends (the AOT Pallas kernel).
 
 pub mod aciq;
 pub mod codec;
 pub mod ds_aciq;
+pub mod fused;
 pub mod pack;
 pub mod stats;
 pub mod uniform;

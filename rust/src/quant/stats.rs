@@ -1,5 +1,8 @@
 //! Streaming tensor statistics and the |x| histogram used by DS-ACIQ and
-//! the Fig 3/4 analyses.
+//! the Fig 3/4 analyses — plus [`CalibScan`], the fused calibration scan
+//! that derives everything PDA/ACIQ/DS-ACIQ calibration needs from one
+//! stats pass over the data (the histogram reuses the scan's `abs_max`
+//! as its `top`, so the old separate mean|x| and max|x| passes are gone).
 
 /// Single-pass min / max / mean|x| / mean / variance over a tensor.
 #[derive(Debug, Clone, Copy)]
@@ -79,6 +82,15 @@ impl AbsHistogram {
         for &v in x {
             top = top.max(v.abs());
         }
+        Self::compute_with_top(x, bins, top)
+    }
+
+    /// Binning pass with a precomputed `top = max|x|` — e.g. from a
+    /// [`TensorStats`] scan (`abs_max()`), which is how [`CalibScan`]
+    /// eliminates the separate |x|-max pass. `top <= 0` falls back to the
+    /// same degenerate width [`AbsHistogram::compute`] uses, so the two
+    /// constructors produce identical histograms for identical `top`.
+    pub fn compute_with_top(x: &[f32], bins: usize, top: f32) -> Self {
         let top = if top > 0.0 { top as f64 } else { 1e-12 };
         let width = top / bins as f64;
         let mut counts = vec![0u64; bins];
@@ -109,6 +121,46 @@ impl AbsHistogram {
     pub fn peak_density(&self) -> f64 {
         let max_count = self.counts.iter().copied().max().unwrap_or(0);
         max_count as f64 / (self.total.max(1) as f64 * self.width) / 2.0
+    }
+}
+
+/// Fused calibration scan: [`TensorStats`] and the |x| histogram from a
+/// single stats pass plus one binning pass.
+///
+/// The unfused DS-ACIQ calibration read the tensor three times: the
+/// mean|x| pass (`aciq::laplace_b`), the histogram's own max|x| pass, and
+/// the binning pass. The stats pass already yields both the moment
+/// estimate (`mean_abs`) *and* the histogram's top (`abs_max()` — max|x|
+/// of any real-valued tensor is `max(|min|, |max|)`), so only the binning
+/// pass remains. On the deployed hot path (`ds_aciq_b_sampled`) the
+/// binned data is the ≤16k-element subsample, which is cache-resident by
+/// the time binning runs — full-tensor memory traffic is one read.
+///
+/// Exactness: `b_e()` performs the same f64 accumulation in the same
+/// order as `aciq::laplace_b`, and the histogram is built by the same
+/// binning code as [`AbsHistogram::compute`] with an identical `top`, so
+/// the fused scan is bit-for-bit the unfused calibration (golden-pinned
+/// via tests/golden.rs through `ds_aciq_b`).
+#[derive(Debug, Clone)]
+pub struct CalibScan {
+    pub stats: TensorStats,
+    pub hist: AbsHistogram,
+}
+
+impl CalibScan {
+    pub fn compute(x: &[f32], bins: usize) -> Self {
+        let stats = TensorStats::compute(x);
+        // Empty input: ±inf min/max would give an infinite abs_max;
+        // compute()'s max-fold yields 0 there, so mirror that.
+        let top = if stats.n == 0 { 0.0 } else { stats.abs_max() };
+        let hist = AbsHistogram::compute_with_top(x, bins, top);
+        CalibScan { stats, hist }
+    }
+
+    /// The Laplace moment estimate `b_E = mean|x|` — numerically identical
+    /// to [`crate::quant::aciq::laplace_b`] over the same data.
+    pub fn b_e(&self) -> f32 {
+        self.stats.mean_abs as f32
     }
 }
 
@@ -154,6 +206,48 @@ mod tests {
         for i in 2..63 {
             assert!((h.density(i) - d0).abs() / d0 < 0.05, "bin {i}");
         }
+    }
+
+    #[test]
+    fn calib_scan_matches_unfused_exactly() {
+        let mut rng = crate::util::rng::Rng::seed(21);
+        let x = rng.laplace_vec(30000, 0.7);
+        let scan = CalibScan::compute(&x, DEFAULT_BINS);
+        // b_E: identical accumulation to aciq::laplace_b.
+        assert_eq!(
+            scan.b_e().to_bits(),
+            crate::quant::aciq::laplace_b(&x).to_bits()
+        );
+        // Histogram: identical top → identical width and counts.
+        let unfused = AbsHistogram::compute(&x, DEFAULT_BINS);
+        assert_eq!(scan.hist.width.to_bits(), unfused.width.to_bits());
+        assert_eq!(scan.hist.counts, unfused.counts);
+        assert_eq!(scan.hist.total, unfused.total);
+    }
+
+    #[test]
+    fn calib_scan_degenerate_inputs() {
+        // Empty and all-zero inputs take the same 1e-12 degenerate width
+        // as the unfused constructor.
+        for x in [vec![], vec![0.0f32; 64]] {
+            let scan = CalibScan::compute(&x, 32);
+            let unfused = AbsHistogram::compute(&x, 32);
+            assert_eq!(scan.hist.width.to_bits(), unfused.width.to_bits());
+            assert_eq!(scan.hist.counts, unfused.counts);
+        }
+    }
+
+    #[test]
+    fn compute_with_top_matches_compute() {
+        let x: Vec<f32> = (0..5000).map(|i| ((i as f32) * 0.37).sin() * 2.5).collect();
+        let mut top = 0f32;
+        for &v in &x {
+            top = top.max(v.abs());
+        }
+        let a = AbsHistogram::compute(&x, 128);
+        let b = AbsHistogram::compute_with_top(&x, 128, top);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.width.to_bits(), b.width.to_bits());
     }
 
     #[test]

@@ -48,7 +48,11 @@ pub fn symmetric_params(alpha: f32, bits: u8) -> QuantParams {
     }
 }
 
-/// Quantize into the caller-provided code buffer (hot path: no allocation).
+/// Quantize into the caller-provided code buffer (no allocation). The
+/// codec's native hot path is the fused quantize+pack kernel in
+/// [`super::fused`], which replicates this arithmetic **exactly** (same
+/// ops, same order — change one, change both); this two-pass form remains
+/// the reference and the staging path for external backends.
 pub fn quantize_into(x: &[f32], p: &QuantParams, out: &mut [i32]) {
     debug_assert_eq!(x.len(), out.len());
     let inv = 1.0 / p.scale;
@@ -96,10 +100,13 @@ pub fn roundtrip(x: &[f32], p: &QuantParams) -> Vec<f32> {
 /// Mean squared reconstruction error of quantizing `x` under `p`.
 pub fn quant_mse(x: &[f32], p: &QuantParams) -> f64 {
     let inv = 1.0 / p.scale;
+    let (zp, lo, hi) = (p.zero_point, p.lo, p.hi);
     let mut acc = 0f64;
     for &v in x {
-        let c = (v * inv + p.zero_point).round().clamp(p.lo, p.hi);
-        let xh = (c - p.zero_point) * p.scale;
+        // Same max/min idiom as `quantize_into` (clamp's NaN ordering
+        // blocks LLVM's vector min/max); identical result for lo <= hi.
+        let c = (v * inv + zp).round().max(lo).min(hi);
+        let xh = (c - zp) * p.scale;
         let e = (v - xh) as f64;
         acc += e * e;
     }

@@ -26,6 +26,15 @@ impl Tensor {
         self.data.len()
     }
 
+    /// Take the data buffer back (capacity intact). The pipeline's stage
+    /// loops recycle decoded activations through a one-slot pool —
+    /// decode into the pooled buffer, wrap it in a `Tensor` by move, and
+    /// reclaim it here after compute — so steady state does zero
+    /// per-microbatch payload allocation (was a full `clone()` per frame).
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Size in bytes at full (f32) precision — the `V × 32/q` numerator of
     /// the paper's Eq. 2.
     pub fn byte_len(&self) -> usize {

@@ -1,0 +1,166 @@
+//! Hot-path invariants of the fused codec and the zero-copy driver path:
+//!
+//! * fused single-pass encode/decode is byte-/bit-identical to the legacy
+//!   two-pass reference across every supported bitwidth, both code-range
+//!   conventions (signed symmetric and unsigned asymmetric offsets) and
+//!   odd tensor lengths;
+//! * multicore encode produces the exact serial byte stream for any
+//!   thread count;
+//! * the stage-loop buffer discipline (payload recycle + decode pool +
+//!   `Tensor::into_data`) performs **zero per-microbatch payload
+//!   allocation in steady state** — pointers stay put after warm-up.
+
+use quantpipe::net::frame::Frame;
+use quantpipe::quant::codec::Codec;
+use quantpipe::quant::{fused, pack, uniform, Method, SUPPORTED_BITS};
+use quantpipe::tensor::Tensor;
+use quantpipe::util::rng::Rng;
+
+fn activation(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed(seed);
+    (0..n)
+        .map(|i| {
+            let v = rng.laplace(0.9) as f32;
+            if i % 101 == 0 {
+                v * 8.0
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fused_matrix_bits_offsets_odd_lengths() {
+    // SUPPORTED_BITS × {signed, unsigned pack offsets} × odd/edge lengths.
+    for bits in SUPPORTED_BITS {
+        for n in [0usize, 1, 3, 7, 9, 31, 63, 97, 255, 1000, 1001, 4097] {
+            let x = activation(n, 40 + n as u64);
+            let params = [
+                uniform::symmetric_params(1.2, bits), // zp = 0, lo = -2^(q-1)
+                uniform::naive_params(&x, bits),      // zp != 0, lo = 0
+            ];
+            for p in params {
+                let codes = uniform::quantize(&x, &p);
+                let legacy_payload = pack::pack_vec(&codes, bits, p.pack_offset());
+                let mut fused_payload = Vec::new();
+                fused::encode_into(&x, &p, &mut fused_payload);
+                assert_eq!(
+                    fused_payload, legacy_payload,
+                    "encode bits={bits} n={n} lo={}",
+                    p.lo
+                );
+
+                let unpacked = pack::unpack_vec(&legacy_payload, n, bits, p.pack_offset()).unwrap();
+                let legacy_out = uniform::dequantize(&unpacked, &p);
+                let mut fused_out = vec![0f32; n];
+                fused::decode_into(&legacy_payload, &p, &mut fused_out).unwrap();
+                let a: Vec<u32> = legacy_out.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = fused_out.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "decode bits={bits} n={n} lo={}", p.lo);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_encode_matches_serial_for_every_thread_count() {
+    let n = fused::MT_MIN_CHUNK_ELEMS * 4 + 129; // odd tail, several chunks
+    let x = activation(n, 7);
+    for bits in SUPPORTED_BITS {
+        let p = uniform::symmetric_params(1.0, bits);
+        let mut serial = Vec::new();
+        fused::encode_into(&x, &p, &mut serial);
+        for threads in [1usize, 2, 3, 4, 7, 16] {
+            let mut par = Vec::new();
+            fused::encode_into_mt(&x, &p, threads, &mut par);
+            assert_eq!(par, serial, "bits={bits} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn codec_threads_produce_identical_frames() {
+    // Through the public Codec API, as the driver uses it.
+    let x = activation(fused::MT_MIN_CHUNK_ELEMS * 2, 13);
+    let mut serial = Codec::default();
+    let mut parallel = Codec::default();
+    parallel.set_threads(6);
+    for bits in SUPPORTED_BITS {
+        let a = serial.encode(&x, Method::Pda, bits).unwrap();
+        let b = parallel.encode(&x, Method::Pda, bits).unwrap();
+        assert_eq!(a, b, "bits={bits}");
+        let (mut da, mut db) = (Vec::new(), Vec::new());
+        serial.decode(&a, &mut da).unwrap();
+        parallel.decode(&b, &mut db).unwrap();
+        assert_eq!(da, db, "bits={bits}");
+    }
+}
+
+/// The driver stage-loop steady state, reproduced exactly: upstream
+/// frames decode into a pooled buffer that moves through the `Tensor`
+/// and back ([`Tensor::into_data`]), while consumed frame payloads
+/// recycle into the codec for the stage's own encodes. After the first
+/// (warm-up) microbatch, no buffer pointer may change — i.e. zero
+/// per-microbatch payload reallocation.
+#[test]
+fn stage_loop_steady_state_reallocates_nothing() {
+    let x = activation(4096, 3);
+    let mut upstream = Codec::default(); // the sending stage
+    let mut codec = Codec::default(); // this stage
+    let mut decode_pool: Vec<f32> = Vec::new();
+    let mut data_ptr = std::ptr::null::<f32>();
+    let mut data_cap = 0usize;
+    let mut payload_ptr = std::ptr::null::<u8>();
+
+    for seq in 0..12u64 {
+        // Upstream encodes at a fixed bitwidth (recycling its payloads
+        // too, as its own stage loop would).
+        let enc = upstream.encode(&x, Method::Aciq, 4).unwrap();
+        let frame = Frame::new(seq, vec![x.len()], enc);
+
+        // This stage: decode into the pooled buffer, recycle the payload.
+        let mut data = std::mem::take(&mut decode_pool);
+        codec.decode(&frame.enc, &mut data).unwrap();
+        let Frame { shape, enc, .. } = frame;
+        codec.recycle(enc);
+        let tensor = Tensor::new(data, shape);
+
+        // "Compute", then reclaim the buffer.
+        assert_eq!(tensor.elems(), x.len());
+        let tp = tensor.data.as_ptr();
+        let tc = tensor.data.capacity();
+        decode_pool = tensor.into_data();
+
+        // Re-encode through this stage's codec (draws from the recycled
+        // payload) as the downstream send would.
+        let out = codec.encode(&decode_pool, Method::Aciq, 4).unwrap();
+        let out_ptr = out.payload.as_ptr();
+        codec.recycle(out);
+
+        if seq >= 1 {
+            assert_eq!(tp, data_ptr, "microbatch {seq}: decode buffer reallocated");
+            assert_eq!(tc, data_cap, "microbatch {seq}: decode buffer capacity changed");
+            assert_eq!(out_ptr, payload_ptr, "microbatch {seq}: encode payload reallocated");
+        }
+        data_ptr = tp;
+        data_cap = tc;
+        payload_ptr = out_ptr;
+    }
+}
+
+#[test]
+fn raw_passthrough_bulk_copy_is_lossless_and_reuses_buffers() {
+    let x = activation(2048, 19);
+    let mut codec = Codec::default();
+    let e1 = codec.encode(&x, Method::Pda, 32).unwrap();
+    assert!(e1.params.is_none());
+    assert_eq!(e1.payload.len(), x.len() * 4);
+    let mut out = Vec::new();
+    codec.decode(&e1, &mut out).unwrap();
+    assert_eq!(out, x);
+    let ptr = e1.payload.as_ptr();
+    codec.recycle(e1);
+    let e2 = codec.encode(&x, Method::Pda, 32).unwrap();
+    assert_eq!(e2.payload.as_ptr(), ptr, "passthrough must reuse the recycled payload");
+}

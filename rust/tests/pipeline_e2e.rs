@@ -37,7 +37,7 @@ fn fp32_pipeline_matches_manifest_accuracy() {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         None,
     );
     let report = run(spec, Workload::one_pass(eval, manifest.microbatch)).unwrap();
@@ -56,7 +56,7 @@ fn eight_bit_pda_keeps_accuracy_and_compresses() {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         vec![BandwidthTrace::unlimited(); manifest.stages.len() - 1],
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 8 },
+        LinkQuant { method: Method::Pda, initial_bits: 8, ..Default::default() },
         None,
     );
     let report = run(spec, Workload::one_pass(eval, manifest.microbatch)).unwrap();
@@ -88,7 +88,7 @@ fn adaptive_run_recovers_bits_on_recovery() {
         hlo_spec(
             &manifest, &dir, &cfg,
             vec![BandwidthTrace::unlimited(); n_links],
-            LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+            LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
             None,
         ),
         Workload::repeat(eval.clone(), manifest.microbatch, 10),
@@ -105,7 +105,7 @@ fn adaptive_run_recovers_bits_on_recovery() {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         traces,
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 32 },
+        LinkQuant { method: Method::Pda, initial_bits: 32, ..Default::default() },
         Some(AdaptConfig {
             target_rate: target,
             microbatch: manifest.microbatch,
@@ -130,7 +130,7 @@ fn hlo_codec_backend_runs_pipeline() {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         vec![BandwidthTrace::constant(mbps(500.0)); manifest.stages.len() - 1],
-        LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() },
         None,
     );
     let report = run(spec, Workload::repeat(eval, manifest.microbatch, 6)).unwrap();
@@ -150,7 +150,7 @@ fn lossy_link_still_completes() {
     let spec = hlo_spec(
         &manifest, &dir, &cfg,
         vec![BandwidthTrace::constant(mbps(300.0)); manifest.stages.len() - 1],
-        LinkQuant { method: Method::Pda, calib_every: 1, initial_bits: 8 },
+        LinkQuant { method: Method::Pda, initial_bits: 8, ..Default::default() },
         None,
     );
     let report = run(spec, Workload::repeat(eval, manifest.microbatch, 8)).unwrap();

@@ -65,7 +65,7 @@ fn tcp_pipeline_three_stages_quantized_passthrough() {
             .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
             .collect(),
         links: tcp_links(2),
-        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() },
         adapt: None,
         window: 4,
         inflight: 2,
@@ -98,7 +98,7 @@ fn tcp_backpressure_drives_bits_down() {
     let spec = PipelineSpec {
         stages,
         links: tcp_links(2),
-        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 },
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 32, ..Default::default() },
         adapt: Some(AdaptConfig {
             // 5 ms budget per microbatch: far beyond what a ~33 mb/s
             // drain rate sustains at fp32, so compression is required.
@@ -137,7 +137,7 @@ fn worker_chain_over_real_sockets() {
     let (w12_tx, w12_rx) = pipe();
     let (w2c_tx, w2c_rx) = pipe();
 
-    let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+    let quant = LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() };
     let cfg = |stage: usize, last: bool| WorkerConfig {
         stage,
         quant,
@@ -235,7 +235,7 @@ fn resilient_pipeline_survives_mid_stream_socket_kill() {
             mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
         ],
         links: vec![link0, link1],
-        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 },
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 32, ..Default::default() },
         adapt: Some(AdaptConfig {
             // 4 ms budget per microbatch: satisfied on a healthy loopback
             // (the 2 ms stage bounds steady state), hopeless across a
@@ -294,7 +294,7 @@ fn resilient_pipeline_clean_shutdown_reports_no_errors() {
             .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
             .collect(),
         links,
-        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() },
         adapt: None,
         window: 4,
         inflight: 2,
@@ -328,7 +328,7 @@ fn striped_pipeline_clean_run_reports_no_errors_and_per_stripe_counters() {
             .map(|_| mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO))
             .collect(),
         links,
-        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 },
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() },
         adapt: None,
         window: 4,
         inflight: 2,
@@ -397,7 +397,7 @@ fn striped_pipeline_survives_individual_stripe_kills() {
             mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
         ],
         links: vec![link0, link1],
-        quant: LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 32 },
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 32, ..Default::default() },
         adapt: Some(AdaptConfig {
             // 4 ms budget per microbatch: trivially satisfied on healthy
             // loopback stripes, hopeless while the jammed replay buffer
@@ -504,7 +504,7 @@ fn resilient_worker_chain_survives_link_kill() {
     let (w2c_tx, w2c_rx) = resilient_loopback_pair(&fast_resilience()).unwrap();
     let kill = w01_tx.kill_switch();
 
-    let quant = LinkQuant { method: Method::Aciq, calib_every: 1, initial_bits: 8 };
+    let quant = LinkQuant { method: Method::Aciq, initial_bits: 8, ..Default::default() };
     let cfg = |stage: usize, last: bool| WorkerConfig {
         stage,
         quant,

@@ -56,10 +56,15 @@ impl Default for AdaptConfig {
 /// A bitwidth decision with its inputs, for logging/Fig 5 timelines.
 #[derive(Debug, Clone, Copy)]
 pub struct Decision {
+    /// Bitwidth to use from now on.
     pub bits: u8,
+    /// Bitwidth before this decision.
     pub prev_bits: u8,
+    /// Window's measured bandwidth (bits/s).
     pub measured_bps: f64,
+    /// Eq. 2 compression ratio demanded by the window.
     pub required_compression: f64,
+    /// Did the bitwidth move?
     pub changed: bool,
 }
 
@@ -71,14 +76,17 @@ pub struct AdaptivePda {
 }
 
 impl AdaptivePda {
+    /// Controller with no decision yet (starts at `BITS_NONE`).
     pub fn new(cfg: AdaptConfig) -> Self {
         AdaptivePda { cfg, bits: BITS_NONE }
     }
 
+    /// Bitwidth currently in effect.
     pub fn bits(&self) -> u8 {
         self.bits
     }
 
+    /// The configuration this controller runs.
     pub fn config(&self) -> &AdaptConfig {
         &self.cfg
     }

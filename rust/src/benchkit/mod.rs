@@ -52,14 +52,17 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (cells align under the headers).
     pub fn row(&mut self, cells: &[String]) {
         self.rows.push(cells.to_vec());
     }
 
+    /// Print to stdout with right-aligned columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -144,10 +147,7 @@ pub fn write_bench_json(
     use crate::util::json::Value;
     let mut m = std::collections::BTreeMap::new();
     for (k, v) in fields {
-        m.insert(
-            k.to_string(),
-            if v.is_finite() { Value::Num(*v) } else { Value::Null },
-        );
+        m.insert(k.to_string(), Value::num_or_null(*v));
     }
     for (k, v) in extra {
         m.insert(k.to_string(), v.clone());

@@ -16,16 +16,24 @@ use std::path::Path;
 use std::time::Duration;
 
 #[derive(Debug, Clone)]
+/// Root configuration: one section per subsystem.
 pub struct Config {
+    /// Pipeline topology and runtime knobs.
     pub pipeline: PipelineSection,
+    /// Quantization method and calibration cadence.
     pub quant: QuantSection,
+    /// Adaptive bitwidth controller.
     pub adapt: AdaptSection,
+    /// Simulated-link shaping and fault injection.
     pub net: NetSection,
+    /// Workload size and output paths.
     pub run: RunSection,
+    /// Multi-process deployment topology.
     pub transport: TransportSection,
 }
 
 #[derive(Debug, Clone)]
+/// `pipeline` config section.
 pub struct PipelineSection {
     /// Number of pipeline stages (model shards). Must match the artifacts.
     pub stages: usize,
@@ -42,6 +50,7 @@ pub struct PipelineSection {
 }
 
 #[derive(Debug, Clone)]
+/// `quant` config section.
 pub struct QuantSection {
     /// Calibration method: naive | aciq | ds_aciq | pda.
     pub method: Method,
@@ -52,6 +61,7 @@ pub struct QuantSection {
 }
 
 #[derive(Debug, Clone)]
+/// `adapt` config section.
 pub struct AdaptSection {
     /// Enable the adaptive controller (false = fixed bitwidth below).
     pub enabled: bool,
@@ -68,6 +78,7 @@ pub struct AdaptSection {
 }
 
 #[derive(Debug, Clone)]
+/// `net` config section (SimLink shaping).
 pub struct NetSection {
     /// Per-link bandwidth traces, "t:bw" comma lists (see net::trace). One
     /// entry per inter-stage link; a single entry applies to all links.
@@ -76,11 +87,14 @@ pub struct NetSection {
     pub latency_us: u64,
     /// Fault injection.
     pub loss_p: f64,
+    /// Jitter injected per send, ms.
     pub jitter_ms: f64,
+    /// Seed for the fault injector's RNG.
     pub fault_seed: u64,
 }
 
 #[derive(Debug, Clone)]
+/// `run` config section.
 pub struct RunSection {
     /// Microbatches to push through (0 = one pass over the eval set).
     pub microbatches: u64,
@@ -121,6 +135,12 @@ pub struct TransportSection {
     /// no per-stripe ports are needed. Every process in the chain must
     /// agree on this value.
     pub stripes: usize,
+    /// Stream per-stage telemetry (window snapshots, counters) forward to
+    /// the coordinator, which merges every stage into one
+    /// `PipelineReport` (default true). Telemetry is best effort and
+    /// data-plane-neutral: it never consumes sequence numbers, never
+    /// enters replay buffers, and never delays an ACK.
+    pub telemetry: bool,
     /// Sent-but-unacked frames kept for replay per link.
     pub replay_capacity: usize,
     /// Budget to get a failed link back before reporting a hard error, ms.
@@ -132,10 +152,12 @@ pub struct TransportSection {
 }
 
 impl TransportSection {
+    /// Delay between connect attempts.
     pub fn connect_retry(&self) -> Duration {
         Duration::from_millis(self.connect_retry_ms.max(1))
     }
 
+    /// Total budget for the first connect of a link.
     pub fn connect_timeout(&self) -> Duration {
         Duration::from_millis(self.connect_timeout_ms)
     }
@@ -202,6 +224,7 @@ impl Default for Config {
                 connect_timeout_ms: 10_000,
                 resilient: false,
                 stripes: 1,
+                telemetry: true,
                 replay_capacity: 128,
                 reconnect_timeout_ms: 10_000,
                 backoff_base_ms: 10,
@@ -222,6 +245,7 @@ fn method_from_str(s: &str) -> Result<Method> {
 }
 
 impl Config {
+    /// Load + parse a JSON config file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())?;
         Self::parse(&text)
@@ -300,6 +324,7 @@ impl Config {
                 cfg.transport.stripes = x.as_usize()?;
                 anyhow::ensure!(cfg.transport.stripes >= 1, "transport.stripes must be >= 1");
             }
+            if let Some(x) = t.get("telemetry") { cfg.transport.telemetry = x.as_bool()?; }
             if let Some(x) = t.get("replay_capacity") { cfg.transport.replay_capacity = x.as_usize()?; }
             if let Some(x) = t.get("reconnect_timeout_ms") { cfg.transport.reconnect_timeout_ms = x.as_u64()?; }
             if let Some(x) = t.get("backoff_base_ms") { cfg.transport.backoff_base_ms = x.as_u64()?; }
@@ -347,6 +372,7 @@ impl Config {
         crate::net::trace::BandwidthTrace::parse(s)
     }
 
+    /// Fault-injection settings for the simulated links.
     pub fn link_faults(&self) -> LinkFaults {
         LinkFaults {
             loss_p: self.net.loss_p,
@@ -458,6 +484,14 @@ mod tests {
         // Striping rides the resilient session protocol.
         assert!(Config::parse(r#"{"transport": {"stripes": 4}}"#).is_err());
         assert!(Config::parse(r#"{"transport": {"resilient": true, "stripes": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn telemetry_knob_defaults_on_and_parses() {
+        let c = Config::parse("{}").unwrap();
+        assert!(c.transport.telemetry, "telemetry is on by default");
+        let c = Config::parse(r#"{"transport": {"telemetry": false}}"#).unwrap();
+        assert!(!c.transport.telemetry);
     }
 
     #[test]

@@ -9,19 +9,26 @@ use crate::Result;
 use std::io::Read;
 use std::path::Path;
 
+/// eval.bin header magic ("QPEV").
 pub const EVAL_MAGIC: u32 = 0x5150_4556;
+/// calib.bin header magic ("QPCA").
 pub const CALIB_MAGIC: u32 = 0x5150_4341;
 
 /// The held-out evaluation set: images + labels.
 #[derive(Debug, Clone)]
 pub struct EvalSet {
+    /// Row-major image data, count × h × w × c.
     pub images: Vec<f32>,
+    /// One label per image.
     pub labels: Vec<u32>,
+    /// Number of images.
     pub count: usize,
+    /// Per-image (h, w, c).
     pub dims: (usize, usize, usize),
 }
 
 impl EvalSet {
+    /// Load an eval.bin produced by `make artifacts`.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let mut f = std::fs::File::open(path.as_ref())
             .map_err(|e| anyhow::anyhow!("open {:?}: {e} (run `make artifacts`)", path.as_ref()))?;
@@ -61,6 +68,7 @@ impl EvalSet {
         &self.labels[i * s..(i + 1) * s]
     }
 
+    /// Whole microbatches of size `s` in the set.
     pub fn microbatches(&self, s: usize) -> usize {
         self.count / s
     }
@@ -130,11 +138,14 @@ pub fn top1_accuracy(logits: &Tensor, labels: &[u32]) -> f64 {
 /// Running accuracy accumulator (per-window accuracy for the Fig 5 track).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct AccuracyMeter {
+    /// Correct top-1 predictions.
     pub correct: u64,
+    /// Predictions scored.
     pub total: u64,
 }
 
 impl AccuracyMeter {
+    /// Score one microbatch of logits against its labels.
     pub fn add(&mut self, logits: &Tensor, labels: &[u32]) {
         let preds = logits.argmax_rows();
         for (p, l) in preds.iter().zip(labels) {
@@ -145,10 +156,12 @@ impl AccuracyMeter {
         self.total += labels.len() as u64;
     }
 
+    /// Accuracy so far (0 when empty).
     pub fn value(&self) -> f64 {
         self.correct as f64 / self.total.max(1) as f64
     }
 
+    /// Read the accuracy and reset (per-window accounting).
     pub fn take(&mut self) -> f64 {
         let v = self.value();
         *self = AccuracyMeter::default();

@@ -69,6 +69,19 @@
 //! the table. The receiver reorders across stripes, replay/ACK resync is
 //! session-scoped (any conduit can recover any gap), and a lost stripe
 //! reads as partial bandwidth collapse rather than an outage.
+//!
+//! ## Observability
+//!
+//! Every worker streams per-window telemetry snapshots forward along the
+//! data path ([`metrics::telemetry`]); the coordinator merges all stages
+//! into one `PipelineReport` (JSON via `--report-json`, rendered by
+//! `quantpipe report`) — per-stage timelines aligned on microbatch seq,
+//! per-boundary bandwidth/bits tracks, and end-to-end latency
+//! attribution, from a single artifact instead of N interleaved stdouts.
+
+// Docs are part of the contract: every public item documents itself, and
+// CI keeps `cargo doc` warning-free.
+#![warn(missing_docs)]
 
 pub mod adapt;
 pub mod benchkit;

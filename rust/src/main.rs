@@ -8,6 +8,7 @@
 //! quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2]
 //! quantpipe worker     --stage K [--listen A] [--connect A] [--mock SxD]
 //! quantpipe coordinate [--config F] [--synthetic CxD] [--microbatches N]
+//! quantpipe report     <run.json>
 //! quantpipe partition  <profile.json> [--devices N]
 //! quantpipe inspect    [--artifacts DIR]
 //! ```
@@ -51,9 +52,12 @@ USAGE:
   quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2] [--artifacts DIR]
   quantpipe worker     --stage K [--config F] [--listen ADDR] [--connect ADDR]
                        [--stages N] [--mock SxD] [--fixed-bits B] [--target-rate R]
-                       [--resilient BOOL] [--stripes N] [--artifacts DIR]
+                       [--resilient BOOL] [--stripes N] [--report-json F]
+                       [--artifacts DIR]
   quantpipe coordinate [--config F] [--microbatches N] [--synthetic CxD]
-                       [--resilient BOOL] [--stripes N] [--artifacts DIR]
+                       [--resilient BOOL] [--stripes N] [--report-json F]
+                       [--artifacts DIR]
+  quantpipe report     <run.json>
   quantpipe partition  <profile.json> [--devices N]
   quantpipe inspect    [--artifacts DIR]
 
@@ -68,6 +72,10 @@ process in the chain must agree on the flag.
 boundary over N TCP connections sharing one sequence space — for
 high-BDP/multi-path edge links. All stripes dial the same stage address;
 every process in the chain must agree on the value.
+Every worker streams per-window telemetry forward to the coordinator
+(transport.telemetry, default on), which merges all stages into one
+PipelineReport: `coordinate --report-json run.json` persists it and
+`quantpipe report run.json` renders it.
 ";
 
 /// Tiny flag parser: --key value pairs + positionals.
@@ -118,6 +126,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "worker" => cmd_worker(&args),
         "coordinate" => cmd_coordinate(&args),
+        "report" => cmd_report(&args),
         "partition" => cmd_partition(&args),
         "inspect" => cmd_inspect(&args),
         other => {
@@ -433,6 +442,7 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
         microbatch,
         quantize_output: !is_last,
         inflight: cfg.pipeline.inflight,
+        telemetry: cfg.transport.telemetry,
     };
     let report = run_worker(factory, wcfg, up_rx, down_tx)?;
 
@@ -458,6 +468,10 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
     }
     for e in &report.errors {
         eprintln!("  link failure: {e}");
+    }
+    if !cfg.run.report_json.is_empty() {
+        std::fs::write(&cfg.run.report_json, report.to_json().to_string_pretty())?;
+        println!("report            -> {}", cfg.run.report_json);
     }
     anyhow::ensure!(report.errors.is_empty(), "worker {stage} saw link failures");
     Ok(())
@@ -556,10 +570,41 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
             s.frames, s.bytes, s.reconnects, s.stall_secs
         );
     }
+    // The merged run view: which stages reported, and whether their
+    // microbatch counts line up across the boundaries.
+    for st in report.pipeline.stages.values() {
+        println!(
+            "stage {:<2} telem   {} frames, {} windows, {}",
+            st.stage,
+            st.frames,
+            st.points.len(),
+            if st.complete { "complete" } else { "INCOMPLETE" }
+        );
+    }
     for e in &report.errors {
         eprintln!("  link failure: {e}");
     }
+    if !cfg.run.report_json.is_empty() {
+        std::fs::write(
+            &cfg.run.report_json,
+            report.pipeline.to_json().to_string_pretty(),
+        )?;
+        println!("pipeline report   -> {} (render: quantpipe report {})", cfg.run.report_json, cfg.run.report_json);
+    }
     anyhow::ensure!(report.errors.is_empty(), "coordinator saw link failures");
+    Ok(())
+}
+
+/// Render a persisted `PipelineReport` JSON (written by
+/// `quantpipe coordinate --report-json`) human-readably.
+fn cmd_report(args: &Args) -> quantpipe::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("report needs a run.json path (from coordinate --report-json)"))?;
+    let text = std::fs::read_to_string(path)?;
+    let report = quantpipe::metrics::telemetry::PipelineReport::from_json(&Value::parse(&text)?)?;
+    print!("{}", report.render());
     Ok(())
 }
 

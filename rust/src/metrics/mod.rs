@@ -1,7 +1,10 @@
 //! Lightweight metrics: throughput meters, latency histograms, the
-//! timeline recorder behind the Fig 5 reproduction, and the resilience
+//! timeline recorder behind the Fig 5 reproduction, the resilience
 //! counters fed by the fault-tolerant link layer
-//! ([`crate::net::resilient`]).
+//! ([`crate::net::resilient`]), and the pipeline-wide telemetry that
+//! merges every stage's timeline into one run view ([`telemetry`]).
+
+pub mod telemetry;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -30,6 +33,8 @@ pub struct ResilienceStats {
 }
 
 impl ResilienceStats {
+    /// Consistent-enough copy of the live counters (each load is atomic;
+    /// the set is advisory, not transactional).
     pub fn snapshot(&self) -> ResilienceSummary {
         ResilienceSummary {
             reconnects: self.reconnects.load(Ordering::Relaxed),
@@ -45,14 +50,20 @@ impl ResilienceStats {
 /// endpoint roles).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ResilienceSummary {
+    /// Successful redials by connecting sides after link failures.
     pub reconnects: u64,
+    /// Successful re-accepts by listening sides after link failures.
     pub reaccepts: u64,
+    /// Frames re-sent from replay buffers after reconnect handshakes.
     pub replayed: u64,
+    /// Duplicate frames discarded by receivers.
     pub deduped: u64,
+    /// Seconds dialing sides spent re-establishing failed connections.
     pub stall_secs: f64,
 }
 
 impl ResilienceSummary {
+    /// Fold another endpoint's counters into this aggregate.
     pub fn merge(&mut self, other: &ResilienceSummary) {
         self.reconnects += other.reconnects;
         self.reaccepts += other.reaccepts;
@@ -70,6 +81,7 @@ impl ResilienceSummary {
         out
     }
 
+    /// JSON object form (non-finite stall maps to `null`).
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
         let mut m = std::collections::BTreeMap::new();
@@ -77,10 +89,7 @@ impl ResilienceSummary {
         m.insert("reaccepts".into(), Value::Num(self.reaccepts as f64));
         m.insert("replayed".into(), Value::Num(self.replayed as f64));
         m.insert("deduped".into(), Value::Num(self.deduped as f64));
-        m.insert(
-            "stall_secs".into(),
-            if self.stall_secs.is_finite() { Value::Num(self.stall_secs) } else { Value::Null },
-        );
+        m.insert("stall_secs".into(), Value::num_or_null(self.stall_secs));
         Value::Obj(m)
     }
 }
@@ -105,6 +114,7 @@ pub struct StripeStats {
 }
 
 impl StripeStats {
+    /// Consistent-enough copy of the live counters.
     pub fn snapshot(&self) -> StripeSummary {
         StripeSummary {
             frames: self.frames.load(Ordering::Relaxed),
@@ -118,9 +128,13 @@ impl StripeStats {
 /// One stripe's counters for a finished run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StripeSummary {
+    /// Frames this stripe carried (replays included).
     pub frames: u64,
+    /// Wire bytes this stripe carried.
     pub bytes: u64,
+    /// Successful re-establishments of this stripe after failures.
     pub reconnects: u64,
+    /// Seconds spent re-establishing (or failing to re-establish) it.
     pub stall_secs: f64,
 }
 
@@ -130,16 +144,14 @@ impl StripeSummary {
         stats.into_iter().map(|s| s.snapshot()).collect()
     }
 
+    /// JSON object form (non-finite stall maps to `null`).
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
         let mut m = std::collections::BTreeMap::new();
         m.insert("frames".into(), Value::Num(self.frames as f64));
         m.insert("bytes".into(), Value::Num(self.bytes as f64));
         m.insert("reconnects".into(), Value::Num(self.reconnects as f64));
-        m.insert(
-            "stall_secs".into(),
-            if self.stall_secs.is_finite() { Value::Num(self.stall_secs) } else { Value::Null },
-        );
+        m.insert("stall_secs".into(), Value::num_or_null(self.stall_secs));
         Value::Obj(m)
     }
 
@@ -168,6 +180,7 @@ impl Default for LatencyHisto {
 }
 
 impl LatencyHisto {
+    /// Record one observation.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().max(1);
         let idx = (127 - (us as u128).leading_zeros() as usize).min(BUCKETS - 1);
@@ -177,10 +190,12 @@ impl LatencyHisto {
         self.max_ns = self.max_ns.max(d.as_nanos());
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean observed latency (zero when empty).
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -188,6 +203,7 @@ impl LatencyHisto {
         Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
     }
 
+    /// Largest observed latency.
     pub fn max(&self) -> Duration {
         Duration::from_nanos(self.max_ns as u64)
     }
@@ -210,7 +226,7 @@ impl LatencyHisto {
 }
 
 /// A point on the Fig 5 timeline: one adaptive window on one link.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TimelinePoint {
     /// Seconds since run start.
     pub t: f64,
@@ -229,10 +245,12 @@ pub struct TimelinePoint {
 /// Collects window-by-window state for offline plotting / assertions.
 #[derive(Debug, Default)]
 pub struct Timeline {
+    /// Recorded window points, in push order.
     pub points: Vec<TimelinePoint>,
 }
 
 impl Timeline {
+    /// Append one window point.
     pub fn push(&mut self, p: TimelinePoint) {
         self.points.push(p);
     }
@@ -312,18 +330,22 @@ pub struct ThroughputMeter {
 }
 
 impl ThroughputMeter {
+    /// Start the clock.
     pub fn start() -> Self {
         ThroughputMeter { start: Instant::now(), items: 0 }
     }
 
+    /// Count `n` more items.
     pub fn add(&mut self, n: u64) {
         self.items += n;
     }
 
+    /// Items per second since [`ThroughputMeter::start`].
     pub fn rate(&self) -> f64 {
         self.items as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// Total items counted.
     pub fn items(&self) -> u64 {
         self.items
     }

@@ -1,0 +1,1004 @@
+//! Pipeline-wide telemetry: per-stage window snapshots that ride the data
+//! path back to the coordinator, and the [`PipelineReport`] that merges
+//! every stage into one run view.
+//!
+//! The problem this solves: in a multi-process run only the coordinator's
+//! own measurements used to survive — each worker printed its
+//! `WorkerReport` and exited, so "which boundary collapsed at t=12s" meant
+//! reading N interleaved stdouts. Now every worker's sender thread
+//! periodically serializes a [`StageSnapshot`] (window timeline since the
+//! last flush, cumulative frame/compute/encode counters, queue depth,
+//! resilience and per-stripe counters) and ships it **forward along the
+//! data path** as a telemetry control record (see
+//! [`crate::net::session`]). Each downstream worker relays what it
+//! receives, so everything funnels into the coordinator's return link —
+//! the one connection that is still alive when the last stage finishes.
+//! (The backward HELLO/ACK path closes upstream-first at shutdown, so
+//! final snapshots could never ride it.)
+//!
+//! Delivery is deliberately **best effort**: telemetry never enters the
+//! replay buffer, never consumes data-plane sequence numbers, and never
+//! delays an ACK — a lost conduit may drop a record. Every snapshot
+//! therefore carries a per-stage sequence number (`snap`) and cumulative
+//! counters, so the merge tolerates loss, duplication (striped senders
+//! broadcast the final flush over every conduit) and out-of-order
+//! arrival: counters come from the newest snapshot seen, window points
+//! accumulate from every distinct one, and gaps are counted rather than
+//! silently absorbed.
+//!
+//! The coordinator aggregates everything into a [`PipelineReport`] —
+//! per-stage timelines, boundary alignment on microbatch seq, end-to-end
+//! latency attribution — emitted as JSON (`--report-json`) and rendered
+//! human-readably by `quantpipe report <run.json>`.
+
+use super::{ResilienceSummary, StripeSummary, TimelinePoint};
+use crate::util::json::Value;
+use crate::Result;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Binary format version of a serialized [`StageSnapshot`].
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+/// Flag bit: this is the stage's final snapshot (its sender drained).
+const FLAG_LAST: u8 = 1;
+
+/// One telemetry record: what a stage measured, flushed at window
+/// boundaries and once more when its sender drains.
+///
+/// Counters (`frames`, `compute_ns`, …) are **cumulative since stage
+/// start**, so a merge can always keep the newest snapshot's values and
+/// lost records cost nothing but timeline points. `points` are
+/// **incremental**: only the windows completed since the previous flush.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageSnapshot {
+    /// Stage index that produced this snapshot.
+    pub stage: u32,
+    /// Per-stage snapshot sequence number (0-based, dense). Gaps at the
+    /// merge mean telemetry records were lost in transit.
+    pub snap: u64,
+    /// Final flush: the stage's sender has drained and will not report
+    /// again. A stage whose merged view never saw this died mid-run.
+    pub last: bool,
+    /// Microbatches processed so far (cumulative).
+    pub frames: u64,
+    /// Lowest data-plane seq covered by this snapshot's window, or
+    /// `u64::MAX` when no frame was seen since the previous flush.
+    pub seq_lo: u64,
+    /// One past the highest data-plane seq processed so far (high water).
+    pub seq_hi: u64,
+    /// Nanoseconds spent in stage compute so far (cumulative).
+    pub compute_ns: u64,
+    /// Nanoseconds spent in quantize+encode so far (cumulative).
+    pub encode_ns: u64,
+    /// Nanoseconds spent in decode+dequantize so far (cumulative).
+    pub decode_ns: u64,
+    /// Frames queued between compute and the transport writer at flush
+    /// time — a persistent non-zero depth marks the pipeline bubble
+    /// sitting *behind* this stage's output link.
+    pub queue_depth: u32,
+    /// Reconnect/replay counters for the stage's links (cumulative).
+    pub resilience: ResilienceSummary,
+    /// Per-stripe wire counters for the output link (cumulative; empty
+    /// when the boundary is not striped).
+    pub stripes: Vec<StripeSummary>,
+    /// Monitor/controller windows completed since the previous flush.
+    pub points: Vec<TimelinePoint>,
+    /// Errors recorded so far (full list, newest snapshot wins).
+    pub errors: Vec<String>,
+}
+
+impl StageSnapshot {
+    /// Serialize to the compact little-endian wire payload (the telemetry
+    /// control record's body; the wire layer prepends marker/kind/len).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.points.len() * 33);
+        out.push(SNAPSHOT_VERSION);
+        out.push(if self.last { FLAG_LAST } else { 0 });
+        out.extend_from_slice(&self.stage.to_le_bytes());
+        out.extend_from_slice(&self.snap.to_le_bytes());
+        out.extend_from_slice(&self.frames.to_le_bytes());
+        out.extend_from_slice(&self.seq_lo.to_le_bytes());
+        out.extend_from_slice(&self.seq_hi.to_le_bytes());
+        out.extend_from_slice(&self.compute_ns.to_le_bytes());
+        out.extend_from_slice(&self.encode_ns.to_le_bytes());
+        out.extend_from_slice(&self.decode_ns.to_le_bytes());
+        out.extend_from_slice(&self.queue_depth.to_le_bytes());
+        let r = &self.resilience;
+        out.extend_from_slice(&r.reconnects.to_le_bytes());
+        out.extend_from_slice(&r.reaccepts.to_le_bytes());
+        out.extend_from_slice(&r.replayed.to_le_bytes());
+        out.extend_from_slice(&r.deduped.to_le_bytes());
+        out.extend_from_slice(&r.stall_secs.to_le_bytes());
+        // Element counts are u16 on the wire; the written elements are
+        // clamped to the written count, so header and body can never
+        // disagree (no real snapshot approaches these bounds — one
+        // window point, a handful of stripes/errors).
+        let cap = u16::MAX as usize;
+        let stripes = &self.stripes[..self.stripes.len().min(cap)];
+        out.extend_from_slice(&(stripes.len() as u16).to_le_bytes());
+        for s in stripes {
+            out.extend_from_slice(&s.frames.to_le_bytes());
+            out.extend_from_slice(&s.bytes.to_le_bytes());
+            out.extend_from_slice(&s.reconnects.to_le_bytes());
+            out.extend_from_slice(&s.stall_secs.to_le_bytes());
+        }
+        let points = &self.points[..self.points.len().min(cap)];
+        out.extend_from_slice(&(points.len() as u16).to_le_bytes());
+        for p in points {
+            out.extend_from_slice(&p.t.to_le_bytes());
+            out.extend_from_slice(&p.bandwidth_bps.to_le_bytes());
+            out.extend_from_slice(&p.rate.to_le_bytes());
+            out.push(p.bits);
+            out.extend_from_slice(&p.util.to_le_bytes());
+        }
+        let errors = &self.errors[..self.errors.len().min(cap)];
+        out.extend_from_slice(&(errors.len() as u16).to_le_bytes());
+        for e in errors {
+            let b = e.as_bytes();
+            let n = b.len().min(cap);
+            out.extend_from_slice(&(n as u16).to_le_bytes());
+            out.extend_from_slice(&b[..n]);
+        }
+        out
+    }
+
+    /// Parse a snapshot payload. Unknown versions and truncated records
+    /// are errors (the caller counts and drops them — telemetry is best
+    /// effort, so a bad record must never take the run down).
+    pub fn from_bytes(buf: &[u8]) -> Result<StageSnapshot> {
+        let mut r = Reader { buf, pos: 0 };
+        let version = r.u8()?;
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "unsupported telemetry snapshot version {version}"
+        );
+        let flags = r.u8()?;
+        let stage = r.u32()?;
+        let snap = r.u64()?;
+        let frames = r.u64()?;
+        let seq_lo = r.u64()?;
+        let seq_hi = r.u64()?;
+        let compute_ns = r.u64()?;
+        let encode_ns = r.u64()?;
+        let decode_ns = r.u64()?;
+        let queue_depth = r.u32()?;
+        let resilience = ResilienceSummary {
+            reconnects: r.u64()?,
+            reaccepts: r.u64()?,
+            replayed: r.u64()?,
+            deduped: r.u64()?,
+            stall_secs: r.f64()?,
+        };
+        let n_stripes = r.u16()? as usize;
+        let mut stripes = Vec::with_capacity(n_stripes);
+        for _ in 0..n_stripes {
+            stripes.push(StripeSummary {
+                frames: r.u64()?,
+                bytes: r.u64()?,
+                reconnects: r.u64()?,
+                stall_secs: r.f64()?,
+            });
+        }
+        let n_points = r.u16()? as usize;
+        let mut points = Vec::with_capacity(n_points);
+        for _ in 0..n_points {
+            points.push(TimelinePoint {
+                t: r.f64()?,
+                stage: stage as usize,
+                bandwidth_bps: r.f64()?,
+                rate: r.f64()?,
+                bits: r.u8()?,
+                util: r.f64()?,
+            });
+        }
+        let n_errors = r.u16()? as usize;
+        let mut errors = Vec::with_capacity(n_errors);
+        for _ in 0..n_errors {
+            let n = r.u16()? as usize;
+            errors.push(String::from_utf8_lossy(r.take(n)?).into_owned());
+        }
+        Ok(StageSnapshot {
+            stage,
+            snap,
+            last: flags & FLAG_LAST != 0,
+            frames,
+            seq_lo,
+            seq_hi,
+            compute_ns,
+            encode_ns,
+            decode_ns,
+            queue_depth,
+            resilience,
+            stripes,
+            points,
+            errors,
+        })
+    }
+
+    /// Cheap identity probe — `(stage, snap)` — without a full parse.
+    /// Relay hops use it to dedup broadcast copies before re-forwarding.
+    pub fn peek_id(buf: &[u8]) -> Option<(u32, u64)> {
+        if buf.len() < 14 || buf[0] != SNAPSHOT_VERSION {
+            return None;
+        }
+        let stage = u32::from_le_bytes(buf[2..6].try_into().ok()?);
+        let snap = u64::from_le_bytes(buf[6..14].try_into().ok()?);
+        Some((stage, snap))
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "telemetry snapshot truncated at byte {}",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Relay queue (per-worker hop)
+// ---------------------------------------------------------------------------
+
+/// Telemetry payloads a worker received from upstream and owes downstream.
+/// Deduplicates by `(stage, snap)` at the hop, so striped broadcast copies
+/// don't multiply across the chain; unparseable payloads are forwarded
+/// verbatim (a middle hop must not censor what the coordinator could still
+/// count as dropped).
+#[derive(Debug, Default)]
+pub struct TelemetryRelay {
+    queue: Vec<Vec<u8>>,
+    seen: BTreeSet<(u32, u64)>,
+}
+
+impl TelemetryRelay {
+    /// Offer one inbound payload; duplicates of an already-relayed
+    /// snapshot are dropped. Returns whether it was queued.
+    pub fn offer(&mut self, payload: Vec<u8>) -> bool {
+        if let Some(id) = StageSnapshot::peek_id(&payload) {
+            if !self.seen.insert(id) {
+                return false;
+            }
+        }
+        self.queue.push(payload);
+        true
+    }
+
+    /// Take everything queued (FIFO).
+    pub fn drain(&mut self) -> Vec<Vec<u8>> {
+        std::mem::take(&mut self.queue)
+    }
+
+    /// Anything waiting to be forwarded?
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Merged per-stage view
+// ---------------------------------------------------------------------------
+
+/// One stage's merged timeline inside a [`PipelineReport`].
+#[derive(Debug, Default)]
+pub struct StageReport {
+    /// Stage index.
+    pub stage: u32,
+    /// Microbatches processed (newest snapshot's cumulative count).
+    pub frames: u64,
+    /// Lowest data-plane seq any snapshot covered (`u64::MAX` until one
+    /// did). Nonzero on a stage that joined or resumed mid-run.
+    pub seq_lo: u64,
+    /// One past the highest data-plane seq processed.
+    pub seq_hi: u64,
+    /// Cumulative stage compute nanoseconds.
+    pub compute_ns: u64,
+    /// Cumulative encode nanoseconds.
+    pub encode_ns: u64,
+    /// Cumulative decode nanoseconds.
+    pub decode_ns: u64,
+    /// Queue depth at the last flush.
+    pub queue_depth: u32,
+    /// The stage's final snapshot arrived (false = it died mid-run, or
+    /// its last record was lost).
+    pub complete: bool,
+    /// Distinct snapshots merged.
+    pub snaps: u64,
+    /// Snapshot-sequence gaps observed (telemetry records lost in
+    /// transit; the counters self-heal, only timeline points are gone).
+    pub missed: u64,
+    /// Merged window timeline, ascending by `t`.
+    pub points: Vec<TimelinePoint>,
+    /// Reconnect/replay counters for the stage's links.
+    pub resilience: ResilienceSummary,
+    /// Per-stripe wire counters for the output link.
+    pub stripes: Vec<StripeSummary>,
+    /// Errors the stage reported.
+    pub errors: Vec<String>,
+    seen: BTreeSet<u64>,
+    newest: Option<u64>,
+}
+
+impl StageReport {
+    /// Distinct bitwidth sequence (collapsed) — the stage's Fig 5 track,
+    /// computed by the same [`super::Timeline::bits_sequence`] the
+    /// in-process report uses (every merged point carries this stage's
+    /// index, so the filter is a no-op here).
+    pub fn bits_sequence(&self) -> Vec<u8> {
+        let tl = super::Timeline { points: self.points.clone() };
+        tl.bits_sequence(self.stage as usize)
+    }
+
+    /// Mean compute seconds per microbatch.
+    pub fn mean_compute_s(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.compute_ns as f64 / 1e9 / self.frames as f64
+        }
+    }
+
+    fn apply(&mut self, s: StageSnapshot) {
+        if !self.seen.insert(s.snap) {
+            return; // duplicate (striped broadcast, replayed relay)
+        }
+        self.snaps = self.seen.len() as u64;
+        let expected = self.seen.iter().next_back().map_or(0, |m| m + 1);
+        self.missed = expected - self.snaps;
+        // A run-wide minimum is order-independent: fold every snapshot's
+        // window in, not just the newest.
+        self.seq_lo = self.seq_lo.min(s.seq_lo);
+        // Counters are cumulative: the newest snapshot wins, regardless of
+        // arrival order.
+        if self.newest.map_or(true, |n| s.snap > n) {
+            self.newest = Some(s.snap);
+            self.frames = s.frames;
+            self.seq_hi = s.seq_hi;
+            self.compute_ns = s.compute_ns;
+            self.encode_ns = s.encode_ns;
+            self.decode_ns = s.decode_ns;
+            self.queue_depth = s.queue_depth;
+            self.resilience = s.resilience;
+            self.stripes = s.stripes;
+            self.errors = s.errors;
+        }
+        self.complete |= s.last;
+        // Points are incremental: accumulate from every distinct snapshot
+        // and keep the timeline ordered even under out-of-order arrival.
+        // Snapshots arrive in order in the common case, so only sort when
+        // the appended batch actually broke monotonicity — the re-sort is
+        // the exception, not an O(n log n) cost per ingested record.
+        let boundary = self.points.len().saturating_sub(1);
+        self.points.extend(s.points);
+        let broke_order = self.points[boundary..].windows(2).any(|w| w[0].t > w[1].t);
+        if broke_order {
+            self.points
+                .sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The merged run view
+// ---------------------------------------------------------------------------
+
+/// The coordinator's end-to-end measurements, embedded in the
+/// [`PipelineReport`] beside the per-stage telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorSummary {
+    /// Images scored.
+    pub images: u64,
+    /// Microbatches completed end to end.
+    pub microbatches: u64,
+    /// Wall-clock run seconds.
+    pub wall_secs: f64,
+    /// End-to-end images/sec.
+    pub throughput: f64,
+    /// Top-1 accuracy.
+    pub accuracy: f64,
+    /// Median end-to-end microbatch latency, seconds.
+    pub p50_latency_s: f64,
+    /// 99th-percentile end-to-end microbatch latency, seconds.
+    pub p99_latency_s: f64,
+    /// Coordinator-side failures (empty on a clean run).
+    pub errors: Vec<String>,
+}
+
+/// Every stage's timeline plus the coordinator's end-to-end view, merged
+/// into the single artifact a multi-process run produces.
+///
+/// Fed by [`PipelineReport::ingest`] (raw telemetry payloads off the
+/// return link) and [`PipelineReport::merge`] (parsed snapshots);
+/// serialized with [`PipelineReport::to_json`] / parsed back with
+/// [`PipelineReport::from_json`]; rendered by [`PipelineReport::render`]
+/// (the `quantpipe report` subcommand).
+#[derive(Debug, Default)]
+pub struct PipelineReport {
+    /// Per-stage merged views, keyed (and therefore ordered) by stage.
+    pub stages: BTreeMap<u32, StageReport>,
+    /// The coordinator's own measurements, when this report came from a
+    /// live run (absent in a worker-only aggregation).
+    pub coordinator: Option<CoordinatorSummary>,
+    /// Telemetry payloads that failed to parse and were dropped.
+    pub dropped: u64,
+}
+
+impl PipelineReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Merge one parsed snapshot (idempotent per `(stage, snap)`).
+    pub fn merge(&mut self, snap: StageSnapshot) {
+        let stage = snap.stage;
+        let entry = self.stages.entry(stage).or_insert_with(|| StageReport {
+            stage,
+            // The "no seq seen yet" sentinel, so the min-fold works.
+            seq_lo: u64::MAX,
+            ..StageReport::default()
+        });
+        entry.apply(snap);
+    }
+
+    /// Parse + merge one raw telemetry payload; garbage is counted in
+    /// [`PipelineReport::dropped`], never an error.
+    pub fn ingest(&mut self, payload: &[u8]) {
+        match StageSnapshot::from_bytes(payload) {
+            Ok(s) => self.merge(s),
+            Err(_) => self.dropped += 1,
+        }
+    }
+
+    /// Number of stages that reported at least one snapshot.
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Boundary alignment on microbatch seq: for each adjacent pair of
+    /// reporting stages, how many frames the downstream stage is short.
+    /// On a complete clean run every entry is zero; a died stage shows up
+    /// as the pipeline bubble it left behind.
+    pub fn boundary_shortfalls(&self) -> Vec<(u32, u32, u64)> {
+        let mut out = Vec::new();
+        let stages: Vec<&StageReport> = self.stages.values().collect();
+        for w in stages.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            out.push((a.stage, b.stage, a.frames.saturating_sub(b.frames)));
+        }
+        out
+    }
+
+    /// Machine-readable report (non-finite numbers map to `null` — the
+    /// document must always re-parse).
+    pub fn to_json(&self) -> Value {
+        let num = Value::num_or_null;
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Value::Str("quantpipe.pipeline_report.v1".into()));
+        m.insert("dropped".into(), Value::Num(self.dropped as f64));
+        let stages = self
+            .stages
+            .values()
+            .map(|s| {
+                let mut sm = BTreeMap::new();
+                sm.insert("stage".into(), Value::Num(s.stage as f64));
+                sm.insert("frames".into(), Value::Num(s.frames as f64));
+                sm.insert(
+                    "seq_lo".into(),
+                    if s.seq_lo == u64::MAX { Value::Null } else { Value::Num(s.seq_lo as f64) },
+                );
+                sm.insert("seq_hi".into(), Value::Num(s.seq_hi as f64));
+                sm.insert("compute_ns".into(), Value::Num(s.compute_ns as f64));
+                sm.insert("encode_ns".into(), Value::Num(s.encode_ns as f64));
+                sm.insert("decode_ns".into(), Value::Num(s.decode_ns as f64));
+                sm.insert("queue_depth".into(), Value::Num(s.queue_depth as f64));
+                sm.insert("complete".into(), Value::Bool(s.complete));
+                sm.insert("snaps".into(), Value::Num(s.snaps as f64));
+                sm.insert("missed".into(), Value::Num(s.missed as f64));
+                let tl = super::Timeline { points: s.points.clone() };
+                sm.insert("timeline".into(), tl.to_json());
+                sm.insert("resilience".into(), s.resilience.to_json());
+                sm.insert("stripes".into(), StripeSummary::list_to_json(&s.stripes));
+                sm.insert(
+                    "errors".into(),
+                    Value::Arr(s.errors.iter().map(|e| Value::Str(e.clone())).collect()),
+                );
+                Value::Obj(sm)
+            })
+            .collect();
+        m.insert("stages".into(), Value::Arr(stages));
+        match &self.coordinator {
+            Some(c) => {
+                let mut cm = BTreeMap::new();
+                cm.insert("images".into(), Value::Num(c.images as f64));
+                cm.insert("microbatches".into(), Value::Num(c.microbatches as f64));
+                cm.insert("wall_secs".into(), num(c.wall_secs));
+                cm.insert("throughput".into(), num(c.throughput));
+                cm.insert("accuracy".into(), num(c.accuracy));
+                cm.insert("p50_latency_s".into(), num(c.p50_latency_s));
+                cm.insert("p99_latency_s".into(), num(c.p99_latency_s));
+                cm.insert(
+                    "errors".into(),
+                    Value::Arr(c.errors.iter().map(|e| Value::Str(e.clone())).collect()),
+                );
+                m.insert("coordinator".into(), Value::Obj(cm));
+            }
+            None => {
+                m.insert("coordinator".into(), Value::Null);
+            }
+        }
+        Value::Obj(m)
+    }
+
+    /// Parse a report back from its JSON form (the `quantpipe report`
+    /// subcommand reads the file `--report-json` wrote).
+    pub fn from_json(v: &Value) -> Result<PipelineReport> {
+        let schema = v.at("schema")?.as_str()?;
+        anyhow::ensure!(
+            schema == "quantpipe.pipeline_report.v1",
+            "not a pipeline report (schema {schema:?})"
+        );
+        let mut report = PipelineReport {
+            dropped: v.at("dropped")?.as_u64()?,
+            ..PipelineReport::default()
+        };
+        for sv in v.at("stages")?.as_arr()? {
+            let stage = sv.at("stage")?.as_u64()? as u32;
+            let mut points = Vec::new();
+            for pv in sv.at("timeline")?.as_arr()? {
+                points.push(TimelinePoint {
+                    t: pv.at("t")?.as_f64()?,
+                    stage: stage as usize,
+                    // An absent bandwidth means the unconstrained-link
+                    // "infinite" measurement (see Timeline::to_json).
+                    bandwidth_bps: match pv.get("bandwidth_bps") {
+                        Some(b) => b.as_f64()?,
+                        None => f64::INFINITY,
+                    },
+                    rate: pv.at("rate")?.as_f64()?,
+                    bits: pv.at("bits")?.as_u64()? as u8,
+                    util: pv.at("util")?.as_f64()?,
+                });
+            }
+            let rv = sv.at("resilience")?;
+            let resilience = ResilienceSummary {
+                reconnects: rv.at("reconnects")?.as_u64()?,
+                reaccepts: rv.at("reaccepts")?.as_u64()?,
+                replayed: rv.at("replayed")?.as_u64()?,
+                deduped: rv.at("deduped")?.as_u64()?,
+                stall_secs: match rv.at("stall_secs")? {
+                    Value::Null => 0.0,
+                    other => other.as_f64()?,
+                },
+            };
+            let mut stripes = Vec::new();
+            for tv in sv.at("stripes")?.as_arr()? {
+                stripes.push(StripeSummary {
+                    frames: tv.at("frames")?.as_u64()?,
+                    bytes: tv.at("bytes")?.as_u64()?,
+                    reconnects: tv.at("reconnects")?.as_u64()?,
+                    stall_secs: match tv.at("stall_secs")? {
+                        Value::Null => 0.0,
+                        other => other.as_f64()?,
+                    },
+                });
+            }
+            let errors = sv
+                .at("errors")?
+                .as_arr()?
+                .iter()
+                .map(|e| Ok(e.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            let snaps = sv.at("snaps")?.as_u64()?;
+            report.stages.insert(
+                stage,
+                StageReport {
+                    stage,
+                    frames: sv.at("frames")?.as_u64()?,
+                    seq_lo: match sv.at("seq_lo")? {
+                        Value::Null => u64::MAX,
+                        other => other.as_u64()?,
+                    },
+                    seq_hi: sv.at("seq_hi")?.as_u64()?,
+                    compute_ns: sv.at("compute_ns")?.as_u64()?,
+                    encode_ns: sv.at("encode_ns")?.as_u64()?,
+                    decode_ns: sv.at("decode_ns")?.as_u64()?,
+                    queue_depth: sv.at("queue_depth")?.as_u64()? as u32,
+                    complete: sv.at("complete")?.as_bool()?,
+                    snaps,
+                    missed: sv.at("missed")?.as_u64()?,
+                    points,
+                    resilience,
+                    stripes,
+                    errors,
+                    seen: BTreeSet::new(),
+                    newest: None,
+                },
+            );
+        }
+        if let Some(cv) = v.get("coordinator").filter(|c| !matches!(c, Value::Null)) {
+            let opt = |key: &str| -> f64 {
+                cv.get(key).and_then(|x| x.as_f64().ok()).unwrap_or(0.0)
+            };
+            report.coordinator = Some(CoordinatorSummary {
+                images: cv.at("images").and_then(|x| x.as_u64()).unwrap_or(0),
+                microbatches: cv.at("microbatches").and_then(|x| x.as_u64()).unwrap_or(0),
+                wall_secs: opt("wall_secs"),
+                throughput: opt("throughput"),
+                accuracy: opt("accuracy"),
+                p50_latency_s: opt("p50_latency_s"),
+                p99_latency_s: opt("p99_latency_s"),
+                errors: cv
+                    .get("errors")
+                    .and_then(|e| e.as_arr().ok())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|e| e.as_str().ok().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(report)
+    }
+
+    /// Human-readable rendering (the `quantpipe report` subcommand).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "== QuantPipe pipeline report ==");
+        if let Some(c) = &self.coordinator {
+            let _ = writeln!(
+                s,
+                "coordinator      {} microbatches, {} images, {:.2}s wall, {:.1} img/s, top-1 {:.2}%",
+                c.microbatches,
+                c.images,
+                c.wall_secs,
+                c.throughput,
+                c.accuracy * 100.0
+            );
+            let _ = writeln!(
+                s,
+                "e2e latency      p50 {:.1} ms / p99 {:.1} ms",
+                c.p50_latency_s * 1e3,
+                c.p99_latency_s * 1e3
+            );
+            for e in &c.errors {
+                let _ = writeln!(s, "  coordinator failure: {e}");
+            }
+        }
+        if self.dropped > 0 {
+            let _ = writeln!(s, "dropped          {} unparseable telemetry records", self.dropped);
+        }
+        let mut compute_sum_s = 0.0;
+        for st in self.stages.values() {
+            let status = if st.complete { "complete" } else { "INCOMPLETE (died or final record lost)" };
+            let seq_range = if st.seq_lo == u64::MAX {
+                format!("seq high-water {}", st.seq_hi)
+            } else {
+                format!("seq {}..{}", st.seq_lo, st.seq_hi)
+            };
+            let _ = writeln!(
+                s,
+                "stage {:<2}         {} frames ({seq_range}), {} windows, {} snapshots ({} lost), {status}",
+                st.stage,
+                st.frames,
+                st.points.len(),
+                st.snaps,
+                st.missed
+            );
+            let _ = writeln!(s, "  bits sequence  {:?}", st.bits_sequence());
+            let finite: Vec<f64> = st
+                .points
+                .iter()
+                .map(|p| p.bandwidth_bps)
+                .filter(|b| b.is_finite())
+                .collect();
+            if !finite.is_empty() {
+                let min = finite.iter().copied().fold(f64::INFINITY, f64::min);
+                let max = finite.iter().copied().fold(0.0f64, f64::max);
+                let _ = writeln!(
+                    s,
+                    "  bandwidth      min {:.2} / max {:.2} Mbps over {} measured windows",
+                    min / 1e6,
+                    max / 1e6,
+                    finite.len()
+                );
+            }
+            compute_sum_s += st.mean_compute_s();
+            let _ = writeln!(
+                s,
+                "  per frame      compute {:.3} ms, encode {:.3} ms, decode {:.3} ms (queue depth {} at last flush)",
+                st.mean_compute_s() * 1e3,
+                per_frame_ms(st.encode_ns, st.frames),
+                per_frame_ms(st.decode_ns, st.frames),
+                st.queue_depth
+            );
+            let r = &st.resilience;
+            if r.reconnects + r.reaccepts + r.replayed + r.deduped > 0 || r.stall_secs > 0.0 {
+                let _ = writeln!(
+                    s,
+                    "  resilience     {} reconnects / {} re-accepts, {} replayed, {} deduped, {:.2}s stalled",
+                    r.reconnects, r.reaccepts, r.replayed, r.deduped, r.stall_secs
+                );
+            }
+            for (i, sp) in st.stripes.iter().enumerate() {
+                let _ = writeln!(
+                    s,
+                    "  stripe {i:<2}      {} frames, {} B, {} reconnects, {:.2}s stalled",
+                    sp.frames, sp.bytes, sp.reconnects, sp.stall_secs
+                );
+            }
+            for e in &st.errors {
+                let _ = writeln!(s, "  stage failure: {e}");
+            }
+        }
+        for (a, b, short) in self.boundary_shortfalls() {
+            if short == 0 {
+                let _ = writeln!(s, "boundary {a}->{b}    aligned");
+            } else {
+                let _ = writeln!(
+                    s,
+                    "boundary {a}->{b}    stage {b} is {short} microbatches short of stage {a} — the bubble sat here"
+                );
+            }
+        }
+        if let Some(c) = &self.coordinator {
+            if c.p50_latency_s > 0.0 {
+                let wire = (c.p50_latency_s - compute_sum_s).max(0.0);
+                let _ = writeln!(
+                    s,
+                    "attribution      p50 e2e {:.1} ms = {:.1} ms stage compute + {:.1} ms wire/codec/queueing",
+                    c.p50_latency_s * 1e3,
+                    compute_sum_s * 1e3,
+                    wire * 1e3
+                );
+            }
+        }
+        s
+    }
+}
+
+fn per_frame_ms(ns: u64, frames: u64) -> f64 {
+    if frames == 0 {
+        0.0
+    } else {
+        ns as f64 / 1e6 / frames as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(t: f64, stage: usize, bits: u8) -> TimelinePoint {
+        TimelinePoint {
+            t,
+            stage,
+            bandwidth_bps: 1e6 * t.max(0.1),
+            rate: 100.0,
+            bits,
+            util: 0.5,
+        }
+    }
+
+    fn snap(stage: u32, n: u64, last: bool, frames: u64, points: Vec<TimelinePoint>) -> StageSnapshot {
+        StageSnapshot {
+            stage,
+            snap: n,
+            last,
+            frames,
+            seq_lo: frames.saturating_sub(points.len() as u64),
+            seq_hi: frames,
+            compute_ns: frames * 1_000_000,
+            encode_ns: frames * 100_000,
+            decode_ns: frames * 50_000,
+            queue_depth: 1,
+            resilience: ResilienceSummary { reconnects: 1, ..Default::default() },
+            stripes: vec![StripeSummary { frames, bytes: frames * 100, ..Default::default() }],
+            points,
+            errors: vec![],
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_bytes() {
+        let s = StageSnapshot {
+            stage: 2,
+            snap: 7,
+            last: true,
+            frames: 64,
+            seq_lo: 60,
+            seq_hi: 64,
+            compute_ns: 123_456_789,
+            encode_ns: 42,
+            decode_ns: 7,
+            queue_depth: 3,
+            resilience: ResilienceSummary {
+                reconnects: 2,
+                reaccepts: 1,
+                replayed: 9,
+                deduped: 4,
+                stall_secs: 0.75,
+            },
+            stripes: vec![
+                StripeSummary { frames: 30, bytes: 999, reconnects: 1, stall_secs: 0.1 },
+                StripeSummary { frames: 34, bytes: 1001, reconnects: 0, stall_secs: 0.0 },
+            ],
+            points: vec![point(1.0, 2, 32), point(2.0, 2, 8)],
+            errors: vec!["link 2 (tcp): send failed".into()],
+        };
+        let bytes = s.to_bytes();
+        let back = StageSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(StageSnapshot::peek_id(&bytes), Some((2, 7)));
+    }
+
+    #[test]
+    fn snapshot_with_infinite_bandwidth_survives_binary_and_json() {
+        let mut p = point(1.0, 0, 32);
+        p.bandwidth_bps = f64::INFINITY;
+        let s = snap(0, 0, true, 4, vec![p]);
+        let back = StageSnapshot::from_bytes(&s.to_bytes()).unwrap();
+        assert!(back.points[0].bandwidth_bps.is_infinite());
+        let mut report = PipelineReport::new();
+        report.merge(back);
+        let json = report.to_json().to_string_pretty();
+        let parsed = Value::parse(&json).unwrap();
+        let again = PipelineReport::from_json(&parsed).unwrap();
+        assert!(again.stages[&0].points[0].bandwidth_bps.is_infinite());
+    }
+
+    #[test]
+    fn truncated_or_versioned_garbage_is_an_error_not_a_panic() {
+        let s = snap(1, 0, false, 8, vec![point(1.0, 1, 8)]);
+        let bytes = s.to_bytes();
+        for cut in [0usize, 1, 5, 13, bytes.len() - 1] {
+            assert!(StageSnapshot::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        let mut wrong = bytes.clone();
+        wrong[0] = 99;
+        assert!(StageSnapshot::from_bytes(&wrong).is_err());
+        assert_eq!(StageSnapshot::peek_id(&wrong), None);
+        let mut report = PipelineReport::new();
+        report.ingest(&wrong);
+        assert_eq!(report.dropped, 1, "garbage is counted, never fatal");
+    }
+
+    #[test]
+    fn merge_handles_out_of_order_worker_arrival() {
+        // Snapshots arrive 2, 0, 1 — counters must come from snap 2, the
+        // timeline must still be ascending, nothing double-counted.
+        let mut report = PipelineReport::new();
+        report.merge(snap(0, 2, true, 30, vec![point(3.0, 0, 2)]));
+        report.merge(snap(0, 0, false, 10, vec![point(1.0, 0, 32)]));
+        report.merge(snap(0, 1, false, 20, vec![point(2.0, 0, 8)]));
+        let st = &report.stages[&0];
+        assert_eq!(st.frames, 30, "counters from the newest snapshot");
+        assert!(st.complete);
+        assert_eq!(st.snaps, 3);
+        assert_eq!(st.missed, 0);
+        assert_eq!(st.seq_lo, 9, "seq_lo folds the minimum across ALL snapshots");
+        assert_eq!(st.seq_hi, 30);
+        let ts: Vec<f64> = st.points.iter().map(|p| p.t).collect();
+        assert_eq!(ts, vec![1.0, 2.0, 3.0], "timeline must be re-ordered");
+        assert_eq!(st.bits_sequence(), vec![32, 8, 2]);
+    }
+
+    #[test]
+    fn merge_dedups_broadcast_copies() {
+        let mut report = PipelineReport::new();
+        let s = snap(1, 0, false, 10, vec![point(1.0, 1, 8)]);
+        report.merge(s.clone());
+        report.merge(s.clone());
+        report.merge(s);
+        let st = &report.stages[&1];
+        assert_eq!(st.snaps, 1);
+        assert_eq!(st.points.len(), 1, "duplicate snapshots must not duplicate points");
+    }
+
+    #[test]
+    fn stage_that_died_mid_run_is_flagged_and_shows_the_bubble() {
+        let mut report = PipelineReport::new();
+        // Stage 0 finishes its 30 frames; stage 1 dies after 12 and its
+        // final record never arrives.
+        report.merge(snap(0, 0, false, 15, vec![point(1.0, 0, 8)]));
+        report.merge(snap(0, 1, true, 30, vec![point(2.0, 0, 8)]));
+        report.merge(snap(1, 0, false, 12, vec![point(1.1, 1, 8)]));
+        assert!(report.stages[&0].complete);
+        assert!(!report.stages[&1].complete, "no final snapshot = died mid-run");
+        assert_eq!(report.boundary_shortfalls(), vec![(0, 1, 18)]);
+        let text = report.render();
+        assert!(text.contains("INCOMPLETE"), "{text}");
+        assert!(text.contains("18 microbatches short"), "{text}");
+    }
+
+    #[test]
+    fn lost_telemetry_records_are_counted_as_gaps() {
+        let mut report = PipelineReport::new();
+        report.merge(snap(0, 0, false, 10, vec![]));
+        report.merge(snap(0, 3, true, 40, vec![]));
+        let st = &report.stages[&0];
+        assert_eq!(st.snaps, 2);
+        assert_eq!(st.missed, 2, "snaps 1 and 2 were lost in transit");
+        assert_eq!(st.frames, 40, "cumulative counters self-heal across the gap");
+    }
+
+    #[test]
+    fn seq_alignment_across_boundaries() {
+        let mut report = PipelineReport::new();
+        for stage in 0..3u32 {
+            report.merge(snap(stage, 0, true, 24, vec![point(1.0, stage as usize, 8)]));
+        }
+        assert_eq!(report.stage_count(), 3);
+        assert!(report.boundary_shortfalls().iter().all(|&(_, _, d)| d == 0));
+        assert!(report.render().contains("aligned"));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_merged_view() {
+        let mut report = PipelineReport::new();
+        report.merge(snap(0, 0, true, 24, vec![point(1.0, 0, 32), point(2.0, 0, 8)]));
+        report.merge(snap(1, 0, false, 20, vec![point(1.5, 1, 8)]));
+        report.coordinator = Some(CoordinatorSummary {
+            images: 192,
+            microbatches: 24,
+            wall_secs: 2.0,
+            throughput: 96.0,
+            accuracy: 1.0,
+            p50_latency_s: 0.012,
+            p99_latency_s: 0.04,
+            errors: vec![],
+        });
+        let json = report.to_json().to_string_pretty();
+        let back = PipelineReport::from_json(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.stage_count(), 2);
+        assert_eq!(back.stages[&0].frames, 24);
+        assert!(back.stages[&0].complete);
+        assert!(!back.stages[&1].complete);
+        assert_eq!(back.stages[&0].points.len(), 2);
+        assert_eq!(back.stages[&0].bits_sequence(), vec![32, 8]);
+        let c = back.coordinator.as_ref().unwrap();
+        assert_eq!(c.microbatches, 24);
+        assert!((c.accuracy - 1.0).abs() < 1e-12);
+        // And the renderer accepts the parsed-back form.
+        assert!(back.render().contains("stage 0"));
+    }
+
+    #[test]
+    fn relay_dedups_per_hop_but_forwards_unknown_payloads() {
+        let mut relay = TelemetryRelay::default();
+        let a = snap(0, 0, false, 1, vec![]).to_bytes();
+        assert!(relay.offer(a.clone()), "first copy queued");
+        assert!(!relay.offer(a.clone()), "broadcast duplicate dropped");
+        assert!(relay.offer(vec![0xde, 0xad]), "unparseable payloads pass through");
+        let q = relay.drain();
+        assert_eq!(q.len(), 2);
+        assert!(relay.is_empty());
+        assert!(!relay.offer(a), "dedup memory survives the drain");
+    }
+}

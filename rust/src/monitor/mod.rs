@@ -108,6 +108,7 @@ impl WindowMonitor {
         self.last
     }
 
+    /// Window length in microbatches.
     pub fn window_len(&self) -> u64 {
         self.window
     }

@@ -7,7 +7,7 @@
 //! A stage boundary owns 1..N conduits ([`super::stripe`]); the plain
 //! resilient link is simply the 1-conduit case ([`super::resilient`]).
 
-use super::session::{ctrl_record, CTRL_LEN};
+use super::session::{append_telemetry_record, ctrl_record, CTRL_LEN};
 use super::tcp::{connect_until, Backoff};
 use crate::util::sync::lock;
 use crate::Result;
@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 pub struct LinkKillSwitch(Arc<Mutex<Option<TcpStream>>>);
 
 impl LinkKillSwitch {
+    /// Empty switch; arms when a conduit registers its stream.
     pub fn new() -> Self {
         Self::default()
     }
@@ -74,6 +75,20 @@ pub(crate) fn write_ctrl(s: &mut TcpStream, kind: u8, seq: u64) -> std::io::Resu
 pub(crate) fn write_raw(s: &mut TcpStream, rec: &[u8]) -> std::io::Result<()> {
     s.write_all(rec)?;
     s.flush()
+}
+
+/// Write one telemetry record (header + payload) in a single buffered
+/// write, reusing `scratch` so the hot path allocates nothing. Oversized
+/// payloads surface as an error before any byte hits the wire.
+pub(crate) fn write_telemetry(
+    s: &mut TcpStream,
+    payload: &[u8],
+    scratch: &mut Vec<u8>,
+) -> crate::Result<()> {
+    scratch.clear();
+    append_telemetry_record(scratch, payload)?;
+    write_raw(s, scratch)?;
+    Ok(())
 }
 
 /// Outcome of a non-blocking read sweep.

@@ -22,18 +22,24 @@ use crate::quant::codec::Encoded;
 use crate::quant::QuantParams;
 use crate::Result;
 
+/// Frame header magic ("QPFR").
 pub const MAGIC: u32 = 0x5150_4652; // "QPFR"
+/// Frame format version.
 pub const VERSION: u8 = 1;
 
 /// One activation frame: header + payload bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
+    /// Microbatch sequence number.
     pub seq: u64,
+    /// Activation shape (outermost first).
     pub shape: Vec<usize>,
+    /// Encoded payload + quantization parameters.
     pub enc: Encoded,
 }
 
 impl Frame {
+    /// Assemble a frame from its parts.
     pub fn new(seq: u64, shape: Vec<usize>, enc: Encoded) -> Self {
         Frame { seq, shape, enc }
     }

@@ -56,10 +56,12 @@ struct LinkState {
 }
 
 impl SimLink {
+    /// Trace-shaped link with no latency or faults.
     pub fn new(trace: BandwidthTrace) -> Self {
         Self::with_faults(trace, Duration::from_micros(200), LinkFaults::default())
     }
 
+    /// Trace-shaped link with propagation latency + fault injection.
     pub fn with_faults(trace: BandwidthTrace, latency: Duration, faults: LinkFaults) -> Self {
         SimLink {
             trace,
@@ -76,6 +78,7 @@ impl SimLink {
         }
     }
 
+    /// Infinite-bandwidth link (no shaping).
     pub fn unlimited() -> Self {
         Self::new(BandwidthTrace::unlimited())
     }

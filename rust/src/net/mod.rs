@@ -17,8 +17,10 @@
 //!   measured write-stall time, not simulation.
 //! * [`session`] — the reliability protocol itself (shared sequence
 //!   space, bounded replay buffer, cumulative ACK trimming, HELLO resync,
-//!   dedup/reorder window, FIN/FIN_ACK drain) as a pure state machine
-//!   with no socket types in scope — unit/property-testable offline.
+//!   dedup/reorder window, FIN/FIN_ACK drain, plus the data-plane-neutral
+//!   telemetry record) as a pure state machine with no socket types in
+//!   scope — unit/property-testable offline. The normative wire spec is
+//!   `docs/WIRE_PROTOCOL.md`.
 //! * [`conduit`] — one physical connection of a session: dial/accept
 //!   lifecycle, backoff bookkeeping, raw non-blocking byte I/O.
 //! * [`stripe`] — a stage boundary fanning one session over N conduits

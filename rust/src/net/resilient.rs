@@ -78,6 +78,7 @@ impl ReconnectingTx {
         ReconnectingTx(StripedTx::connect_to(peer, 1, cfg, stats))
     }
 
+    /// Shared resilience counters for this link.
     pub fn stats(&self) -> Arc<ResilienceStats> {
         self.0.stats()
     }
@@ -133,6 +134,10 @@ impl FrameTx for ReconnectingTx {
     }
     // stripes() stays None: a single-conduit link reports through the
     // resilience counters only, keeping pre-striping reports unchanged.
+
+    fn send_telemetry(&mut self, payload: &[u8]) -> Result<()> {
+        self.0.send_telemetry(payload)
+    }
 }
 
 /// Fault-tolerant receiver half. Keeps its listener so a failed peer can
@@ -153,6 +158,7 @@ impl ReconnectingRx {
         ReconnectingRx(StripedRx::accept_on_ordered(listener, cfg, stats))
     }
 
+    /// Shared resilience counters for this link.
     pub fn stats(&self) -> Arc<ResilienceStats> {
         self.0.stats()
     }
@@ -176,6 +182,10 @@ impl FrameRx for ReconnectingRx {
 
     fn resilience(&self) -> Option<Arc<ResilienceStats>> {
         Some(self.0.stats())
+    }
+
+    fn poll_telemetry(&mut self) -> Vec<Vec<u8>> {
+        self.0.poll_telemetry()
     }
 }
 

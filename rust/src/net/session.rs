@@ -26,7 +26,18 @@
 //!       2 ACK{next_expected}    receiver → sender, cumulative
 //!       3 FIN{end_seq}          sender → receiver, after the last frame
 //!       4 FIN_ACK{end_seq}      receiver → sender, everything received
+//!       5 TELEMETRY{len}        sender → receiver, `len` payload bytes
+//!                               follow the 13-byte header
 //! ```
+//!
+//! TELEMETRY is the one variable-length record: its `seq` field carries
+//! the payload length (bounded by [`MAX_TELEMETRY_BYTES`]), and the
+//! payload — an opaque [`crate::metrics::telemetry::StageSnapshot`] — is
+//! deliberately **outside the reliability session**: it consumes no
+//! data-plane sequence number, never enters the replay buffer, and never
+//! changes when an ACK is due, so observability can never reorder or
+//! delay the data plane (best-effort delivery is the price, and the
+//! snapshot format is built to tolerate it).
 
 use super::frame::Frame;
 use crate::Result;
@@ -43,10 +54,21 @@ pub const CTRL_LEN: usize = 13;
 /// corrupt or hostile stream, not a real activation frame.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
 
+/// Control kind: receiver's greeting / resync position.
 pub const K_HELLO: u8 = 1;
+/// Control kind: cumulative acknowledgement.
 pub const K_ACK: u8 = 2;
+/// Control kind: sender finished at `seq`.
 pub const K_FIN: u8 = 3;
+/// Control kind: receiver confirms the drain.
 pub const K_FIN_ACK: u8 = 4;
+/// Control kind: telemetry record; the `seq` field is the byte length of
+/// the opaque payload that follows the 13-byte header.
+pub const K_TELEMETRY: u8 = 5;
+
+/// Upper bound on a telemetry record's payload. Far above any real
+/// snapshot (a few KB); anything larger is a corrupt or hostile stream.
+pub const MAX_TELEMETRY_BYTES: usize = 1 << 20;
 
 /// Serialize one control record.
 pub fn ctrl_record(kind: u8, seq: u64) -> [u8; CTRL_LEN] {
@@ -61,6 +83,21 @@ pub fn ctrl_record(kind: u8, seq: u64) -> [u8; CTRL_LEN] {
 /// caller): `(kind, seq)`.
 pub fn parse_ctrl(rec: &[u8]) -> (u8, u64) {
     (rec[4], u64::from_le_bytes(rec[5..13].try_into().unwrap()))
+}
+
+/// Serialize a complete telemetry record — 13-byte header (the `seq`
+/// field carries the payload length) followed by the payload — appending
+/// to `out`. Oversized payloads are refused rather than truncated: a
+/// record the decoder would reject must never reach the wire.
+pub fn append_telemetry_record(out: &mut Vec<u8>, payload: &[u8]) -> Result<()> {
+    anyhow::ensure!(
+        payload.len() <= MAX_TELEMETRY_BYTES,
+        "telemetry payload of {} bytes exceeds {MAX_TELEMETRY_BYTES}",
+        payload.len()
+    );
+    out.extend_from_slice(&ctrl_record(K_TELEMETRY, payload.len() as u64));
+    out.extend_from_slice(payload);
+    Ok(())
 }
 
 /// Tuning for the reliability session and its conduits. Defaults suit
@@ -122,9 +159,12 @@ impl Default for ResilienceConfig {
 /// One parsed item off a conduit's byte stream.
 #[derive(Debug)]
 pub enum WireItem {
+    /// A data-plane activation frame.
     Frame(Frame),
     /// `(kind, seq)` control record.
     Ctrl(u8, u64),
+    /// A telemetry record's opaque payload (already length-validated).
+    Telemetry(Vec<u8>),
 }
 
 /// Incremental parser for the session wire format. Conduits read whatever
@@ -141,6 +181,7 @@ pub struct WireDecoder {
 }
 
 impl WireDecoder {
+    /// Empty decoder.
     pub fn new() -> Self {
         Self::default()
     }
@@ -171,6 +212,20 @@ impl WireDecoder {
                 return Ok(None);
             }
             let (kind, seq) = parse_ctrl(&avail[..CTRL_LEN]);
+            if kind == K_TELEMETRY {
+                // The one variable-length record: seq = payload length.
+                let len = seq as usize;
+                anyhow::ensure!(
+                    seq <= MAX_TELEMETRY_BYTES as u64,
+                    "corrupt stream: telemetry payload length {seq} exceeds {MAX_TELEMETRY_BYTES}"
+                );
+                if avail.len() < CTRL_LEN + len {
+                    return Ok(None);
+                }
+                let payload = avail[CTRL_LEN..CTRL_LEN + len].to_vec();
+                self.pos += CTRL_LEN + len;
+                return Ok(Some(WireItem::Telemetry(payload)));
+            }
             self.pos += CTRL_LEN;
             return Ok(Some(WireItem::Ctrl(kind, seq)));
         }
@@ -224,6 +279,7 @@ pub struct SessionTx {
 }
 
 impl SessionTx {
+    /// Sender-side session with a bounded replay buffer.
     pub fn new(replay_capacity: usize) -> Self {
         SessionTx {
             replay: VecDeque::new(),
@@ -243,6 +299,7 @@ impl SessionTx {
         self.spare.pop().unwrap_or_default()
     }
 
+    /// Replay-buffer capacity (frames).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -471,6 +528,7 @@ impl SessionRx {
         self.ready.pop_front()
     }
 
+    /// Any frames waiting in the in-order delivery queue?
     pub fn has_ready(&self) -> bool {
         !self.ready.is_empty()
     }
@@ -705,6 +763,94 @@ mod tests {
         assert!(matches!(&items[1], WireItem::Ctrl(K_ACK, 7)));
         assert!(matches!(&items[2], WireItem::Frame(f) if f.seq == 1));
         assert!(matches!(&items[3], WireItem::Ctrl(K_FIN, 2)));
+    }
+
+    #[test]
+    fn telemetry_rides_the_wire_without_touching_the_session() {
+        // The observability invariant: a telemetry record between two data
+        // frames must decode in stream order, consume no data-plane seq,
+        // and leave the receiver's ACK schedule EXACTLY as it would be
+        // without it — telemetry may be lost, the data plane may not be
+        // perturbed.
+        let payload: Vec<u8> = (0..200u16).map(|i| (i % 251) as u8).collect();
+        let build_wire = |with_telemetry: bool| {
+            let mut wire = Vec::new();
+            for seq in 0..8u64 {
+                let b = frame(seq, 32).to_bytes();
+                wire.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                wire.extend_from_slice(&b);
+                if with_telemetry && seq == 3 {
+                    append_telemetry_record(&mut wire, &payload).unwrap();
+                }
+            }
+            wire.extend_from_slice(&ctrl_record(K_FIN, 8));
+            wire
+        };
+        let run = |wire: Vec<u8>| {
+            let mut rx = SessionRx::new(16, 0); // ack_every = 4
+            let mut dec = WireDecoder::new();
+            dec.extend(&wire);
+            let mut acks = Vec::new();
+            let mut delivered = Vec::new();
+            let mut telemetry = Vec::new();
+            while let Some(item) = dec.next().unwrap() {
+                match item {
+                    WireItem::Frame(f) => {
+                        rx.on_frame(f).unwrap();
+                        while let Some(f) = rx.pop_ready() {
+                            delivered.push(f.seq);
+                        }
+                        if let Some(pos) = rx.ack_due(false) {
+                            acks.push(pos);
+                            rx.mark_acked(pos);
+                        }
+                    }
+                    WireItem::Ctrl(K_FIN, end) => rx.on_fin(end).unwrap(),
+                    WireItem::Ctrl(_, _) => {}
+                    WireItem::Telemetry(p) => telemetry.push(p),
+                }
+            }
+            assert_eq!(rx.fin_due(), Some(8));
+            (acks, delivered, telemetry)
+        };
+        let (acks_plain, frames_plain, t_plain) = run(build_wire(false));
+        let (acks_tele, frames_tele, t_tele) = run(build_wire(true));
+        assert!(t_plain.is_empty());
+        assert_eq!(t_tele, vec![payload], "payload must come through byte-identical");
+        assert_eq!(frames_plain, frames_tele, "telemetry must not reorder frames");
+        assert_eq!(
+            acks_plain, acks_tele,
+            "telemetry must not delay, force or suppress a data-plane ACK"
+        );
+        assert_eq!(acks_tele, vec![4, 8], "batched cumulative ACK schedule intact");
+    }
+
+    #[test]
+    fn telemetry_record_split_across_chunks_and_oversized_len_rejected() {
+        let payload = vec![7u8; 300];
+        let mut wire = Vec::new();
+        append_telemetry_record(&mut wire, &payload).unwrap();
+        let b = frame(0, 32).to_bytes();
+        wire.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&b);
+        // One byte at a time: the record must only pop once complete.
+        let mut dec = WireDecoder::new();
+        let mut items = Vec::new();
+        for byte in wire {
+            dec.extend(&[byte]);
+            while let Some(item) = dec.next().unwrap() {
+                items.push(item);
+            }
+        }
+        assert_eq!(items.len(), 2);
+        assert!(matches!(&items[0], WireItem::Telemetry(p) if *p == payload));
+        assert!(matches!(&items[1], WireItem::Frame(f) if f.seq == 0));
+        // A hostile length is a desync, and the writer refuses to emit one.
+        let mut dec = WireDecoder::new();
+        dec.extend(&ctrl_record(K_TELEMETRY, MAX_TELEMETRY_BYTES as u64 + 1));
+        assert!(dec.next().is_err(), "oversized telemetry length must desync");
+        let mut out = Vec::new();
+        assert!(append_telemetry_record(&mut out, &vec![0u8; MAX_TELEMETRY_BYTES + 1]).is_err());
     }
 
     #[test]

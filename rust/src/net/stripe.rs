@@ -32,12 +32,12 @@
 
 use super::conduit::{
     accept_pending, read_available, read_ctrl_timeout, write_ctrl, write_frame_bytes, write_raw,
-    AcceptedConduit, DialConduit, LinkKillSwitch, ReadSweep,
+    write_telemetry, AcceptedConduit, DialConduit, LinkKillSwitch, ReadSweep,
 };
 use super::frame::Frame;
 use super::session::{
     parse_ctrl, ResilienceConfig, RxStep, SessionRx, SessionTx, WireItem, CTRL_MARKER, K_ACK,
-    K_FIN, K_FIN_ACK, K_HELLO,
+    K_FIN, K_FIN_ACK, K_HELLO, MAX_TELEMETRY_BYTES,
 };
 use super::tcp::Backoff;
 use super::transport::{FrameRx, FrameTx};
@@ -86,6 +86,8 @@ pub struct StripedTx {
     sends_since_pump: u32,
     /// Read-sweep scratch shared across pumps.
     scratch: Vec<u8>,
+    /// Serialization scratch for outbound telemetry records.
+    tele_scratch: Vec<u8>,
 }
 
 impl StripedTx {
@@ -112,9 +114,11 @@ impl StripedTx {
             finished: false,
             sends_since_pump: 0,
             scratch: Vec::new(),
+            tele_scratch: Vec::new(),
         }
     }
 
+    /// Shared resilience counters (one block per boundary).
     pub fn stats(&self) -> Arc<ResilienceStats> {
         self.stats.clone()
     }
@@ -124,6 +128,7 @@ impl StripedTx {
         self.stripe_stats.clone()
     }
 
+    /// Number of conduits this boundary fans over.
     pub fn stripes(&self) -> usize {
         self.conduits.len()
     }
@@ -199,6 +204,42 @@ impl StripedTx {
             self.down(i); // loop → reroute / reconnect
         }
         Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Ship one telemetry record on **every** connected conduit,
+    /// interleaved with the data frames. Broadcast, not round-robin: the
+    /// receiver holds its FIN_ACK only for missing *frames*, so the one
+    /// stream whose FIN triggers the drain must itself carry the final
+    /// snapshot ahead of that FIN — per-conduit byte order then
+    /// guarantees the record is decoded first, whichever stripe wins.
+    /// Duplicates are cheap (relay hops and the report merge dedup by
+    /// snapshot identity); a record on a dying conduit is simply lost
+    /// (best effort, never a send failure); with no conduit connected the
+    /// record is dropped outright rather than stalling the data plane.
+    pub fn send_telemetry(&mut self, payload: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            payload.len() <= MAX_TELEMETRY_BYTES,
+            "telemetry payload of {} bytes exceeds {MAX_TELEMETRY_BYTES}",
+            payload.len()
+        );
+        if self.finished {
+            return Ok(());
+        }
+        let mut scratch = std::mem::take(&mut self.tele_scratch);
+        for i in 0..self.conduits.len() {
+            if !self.conduits[i].is_connected() {
+                continue;
+            }
+            let ok = {
+                let stream = self.conduits[i].conn.as_mut().unwrap();
+                write_telemetry(stream, payload, &mut scratch).is_ok()
+            };
+            if !ok {
+                self.down(i);
+            }
+        }
+        self.tele_scratch = scratch;
+        Ok(())
     }
 
     /// Drain protocol: make sure every frame is delivered, send
@@ -337,6 +378,11 @@ impl StripedTx {
             loop {
                 match self.conduits[i].decoder.next() {
                     Ok(Some(WireItem::Ctrl(kind, seq))) => self.session.apply_ctrl(kind, seq),
+                    // Telemetry flows forward only; a record arriving at
+                    // the sender is a confused peer, but a harmless one —
+                    // skip it (forward compatibility) instead of
+                    // resyncing.
+                    Ok(Some(WireItem::Telemetry(_))) => {}
                     Ok(None) => break,
                     Ok(Some(WireItem::Frame(_))) | Err(_) => {
                         desynced = true;
@@ -595,6 +641,10 @@ impl FrameTx for StripedTx {
     fn stripes(&self) -> Option<Vec<Arc<StripeStats>>> {
         Some(self.stripe_stats.clone())
     }
+
+    fn send_telemetry(&mut self, payload: &[u8]) -> Result<()> {
+        StripedTx::send_telemetry(self, payload)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -619,6 +669,9 @@ pub struct StripedRx {
     ever_connected: bool,
     done: bool,
     scratch: Vec<u8>,
+    /// Telemetry payloads decoded off the data stream, awaiting
+    /// [`StripedRx::poll_telemetry`] (arrival order).
+    tele_inbox: Vec<Vec<u8>>,
 }
 
 impl StripedRx {
@@ -659,11 +712,20 @@ impl StripedRx {
             ever_connected: false,
             done: false,
             scratch: Vec::new(),
+            tele_inbox: Vec::new(),
         }
     }
 
+    /// Shared resilience counters (one block per boundary).
     pub fn stats(&self) -> Arc<ResilienceStats> {
         self.stats.clone()
+    }
+
+    /// Take the telemetry payloads that arrived interleaved with the data
+    /// stream since the last poll (see
+    /// [`crate::net::transport::FrameRx::poll_telemetry`]).
+    pub fn poll_telemetry(&mut self) -> Vec<Vec<u8>> {
+        std::mem::take(&mut self.tele_inbox)
     }
 
     /// Next in-order frame; `Ok(None)` only after the peer's `FIN` (clean
@@ -832,6 +894,10 @@ impl StripedRx {
                         self.session.on_fin(end)?;
                         progressed = true;
                     }
+                    WireItem::Telemetry(p) => {
+                        self.tele_inbox.push(p);
+                        progressed = true;
+                    }
                     WireItem::Ctrl(_, _) => {} // not meaningful inbound; skip
                 }
             }
@@ -900,6 +966,10 @@ impl FrameRx for StripedRx {
 
     fn resilience(&self) -> Option<Arc<ResilienceStats>> {
         Some(self.stats.clone())
+    }
+
+    fn poll_telemetry(&mut self) -> Vec<Vec<u8>> {
+        StripedRx::poll_telemetry(self)
     }
 }
 

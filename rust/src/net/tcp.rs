@@ -18,6 +18,9 @@
 //!   a quiet end of stream.
 
 use super::frame::Frame;
+use super::session::{
+    append_telemetry_record, parse_ctrl, CTRL_LEN, CTRL_MARKER, K_TELEMETRY, MAX_TELEMETRY_BYTES,
+};
 use super::transport::{FrameRx, FrameTx};
 use crate::Result;
 use std::io::{Read, Write};
@@ -30,6 +33,7 @@ use std::time::{Duration, Instant};
 /// plain-TCP receiver's historical import path.)
 pub use super::session::MAX_FRAME_BYTES;
 
+/// Sender half of a plain (non-resilient) TCP stage boundary.
 pub struct TcpFrameSender {
     stream: TcpStream,
     /// Per-link wire buffer: frames serialize into it ([`Frame::write_into`])
@@ -37,9 +41,13 @@ pub struct TcpFrameSender {
     wire: Vec<u8>,
 }
 
+/// Receiver half of a plain (non-resilient) TCP stage boundary.
 pub struct TcpFrameReceiver {
     stream: TcpStream,
     buf: Vec<u8>,
+    /// Telemetry payloads read off the stream, awaiting
+    /// [`FrameRx::poll_telemetry`].
+    tele_inbox: Vec<Vec<u8>>,
 }
 
 /// Split a connected stream into framed halves.
@@ -48,7 +56,7 @@ pub fn framed(stream: TcpStream) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     let rx_stream = stream.try_clone()?;
     Ok((
         TcpFrameSender { stream, wire: Vec::new() },
-        TcpFrameReceiver { stream: rx_stream, buf: Vec::new() },
+        TcpFrameReceiver { stream: rx_stream, buf: Vec::new(), tele_inbox: Vec::new() },
     ))
 }
 
@@ -72,6 +80,7 @@ pub struct Backoff {
 }
 
 impl Backoff {
+    /// Schedule starting at `base`, doubling up to `max`, jittered per `seed`.
     pub fn new(base: Duration, max: Duration, jitter: f64, seed: u64) -> Self {
         let base = base.max(Duration::from_millis(1));
         Backoff {
@@ -176,6 +185,19 @@ impl TcpFrameSender {
     }
 }
 
+impl TcpFrameSender {
+    /// Ship one telemetry record interleaved with the frame stream (the
+    /// plain-TCP boundary speaks just this one control record; the
+    /// receiver rejects every other kind as a desync).
+    pub fn send_telemetry(&mut self, payload: &[u8]) -> Result<()> {
+        self.wire.clear();
+        append_telemetry_record(&mut self.wire, payload)?;
+        self.stream.write_all(&self.wire)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
+
 impl FrameTx for TcpFrameSender {
     fn send(&mut self, frame: Frame) -> Result<f64> {
         TcpFrameSender::send(self, frame)
@@ -183,6 +205,10 @@ impl FrameTx for TcpFrameSender {
 
     fn kind(&self) -> &'static str {
         "tcp"
+    }
+
+    fn send_telemetry(&mut self, payload: &[u8]) -> Result<()> {
+        TcpFrameSender::send_telemetry(self, payload)
     }
 }
 
@@ -203,6 +229,14 @@ impl TcpFrameReceiver {
                 Prefix::CleanEof => return Ok(None),
                 Prefix::Len(n) => n,
             };
+            if n == CTRL_MARKER as usize {
+                // The one control record plain TCP understands: a
+                // telemetry payload interleaved with the frames. Any
+                // other kind means a resilient peer on a plain link —
+                // a misconfiguration, not a recoverable stream.
+                self.read_telemetry()?;
+                continue;
+            }
             if n > MAX_FRAME_BYTES {
                 anyhow::bail!(
                     "corrupt stream: frame length prefix {n} exceeds {MAX_FRAME_BYTES}"
@@ -217,6 +251,32 @@ impl TcpFrameReceiver {
                 Err(_) => continue,
             }
         }
+    }
+
+    /// Finish reading a control record whose marker prefix was already
+    /// consumed; only `TELEMETRY{len}` is legal on a plain link.
+    fn read_telemetry(&mut self) -> Result<()> {
+        let mut rest = [0u8; CTRL_LEN];
+        rest[0..4].copy_from_slice(&CTRL_MARKER.to_le_bytes());
+        self.stream.read_exact(&mut rest[4..]).map_err(|e| {
+            anyhow::anyhow!("link truncated mid-control-record: {e}")
+        })?;
+        let (kind, len) = parse_ctrl(&rest);
+        anyhow::ensure!(
+            kind == K_TELEMETRY,
+            "unexpected control record kind {kind} on a plain TCP link \
+             (is the peer running --resilient against a non-resilient endpoint?)"
+        );
+        anyhow::ensure!(
+            len <= MAX_TELEMETRY_BYTES as u64,
+            "corrupt stream: telemetry payload length {len} exceeds {MAX_TELEMETRY_BYTES}"
+        );
+        let mut payload = vec![0u8; len as usize];
+        self.stream.read_exact(&mut payload).map_err(|e| {
+            anyhow::anyhow!("link truncated mid-telemetry-record: {e}")
+        })?;
+        self.tele_inbox.push(payload);
+        Ok(())
     }
 
     /// Read the 4-byte length prefix, distinguishing EOF on the boundary
@@ -250,6 +310,10 @@ impl FrameRx for TcpFrameReceiver {
 
     fn kind(&self) -> &'static str {
         "tcp"
+    }
+
+    fn poll_telemetry(&mut self) -> Vec<Vec<u8>> {
+        std::mem::take(&mut self.tele_inbox)
     }
 }
 
@@ -348,6 +412,8 @@ mod tests {
 
     #[test]
     fn absurd_length_is_error() {
+        // u32::MAX is the control marker now, so the absurd-but-plausible
+        // length is one past the frame bound.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let server = std::thread::spawn(move || {
@@ -355,9 +421,54 @@ mod tests {
             rx.recv()
         });
         let mut raw = TcpStream::connect(&addr).unwrap();
-        raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        raw.write_all(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes()).unwrap();
         let err = server.join().unwrap().unwrap_err();
         assert!(err.to_string().contains("corrupt stream"), "{err:#}");
+        drop(raw);
+    }
+
+    #[test]
+    fn telemetry_records_interleave_with_plain_tcp_frames() {
+        use crate::net::transport::FrameRx as _;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            let a = rx.recv().unwrap().unwrap();
+            // Telemetry between the frames is invisible to recv()…
+            let b = rx.recv().unwrap().unwrap();
+            assert!(rx.recv().unwrap().is_none());
+            // …and waits in the inbox, in arrival order.
+            let telemetry = rx.poll_telemetry();
+            assert!(rx.poll_telemetry().is_empty(), "poll drains the inbox");
+            (a.seq, b.seq, telemetry)
+        });
+        let (mut tx, _rx) = connect(&addr).unwrap();
+        tx.send(frame(0, 64)).unwrap();
+        tx.send_telemetry(b"snapshot-0").unwrap();
+        tx.send(frame(1, 64)).unwrap();
+        tx.send_telemetry(b"snapshot-1").unwrap();
+        drop(tx);
+        let (a, b, telemetry) = server.join().unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(telemetry, vec![b"snapshot-0".to_vec(), b"snapshot-1".to_vec()]);
+    }
+
+    #[test]
+    fn non_telemetry_control_record_on_plain_link_is_an_error() {
+        // A resilient peer aimed at a plain endpoint desyncs on its first
+        // HELLO/ACK — that must be a loud misconfiguration error.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (_tx, mut rx) = accept_one(&listener).unwrap();
+            rx.recv()
+        });
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&crate::net::session::ctrl_record(crate::net::session::K_ACK, 5))
+            .unwrap();
+        let err = server.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("control record"), "{err:#}");
         drop(raw);
     }
 

@@ -11,7 +11,9 @@ use super::{mbps, Bps};
 /// One segment: from `start` seconds onward, capacity is `bps`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Segment {
+    /// Seconds from run start when this capacity takes effect.
     pub start: f64,
+    /// Capacity from `start` onward (bits/s).
     pub bps: Bps,
 }
 
@@ -19,6 +21,7 @@ pub struct Segment {
 /// capacity before the first segment is unlimited.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct BandwidthTrace {
+    /// Segments sorted by `start` (capacity before the first is unlimited).
     pub segments: Vec<Segment>,
 }
 

@@ -39,6 +39,7 @@ use std::time::Duration;
 /// the `WindowMonitor`, so "measured output bandwidth" means the same
 /// thing on every transport.
 pub trait FrameTx: Send {
+    /// Ship one frame; returns seconds the link was busy (see trait docs).
     fn send(&mut self, frame: Frame) -> Result<f64>;
     /// Transport name for logs/reports.
     fn kind(&self) -> &'static str;
@@ -57,6 +58,17 @@ pub trait FrameTx: Send {
     fn stripes(&self) -> Option<Vec<Arc<StripeStats>>> {
         None
     }
+    /// Ship one opaque telemetry record forward along the data path
+    /// (see [`crate::metrics::telemetry`]). **Best effort**: telemetry
+    /// never enters the replay buffer, never consumes a data-plane
+    /// sequence number and never delays an ACK — a record on a dying
+    /// connection may simply be lost, and transports without a telemetry
+    /// channel (the in-process `SimLink` path) drop it silently; the
+    /// snapshot format is built to tolerate both. `Err` is reserved for
+    /// payloads that could never be sent (oversized).
+    fn send_telemetry(&mut self, _payload: &[u8]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Blocking receiver half of a stage-to-stage transport.
@@ -71,6 +83,13 @@ pub trait FrameRx: Send {
     /// Live reconnect/dedup counters, when the transport has them.
     fn resilience(&self) -> Option<Arc<ResilienceStats>> {
         None
+    }
+    /// Telemetry payloads that arrived interleaved with the data stream
+    /// since the last poll (empty on transports without a telemetry
+    /// channel). Drain this alongside `recv` — records accumulate as
+    /// frames are read and are handed over in arrival order.
+    fn poll_telemetry(&mut self) -> Vec<Vec<u8>> {
+        Vec::new()
     }
 }
 

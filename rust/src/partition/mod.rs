@@ -20,6 +20,7 @@ pub use profile::CostModel;
 /// A partition: `cuts[i] = (lo, hi)` — device `i` runs blocks `lo..hi`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Partition {
+    /// `cuts[i] = (lo, hi)`: device `i` runs blocks `lo..hi`.
     pub cuts: Vec<(usize, usize)>,
 }
 

@@ -5,11 +5,14 @@
 /// block `b` (at the current bandwidth and bitwidth).
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// `block_s[d][b]`: seconds for block `b` on device `d`.
     pub block_s: Vec<Vec<f64>>,
+    /// `comm_s[b]`: seconds to ship the cut after block `b`.
     pub comm_s: Vec<f64>,
 }
 
 impl CostModel {
+    /// Validate and wrap the cost matrices.
     pub fn new(block_s: Vec<Vec<f64>>, comm_s: Vec<f64>) -> Self {
         assert!(!block_s.is_empty());
         let n = block_s[0].len();
@@ -47,10 +50,12 @@ impl CostModel {
         CostModel::new(block_s, comm_s)
     }
 
+    /// Number of model blocks.
     pub fn blocks(&self) -> usize {
         self.comm_s.len()
     }
 
+    /// Number of devices.
     pub fn devices(&self) -> usize {
         self.block_s.len()
     }

@@ -29,6 +29,7 @@
 
 use crate::adapt::{AdaptConfig, AdaptivePda};
 use crate::data::{AccuracyMeter, EvalSet};
+use crate::metrics::telemetry::{StageSnapshot, TelemetryRelay};
 use crate::metrics::{
     LatencyHisto, ResilienceStats, ResilienceSummary, StripeStats, StripeSummary, Timeline,
     TimelinePoint,
@@ -52,6 +53,7 @@ use std::time::Instant;
 /// Quantization behaviour of the links.
 #[derive(Debug, Clone, Copy)]
 pub struct LinkQuant {
+    /// Calibration method for quantized links.
     pub method: Method,
     /// Recalibrate every N microbatches (params reused in between).
     pub calib_every: u32,
@@ -76,10 +78,12 @@ impl Default for LinkQuant {
 
 /// Full pipeline specification.
 pub struct PipelineSpec {
+    /// Stage factories, in pipeline order.
     pub stages: Vec<StageFactory>,
     /// One transport per stage boundary (len = stages - 1): a shaped
     /// in-process channel or a pre-connected real TCP socket.
     pub links: Vec<LinkSpec>,
+    /// Quantization behaviour shared by all links.
     pub quant: LinkQuant,
     /// Adaptive controller config; `None` pins `quant.initial_bits`.
     pub adapt: Option<AdaptConfig>,
@@ -94,11 +98,145 @@ pub struct PipelineSpec {
 /// no `SimLink`).
 #[derive(Debug, Default)]
 pub struct LinkCounters {
+    /// Wire bytes shipped.
     pub bytes: AtomicU64,
+    /// Frames shipped.
     pub frames: AtomicU64,
 }
 
+/// Counters a worker's stage loop updates and its sender thread's
+/// telemetry tap snapshots: the two run on different threads, so the
+/// handoff is lock-free atomics (each value is advisory — telemetry, not
+/// accounting).
+#[derive(Debug, Default)]
+pub(crate) struct StageTelemetryShared {
+    /// Microbatches the stage loop has processed.
+    pub frames: AtomicU64,
+    /// Cumulative stage-compute nanoseconds.
+    pub compute_ns: AtomicU64,
+    /// Cumulative quantize+encode nanoseconds.
+    pub encode_ns: AtomicU64,
+    /// Cumulative decode+dequantize nanoseconds.
+    pub decode_ns: AtomicU64,
+    /// Frames handed to the compute→sender channel.
+    pub enqueued: AtomicU64,
+    /// Frames the sender thread has taken off that channel.
+    pub dequeued: AtomicU64,
+}
+
+/// The sender thread's telemetry emitter: accumulates this stage's window
+/// points and seq range, snapshots the shared counters, and ships
+/// [`StageSnapshot`] records forward along the data path — plus whatever
+/// upstream snapshots the stage loop has relayed into `relay`. All sends
+/// are best effort ([`FrameTx::send_telemetry`]); the merge downstream
+/// tolerates loss.
+pub(crate) struct TelemetryTap {
+    stage: usize,
+    /// Emit this stage's own snapshots. When false the tap still relays
+    /// upstream stages' records — a worker with telemetry off is a hole
+    /// in the report, not a blackhole for everyone above it.
+    emit: bool,
+    shared: Arc<StageTelemetryShared>,
+    relay: Arc<Mutex<TelemetryRelay>>,
+    resilience: Vec<Arc<ResilienceStats>>,
+    stripes: Vec<Arc<StripeStats>>,
+    errors: Arc<Mutex<Vec<String>>>,
+    snap: u64,
+    points: Vec<TimelinePoint>,
+    seq_lo: u64,
+    seq_hi: u64,
+}
+
+impl TelemetryTap {
+    pub(crate) fn new(
+        stage: usize,
+        emit: bool,
+        shared: Arc<StageTelemetryShared>,
+        relay: Arc<Mutex<TelemetryRelay>>,
+        resilience: Vec<Arc<ResilienceStats>>,
+        stripes: Vec<Arc<StripeStats>>,
+        errors: Arc<Mutex<Vec<String>>>,
+    ) -> Self {
+        TelemetryTap {
+            stage,
+            emit,
+            shared,
+            relay,
+            resilience,
+            stripes,
+            errors,
+            snap: 0,
+            points: Vec::new(),
+            seq_lo: u64::MAX,
+            seq_hi: 0,
+        }
+    }
+
+    fn note_seq(&mut self, seq: u64) {
+        self.seq_lo = self.seq_lo.min(seq);
+        self.seq_hi = self.seq_hi.max(seq + 1);
+    }
+
+    fn push_point(&mut self, p: TimelinePoint) {
+        self.points.push(p);
+    }
+
+    /// Forward upstream snapshots the stage loop relayed (FIFO, deduped
+    /// at the relay).
+    fn forward_relayed(&mut self, tx: &mut dyn FrameTx) {
+        let queued = lock(&self.relay).drain();
+        for payload in queued {
+            let _ = tx.send_telemetry(&payload);
+        }
+    }
+
+    /// Emit one snapshot of this stage's state. `last` marks the final
+    /// flush (the sender has drained). No-op when this stage's own
+    /// emission is disabled (accumulated points are dropped so they
+    /// don't pile up over a long run).
+    fn flush(&mut self, tx: &mut dyn FrameTx, last: bool) {
+        if !self.emit {
+            self.points.clear();
+            self.seq_lo = u64::MAX;
+            return;
+        }
+        let snapshot = StageSnapshot {
+            stage: self.stage as u32,
+            snap: self.snap,
+            last,
+            frames: self.shared.frames.load(Ordering::Relaxed),
+            seq_lo: self.seq_lo,
+            seq_hi: self.seq_hi,
+            compute_ns: self.shared.compute_ns.load(Ordering::Relaxed),
+            encode_ns: self.shared.encode_ns.load(Ordering::Relaxed),
+            decode_ns: self.shared.decode_ns.load(Ordering::Relaxed),
+            queue_depth: self
+                .shared
+                .enqueued
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.shared.dequeued.load(Ordering::Relaxed))
+                as u32,
+            resilience: ResilienceSummary::collect(&self.resilience),
+            stripes: StripeSummary::collect(&self.stripes),
+            points: std::mem::take(&mut self.points),
+            errors: lock(&self.errors).clone(),
+        };
+        self.snap += 1;
+        self.seq_lo = u64::MAX;
+        let _ = tx.send_telemetry(&snapshot.to_bytes());
+    }
+
+    /// The drain-time flush: relay leftovers, then this stage's final
+    /// snapshot — both ahead of the FIN the caller is about to send, so
+    /// the records reach the coordinator before the stream closes.
+    fn final_flush(&mut self, tx: &mut dyn FrameTx) {
+        self.forward_relayed(tx);
+        self.flush(tx, true);
+    }
+}
+
 impl LinkCounters {
+    /// Mean wire bytes per frame (0 before any send).
     pub fn mean_frame_bytes(&self) -> f64 {
         let frames = self.frames.load(Ordering::Relaxed);
         if frames == 0 {
@@ -136,8 +274,11 @@ enum StageOut {
 /// Results of a pipeline run.
 #[derive(Debug)]
 pub struct RunReport {
+    /// Images scored at the sink.
     pub images: u64,
+    /// Microbatches completed.
     pub microbatches: u64,
+    /// Wall-clock run seconds.
     pub wall_secs: f64,
     /// End-to-end images/sec.
     pub throughput: f64,
@@ -170,13 +311,7 @@ impl RunReport {
     /// measures "infinite" bandwidth) are mapped to `null` — JSON has no
     /// Infinity/NaN, and downstream tooling must get a parseable document.
     pub fn to_json(&self) -> Value {
-        fn num(v: f64) -> Value {
-            if v.is_finite() {
-                Value::Num(v)
-            } else {
-                Value::Null
-            }
-        }
+        let num = Value::num_or_null;
         let mut m = BTreeMap::new();
         m.insert("images".into(), Value::Num(self.images as f64));
         m.insert("microbatches".into(), Value::Num(self.microbatches as f64));
@@ -210,18 +345,22 @@ impl RunReport {
 
 /// Workload: which microbatches to feed.
 pub struct Workload {
+    /// Eval set to feed (cycled).
     pub eval: Arc<EvalSet>,
+    /// Images per microbatch.
     pub microbatch: usize,
     /// Total microbatches to push (cycles over the eval set).
     pub total: u64,
 }
 
 impl Workload {
+    /// One pass over the eval set.
     pub fn one_pass(eval: Arc<EvalSet>, microbatch: usize) -> Self {
         let total = eval.microbatches(microbatch) as u64;
         Workload { eval, microbatch, total }
     }
 
+    /// Exactly `total` microbatches, cycling the eval set.
     pub fn repeat(eval: Arc<EvalSet>, microbatch: usize, total: u64) -> Self {
         Workload { eval, microbatch, total }
     }
@@ -318,7 +457,10 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
                     .spawn(move || {
                         sender_thread(
                             i, frame_rx, link_tx, window, batch, adapt, initial_bits,
-                            bits, tl, counters, errs, start,
+                            // In-process runs skip wire telemetry: every
+                            // stage already records into the one shared
+                            // timeline this RunReport returns.
+                            bits, tl, counters, errs, start, None,
                         )
                     })?,
             );
@@ -564,6 +706,7 @@ pub(crate) fn sender_thread(
     counters: Arc<LinkCounters>,
     errors: Arc<Mutex<Vec<String>>>,
     start: Instant,
+    mut telemetry: Option<TelemetryTap>,
 ) {
     let mut monitor = WindowMonitor::new(window, batch);
     let mut ctl = adapt.map(|cfg| {
@@ -573,6 +716,10 @@ pub(crate) fn sender_thread(
     });
     while let Ok(frame) = frame_rx.recv() {
         let wire = frame.wire_len();
+        if let Some(t) = &mut telemetry {
+            t.shared.dequeued.fetch_add(1, Ordering::Relaxed);
+            t.note_seq(frame.seq);
+        }
         // On a resilient link `send` rides out transient failures
         // internally: the reconnect stall comes back as busy time, the
         // monitor turns it into collapsed measured bandwidth, and the
@@ -596,15 +743,31 @@ pub(crate) fn sender_thread(
             } else {
                 bits.load(Ordering::Relaxed)
             };
-            lock(&timeline).push(TimelinePoint {
+            let point = TimelinePoint {
                 t: start.elapsed().as_secs_f64(),
                 stage,
                 bandwidth_bps: stats.bandwidth_bps,
                 rate: stats.rate,
                 bits: decided,
                 util: stats.link_utilization,
-            });
+            };
+            lock(&timeline).push(point);
+            if let Some(t) = &mut telemetry {
+                // One snapshot per completed window: the record carries
+                // this window's point plus the cumulative counters.
+                t.push_point(point);
+                t.flush(&mut *link_tx, false);
+            }
         }
+        if let Some(t) = &mut telemetry {
+            // Upstream stages' snapshots relay forward between frames.
+            t.forward_relayed(&mut *link_tx);
+        }
+    }
+    if let Some(t) = &mut telemetry {
+        // Final snapshot (and relay leftovers) BEFORE the drain: FIN must
+        // be the last thing on the stream.
+        t.final_flush(&mut *link_tx);
     }
     // Upstream is done: negotiate the clean drain so the peer can tell
     // shutdown from failure (FIN/FIN_ACK on resilient links, no-op else).

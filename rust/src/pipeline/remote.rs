@@ -5,7 +5,7 @@
 //! A **worker** owns exactly one stage. It decodes frames from its
 //! upstream transport, runs the shard, re-encodes at the bitwidth its own
 //! adaptive controller currently publishes, and ships downstream through
-//! a sender thread — the same [`sender_thread`] the in-process driver
+//! a sender thread — the same `sender_thread` the in-process driver
 //! uses, so the WindowMonitor/AdaptivePda loop is byte-for-byte the same
 //! code over TCP. In TCP mode the bandwidth signal is measured
 //! write-stall time under real socket backpressure; no `SimLink` exists
@@ -25,16 +25,19 @@
 
 use crate::adapt::AdaptConfig;
 use crate::data::AccuracyMeter;
+use crate::metrics::telemetry::{CoordinatorSummary, PipelineReport, TelemetryRelay};
 use crate::metrics::{LatencyHisto, ResilienceSummary, StripeSummary, Timeline};
 use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx};
 use crate::pipeline::driver::{
-    encode_at_current_bits, sender_thread, LinkCounters, LinkQuant, Workload,
+    encode_at_current_bits, sender_thread, LinkCounters, LinkQuant, StageTelemetryShared,
+    TelemetryTap, Workload,
 };
 use crate::pipeline::stage::StageFactory;
 use crate::quant::codec::Codec;
 use crate::quant::{Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
+use crate::util::json::Value;
 use crate::util::sync::lock;
 use crate::Result;
 use std::collections::HashMap;
@@ -62,6 +65,11 @@ pub struct WorkerConfig {
     pub quantize_output: bool,
     /// Frames buffered between compute and the transport writer.
     pub inflight: usize,
+    /// Stream window snapshots forward to the coordinator (and relay
+    /// upstream stages') as telemetry records — see
+    /// [`crate::metrics::telemetry`]. Costs a few hundred wire bytes per
+    /// window; off = this stage is a hole in the `PipelineReport`.
+    pub telemetry: bool,
 }
 
 /// What a worker measured over its lifetime.
@@ -85,13 +93,34 @@ pub struct WorkerReport {
     pub stripes: Vec<StripeSummary>,
 }
 
+impl WorkerReport {
+    /// Machine-readable report (`quantpipe worker --report-json`): the
+    /// same measurements the stage streams to the coordinator as
+    /// telemetry, persisted locally. Non-finite values map to `null`.
+    pub fn to_json(&self) -> Value {
+        let num = Value::num_or_null;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("frames".into(), Value::Num(self.frames as f64));
+        m.insert("mean_compute_s".into(), num(self.mean_compute_s));
+        m.insert("out_mean_bytes".into(), num(self.out_mean_bytes));
+        m.insert("timeline".into(), self.timeline.to_json());
+        m.insert("resilience".into(), self.resilience.to_json());
+        m.insert("stripes".into(), StripeSummary::list_to_json(&self.stripes));
+        m.insert(
+            "errors".into(),
+            Value::Arr(self.errors.iter().map(|e| Value::Str(e.clone())).collect()),
+        );
+        Value::Obj(m)
+    }
+}
+
 /// Run one stage over arbitrary transports until the upstream closes.
 /// Blocking; the calling thread is the stage's compute thread (PJRT is
 /// thread-pinned), a spawned sender thread owns the output transport.
 pub fn run_worker(
     factory: StageFactory,
     cfg: WorkerConfig,
-    rx: Box<dyn FrameRx>,
+    mut rx: Box<dyn FrameRx>,
     tx: Box<dyn FrameTx>,
 ) -> Result<WorkerReport> {
     let start = Instant::now();
@@ -105,6 +134,24 @@ pub fn run_worker(
     let counters = Arc::new(LinkCounters::default());
     let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
     let (frame_tx, frame_rx) = sync_channel::<Frame>(cfg.inflight.max(1));
+    // Telemetry plumbing: the stage loop updates the shared counters and
+    // relays upstream snapshots into `relay`; the sender thread's tap
+    // snapshots both forward along the data path (toward the
+    // coordinator's sink — the only connection still alive at the end).
+    let shared = Arc::new(StageTelemetryShared::default());
+    let relay = Arc::new(Mutex::new(TelemetryRelay::default()));
+    // The tap always exists so upstream stages' records keep flowing
+    // through this hop; `cfg.telemetry` only gates this stage's OWN
+    // snapshots (off = this stage is a hole in the report, nothing more).
+    let tap = Some(TelemetryTap::new(
+        cfg.stage,
+        cfg.telemetry,
+        shared.clone(),
+        relay.clone(),
+        resilience_handles.clone(),
+        stripe_handles.clone(),
+        errors.clone(),
+    ));
 
     let sender = {
         let adapt = if cfg.quantize_output { cfg.adapt } else { None };
@@ -118,12 +165,13 @@ pub fn run_worker(
             .spawn(move || {
                 sender_thread(
                     stage, frame_rx, tx, window, batch, adapt, initial_bits,
-                    bits, tl, counters, errs, start,
+                    bits, tl, counters, errs, start, tap,
                 )
             })?
     };
 
-    let (loop_result, frames, compute_secs) = worker_stage_loop(cfg, rx, frame_tx, bits, factory);
+    let (loop_result, frames, compute_secs) =
+        worker_stage_loop(cfg, &mut rx, frame_tx, bits, factory, &shared, &relay);
     // frame_tx was moved into the loop and is dropped by now, so the
     // sender drains its channel, runs the downstream drain, and exits.
     let _ = sender.join();
@@ -152,10 +200,12 @@ pub fn run_worker(
 /// frame 500 still reports 500 frames of progress.
 fn worker_stage_loop(
     cfg: WorkerConfig,
-    mut rx: Box<dyn FrameRx>,
+    rx: &mut Box<dyn FrameRx>,
     frame_tx: SyncSender<Frame>,
     bits: Arc<AtomicU8>,
     factory: StageFactory,
+    shared: &StageTelemetryShared,
+    relay: &Mutex<TelemetryRelay>,
 ) -> (Result<()>, u64, f64) {
     let mut frames = 0u64;
     let mut compute_secs = 0f64;
@@ -177,27 +227,46 @@ fn worker_stage_loop(
                 Ok(None) => return Ok(()), // clean upstream shutdown
                 Err(e) => return Err(e.context("upstream link failed")),
             };
+            // Upstream stages' telemetry relays through us toward the
+            // coordinator; the sender thread forwards what lands here.
+            for payload in rx.poll_telemetry() {
+                lock(relay).offer(payload);
+            }
+            let t0 = Instant::now();
             let mut data = std::mem::take(&mut decode_pool);
             codec.decode(&frame.enc, &mut data)?;
+            shared.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             let Frame { seq, shape, enc } = frame;
             codec.recycle(enc);
             let tensor = Tensor::new(data, shape);
 
             let t0 = Instant::now();
             let out = compute.run(&tensor)?;
-            compute_secs += t0.elapsed().as_secs_f64();
+            let dt = t0.elapsed();
+            compute_secs += dt.as_secs_f64();
+            shared.compute_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
             decode_pool = tensor.into_data();
 
+            let t0 = Instant::now();
             let enc = encode_at_current_bits(
                 &mut codec, &out.data, &cfg.quant, &bits, &mut cached, &mut since_calib,
             )?;
+            shared.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             if frame_tx.send(Frame::new(seq, out.shape.clone(), enc)).is_err() {
                 // Sender died (downstream link failure, already recorded).
                 return Ok(());
             }
+            shared.enqueued.fetch_add(1, Ordering::Relaxed);
             frames += 1;
+            shared.frames.fetch_add(1, Ordering::Relaxed);
         }
     })();
+    // Hand the last inbound telemetry to the relay NOW — `frame_tx` is
+    // still alive here, so the sender thread cannot have started its
+    // final flush yet and is guaranteed to forward these.
+    for payload in rx.poll_telemetry() {
+        lock(relay).offer(payload);
+    }
     (result, frames, compute_secs)
 }
 
@@ -208,8 +277,11 @@ fn worker_stage_loop(
 /// What the coordinator measured end-to-end.
 #[derive(Debug)]
 pub struct CoordinatorReport {
+    /// Images scored.
     pub images: u64,
+    /// Microbatches completed end to end.
     pub microbatches: u64,
+    /// Wall-clock run seconds.
     pub wall_secs: f64,
     /// End-to-end images/sec.
     pub throughput: f64,
@@ -225,6 +297,12 @@ pub struct CoordinatorReport {
     /// Per-stripe wire counters when the feed link is striped (empty
     /// otherwise).
     pub stripes: Vec<StripeSummary>,
+    /// The whole pipeline's merged telemetry: every stage's window
+    /// timeline plus this coordinator's end-to-end summary — the one
+    /// artifact a multi-process run produces (see
+    /// [`crate::metrics::telemetry`]). Stages whose workers ran with
+    /// telemetry off (or never connected) are simply absent.
+    pub pipeline: PipelineReport,
 }
 
 /// Feed the workload into stage 0 (`feed`) and score logits returning
@@ -308,6 +386,9 @@ pub fn run_coordinator(
     let mut acc = AccuracyMeter::default();
     let mut latency = LatencyHisto::default();
     let mut codec = Codec::default();
+    // Every stage's telemetry funnels down the chain into the return
+    // link; merge it as it arrives.
+    let mut pipeline = PipelineReport::new();
     // One-slot logits-buffer pool, same shape as the stage loops'.
     let mut logits_pool: Vec<f32> = Vec::new();
     let mut done = 0u64;
@@ -318,7 +399,11 @@ pub fn run_coordinator(
         if feed_done.load(Ordering::Acquire) && done >= fed.load(Ordering::Acquire) {
             break;
         }
-        match ret.recv() {
+        let step = ret.recv();
+        for payload in ret.poll_telemetry() {
+            pipeline.ingest(&payload);
+        }
+        match step {
             Ok(Some(frame)) => {
                 let mut data = std::mem::take(&mut logits_pool);
                 if let Err(e) = codec.decode(&frame.enc, &mut data) {
@@ -351,12 +436,29 @@ pub fn run_coordinator(
         // dropping the receiver would strand that worker in its drain
         // until the timeout and report a spurious failure. On plain TCP
         // this is a prompt EOF. Skipped on the error paths above: there
-        // the link may never close and this would block.
+        // the link may never close and this would block. The final
+        // telemetry snapshots (every stage's drain-time flush) ride just
+        // ahead of that end-of-stream, so this drain is also what
+        // completes the PipelineReport.
         while let Ok(Some(_)) = ret.recv() {}
+    }
+    for payload in ret.poll_telemetry() {
+        pipeline.ingest(&payload);
     }
     let _ = feeder.join();
     let wall = start.elapsed().as_secs_f64().max(1e-9);
     let errors = std::mem::take(&mut *lock(&errors));
+
+    pipeline.coordinator = Some(CoordinatorSummary {
+        images,
+        microbatches: done,
+        wall_secs: wall,
+        throughput: images as f64 / wall,
+        accuracy: acc.value(),
+        p50_latency_s: latency.quantile(0.5).as_secs_f64(),
+        p99_latency_s: latency.quantile(0.99).as_secs_f64(),
+        errors: errors.clone(),
+    });
 
     Ok(CoordinatorReport {
         images,
@@ -368,5 +470,6 @@ pub fn run_coordinator(
         errors,
         resilience: ResilienceSummary::collect(&resilience_handles),
         stripes: StripeSummary::collect(&stripe_handles),
+        pipeline,
     })
 }

@@ -14,13 +14,17 @@ use std::time::Duration;
 
 /// Stage compute: input activation → output activation.
 pub trait StageCompute {
+    /// Run the stage on one activation.
     fn run(&mut self, input: &Tensor) -> Result<Tensor>;
+    /// Output activation shape.
     fn out_shape(&self) -> &[usize];
 }
 
 /// Everything a stage thread owns: the shard and its codec arithmetic.
 pub struct StageBundle {
+    /// The stage's compute (PJRT shard or mock).
     pub compute: Box<dyn StageCompute>,
+    /// Quantization arithmetic for this stage's codec.
     pub quant_backend: Box<dyn QuantBackend>,
 }
 
@@ -78,13 +82,18 @@ pub fn hlo_stage_factory(
 /// Deterministic mock: y = a·x + b elementwise (reshaped to `out_shape`,
 /// truncating/cycling data), with optional busy-sleep to model compute.
 pub struct MockStage {
+    /// Multiplier.
     pub a: f32,
+    /// Offset.
     pub b: f32,
+    /// Output shape (input data reshaped/cycled).
     pub out_shape: Vec<usize>,
+    /// Busy-sleep per microbatch modeling compute.
     pub compute: Duration,
 }
 
 impl MockStage {
+    /// Identity mock with the given output shape.
     pub fn passthrough(out_shape: Vec<usize>) -> Self {
         MockStage { a: 1.0, b: 0.0, out_shape, compute: Duration::ZERO }
     }

@@ -24,8 +24,11 @@ use crate::Result;
 
 /// Pluggable quantize/dequantize arithmetic.
 pub trait QuantBackend: Send {
+    /// Quantize `x` into integer codes under `p`.
     fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> Result<()>;
+    /// Dequantize `codes` back to f32 under `p`.
     fn dequantize(&mut self, codes: &[i32], p: &QuantParams, out: &mut [f32]) -> Result<()>;
+    /// Backend name for logs/reports.
     fn name(&self) -> &'static str;
     /// Whether this backend's arithmetic is exactly [`super::uniform`]'s,
     /// allowing the codec to run the fused quantize+pack / unpack+
@@ -73,6 +76,7 @@ pub struct Encoded {
 }
 
 impl Encoded {
+    /// Wire bitwidth (32 = raw f32).
     pub fn bits(&self) -> u8 {
         self.params.map_or(BITS_NONE, |p| p.bits)
     }
@@ -116,10 +120,12 @@ impl Default for Codec {
 }
 
 impl Codec {
+    /// Codec over the given arithmetic backend.
     pub fn new(backend: Box<dyn QuantBackend>) -> Self {
         Codec { backend, codes: Vec::new(), spare: Vec::new(), threads: 1 }
     }
 
+    /// Name of the arithmetic backend ("native" / "hlo").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
@@ -130,6 +136,7 @@ impl Codec {
         self.threads = threads.max(1);
     }
 
+    /// Current worker-thread setting.
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -57,8 +57,10 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every method, in Table 1 order.
     pub const ALL: [Method; 4] = [Method::Naive, Method::Aciq, Method::DsAciq, Method::Pda];
 
+    /// Lowercase CLI/config name.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Naive => "naive",
@@ -77,9 +79,13 @@ impl Method {
 /// both the native-path and the HLO-path parameterization.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantParams {
+    /// Code step size.
     pub scale: f32,
+    /// Code-space offset (0 for symmetric).
     pub zero_point: f32,
+    /// Smallest representable code.
     pub lo: f32,
+    /// Largest representable code.
     pub hi: f32,
     /// Bitwidth these params were derived for (2..=16).
     pub bits: u8,

@@ -114,6 +114,7 @@ pub fn pack_vec(codes: &[i32], bits: u8, lo: i32) -> Vec<u8> {
     out
 }
 
+/// Allocating unpack wrapper (tests / non-hot-path callers).
 pub fn unpack_vec(bytes: &[u8], n: usize, bits: u8, lo: i32) -> Result<Vec<i32>> {
     let mut out = Vec::new();
     unpack(bytes, n, bits, lo, &mut out)?;

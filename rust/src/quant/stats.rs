@@ -7,15 +7,22 @@
 /// Single-pass min / max / mean|x| / mean / variance over a tensor.
 #[derive(Debug, Clone, Copy)]
 pub struct TensorStats {
+    /// Smallest element.
     pub min: f32,
+    /// Largest element.
     pub max: f32,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Mean of |x| (the Laplace moment estimate feeds on this).
     pub mean_abs: f64,
+    /// Population variance.
     pub var: f64,
+    /// Element count.
     pub n: usize,
 }
 
 impl TensorStats {
+    /// One pass over `x`.
     pub fn compute(x: &[f32]) -> Self {
         let mut min = f32::INFINITY;
         let mut max = f32::NEG_INFINITY;
@@ -40,10 +47,12 @@ impl TensorStats {
         }
     }
 
+    /// Standard deviation.
     pub fn std(&self) -> f64 {
         self.var.sqrt()
     }
 
+    /// max(|min|, |max|).
     pub fn abs_max(&self) -> f32 {
         self.min.abs().max(self.max.abs())
     }
@@ -69,14 +78,19 @@ impl TensorStats {
 /// `histogram` so the DS search sees identical bins in both languages.
 #[derive(Debug, Clone)]
 pub struct AbsHistogram {
+    /// Bin occupancy.
     pub counts: Vec<u64>,
+    /// Bin width in |x| units.
     pub width: f64,
+    /// Elements binned.
     pub total: u64,
 }
 
+/// Default histogram resolution.
 pub const DEFAULT_BINS: usize = 2048;
 
 impl AbsHistogram {
+    /// Two passes over `x`: max scan + binning.
     pub fn compute(x: &[f32], bins: usize) -> Self {
         let mut top = 0f32;
         for &v in x {
@@ -143,11 +157,14 @@ impl AbsHistogram {
 /// via tests/golden.rs through `ds_aciq_b`).
 #[derive(Debug, Clone)]
 pub struct CalibScan {
+    /// Moment statistics from the fused pass.
     pub stats: TensorStats,
+    /// |x| histogram from the binning pass.
     pub hist: AbsHistogram,
 }
 
 impl CalibScan {
+    /// Fused calibration scan: one stats pass + one binning pass.
     pub fn compute(x: &[f32], bins: usize) -> Self {
         let stats = TensorStats::compute(x);
         // Empty input: ±inf min/max would give an infinite abs_max;

@@ -7,68 +7,113 @@ use crate::Result;
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
+/// Parsed manifest.json: the artifact bundle's table of contents.
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: u32,
+    /// Model hyperparameters.
     pub model: ModelMeta,
+    /// Images per microbatch the shards were compiled for.
     pub microbatch: usize,
+    /// Inter-stage activation shape.
     pub activation_shape: Vec<usize>,
+    /// Per-stage shard artifacts, in pipeline order.
     pub stages: Vec<StageMeta>,
+    /// Unpartitioned reference model artifact.
     pub full_model: FullModelMeta,
+    /// AOT quantize/dequantize kernel artifacts.
     pub quant: QuantMeta,
+    /// Eval-set artifact.
     pub eval: EvalMeta,
+    /// Calibration-set artifact.
     pub calib: CalibMeta,
+    /// Golden-values file name.
     pub golden: String,
 }
 
 #[derive(Debug, Clone)]
+/// Model hyperparameters (ViT).
 pub struct ModelMeta {
+    /// Input image dims (h, w, c).
     pub img: Vec<usize>,
+    /// Patch size.
     pub patch: usize,
+    /// Embedding dimension.
     pub dim: usize,
+    /// Transformer depth (blocks).
     pub depth: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Output classes.
     pub classes: usize,
+    /// Sequence length (patches + cls).
     pub tokens: usize,
+    /// Parameter count.
     pub params: u64,
+    /// Trained weights (vs random init).
     pub trained: bool,
+    /// Full-precision top-1 accuracy reference.
     pub fp32_top1: f64,
 }
 
 #[derive(Debug, Clone)]
+/// One pipeline stage's shard artifact.
 pub struct StageMeta {
+    /// HLO text file name.
     pub file: String,
+    /// Block indices this stage runs.
     pub blocks: Vec<usize>,
+    /// Includes the patch-embedding front end.
     pub first: bool,
+    /// Includes the classifier head.
     pub last: bool,
+    /// Input activation shape.
     pub in_shape: Vec<usize>,
+    /// Output activation shape.
     pub out_shape: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
+/// The unpartitioned model artifact (golden reference).
 pub struct FullModelMeta {
+    /// HLO text file name.
     pub file: String,
+    /// Input shape.
     pub in_shape: Vec<usize>,
+    /// Output shape.
     pub out_shape: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
+/// AOT quantize/dequantize kernel artifacts.
 pub struct QuantMeta {
+    /// Quantize kernel HLO file.
     pub quantize: String,
+    /// Dequantize kernel HLO file.
     pub dequantize: String,
+    /// Kernel tile rows.
     pub rows: usize,
+    /// Kernel tile cols.
     pub cols: usize,
+    /// Bitwidths the kernels were compiled for.
     pub supported_bits: Vec<u8>,
 }
 
 #[derive(Debug, Clone)]
+/// Eval-set artifact pointer.
 pub struct EvalMeta {
+    /// eval.bin file name.
     pub file: String,
+    /// Images in the set.
     pub count: usize,
 }
 
 #[derive(Debug, Clone)]
+/// Calibration-set artifact pointer.
 pub struct CalibMeta {
+    /// calib.bin file name.
     pub file: String,
+    /// Stage boundaries covered.
     pub boundaries: usize,
 }
 
@@ -83,6 +128,7 @@ impl Manifest {
         Ok((m, dir))
     }
 
+    /// Parse manifest.json text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let v = Value::parse(text)?;
         let version = v.at("version")?.as_u64()? as u32;

@@ -25,10 +25,12 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         Ok(Engine { client: xla::PjRtClient::cpu()? })
     }
 
+    /// Backend platform name.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -101,6 +103,7 @@ pub struct HloQuantBackend {
 }
 
 impl HloQuantBackend {
+    /// Load the AOT quantize/dequantize executables named in the manifest.
     pub fn load(engine: &Engine, dir: impl AsRef<Path>, manifest: &Manifest) -> Result<Self> {
         let dir = dir.as_ref();
         Ok(HloQuantBackend {

@@ -8,20 +8,25 @@
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Row-major element storage.
     pub data: Vec<f32>,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
 }
 
 impl Tensor {
+    /// Wrap a data buffer with its shape (lengths must agree).
     pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         Tensor { data, shape }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
     }
 
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.data.len()
     }

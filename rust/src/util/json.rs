@@ -11,16 +11,36 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed JSON value.
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (keys sorted — deterministic output).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// A number, or `null` when non-finite — JSON has no Infinity/NaN
+    /// (e.g. an unconstrained link measures "infinite" bandwidth), and
+    /// every report writer shares this one spelling of the rule so the
+    /// formats cannot diverge.
+    pub fn num_or_null(v: f64) -> Value {
+        if v.is_finite() {
+            Value::Num(v)
+        } else {
+            Value::Null
+        }
+    }
+
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Value> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -32,6 +52,7 @@ impl Value {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// Object field lookup (`None` for missing keys or non-objects).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -44,6 +65,7 @@ impl Value {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing key {key:?}"))
     }
 
+    /// The number, or an error for non-numbers.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -51,14 +73,17 @@ impl Value {
         }
     }
 
+    /// The number truncated to `usize`.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The number truncated to `u64`.
     pub fn as_u64(&self) -> Result<u64> {
         Ok(self.as_f64()? as u64)
     }
 
+    /// The boolean, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -66,6 +91,7 @@ impl Value {
         }
     }
 
+    /// The string, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -73,6 +99,7 @@ impl Value {
         }
     }
 
+    /// The array's elements, or an error.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -80,16 +107,19 @@ impl Value {
         }
     }
 
+    /// The array as a `Vec<usize>`.
     pub fn usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    /// The array as a `Vec<f64>`.
     pub fn f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
 
     // -- writer ---------------------------------------------------------------
 
+    /// Serialize (two-space-indented objects); always re-parseable.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0);

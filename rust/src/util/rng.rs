@@ -3,15 +3,18 @@
 //! quality for non-cryptographic use.
 
 #[derive(Debug, Clone)]
+/// SplitMix64 generator.
 pub struct Rng {
     state: u64,
 }
 
 impl Rng {
+    /// Deterministic generator from a seed.
     pub fn seed(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;

@@ -146,6 +146,7 @@ fn worker_chain_over_real_sockets() {
         microbatch: s,
         quantize_output: !last,
         inflight: 2,
+        telemetry: true,
     };
     let (cfg0, cfg1, cfg2) = (cfg(0, false), cfg(1, false), cfg(2, true));
 
@@ -192,6 +193,36 @@ fn worker_chain_over_real_sockets() {
         assert_eq!(r.frames, total, "worker {i}");
         assert!(r.errors.is_empty(), "worker {i}: {:?}", r.errors);
     }
+
+    // The acceptance criterion: one PipelineReport with EVERY stage's
+    // timeline populated — each worker's snapshots relayed down the
+    // chain into the coordinator's return link (plain TCP mode here; the
+    // resilient/striped variants are covered below).
+    let p = &report.pipeline;
+    assert_eq!(p.stage_count(), 3, "every stage must report: {p:?}");
+    assert_eq!(p.dropped, 0, "telemetry must parse cleanly: {p:?}");
+    for stage in 0..3u32 {
+        let st = &p.stages[&stage];
+        assert_eq!(st.frames, total, "stage {stage} frame count");
+        assert_eq!(st.seq_hi, total, "stage {stage} seq high-water");
+        assert!(st.complete, "stage {stage} final snapshot must arrive");
+        assert!(
+            !st.points.is_empty(),
+            "stage {stage} window timeline must be populated (window=4, total=24)"
+        );
+        assert!(st.errors.is_empty(), "stage {stage}: {:?}", st.errors);
+    }
+    // Boundary alignment on microbatch seq: a clean run has no bubble.
+    assert!(p.boundary_shortfalls().iter().all(|&(_, _, d)| d == 0), "{p:?}");
+    // The merged view serializes, parses back, and renders.
+    let json = p.to_json().to_string_pretty();
+    let back = quantpipe::metrics::telemetry::PipelineReport::from_json(
+        &quantpipe::util::json::Value::parse(&json).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(back.stage_count(), 3);
+    let text = back.render();
+    assert!(text.contains("stage 0") && text.contains("aligned"), "{text}");
 }
 
 #[test]
@@ -490,6 +521,61 @@ fn striped_drain_completes_when_stripes_finish_out_of_order() {
 }
 
 #[test]
+fn striped_boundary_carries_telemetry_without_perturbing_the_data_plane() {
+    // Telemetry on a 3-stripe boundary: records broadcast over every
+    // conduit (so the FIN-triggering stream always carries the final
+    // snapshot), frames still arrive exactly once and in order, the
+    // drain closes cleanly, and the receiver hands back the payloads.
+    use quantpipe::metrics::telemetry::StageSnapshot;
+    let (mut tx, mut rx) = striped_loopback_pair(3, &fast_resilience()).unwrap();
+    let stats = tx.stats();
+    let total = 12u64;
+    let sender = std::thread::spawn(move || {
+        let mut c = quantpipe::quant::codec::Codec::default();
+        for seq in 0..total {
+            let x: Vec<f32> = (0..64).map(|i| (i as f32 + seq as f32).sin()).collect();
+            let enc = c.encode(&x, Method::Aciq, 8).unwrap();
+            tx.send(Frame::new(seq, vec![64], enc)).unwrap();
+            if seq % 4 == 3 {
+                let snap = StageSnapshot {
+                    stage: 0,
+                    snap: seq / 4,
+                    frames: seq + 1,
+                    seq_hi: seq + 1,
+                    last: seq + 1 == total,
+                    ..Default::default()
+                };
+                tx.send_telemetry(&snap.to_bytes()).unwrap();
+            }
+        }
+        tx.finish().unwrap();
+    });
+    let mut payloads = Vec::new();
+    for want in 0..total {
+        assert_eq!(rx.recv().unwrap().unwrap().seq, want, "telemetry reordered the data plane");
+        payloads.extend(rx.poll_telemetry());
+    }
+    assert!(rx.recv().unwrap().is_none(), "drain must still close cleanly");
+    payloads.extend(rx.poll_telemetry());
+    sender.join().unwrap();
+    // Broadcast over 3 stripes means duplicates are expected; distinct
+    // snapshot identities must all be present, and the final snapshot
+    // must have survived the drain race.
+    let mut report = quantpipe::metrics::telemetry::PipelineReport::new();
+    for p in &payloads {
+        report.ingest(p);
+    }
+    assert_eq!(report.dropped, 0, "payloads must come through byte-intact");
+    let st = &report.stages[&0];
+    assert_eq!(st.snaps, 3, "all three snapshots (deduped) must arrive");
+    assert!(st.complete, "the final snapshot must beat the FIN on its conduit");
+    assert_eq!(st.frames, total);
+    let zero = stats.snapshot();
+    assert_eq!(zero.reconnects, 0, "telemetry must not destabilize the stripes");
+    assert_eq!(zero.deduped, 0, "telemetry must not trigger data-plane replay");
+}
+
+#[test]
 fn resilient_worker_chain_survives_link_kill() {
     // Multi-process topology over resilient links: coordinator → w0 → w1
     // → w2 → coordinator, with the w0→w1 connection killed mid-run. The
@@ -513,6 +599,7 @@ fn resilient_worker_chain_survives_link_kill() {
         microbatch: s,
         quantize_output: !last,
         inflight: 2,
+        telemetry: true,
     };
     let (cfg0, cfg1, cfg2) = (cfg(0, false), cfg(1, false), cfg(2, true));
 
@@ -568,6 +655,23 @@ fn resilient_worker_chain_survives_link_kill() {
         chain_reconnects += r.resilience.reconnects;
     }
     assert!(chain_reconnects >= 1, "the killed w0→w1 link must have reconnected");
+
+    // Telemetry survives the outage: the resilient links dedup replayed
+    // frames but must still deliver every stage's merged timeline, and
+    // the reconnect shows up in the reporting worker's counters.
+    let p = &report.pipeline;
+    assert_eq!(p.stage_count(), 3, "every stage must report across the kill: {p:?}");
+    for stage in 0..3u32 {
+        let st = &p.stages[&stage];
+        assert_eq!(st.frames, total, "stage {stage}");
+        assert!(st.complete, "stage {stage} final snapshot lost");
+        assert!(!st.points.is_empty(), "stage {stage} timeline empty");
+    }
+    let telem_reconnects: u64 = p.stages.values().map(|s| s.resilience.reconnects).sum();
+    assert!(
+        telem_reconnects >= 1,
+        "the reconnect must be visible in the merged telemetry: {p:?}"
+    );
 }
 
 /// Feed stub that forwards frames into an echo channel, then fails hard.
@@ -671,6 +775,7 @@ fn worker_reports_upstream_link_failure() {
         microbatch: s,
         quantize_output: true,
         inflight: 2,
+        telemetry: true,
     };
     let report = run_worker(
         mock_stage_factory(1.0, 0.0, vec![s, 4], Duration::ZERO),

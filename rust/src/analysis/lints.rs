@@ -1,0 +1,319 @@
+//! Self-hosted lint rules over the crate's own sources.
+//!
+//! The rules encode invariants this codebase has committed to:
+//!
+//! * **unwrap** — no bare `.unwrap()` / `.expect(` in non-test `net/` and
+//!   `pipeline/` code. Worker threads there must surface failures through
+//!   the error channels, not abort the process mid-run.
+//! * **lock** — all mutex acquisition goes through [`crate::util::sync`]
+//!   (`TrackedMutex::guard` or the poison-tolerant `lock` helper), so the
+//!   lock-order detector sees every acquisition. Bare `.lock(` calls are
+//!   banned everywhere except `util/sync.rs` itself.
+//! * **socket-free-session** — `net/session.rs` is the pure protocol
+//!   state machine; it must stay free of `std::net` so it remains usable
+//!   from the deterministic interleaving checker and from Miri.
+//! * **safety-comment** — every `unsafe` carries a `// SAFETY:` comment
+//!   explaining why it is sound.
+//!
+//! A violation is silenced by an adjacent comment of the form
+//! `// lint: allow(<rule>): <reason>` — on the same line, or in the
+//! contiguous comment block directly above. The reason is mandatory: the
+//! annotation is the reviewer-facing proof obligation.
+//!
+//! The whole pass runs as an ordinary `cargo test`
+//! (`tests/static_analysis.rs`), so CI enforces it with no extra tooling.
+
+use crate::analysis::source::SourceFile;
+use std::fmt;
+
+/// A single lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// File path relative to the crate root (slash-separated).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (`unwrap`, `lock`, `socket-free-session`,
+    /// `safety-comment`, `wire-spec`).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// True when line `idx` of `file` is covered by a
+/// `lint: allow(<rule>)` annotation: on the line itself, or in the
+/// contiguous run of comment-only lines directly above it.
+fn allowed(file: &SourceFile, idx: usize, rule: &str) -> bool {
+    let marker = format!("lint: allow({rule})");
+    if file.lines[idx].comment.contains(&marker) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && file.lines[j - 1].is_comment_only() {
+        j -= 1;
+        if file.lines[j].comment.contains(&marker) {
+            return true;
+        }
+    }
+    false
+}
+
+/// R1: bare `.unwrap()` / `.expect(` in non-test `net/`/`pipeline/` code.
+pub fn check_unwrap(file: &SourceFile, out: &mut Vec<Finding>) {
+    let rel = file.rel();
+    if !(rel.starts_with("src/net/") || rel.starts_with("src/pipeline/")) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for (pat, rule) in [(".unwrap()", "unwrap"), (".expect(", "expect")] {
+            if line.code.contains(pat) && !allowed(file, idx, rule) {
+                out.push(Finding {
+                    file: rel.clone(),
+                    line: idx + 1,
+                    rule: "unwrap",
+                    message: format!(
+                        "bare `{pat}..` in pipeline/net code; return an error or add \
+                         `// lint: allow({rule}): <why it cannot fail>`"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R2: bare `.lock(` outside `util/sync.rs`.
+pub fn check_lock(file: &SourceFile, out: &mut Vec<Finding>) {
+    let rel = file.rel();
+    if rel.ends_with("util/sync.rs") {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.code.contains(".lock(") && !allowed(file, idx, "lock") {
+            out.push(Finding {
+                file: rel.clone(),
+                line: idx + 1,
+                rule: "lock",
+                message: "bare `.lock()`; use `util::sync::TrackedMutex::guard` so the \
+                          lock-order detector sees the acquisition"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// R3: `net/session.rs` must stay socket-free.
+pub fn check_session_socket_free(file: &SourceFile, out: &mut Vec<Finding>) {
+    let rel = file.rel();
+    if !rel.ends_with("net/session.rs") {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        for pat in ["std::net", "TcpStream", "TcpListener", "UdpSocket"] {
+            if line.code.contains(pat) && !allowed(file, idx, "socket-free-session") {
+                out.push(Finding {
+                    file: rel.clone(),
+                    line: idx + 1,
+                    rule: "socket-free-session",
+                    message: format!(
+                        "`{pat}` in the session state machine; session.rs must stay \
+                         I/O-free (sockets live in conduit.rs/stripe.rs)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R4: every `unsafe` needs an adjacent `// SAFETY:` comment.
+pub fn check_safety_comments(file: &SourceFile, out: &mut Vec<Finding>) {
+    let rel = file.rel();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        let mut covered = line.comment.contains("SAFETY:");
+        let mut j = idx;
+        while !covered && j > 0 && file.lines[j - 1].is_comment_only() {
+            j -= 1;
+            covered = file.lines[j].comment.contains("SAFETY:");
+        }
+        if !covered && !allowed(file, idx, "safety-comment") {
+            out.push(Finding {
+                file: rel.clone(),
+                line: idx + 1,
+                rule: "safety-comment",
+                message: "`unsafe` without an adjacent `// SAFETY:` comment".into(),
+            });
+        }
+    }
+}
+
+/// True when `word` occurs in `code` delimited by non-identifier chars.
+fn has_word(code: &str, word: &str) -> bool {
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = !code[..at].chars().next_back().is_some_and(ident);
+        let after_ok = !code[at + word.len()..].chars().next().is_some_and(ident);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// Run every rule over `files`, returning all findings sorted by
+/// (file, line).
+pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files {
+        check_unwrap(file, &mut out);
+        check_lock(file, &mut out);
+        check_session_socket_free(file, &mut out);
+        check_safety_comments(file, &mut out);
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::SourceFile;
+
+    fn net_file(text: &str) -> SourceFile {
+        SourceFile::parse("src/net/x.rs", text, false)
+    }
+
+    #[test]
+    fn unwrap_in_net_code_is_flagged() {
+        let f = net_file("fn f() { a.unwrap(); }\n");
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "unwrap");
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn expect_is_flagged_but_expect_err_is_not() {
+        let f = net_file("fn f() { a.expect(\"x\"); b.expect_err(\"y\"); c.unwrap_or(0); }\n");
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert_eq!(out.len(), 1, "only bare .expect( counts: {out:?}");
+    }
+
+    #[test]
+    fn allow_annotation_on_same_line_silences() {
+        let f = net_file("a.unwrap(); // lint: allow(unwrap): infallible here\n");
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn allow_annotation_in_comment_block_above_silences() {
+        let f = net_file(
+            "// lint: allow(unwrap): the slice is a fixed-size array, so\n\
+             // the conversion is infallible.\n\
+             a.unwrap();\n",
+        );
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn allow_annotation_does_not_leak_past_code() {
+        let f = net_file(
+            "// lint: allow(unwrap): covers only the next line\na.unwrap();\nb.unwrap();\n",
+        );
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert_eq!(out.len(), 1, "second unwrap is not covered: {out:?}");
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn unwrap_in_tests_and_strings_is_fine() {
+        let f = net_file("#[cfg(test)]\nmod tests {\n    fn t() { a.unwrap(); }\n}\n");
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let f = net_file("let s = \"please don't .unwrap()\";\n");
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unwrap_outside_net_pipeline_is_fine() {
+        let f = SourceFile::parse("src/quant/x.rs", "fn f() { a.unwrap(); }\n", false);
+        let mut out = Vec::new();
+        check_unwrap(&f, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bare_lock_is_flagged_everywhere_but_sync() {
+        let f = SourceFile::parse("src/metrics/mod.rs", "m.lock().unwrap();\n", false);
+        let mut out = Vec::new();
+        check_lock(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        let f = SourceFile::parse("src/util/sync.rs", "m.lock().unwrap();\n", false);
+        let mut out = Vec::new();
+        check_lock(&f, &mut out);
+        assert!(out.is_empty(), "sync.rs is the one place allowed to touch Mutex::lock");
+    }
+
+    #[test]
+    fn session_socket_rule() {
+        let f = SourceFile::parse("src/net/session.rs", "use std::net::TcpStream;\n", false);
+        let mut out = Vec::new();
+        check_session_socket_free(&f, &mut out);
+        assert!(!out.is_empty());
+        let f = SourceFile::parse("src/net/conduit.rs", "use std::net::TcpStream;\n", false);
+        let mut out = Vec::new();
+        check_session_socket_free(&f, &mut out);
+        assert!(out.is_empty(), "other net files may use sockets");
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let f = SourceFile::parse("src/x.rs", "unsafe impl Send for T {}\n", false);
+        let mut out = Vec::new();
+        check_safety_comments(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        let f = SourceFile::parse(
+            "src/x.rs",
+            "// SAFETY: T owns no thread-affine state.\nunsafe impl Send for T {}\n",
+            false,
+        );
+        let mut out = Vec::new();
+        check_safety_comments(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unsafe_in_identifiers_or_strings_is_ignored() {
+        let f = SourceFile::parse(
+            "src/x.rs",
+            "let not_unsafe_here = 1;\nlet s = \"unsafe\";\n// unsafe in a comment\n",
+            false,
+        );
+        let mut out = Vec::new();
+        check_safety_comments(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

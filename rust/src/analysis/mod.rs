@@ -1,0 +1,32 @@
+//! Self-hosted correctness tooling: lint pass, wire-spec cross-check,
+//! and the deterministic interleaving checker.
+//!
+//! Everything here runs as ordinary `cargo test` targets — no external
+//! tools, no nightly features — so CI enforces the codebase's structural
+//! invariants with the same command that runs its unit tests:
+//!
+//! * [`source`] — a masked source model of the crate's own `.rs` files
+//!   (strings/comments/cfg(test) regions resolved), the substrate the
+//!   lints match against.
+//! * [`lints`] — the rules: no bare `unwrap` in net/pipeline code, all
+//!   locking through `util::sync`, a socket-free session layer, and
+//!   `// SAFETY:` comments on every `unsafe`. Violations are silenced
+//!   only by an adjacent `// lint: allow(<rule>): <reason>`.
+//! * [`spec`] — parses the normative tables in `docs/WIRE_PROTOCOL.md`
+//!   and diffs them against the constants in [`crate::net::session`] and
+//!   [`crate::net::frame`], so doc and implementation cannot drift.
+//! * [`schedule`] — a model of one stage boundary (session + striped
+//!   conduits) for [`crate::util::explore`]: every interleaving of
+//!   send/deliver/ack/kill/HELLO-resync/FIN up to a bound, with
+//!   exactly-once in-order delivery checked at every step.
+//!
+//! The driving tests live in `rust/tests/static_analysis.rs` and
+//! `rust/tests/interleavings.rs`.
+
+pub mod lints;
+pub mod schedule;
+pub mod source;
+pub mod spec;
+
+pub use lints::{run_all, Finding};
+pub use source::{crate_sources, SourceFile};

@@ -1,0 +1,424 @@
+//! A lightweight source model for the self-hosted lints.
+//!
+//! [`SourceFile::parse`] runs a character state machine over a `.rs` file
+//! and splits every line into *code* (with string/char-literal contents
+//! masked out) and *comment* text. The lints in [`crate::analysis::lints`]
+//! then do plain substring matching on the code part without tripping over
+//! tokens that only appear inside strings, and read the comment part for
+//! `// lint: allow(...)` and `// SAFETY:` annotations.
+//!
+//! This is deliberately **not** a Rust parser: it understands exactly the
+//! constructs that would otherwise produce false positives — string
+//! literals (incl. raw and byte strings), char literals vs. lifetimes,
+//! line comments, and nested block comments — and nothing more.
+
+use std::path::{Path, PathBuf};
+
+/// One source line after masking.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Code text with string/char contents replaced by spaces and all
+    /// comment text removed. Safe for substring matching.
+    pub code: String,
+    /// Concatenated comment text appearing on this line (line comments,
+    /// doc comments and block-comment fragments alike).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` region (or the
+    /// whole file is a test/bench/example target).
+    pub in_test: bool,
+}
+
+impl Line {
+    /// True when the line carries no code at all (blank or comment-only).
+    pub fn is_comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+}
+
+/// A parsed source file: path plus masked lines.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path as given to [`SourceFile::parse`] (display-friendly, usually
+    /// relative to the crate root).
+    pub path: PathBuf,
+    /// Masked lines, 0-indexed (line numbers in findings are 1-based).
+    pub lines: Vec<Line>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nested block comments: Rust block comments nest, so track depth.
+    BlockComment(u32),
+    Str,
+    /// Raw string with this many `#` marks, e.g. `r#"…"#` has 1.
+    RawStr(u32),
+    CharLit,
+}
+
+impl SourceFile {
+    /// Parse `text` into masked lines. `whole_file_is_test` marks every
+    /// line as test code (used for `tests/`, `benches/` and `examples/`
+    /// targets, where unwraps are idiomatic).
+    pub fn parse(path: impl Into<PathBuf>, text: &str, whole_file_is_test: bool) -> SourceFile {
+        let mut lines = Vec::new();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut mode = Mode::Code;
+        let chars: Vec<char> = text.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if c == '\n' {
+                // A line comment ends at the newline; everything else
+                // (block comments, string literals) continues across it.
+                if mode == Mode::LineComment {
+                    mode = Mode::Code;
+                }
+                lines.push(Line {
+                    code: std::mem::take(&mut code),
+                    comment: std::mem::take(&mut comment),
+                    in_test: whole_file_is_test,
+                });
+                i += 1;
+                continue;
+            }
+            match mode {
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        mode = Mode::LineComment;
+                        i += 2;
+                        continue;
+                    }
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::BlockComment(1);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        // Raw string? Look back over `#`s to an `r` (with
+                        // optional `b` byte prefix) directly adjacent.
+                        let mut j = i;
+                        let mut hashes = 0u32;
+                        while j > 0 && chars[j - 1] == '#' {
+                            hashes += 1;
+                            j -= 1;
+                        }
+                        let has_r = j > 0 && chars[j - 1] == 'r';
+                        let standalone =
+                            j < 2 || !is_ident_char(chars[j - 2]) || chars[j - 2] == 'b';
+                        mode = if has_r && standalone {
+                            Mode::RawStr(hashes)
+                        } else {
+                            Mode::Str
+                        };
+                        code.push('"');
+                        i += 1;
+                        continue;
+                    }
+                    if c == '\'' {
+                        // Char literal vs lifetime: a char literal closes
+                        // within two characters (one char, or an escape);
+                        // a lifetime is `'` + identifier with no closing
+                        // quote. `'a'` is a literal, `'a` is a lifetime.
+                        let is_char_lit = match chars.get(i + 1) {
+                            Some(&'\\') => true,
+                            Some(&n) => chars.get(i + 2) == Some(&'\'') && n != '\'',
+                            None => false,
+                        };
+                        if is_char_lit {
+                            mode = Mode::CharLit;
+                        }
+                        code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+                Mode::LineComment => {
+                    comment.push(c);
+                    i += 1;
+                }
+                Mode::BlockComment(depth) => {
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::BlockComment(depth + 1);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                        i += 2;
+                        continue;
+                    }
+                    comment.push(c);
+                    i += 1;
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if chars.get(i + 1) == Some(&'\n') {
+                            // `\` line continuation: keep the newline so
+                            // the top of the loop still breaks the line.
+                            i += 1;
+                            continue;
+                        }
+                        if chars.get(i + 1).is_some() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        mode = Mode::Code;
+                        code.push('"');
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' {
+                        let mut ok = true;
+                        for k in 0..hashes as usize {
+                            if chars.get(i + 1 + k) != Some(&'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            mode = Mode::Code;
+                            code.push('"');
+                            for _ in 0..hashes {
+                                code.push('#');
+                            }
+                            i += 1 + hashes as usize;
+                            continue;
+                        }
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+                Mode::CharLit => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if chars.get(i + 1).is_some() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if c == '\'' {
+                        mode = Mode::Code;
+                        code.push('\'');
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        }
+        if !code.is_empty() || !comment.is_empty() {
+            lines.push(Line { code, comment, in_test: whole_file_is_test });
+        }
+        let mut file = SourceFile { path: path.into(), lines };
+        if !whole_file_is_test {
+            file.mark_test_regions();
+        }
+        file
+    }
+
+    /// Mark lines inside `#[cfg(test)]`-attributed items as test code by
+    /// brace-counting from the item's opening `{` to its matching close.
+    fn mark_test_regions(&mut self) {
+        let mut i = 0usize;
+        while i < self.lines.len() {
+            if !self.lines[i].code.contains("#[cfg(test)]") {
+                i += 1;
+                continue;
+            }
+            // From the attribute line, scan forward to the item's first
+            // `{`, then run the brace counter until it closes.
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < self.lines.len() {
+                self.lines[j].in_test = true;
+                for c in self.lines[j].code.chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        // An un-braced item (`#[cfg(test)] mod t;`) ends
+                        // at the first `;` before any brace opens.
+                        ';' if !opened => {
+                            depth = 0;
+                            opened = true;
+                        }
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        }
+    }
+
+    /// Path rendered with `/` separators for rule matching and reporting.
+    pub fn rel(&self) -> String {
+        self.path
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Walk the crate's own sources: `src/` (library code), plus `tests/`,
+/// `benches/` and the repo-level `examples/` (all treated as test code).
+/// The vendored shim crates under `vendor/` are skipped — they are
+/// stand-ins for external deps, not part of the codebase under lint.
+pub fn crate_sources(manifest_dir: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    let roots: [(&str, bool); 4] =
+        [("src", false), ("tests", true), ("benches", true), ("../examples", true)];
+    for (root, is_test) in roots {
+        let dir = manifest_dir.join(root);
+        if dir.is_dir() {
+            walk(&dir, &dir, root.trim_start_matches("../"), is_test, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}
+
+fn walk(
+    top: &Path,
+    dir: &Path,
+    label: &str,
+    is_test: bool,
+    out: &mut Vec<SourceFile>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "vendor" || name == "target" {
+                continue;
+            }
+            walk(top, &path, label, is_test, out)?;
+        } else if name.ends_with(".rs") {
+            let text = std::fs::read_to_string(&path)?;
+            let rel = path.strip_prefix(top).unwrap_or(&path);
+            let display = Path::new(label).join(rel);
+            out.push(SourceFile::parse(display, &text, is_test));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> SourceFile {
+        SourceFile::parse("test.rs", text, false)
+    }
+
+    #[test]
+    fn masks_string_contents() {
+        let f = parse("let x = \"call .unwrap() here\";\n");
+        assert!(!f.lines[0].code.contains(".unwrap()"));
+        assert!(f.lines[0].code.contains("let x = \""));
+    }
+
+    #[test]
+    fn strips_line_comments_into_comment_field() {
+        let f = parse("foo(); // lint: allow(unwrap): reason\n");
+        assert!(f.lines[0].code.contains("foo();"));
+        assert!(!f.lines[0].code.contains("lint:"));
+        assert!(f.lines[0].comment.contains("lint: allow(unwrap)"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = parse("a /* one /* two */ still */ b\n");
+        assert!(f.lines[0].code.contains('a'));
+        assert!(f.lines[0].code.contains('b'));
+        assert!(!f.lines[0].code.contains("one"));
+        assert!(f.lines[0].comment.contains("two"));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let f = parse("let s = r#\"has \".unwrap()\" inside\"#;\nnext();\n");
+        assert!(!f.lines[0].code.contains(".unwrap()"));
+        assert!(f.lines[1].code.contains("next();"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = parse("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x';\nlet n = '\\n';\n");
+        assert!(f.lines[0].code.contains("str { x }"), "lifetime must not open a literal");
+        assert!(!f.lines[1].code.contains('x'), "char literal contents masked");
+        assert!(f.lines[2].code.contains('\''), "escaped char literal closes");
+    }
+
+    #[test]
+    fn multi_line_strings_stay_masked() {
+        let f = parse("let s = \"first\nsecond .unwrap()\nthird\";\ncode();\n");
+        assert!(!f.lines[1].code.contains(".unwrap()"));
+        assert!(f.lines[3].code.contains("code();"));
+    }
+
+    #[test]
+    fn backslash_newline_continuation_keeps_line_count() {
+        let f = parse("let s = \"one \\\n two\";\nafter();\n");
+        assert_eq!(f.lines.len(), 3, "continuation must not swallow the newline");
+        assert!(f.lines[2].code.contains("after();"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let text = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = parse(text);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test, "region ends at the matching brace");
+    }
+
+    #[test]
+    fn whole_file_test_flag() {
+        let f = SourceFile::parse("tests/x.rs", "fn a() {}\n", true);
+        assert!(f.lines[0].in_test);
+    }
+
+    #[test]
+    fn crate_sources_walks_this_crate() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = crate_sources(dir).unwrap();
+        assert!(
+            files.iter().any(|f| f.rel() == "src/analysis/source.rs"),
+            "walker must find this very file"
+        );
+        assert!(
+            files.iter().all(|f| !f.rel().contains("vendor/")),
+            "vendored shims are not linted"
+        );
+    }
+}

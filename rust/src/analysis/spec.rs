@@ -1,0 +1,255 @@
+//! R5: cross-check wire-protocol constants against the normative doc.
+//!
+//! `docs/WIRE_PROTOCOL.md` is the contract other implementations are
+//! written against; [`crate::net::session`] and [`crate::net::frame`]
+//! are the implementation. This module parses the doc's normative tables
+//! (control-kind table, frame header, bounds) and diffs every value
+//! against the constants the code actually uses, so the two can never
+//! drift silently — the check runs in `tests/static_analysis.rs`.
+
+use crate::analysis::lints::Finding;
+use crate::net::frame;
+use crate::net::session;
+
+/// Wire facts extracted from the normative doc.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSpec {
+    /// Control-record marker (`prefix == CTRL_MARKER`), with doc line.
+    pub ctrl_marker: (u32, usize),
+    /// Fixed control-record length in bytes, with doc line.
+    pub ctrl_len: (usize, usize),
+    /// Frame length bound, with doc line.
+    pub max_frame_bytes: (usize, usize),
+    /// Telemetry payload bound, with doc line.
+    pub max_telemetry_bytes: (usize, usize),
+    /// Frame-header magic, with doc line.
+    pub magic: (u32, usize),
+    /// Frame-header version, with doc line.
+    pub version: (u8, usize),
+    /// Control kinds: (kind byte, name, doc line).
+    pub kinds: Vec<(u8, String, usize)>,
+}
+
+/// First hex literal (`0x…`) on the line, underscores allowed.
+fn extract_hex(line: &str) -> Option<u64> {
+    let at = line.find("0x")?;
+    let digits: String = line[at + 2..]
+        .chars()
+        .take_while(|c| c.is_ascii_hexdigit() || *c == '_')
+        .filter(|c| *c != '_')
+        .collect();
+    u64::from_str_radix(&digits, 16).ok()
+}
+
+/// Value of a power-of-two bound written as `` `NAME = 2^exp` ``.
+fn extract_pow2(line: &str, name: &str) -> Option<usize> {
+    let pat = format!("{name} = 2^");
+    let at = line.find(&pat)?;
+    let exp: String =
+        line[at + pat.len()..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    exp.parse::<u32>().ok().map(|e| 1usize << e)
+}
+
+/// Parse the normative doc. Returns an error naming the first missing
+/// fact, so doc restructuring fails the suite loudly rather than by
+/// silently checking nothing.
+pub fn parse(doc: &str) -> Result<WireSpec, String> {
+    let mut ctrl_marker = None;
+    let mut ctrl_len = None;
+    let mut max_frame = None;
+    let mut max_telemetry = None;
+    let mut magic = None;
+    let mut version = None;
+    let mut kinds = Vec::new();
+    for (idx, line) in doc.lines().enumerate() {
+        let no = idx + 1;
+        if line.contains("CTRL_MARKER") && ctrl_marker.is_none() {
+            if let Some(v) = extract_hex(line) {
+                ctrl_marker = Some((v as u32, no));
+            }
+        }
+        if max_frame.is_none() {
+            if let Some(v) = extract_pow2(line, "MAX_FRAME_BYTES") {
+                max_frame = Some((v, no));
+            }
+        }
+        if max_telemetry.is_none() {
+            if let Some(v) = extract_pow2(line, "MAX_TELEMETRY_BYTES") {
+                max_telemetry = Some((v, no));
+            }
+        }
+        if line.contains("marker") && line.contains("bytes)") && ctrl_len.is_none() {
+            // "… | seq u64        (13 bytes)"
+            let inside = line.rfind('(').map(|p| &line[p + 1..]);
+            let digits: String = inside
+                .unwrap_or("")
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if let Ok(v) = digits.parse::<usize>() {
+                ctrl_len = Some((v, no));
+            }
+        }
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        if tokens.first() == Some(&"magic") && magic.is_none() {
+            if let Some(v) = extract_hex(line) {
+                magic = Some((v as u32, no));
+            }
+        }
+        if tokens.first() == Some(&"ver") && version.is_none() {
+            if let Some(v) = tokens.get(2).and_then(|t| t.parse::<u8>().ok()) {
+                version = Some((v, no));
+            }
+        }
+        // Control-kind table rows: `kind <n>  NAME{...}`. The frame
+        // header's own `kind   u8 …` row fails the integer parse.
+        if tokens.first() == Some(&"kind") {
+            if let Some(k) = tokens.get(1).and_then(|t| t.parse::<u8>().ok()) {
+                if let Some(name) = tokens.get(2).copied() {
+                    let name = name.split('{').next().unwrap_or(name);
+                    kinds.push((k, name.to_string(), no));
+                }
+            }
+        }
+    }
+    Ok(WireSpec {
+        ctrl_marker: ctrl_marker.ok_or("doc: CTRL_MARKER value not found")?,
+        ctrl_len: ctrl_len.ok_or("doc: control-record byte length not found")?,
+        max_frame_bytes: max_frame.ok_or("doc: MAX_FRAME_BYTES bound not found")?,
+        max_telemetry_bytes: max_telemetry.ok_or("doc: MAX_TELEMETRY_BYTES bound not found")?,
+        magic: magic.ok_or("doc: frame magic not found")?,
+        version: version.ok_or("doc: frame version not found")?,
+        kinds,
+    })
+}
+
+fn mismatch(line: usize, message: String) -> Finding {
+    Finding { file: "docs/WIRE_PROTOCOL.md".into(), line, rule: "wire-spec", message }
+}
+
+/// Diff the parsed spec against the constants in `net::session` and
+/// `net::frame`. Empty result = doc and code agree.
+pub fn cross_check(spec: &WireSpec) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut check_u64 = |name: &str, doc: u64, line: usize, code: u64| {
+        if doc != code {
+            out.push(mismatch(
+                line,
+                format!("{name}: doc says {doc:#x}, code says {code:#x}"),
+            ));
+        }
+    };
+    check_u64(
+        "CTRL_MARKER",
+        spec.ctrl_marker.0 as u64,
+        spec.ctrl_marker.1,
+        session::CTRL_MARKER as u64,
+    );
+    check_u64("CTRL_LEN", spec.ctrl_len.0 as u64, spec.ctrl_len.1, session::CTRL_LEN as u64);
+    check_u64(
+        "MAX_FRAME_BYTES",
+        spec.max_frame_bytes.0 as u64,
+        spec.max_frame_bytes.1,
+        session::MAX_FRAME_BYTES as u64,
+    );
+    check_u64(
+        "MAX_TELEMETRY_BYTES",
+        spec.max_telemetry_bytes.0 as u64,
+        spec.max_telemetry_bytes.1,
+        session::MAX_TELEMETRY_BYTES as u64,
+    );
+    check_u64("frame MAGIC", spec.magic.0 as u64, spec.magic.1, frame::MAGIC as u64);
+    check_u64("frame VERSION", spec.version.0 as u64, spec.version.1, frame::VERSION as u64);
+    let code_kinds: [(&str, u8); 5] = [
+        ("HELLO", session::K_HELLO),
+        ("ACK", session::K_ACK),
+        ("FIN", session::K_FIN),
+        ("FIN_ACK", session::K_FIN_ACK),
+        ("TELEMETRY", session::K_TELEMETRY),
+    ];
+    for (name, code_val) in code_kinds {
+        match spec.kinds.iter().find(|(_, n, _)| n == name) {
+            Some(&(doc_val, _, line)) if doc_val != code_val => out.push(mismatch(
+                line,
+                format!("control kind {name}: doc says {doc_val}, code says {code_val}"),
+            )),
+            Some(_) => {}
+            None => out.push(mismatch(
+                1,
+                format!("control kind {name} (= {code_val} in code) missing from the doc table"),
+            )),
+        }
+    }
+    for (doc_val, name, line) in &spec.kinds {
+        if !code_kinds.iter().any(|(n, _)| n == name) {
+            out.push(mismatch(
+                *line,
+                format!("doc lists control kind {doc_val} {name} that the code does not define"),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+length `L` (bounded by `MAX_FRAME_BYTES = 2^30`; larger is corrupt)
+* prefix `== 0xFFFF_FFFF` (`CTRL_MARKER`) — a control record.
+magic  u32   \"QPFR\" (0x5150_4652)
+ver    u8    1
+kind   u8    0 = raw f32, 1 = quantized
+marker u32 = 0xFFFF_FFFF | kind u8 | seq u64        (13 bytes)
+kind 1  HELLO{next_expected}   receiver → sender
+kind 2  ACK{next_expected}     receiver → sender
+kind 3  FIN{end_seq}           sender → receiver
+kind 4  FIN_ACK{end_seq}       receiver → sender
+kind 5  TELEMETRY{len}         sender → receiver
+(bounded by `MAX_TELEMETRY_BYTES = 2^20`; larger is desync)
+";
+
+    #[test]
+    fn parses_all_facts() {
+        let spec = parse(GOOD).unwrap();
+        assert_eq!(spec.ctrl_marker.0, 0xFFFF_FFFF);
+        assert_eq!(spec.ctrl_len.0, 13);
+        assert_eq!(spec.max_frame_bytes.0, 1 << 30);
+        assert_eq!(spec.max_telemetry_bytes.0, 1 << 20);
+        assert_eq!(spec.magic.0, 0x5150_4652);
+        assert_eq!(spec.version.0, 1);
+        assert_eq!(spec.kinds.len(), 5, "frame-header kind row must not leak in");
+    }
+
+    #[test]
+    fn good_doc_cross_checks_clean() {
+        let spec = parse(GOOD).unwrap();
+        let diffs = cross_check(&spec);
+        assert!(diffs.is_empty(), "{diffs:?}");
+    }
+
+    #[test]
+    fn drifted_constant_is_caught() {
+        let drifted = GOOD.replace("2^30", "2^29");
+        let diffs = cross_check(&parse(&drifted).unwrap());
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0].message.contains("MAX_FRAME_BYTES"), "{}", diffs[0]);
+    }
+
+    #[test]
+    fn renumbered_kind_is_caught() {
+        let drifted = GOOD.replace("kind 4  FIN_ACK", "kind 6  FIN_ACK");
+        let diffs = cross_check(&parse(&drifted).unwrap());
+        assert!(
+            diffs.iter().any(|d| d.message.contains("FIN_ACK")),
+            "renumbered FIN_ACK must be flagged: {diffs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_fact_is_a_parse_error() {
+        let gutted = GOOD.replace("CTRL_MARKER", "SOMETHING_ELSE");
+        assert!(parse(&gutted).unwrap_err().contains("CTRL_MARKER"));
+    }
+}

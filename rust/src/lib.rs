@@ -32,7 +32,8 @@
 //! | [`data`] | eval/calibration set loaders, accuracy |
 //! | [`metrics`] | throughput / latency instrumentation, Fig 5 timelines |
 //! | [`config`] | JSON config + experiment presets (incl. the `transport` topology section) |
-//! | [`util`] | offline-substitute utilities (JSON, RNG, prop testing) |
+//! | [`util`] | offline-substitute utilities (JSON, RNG, prop testing, the bounded-exhaustive explorer) |
+//! | [`analysis`] | self-hosted correctness tooling: lint pass, wire-spec cross-check, interleaving checker (runs as `cargo test`) |
 //!
 //! ## Running over real TCP
 //!
@@ -84,6 +85,7 @@
 #![warn(missing_docs)]
 
 pub mod adapt;
+pub mod analysis;
 pub mod benchkit;
 pub mod config;
 pub mod data;

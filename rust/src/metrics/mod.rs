@@ -6,8 +6,9 @@
 
 pub mod telemetry;
 
+use crate::util::sync::TrackedMutex;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Live counters a resilient link endpoint updates while it runs. Shared
@@ -255,14 +256,20 @@ impl Timeline {
         self.points.push(p);
     }
 
+    /// A shared timeline for the pipeline's writer threads, under the
+    /// lock-order-tracked mutex class `"metrics.timeline"`.
+    pub fn shared() -> Arc<TrackedMutex<Timeline>> {
+        Arc::new(TrackedMutex::new("metrics.timeline", Timeline::default()))
+    }
+
     /// Take the recorded points out of a shared timeline, regardless of
     /// how many `Arc` clones are still alive or whether a panicked writer
     /// poisoned the mutex. `Arc::try_unwrap(..).unwrap_or_default()` —
     /// the obvious spelling — silently returns an *empty* timeline
     /// whenever a thread still holds a clone, losing the whole Fig 5
     /// record; this never does.
-    pub fn take_shared(shared: &Arc<Mutex<Timeline>>) -> Timeline {
-        std::mem::take(&mut *crate::util::sync::lock(shared))
+    pub fn take_shared(shared: &Arc<TrackedMutex<Timeline>>) -> Timeline {
+        std::mem::take(&mut *shared.guard())
     }
 
     /// CSV dump (t, stage, bandwidth_mbps, rate, bits, util).
@@ -413,8 +420,8 @@ mod tests {
     fn take_shared_survives_leaked_arc_and_poison() {
         // Regression: a stage thread that leaks its Arc (or dies holding
         // the lock) must not erase the timeline.
-        let shared = Arc::new(Mutex::new(Timeline::default()));
-        shared.lock().unwrap().push(TimelinePoint {
+        let shared = Timeline::shared();
+        shared.guard().push(TimelinePoint {
             t: 1.0,
             stage: 0,
             bandwidth_bps: 1e6,
@@ -428,10 +435,10 @@ mod tests {
         drop(leaked);
 
         // Poisoned by a panicking writer: still recoverable.
-        let shared = Arc::new(Mutex::new(Timeline::default()));
+        let shared = Timeline::shared();
         let s2 = shared.clone();
         let _ = std::thread::spawn(move || {
-            let mut g = s2.lock().unwrap();
+            let mut g = s2.guard();
             g.push(TimelinePoint { t: 2.0, stage: 1, bandwidth_bps: 1.0, rate: 1.0, bits: 2, util: 0.0 });
             panic!("poison");
         })

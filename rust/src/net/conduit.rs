@@ -9,19 +9,25 @@
 
 use super::session::{append_telemetry_record, ctrl_record, CTRL_LEN};
 use super::tcp::{connect_until, Backoff};
-use crate::util::sync::lock;
+use crate::util::sync::TrackedMutex;
 use crate::Result;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Test/ops lever: force-kill a conduit's active socket to simulate a
 /// transient failure (both ends observe it and run their resync paths).
 /// Cloned handles share the same slot; a striped boundary hands out one
 /// switch per stripe.
-#[derive(Clone, Default)]
-pub struct LinkKillSwitch(Arc<Mutex<Option<TcpStream>>>);
+#[derive(Clone)]
+pub struct LinkKillSwitch(Arc<TrackedMutex<Option<TcpStream>>>);
+
+impl Default for LinkKillSwitch {
+    fn default() -> Self {
+        LinkKillSwitch(Arc::new(TrackedMutex::new("conduit.killswitch", None)))
+    }
+}
 
 impl LinkKillSwitch {
     /// Empty switch; arms when a conduit registers its stream.
@@ -32,7 +38,7 @@ impl LinkKillSwitch {
     /// Shut down the currently registered connection. Returns `false` if
     /// the conduit has never connected.
     pub fn kill(&self) -> bool {
-        match &*lock(&self.0) {
+        match &*self.0.guard() {
             Some(s) => {
                 let _ = s.shutdown(Shutdown::Both);
                 true
@@ -42,7 +48,7 @@ impl LinkKillSwitch {
     }
 
     pub(crate) fn register(&self, stream: &TcpStream) {
-        *lock(&self.0) = stream.try_clone().ok();
+        *self.0.guard() = stream.try_clone().ok();
     }
 }
 

@@ -141,12 +141,15 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32> {
+        // lint: allow(unwrap): take(4) guarantees a 4-byte slice, conversion is infallible
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
     fn u64(&mut self) -> Result<u64> {
+        // lint: allow(unwrap): take(8) guarantees an 8-byte slice, conversion is infallible
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
     fn f32(&mut self) -> Result<f32> {
+        // lint: allow(unwrap): take(4) guarantees a 4-byte slice, conversion is infallible
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 }

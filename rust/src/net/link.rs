@@ -13,7 +13,7 @@
 //! [`BandwidthTrace::transmit_secs`].
 
 use super::trace::BandwidthTrace;
-use std::sync::Mutex;
+use crate::util::sync::TrackedMutex;
 use std::time::{Duration, Instant};
 
 /// Link impairment/failure-injection knobs.
@@ -40,7 +40,7 @@ pub struct SimLink {
     /// One-way propagation latency.
     latency: Duration,
     faults: LinkFaults,
-    state: Mutex<LinkState>,
+    state: TrackedMutex<LinkState>,
     epoch: Instant,
 }
 
@@ -67,13 +67,16 @@ impl SimLink {
             trace,
             latency,
             faults,
-            state: Mutex::new(LinkState {
-                busy_until: 0.0,
-                rng: faults.seed | 1,
-                bytes_sent: 0,
-                frames_sent: 0,
-                frames_lost: 0,
-            }),
+            state: TrackedMutex::new(
+                "link.state",
+                LinkState {
+                    busy_until: 0.0,
+                    rng: faults.seed | 1,
+                    bytes_sent: 0,
+                    frames_sent: 0,
+                    frames_lost: 0,
+                },
+            ),
             epoch: Instant::now(),
         }
     }
@@ -91,7 +94,7 @@ impl SimLink {
 
     /// (bytes, frames, lost) counters for offline analysis.
     pub fn counters(&self) -> (u64, u64, u64) {
-        let s = self.state.lock().unwrap();
+        let s = self.state.guard();
         (s.bytes_sent, s.frames_sent, s.frames_lost)
     }
 
@@ -110,7 +113,7 @@ impl SimLink {
     /// bandwidth" measurement uses this.
     pub fn send(&self, bytes: usize) -> Duration {
         let (done_rel, occupied) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.guard();
             let now_rel = self.epoch.elapsed().as_secs_f64();
             let start_rel = st.busy_until.max(now_rel);
             let mut ser_secs = self.trace.transmit_secs(bytes, start_rel);

@@ -82,6 +82,7 @@ pub fn ctrl_record(kind: u8, seq: u64) -> [u8; CTRL_LEN] {
 /// Parse the record at `rec` (13 bytes, marker already checked by the
 /// caller): `(kind, seq)`.
 pub fn parse_ctrl(rec: &[u8]) -> (u8, u64) {
+    // lint: allow(unwrap): 8-byte slice of a CTRL_LEN record, length fixed by construction
     (rec[4], u64::from_le_bytes(rec[5..13].try_into().unwrap()))
 }
 
@@ -206,6 +207,7 @@ impl WireDecoder {
         if avail.len() < 4 {
             return Ok(None);
         }
+        // lint: allow(unwrap): 4-byte slice into a 4-byte array, infallible by construction
         let prefix = u32::from_le_bytes(avail[0..4].try_into().unwrap());
         if prefix == CTRL_MARKER {
             if avail.len() < CTRL_LEN {
@@ -263,7 +265,11 @@ const SPARE_BUFS: usize = 4;
 /// dropped from the replay buffer) hand their `Vec<u8>` back, and
 /// [`SessionTx::take_buf`] supplies it for the next frame — steady-state
 /// senders serialize without allocating.
-#[derive(Debug)]
+///
+/// `Clone` exists for the deterministic interleaving checker
+/// ([`crate::analysis::schedule`]), which forks protocol state at every
+/// scheduling choice; production code never clones a live session.
+#[derive(Debug, Clone)]
 pub struct SessionTx {
     /// `(seq, serialized frame)` for every sent-but-unacked frame,
     /// ascending and contiguous.
@@ -389,6 +395,13 @@ impl SessionTx {
         self.replay.iter().map(|(_, b)| b.as_slice())
     }
 
+    /// Sequence numbers currently held in the replay buffer, ascending.
+    /// Introspection for invariant checks and state fingerprinting; the
+    /// data path never needs it.
+    pub fn replay_seqs(&self) -> impl Iterator<Item = u64> + '_ {
+        self.replay.iter().map(|(q, _)| *q)
+    }
+
     /// Apply one inbound control record. A mid-stream `HELLO` cannot
     /// happen on a healthy conduit, but as a cumulative position it is
     /// safe to treat like an ack. Unknown kinds are ignored (forward
@@ -440,7 +453,11 @@ pub enum RxStep {
 /// [`SessionRx::ack_due`], FIN_ACK via [`SessionRx::fin_due`]) and commits
 /// them only once the write succeeded — a failed write costs nothing, the
 /// next conduit's `HELLO` re-establishes the cumulative position.
-#[derive(Debug)]
+///
+/// `Clone` exists for the deterministic interleaving checker
+/// ([`crate::analysis::schedule`]); production code never clones a live
+/// session.
+#[derive(Debug, Clone)]
 pub struct SessionRx {
     next_expected: u64,
     /// Cumulative position last successfully written as ACK (or HELLO).
@@ -597,6 +614,22 @@ impl SessionRx {
     /// Cleanly closed (FIN received, everything delivered, FIN_ACK sent)?
     pub fn finished(&self) -> bool {
         self.fin_acked
+    }
+
+    /// Sequence numbers parked in the reorder window, ascending.
+    /// Introspection for invariant checks and state fingerprinting.
+    pub fn parked_seqs(&self) -> impl Iterator<Item = u64> + '_ {
+        self.pending.keys().copied()
+    }
+
+    /// Cumulative position last committed as written (ACK or HELLO).
+    pub fn last_acked(&self) -> u64 {
+        self.last_acked
+    }
+
+    /// The FIN boundary received so far, if any.
+    pub fn fin_boundary(&self) -> Option<u64> {
+        self.fin_at
     }
 }
 

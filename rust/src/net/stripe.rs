@@ -187,12 +187,22 @@ impl StripedTx {
                 continue;
             }
             self.revive_due();
-            let i = self.pick_conduit().expect("a conduit is connected");
+            let Some(i) = self.pick_conduit() else {
+                // Every conduit died between the any_connected() check and
+                // the pick: loop back into the full-outage path.
+                continue;
+            };
             let wt0 = Instant::now();
-            let wire = self.session.latest().expect("frame just recorded").len();
-            let ok = {
-                let stream = self.conduits[i].conn.as_mut().unwrap();
-                write_frame_bytes(stream, self.session.latest().unwrap()).is_ok()
+            let Some(bytes) = self.session.latest() else {
+                // record_send succeeded above, so the only way the frame is
+                // gone is a cumulative ack that already covers it (a pump
+                // raced ahead) — nothing left to write.
+                break;
+            };
+            let wire = bytes.len();
+            let ok = match self.conduits[i].conn.as_mut() {
+                Some(stream) => write_frame_bytes(stream, bytes).is_ok(),
+                None => false, // raced with a concurrent death sweep
             };
             if ok {
                 self.conduits[i].note_stall(wt0.elapsed());
@@ -227,12 +237,9 @@ impl StripedTx {
         }
         let mut scratch = std::mem::take(&mut self.tele_scratch);
         for i in 0..self.conduits.len() {
-            if !self.conduits[i].is_connected() {
-                continue;
-            }
-            let ok = {
-                let stream = self.conduits[i].conn.as_mut().unwrap();
-                write_telemetry(stream, payload, &mut scratch).is_ok()
+            let ok = match self.conduits[i].conn.as_mut() {
+                Some(stream) => write_telemetry(stream, payload, &mut scratch).is_ok(),
+                None => continue, // down conduit: best effort, skip
             };
             if !ok {
                 self.down(i);
@@ -267,12 +274,9 @@ impl StripedTx {
             }
             let fin = self.session.fin_record();
             for i in 0..self.conduits.len() {
-                if !self.conduits[i].is_connected() {
-                    continue;
-                }
-                let ok = {
-                    let stream = self.conduits[i].conn.as_mut().unwrap();
-                    write_raw(stream, &fin).is_ok()
+                let ok = match self.conduits[i].conn.as_mut() {
+                    Some(stream) => write_raw(stream, &fin).is_ok(),
+                    None => continue, // down conduit: another stripe FINs
                 };
                 if !ok {
                     self.down(i);
@@ -361,13 +365,13 @@ impl StripedTx {
     /// arriving at the *sender* is a desynced peer, cured by reconnect.
     fn pump_all(&mut self) {
         for i in 0..self.conduits.len() {
-            if !self.conduits[i].is_connected() {
-                continue;
-            }
             self.scratch.clear();
             let sweep = {
                 let c = &mut self.conduits[i];
-                read_available(c.conn.as_mut().unwrap(), &mut self.scratch)
+                match c.conn.as_mut() {
+                    Some(stream) => read_available(stream, &mut self.scratch),
+                    None => continue, // down conduit: nothing to pump
+                }
             };
             if !self.scratch.is_empty() {
                 self.conduits[i].decoder.extend(&self.scratch);
@@ -583,6 +587,8 @@ impl StripedTx {
             .max(Duration::from_millis(1));
         let rec = read_ctrl_timeout(&mut stream, budget)?;
         anyhow::ensure!(
+            // lint: allow(unwrap): rec is a fixed CTRL_LEN array, so the
+            // 4-byte slice conversion is infallible.
             u32::from_le_bytes(rec[0..4].try_into().unwrap()) == CTRL_MARKER,
             "peer is not speaking the resilient protocol (bad HELLO marker)"
         );

@@ -42,12 +42,12 @@ use crate::quant::codec::Codec;
 use crate::quant::{calibrate, Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
-use crate::util::sync::lock;
+use crate::util::sync::TrackedMutex;
 use crate::Result;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Quantization behaviour of the links.
@@ -137,10 +137,10 @@ pub(crate) struct TelemetryTap {
     /// in the report, not a blackhole for everyone above it.
     emit: bool,
     shared: Arc<StageTelemetryShared>,
-    relay: Arc<Mutex<TelemetryRelay>>,
+    relay: Arc<TrackedMutex<TelemetryRelay>>,
     resilience: Vec<Arc<ResilienceStats>>,
     stripes: Vec<Arc<StripeStats>>,
-    errors: Arc<Mutex<Vec<String>>>,
+    errors: Arc<TrackedMutex<Vec<String>>>,
     snap: u64,
     points: Vec<TimelinePoint>,
     seq_lo: u64,
@@ -152,10 +152,10 @@ impl TelemetryTap {
         stage: usize,
         emit: bool,
         shared: Arc<StageTelemetryShared>,
-        relay: Arc<Mutex<TelemetryRelay>>,
+        relay: Arc<TrackedMutex<TelemetryRelay>>,
         resilience: Vec<Arc<ResilienceStats>>,
         stripes: Vec<Arc<StripeStats>>,
-        errors: Arc<Mutex<Vec<String>>>,
+        errors: Arc<TrackedMutex<Vec<String>>>,
     ) -> Self {
         TelemetryTap {
             stage,
@@ -184,7 +184,7 @@ impl TelemetryTap {
     /// Forward upstream snapshots the stage loop relayed (FIFO, deduped
     /// at the relay).
     fn forward_relayed(&mut self, tx: &mut dyn FrameTx) {
-        let queued = lock(&self.relay).drain();
+        let queued = self.relay.guard().drain();
         for payload in queued {
             let _ = tx.send_telemetry(&payload);
         }
@@ -219,7 +219,7 @@ impl TelemetryTap {
             resilience: ResilienceSummary::collect(&self.resilience),
             stripes: StripeSummary::collect(&self.stripes),
             points: std::mem::take(&mut self.points),
-            errors: lock(&self.errors).clone(),
+            errors: self.errors.guard().clone(),
         };
         self.snap += 1;
         self.seq_lo = u64::MAX;
@@ -381,15 +381,19 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
     );
 
     let start = Instant::now();
-    let timeline = Arc::new(Mutex::new(Timeline::default()));
-    let send_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
-    let label_map: Arc<Mutex<HashMap<u64, Vec<u32>>>> = Arc::new(Mutex::new(HashMap::new()));
-    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let timeline = Timeline::shared();
+    let send_times: Arc<TrackedMutex<HashMap<u64, Instant>>> =
+        Arc::new(TrackedMutex::new("driver.send_times", HashMap::new()));
+    let label_map: Arc<TrackedMutex<HashMap<u64, Vec<u32>>>> =
+        Arc::new(TrackedMutex::new("driver.label_map", HashMap::new()));
+    let errors: Arc<TrackedMutex<Vec<String>>> =
+        Arc::new(TrackedMutex::new("driver.errors", Vec::new()));
     let inflight = inflight.max(1);
 
     let (src_tx, src_rx) = sync_channel::<SourceMsg>(inflight);
     let (sink_tx, sink_rx) = sync_channel::<SinkMsg>(inflight);
-    let stage_secs: Arc<Mutex<Vec<(f64, u64)>>> = Arc::new(Mutex::new(vec![(0.0, 0); n]));
+    let stage_secs: Arc<TrackedMutex<Vec<(f64, u64)>>> =
+        Arc::new(TrackedMutex::new("driver.stage_secs", vec![(0.0, 0); n]));
 
     let link_bits: Vec<Arc<AtomicU8>> = (0..n - 1)
         .map(|_| Arc::new(AtomicU8::new(quant.initial_bits)))
@@ -431,6 +435,8 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
             let (frame_tx, frame_rx) = sync_channel::<Frame>(inflight);
             let (link_tx, link_rx) = link_iter
                 .next()
+                // lint: allow(expect): links.len() + 1 == n is ensured at
+                // entry, so every non-last stage has exactly one link to take.
                 .expect("link count checked above")
                 .into_endpoints(inflight);
             let out = StageOut::Downstream {
@@ -484,8 +490,8 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
                     for seq in 0..total {
                         let i = (seq as usize) % per_pass;
                         let tensor = eval.microbatch(i, s);
-                        lock(&labels).insert(seq, eval.labels_for(i, s).to_vec());
-                        lock(&times).insert(seq, Instant::now());
+                        labels.guard().insert(seq, eval.labels_for(i, s).to_vec());
+                        times.guard().insert(seq, Instant::now());
                         if src_tx.send(SourceMsg { seq, tensor }).is_err() {
                             break; // pipeline died; sink reports what completed
                         }
@@ -502,13 +508,13 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
     let mut done: u64 = 0;
     let mut images: u64 = 0;
     while let Ok(msg) = sink_rx.recv() {
-        let labels = lock(&label_map).remove(&msg.seq);
+        let labels = label_map.guard().remove(&msg.seq);
         if let Some(labels) = labels {
             images += labels.len() as u64;
             acc.add(&msg.logits, &labels);
             window_meter.add(&msg.logits, &labels);
         }
-        if let Some(t0) = lock(&send_times).remove(&msg.seq) {
+        if let Some(t0) = send_times.guard().remove(&msg.seq) {
             latency.record(t0.elapsed());
         }
         done += 1;
@@ -538,12 +544,13 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
     // (or died holding the lock) would silently erase the whole timeline.
     let timeline = Timeline::take_shared(&timeline);
 
-    let stage_compute_s = lock(&stage_secs)
+    let stage_compute_s = stage_secs
+        .guard()
         .iter()
         .map(|&(s, c)| if c > 0 { s / c as f64 } else { 0.0 })
         .collect();
 
-    let errors = std::mem::take(&mut *lock(&errors));
+    let errors = std::mem::take(&mut *errors.guard());
 
     Ok(RunReport {
         images,
@@ -571,14 +578,14 @@ fn stage_thread(
     factory: StageFactory,
     input: StageIn,
     output: StageOut,
-    secs: Arc<Mutex<Vec<(f64, u64)>>>,
-    errors: Arc<Mutex<Vec<String>>>,
+    secs: Arc<TrackedMutex<Vec<(f64, u64)>>>,
+    errors: Arc<TrackedMutex<Vec<String>>>,
 ) {
     if let Err(e) = stage_loop(idx, factory, input, output, secs) {
         // Poison-tolerant: if another thread panicked holding this lock,
         // still record the error we actually saw (the root cause must not
         // drown in a poisoned-mutex cascade).
-        lock(&errors).push(format!("stage {idx}: {e:#}"));
+        errors.guard().push(format!("stage {idx}: {e:#}"));
         eprintln!("[quantpipe] stage {idx} exited with error: {e:#}");
     }
 }
@@ -588,7 +595,7 @@ fn stage_loop(
     factory: StageFactory,
     mut input: StageIn,
     output: StageOut,
-    secs: Arc<Mutex<Vec<(f64, u64)>>>,
+    secs: Arc<TrackedMutex<Vec<(f64, u64)>>>,
 ) -> Result<()> {
     let bundle = factory()?;
     let mut compute = bundle.compute;
@@ -629,7 +636,7 @@ fn stage_loop(
         let t0 = Instant::now();
         let out = compute.run(&tensor)?;
         {
-            let mut s = lock(&secs);
+            let mut s = secs.guard();
             s[idx].0 += t0.elapsed().as_secs_f64();
             s[idx].1 += 1;
         }
@@ -672,16 +679,20 @@ pub(crate) fn encode_at_current_bits(
         *cached = None;
         return codec.encode(data, quant.method, BITS_NONE);
     }
-    let need_calib = match cached {
-        Some(p) => p.bits != bits_now || *since_calib >= quant.calib_every,
-        None => true,
+    // Reuse the cached params while they are fresh (same bitwidth, within
+    // the calibration interval); otherwise recalibrate. Binding the chosen
+    // params here keeps the hot path `unwrap`-free by construction.
+    let params = match cached {
+        Some(p) if p.bits == bits_now && *since_calib < quant.calib_every => *p,
+        _ => {
+            let p = calibrate(data, quant.method, bits_now);
+            *cached = Some(p);
+            *since_calib = 0;
+            p
+        }
     };
-    if need_calib {
-        *cached = Some(calibrate(data, quant.method, bits_now));
-        *since_calib = 0;
-    }
     *since_calib += 1;
-    codec.encode_with_params(data, cached.unwrap())
+    codec.encode_with_params(data, params)
 }
 
 // -----------------------------------------------------------------------------
@@ -702,9 +713,9 @@ pub(crate) fn sender_thread(
     adapt: Option<AdaptConfig>,
     initial_bits: u8,
     bits: Arc<AtomicU8>,
-    timeline: Arc<Mutex<Timeline>>,
+    timeline: Arc<TrackedMutex<Timeline>>,
     counters: Arc<LinkCounters>,
-    errors: Arc<Mutex<Vec<String>>>,
+    errors: Arc<TrackedMutex<Vec<String>>>,
     start: Instant,
     mut telemetry: Option<TelemetryTap>,
 ) {
@@ -728,7 +739,8 @@ pub(crate) fn sender_thread(
         let busy = match link_tx.send(frame) {
             Ok(b) => b,
             Err(e) => {
-                lock(&errors)
+                errors
+                    .guard()
                     .push(format!("link {stage} ({}): send failed: {e:#}", link_tx.kind()));
                 return;
             }
@@ -751,7 +763,7 @@ pub(crate) fn sender_thread(
                 bits: decided,
                 util: stats.link_utilization,
             };
-            lock(&timeline).push(point);
+            timeline.guard().push(point);
             if let Some(t) = &mut telemetry {
                 // One snapshot per completed window: the record carries
                 // this window's point plus the cumulative counters.
@@ -772,6 +784,8 @@ pub(crate) fn sender_thread(
     // Upstream is done: negotiate the clean drain so the peer can tell
     // shutdown from failure (FIN/FIN_ACK on resilient links, no-op else).
     if let Err(e) = link_tx.finish() {
-        lock(&errors).push(format!("link {stage} ({}): drain failed: {e:#}", link_tx.kind()));
+        errors
+            .guard()
+            .push(format!("link {stage} ({}): drain failed: {e:#}", link_tx.kind()));
     }
 }

@@ -38,12 +38,12 @@ use crate::quant::codec::Codec;
 use crate::quant::{Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
-use crate::util::sync::lock;
+use crate::util::sync::TrackedMutex;
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One worker's role in the pipeline.
@@ -130,16 +130,17 @@ pub fn run_worker(
     let stripe_handles: Vec<_> = tx.stripes().into_iter().flatten().collect();
     let initial_bits = if cfg.quantize_output { cfg.quant.initial_bits } else { BITS_NONE };
     let bits = Arc::new(AtomicU8::new(initial_bits));
-    let timeline = Arc::new(Mutex::new(Timeline::default()));
+    let timeline = Timeline::shared();
     let counters = Arc::new(LinkCounters::default());
-    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let errors: Arc<TrackedMutex<Vec<String>>> =
+        Arc::new(TrackedMutex::new("worker.errors", Vec::new()));
     let (frame_tx, frame_rx) = sync_channel::<Frame>(cfg.inflight.max(1));
     // Telemetry plumbing: the stage loop updates the shared counters and
     // relays upstream snapshots into `relay`; the sender thread's tap
     // snapshots both forward along the data path (toward the
     // coordinator's sink — the only connection still alive at the end).
     let shared = Arc::new(StageTelemetryShared::default());
-    let relay = Arc::new(Mutex::new(TelemetryRelay::default()));
+    let relay = Arc::new(TrackedMutex::new("worker.relay", TelemetryRelay::default()));
     // The tap always exists so upstream stages' records keep flowing
     // through this hop; `cfg.telemetry` only gates this stage's OWN
     // snapshots (off = this stage is a hole in the report, nothing more).
@@ -176,7 +177,7 @@ pub fn run_worker(
     // sender drains its channel, runs the downstream drain, and exits.
     let _ = sender.join();
 
-    let mut errors = std::mem::take(&mut *lock(&errors));
+    let mut errors = std::mem::take(&mut *errors.guard());
     if let Err(e) = loop_result {
         // Keep the progress counters: "stopped with an error after frame
         // 500" is what lets an operator correlate the shortfall.
@@ -205,7 +206,7 @@ fn worker_stage_loop(
     bits: Arc<AtomicU8>,
     factory: StageFactory,
     shared: &StageTelemetryShared,
-    relay: &Mutex<TelemetryRelay>,
+    relay: &TrackedMutex<TelemetryRelay>,
 ) -> (Result<()>, u64, f64) {
     let mut frames = 0u64;
     let mut compute_secs = 0f64;
@@ -230,7 +231,7 @@ fn worker_stage_loop(
             // Upstream stages' telemetry relays through us toward the
             // coordinator; the sender thread forwards what lands here.
             for payload in rx.poll_telemetry() {
-                lock(relay).offer(payload);
+                relay.guard().offer(payload);
             }
             let t0 = Instant::now();
             let mut data = std::mem::take(&mut decode_pool);
@@ -265,7 +266,7 @@ fn worker_stage_loop(
     // still alive here, so the sender thread cannot have started its
     // final flush yet and is guaranteed to forward these.
     for payload in rx.poll_telemetry() {
-        lock(relay).offer(payload);
+        relay.guard().offer(payload);
     }
     (result, frames, compute_secs)
 }
@@ -315,9 +316,12 @@ pub fn run_coordinator(
     mut ret: Box<dyn FrameRx>,
 ) -> Result<CoordinatorReport> {
     let start = Instant::now();
-    let label_map: Arc<Mutex<HashMap<u64, Vec<u32>>>> = Arc::new(Mutex::new(HashMap::new()));
-    let send_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
-    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let label_map: Arc<TrackedMutex<HashMap<u64, Vec<u32>>>> =
+        Arc::new(TrackedMutex::new("coord.label_map", HashMap::new()));
+    let send_times: Arc<TrackedMutex<HashMap<u64, Instant>>> =
+        Arc::new(TrackedMutex::new("coord.send_times", HashMap::new()));
+    let errors: Arc<TrackedMutex<Vec<String>>> =
+        Arc::new(TrackedMutex::new("coord.errors", Vec::new()));
     let resilience_handles: Vec<_> =
         feed.resilience().into_iter().chain(ret.resilience()).collect();
     let stripe_handles: Vec<_> = feed.stripes().into_iter().flatten().collect();
@@ -347,12 +351,12 @@ pub fn run_coordinator(
                 for seq in 0..total {
                     let i = (seq as usize) % per_pass;
                     let tensor = eval.microbatch(i, s);
-                    lock(&labels).insert(seq, eval.labels_for(i, s).to_vec());
-                    lock(&times).insert(seq, Instant::now());
+                    labels.guard().insert(seq, eval.labels_for(i, s).to_vec());
+                    times.guard().insert(seq, Instant::now());
                     let enc = match codec.encode(&tensor.data, Method::Pda, BITS_NONE) {
                         Ok(e) => e,
                         Err(e) => {
-                            lock(&errs).push(format!("coordinator: encode failed: {e:#}"));
+                            errs.guard().push(format!("coordinator: encode failed: {e:#}"));
                             failed = true;
                             break;
                         }
@@ -363,7 +367,7 @@ pub fn run_coordinator(
                     // (Resilient links absorb transient failures internally;
                     // an error here means the reconnect budget is gone.)
                     if let Err(e) = feed.send(Frame::new(seq, tensor.shape.clone(), enc)) {
-                        lock(&errs).push(format!("coordinator: feed link failed: {e:#}"));
+                        errs.guard().push(format!("coordinator: feed link failed: {e:#}"));
                         failed = true;
                         break;
                     }
@@ -374,7 +378,7 @@ pub fn run_coordinator(
                     // stage 0 sees an explicit shutdown, not an EOF it
                     // might mistake for a failure.
                     if let Err(e) = feed.finish() {
-                        lock(&errs).push(format!("coordinator: feed drain failed: {e:#}"));
+                        errs.guard().push(format!("coordinator: feed drain failed: {e:#}"));
                     }
                 }
                 feed_done.store(true, Ordering::Release);
@@ -407,16 +411,16 @@ pub fn run_coordinator(
             Ok(Some(frame)) => {
                 let mut data = std::mem::take(&mut logits_pool);
                 if let Err(e) = codec.decode(&frame.enc, &mut data) {
-                    lock(&errors).push(format!("coordinator: logits decode failed: {e:#}"));
+                    errors.guard().push(format!("coordinator: logits decode failed: {e:#}"));
                     logits_pool = data;
                     continue;
                 }
                 let logits = Tensor::new(data, frame.shape.clone());
-                if let Some(labels) = lock(&label_map).remove(&frame.seq) {
+                if let Some(labels) = label_map.guard().remove(&frame.seq) {
                     images += labels.len() as u64;
                     acc.add(&logits, &labels);
                 }
-                if let Some(t0) = lock(&send_times).remove(&frame.seq) {
+                if let Some(t0) = send_times.guard().remove(&frame.seq) {
                     latency.record(t0.elapsed());
                 }
                 done += 1;
@@ -424,7 +428,7 @@ pub fn run_coordinator(
             }
             Ok(None) => break, // pipeline closed early
             Err(e) => {
-                lock(&errors).push(format!("coordinator: return link failed: {e:#}"));
+                errors.guard().push(format!("coordinator: return link failed: {e:#}"));
                 break;
             }
         }
@@ -447,7 +451,7 @@ pub fn run_coordinator(
     }
     let _ = feeder.join();
     let wall = start.elapsed().as_secs_f64().max(1e-9);
-    let errors = std::mem::take(&mut *lock(&errors));
+    let errors = std::mem::take(&mut *errors.guard());
 
     pipeline.coordinator = Some(CoordinatorSummary {
         images,

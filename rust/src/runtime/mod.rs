@@ -100,6 +100,10 @@ pub struct HloQuantBackend {
     dequantize: Executable,
     rows: usize,
     cols: usize,
+    /// Thread the backend was constructed on. The `unsafe impl Send`
+    /// below is sound only under the construct-where-you-use discipline;
+    /// debug builds assert it on every kernel call.
+    home: std::thread::ThreadId,
 }
 
 impl HloQuantBackend {
@@ -111,12 +115,26 @@ impl HloQuantBackend {
             dequantize: engine.load_hlo(dir.join(&manifest.quant.dequantize))?,
             rows: manifest.quant.rows,
             cols: manifest.quant.cols,
+            home: std::thread::current().id(),
         })
+    }
+
+    /// Debug-build guard for the `Send` contract: every kernel call must
+    /// happen on the thread that constructed the backend.
+    #[inline]
+    fn assert_home_thread(&self) {
+        debug_assert_eq!(
+            std::thread::current().id(),
+            self.home,
+            "HloQuantBackend used off its construction thread — the unsafe \
+             `Send` impl relies on construct-where-you-use (see runtime/mod.rs)"
+        );
     }
 }
 
 impl QuantBackend for HloQuantBackend {
     fn quantize(&mut self, x: &[f32], p: &QuantParams, out: &mut [i32]) -> Result<()> {
+        self.assert_home_thread();
         anyhow::ensure!(
             x.len() == self.rows * self.cols,
             "HLO quant kernel compiled for {}x{}, got {} elems",
@@ -139,6 +157,7 @@ impl QuantBackend for HloQuantBackend {
     }
 
     fn dequantize(&mut self, codes: &[i32], p: &QuantParams, out: &mut [f32]) -> Result<()> {
+        self.assert_home_thread();
         anyhow::ensure!(codes.len() == self.rows * self.cols, "shape mismatch");
         let scalar = |v: f32| literal_f32(&[v], &[1]);
         let lits = vec![
@@ -157,14 +176,17 @@ impl QuantBackend for HloQuantBackend {
     }
 }
 
-// NOTE: Engine/Executable contain Rc-backed PJRT handles and are therefore
-// !Send. The pipeline never moves them across threads: each stage thread
-// runs a `Send` *factory* closure that constructs its Engine in place (see
-// pipeline::StageFactory), so no unsafe impls are needed.
-//
-// HloQuantBackend must still satisfy the `QuantBackend: Send` bound used by
-// Codec. It is only ever constructed and used on one stage thread; the
-// unsafe impl is sound under that construct-where-you-use discipline.
+// SAFETY: Engine/Executable contain Rc-backed PJRT handles and are
+// therefore !Send; this impl asserts that HloQuantBackend may cross a
+// thread boundary anyway. It is sound because every constructor runs
+// inside the stage thread that will use the backend (the pipeline moves a
+// `Send` *factory* closure, never a constructed Engine — see
+// pipeline::StageFactory), so the Rc reference counts are only ever
+// touched from one thread for the value's whole life. The bound exists
+// only because `QuantBackend: Send` (Codec moves native backends between
+// threads); the HLO backend never actually migrates. Debug builds enforce
+// the discipline: `assert_home_thread` panics on any kernel call from a
+// thread other than the constructing one.
 unsafe impl Send for HloQuantBackend {}
 
 #[cfg(test)]

@@ -1,8 +1,10 @@
 //! In-tree utilities replacing unavailable ecosystem crates (the build
 //! environment is fully offline): a JSON parser/writer, a seedable RNG
 //! with the distributions the tests need, a micro property-testing
-//! harness, and poison-tolerant locking.
+//! harness, a bounded exhaustive interleaving explorer, and
+//! poison-tolerant lock-order-tracked locking.
 
+pub mod explore;
 pub mod json;
 pub mod prop;
 pub mod rng;

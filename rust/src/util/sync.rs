@@ -1,13 +1,32 @@
-//! Poison-tolerant locking.
+//! Poison-tolerant locking + a lockdep-style lock-order detector.
 //!
-//! A panicked stage or sender thread poisons every mutex it held; the
-//! default `lock().unwrap()` then turns that single panic into a cascade
-//! of `PoisonError` panics across unrelated threads, and the *original*
-//! failure drowns in the noise. All the pipeline's shared maps hold plain
-//! data (counters, timelines, label maps) whose invariants survive a
-//! mid-update panic, so the right move is to take the data anyway and let
-//! `RunReport.errors` report the root cause.
+//! **Poison tolerance.** A panicked stage or sender thread poisons every
+//! mutex it held; the default `lock().unwrap()` then turns that single
+//! panic into a cascade of `PoisonError` panics across unrelated threads,
+//! and the *original* failure drowns in the noise. All the pipeline's
+//! shared maps hold plain data (counters, timelines, label maps) whose
+//! invariants survive a mid-update panic, so the right move is to take
+//! the data anyway and let `RunReport.errors` report the root cause.
+//!
+//! **Lock-order detection.** [`TrackedMutex`] is the instrumented mutex
+//! every shared-state lock site in the crate goes through (the
+//! self-hosted lint in [`crate::analysis`] bans bare `.lock()` calls
+//! outside this module). In debug/test builds each acquisition records a
+//! `held → acquiring` edge in a global lock-class graph, keyed by the
+//! class name given at construction; if an acquisition would close a
+//! cycle (the classic ABBA inversion) it panics *immediately* — on the
+//! thread that would have deadlocked, before blocking — with the source
+//! locations of both conflicting acquisition orders. Same-class nested
+//! acquisition panics too: no code path in the crate legitimately holds
+//! two locks of one class. In release builds (`debug_assertions` off)
+//! tracking compiles away to a plain poison-tolerant lock.
+//!
+//! The detector is *order*-based, like the kernel's lockdep: it fires on
+//! the first inverted pair ever observed, even if the two threads never
+//! actually race, so a potential deadlock cannot hide behind a lucky
+//! schedule.
 
+use std::ops::{Deref, DerefMut};
 use std::sync::{Mutex, MutexGuard};
 
 /// Lock `m`, recovering the guard from a poisoned mutex instead of
@@ -15,6 +34,245 @@ use std::sync::{Mutex, MutexGuard};
 /// thread's panic.
 pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A mutex with poison tolerance and (in debug builds) lock-order
+/// tracking. `name` identifies the *lock class*: all instances guarding
+/// the same kind of state (e.g. every `SimLink`'s internal state) share
+/// one class, and ordering constraints are recorded between classes.
+pub struct TrackedMutex<T> {
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> TrackedMutex<T> {
+    /// Wrap `value` in a tracked mutex belonging to lock class `name`.
+    pub fn new(name: &'static str, value: T) -> Self {
+        TrackedMutex { name, inner: Mutex::new(value) }
+    }
+
+    /// Lock class name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Acquire the lock (poison-tolerant). In debug builds, records the
+    /// acquisition in the lock-order graph and panics with both traces if
+    /// it would invert an order observed anywhere before.
+    #[track_caller]
+    pub fn guard(&self) -> TrackedGuard<'_, T> {
+        // Record the edge and check for cycles BEFORE blocking, so the
+        // thread that closes a real deadlock cycle panics instead of
+        // deadlocking.
+        let token = lockdep::acquire(self.name);
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        TrackedGuard { inner, _token: token }
+    }
+
+    /// Consume the mutex, returning the inner value (poison-tolerant).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl<T> std::fmt::Debug for TrackedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TrackedMutex").field("name", &self.name).finish_non_exhaustive()
+    }
+}
+
+/// Guard returned by [`TrackedMutex::guard`]; releases the lock and pops
+/// the lockdep held-stack entry on drop.
+pub struct TrackedGuard<'a, T> {
+    inner: MutexGuard<'a, T>,
+    _token: lockdep::Held,
+}
+
+impl<T> Deref for TrackedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for TrackedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+/// Debug-build lock-order tracking. Everything here compiles to nothing
+/// when `debug_assertions` is off.
+#[cfg(debug_assertions)]
+mod lockdep {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::panic::Location;
+    use std::sync::{Mutex, OnceLock};
+
+    /// One recorded ordering edge: some thread acquired class `to` while
+    /// holding class `from`.
+    struct Edge {
+        /// Where the held (`from`) lock was acquired.
+        from_site: &'static Location<'static>,
+        /// Where the `to` lock was acquired on top of it.
+        to_site: &'static Location<'static>,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        /// Class name → dense class id.
+        classes: HashMap<&'static str, usize>,
+        /// Class id → name (reverse of `classes`).
+        names: Vec<&'static str>,
+        /// Adjacency: from-class → (to-class → first edge observed).
+        edges: HashMap<usize, HashMap<usize, Edge>>,
+    }
+
+    impl Registry {
+        fn intern(&mut self, name: &'static str) -> usize {
+            if let Some(&id) = self.classes.get(name) {
+                return id;
+            }
+            let id = self.names.len();
+            self.names.push(name);
+            self.classes.insert(name, id);
+            id
+        }
+
+        /// Edges along some path `from →* to`, or `None` if unreachable.
+        fn find_path(&self, from: usize, to: usize) -> Option<Vec<(usize, usize)>> {
+            let mut parent: HashMap<usize, usize> = HashMap::new();
+            let mut queue = std::collections::VecDeque::from([from]);
+            while let Some(node) = queue.pop_front() {
+                if node == to {
+                    let mut path = Vec::new();
+                    let mut cur = to;
+                    while cur != from {
+                        let p = parent[&cur];
+                        path.push((p, cur));
+                        cur = p;
+                    }
+                    path.reverse();
+                    return Some(path);
+                }
+                if let Some(nexts) = self.edges.get(&node) {
+                    for &next in nexts.keys() {
+                        if next != from && !parent.contains_key(&next) {
+                            parent.insert(next, node);
+                            queue.push_back(next);
+                        }
+                    }
+                }
+            }
+            None
+        }
+
+        fn describe_path(&self, path: &[(usize, usize)]) -> String {
+            path.iter()
+                .map(|&(a, b)| {
+                    let e = &self.edges[&a][&b];
+                    format!(
+                        "'{}' (acquired at {}) -> '{}' (acquired at {})",
+                        self.names[a], e.from_site, self.names[b], e.to_site
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("; ")
+        }
+    }
+
+    fn registry() -> &'static Mutex<Registry> {
+        static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(Registry::default()))
+    }
+
+    thread_local! {
+        /// Lock classes this thread currently holds, acquisition order,
+        /// with the site of each acquisition.
+        static HELD: RefCell<Vec<(usize, &'static Location<'static>)>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    /// Held-stack token; popping happens on drop (i.e. guard release).
+    pub(super) struct Held {
+        class: usize,
+    }
+
+    impl Drop for Held {
+        fn drop(&mut self) {
+            HELD.with(|h| {
+                let mut held = h.borrow_mut();
+                if let Some(pos) = held.iter().rposition(|&(c, _)| c == self.class) {
+                    held.remove(pos);
+                }
+            });
+        }
+    }
+
+    /// Validate + record an acquisition of `name` at the caller's site.
+    /// Panics (before the caller blocks) if the acquisition closes a
+    /// cycle in the global lock-order graph.
+    #[track_caller]
+    pub(super) fn acquire(name: &'static str) -> Held {
+        let site = Location::caller();
+        // The registry's own mutex is the one lock not tracked by itself;
+        // it is a leaf (nothing is acquired while holding it).
+        let mut reg = lockdep_lock(registry());
+        let class = reg.intern(name);
+        HELD.with(|h| {
+            let held = h.borrow();
+            for &(held_class, held_site) in held.iter() {
+                if held_class == class {
+                    panic!(
+                        "lock-order violation: same-class nested acquisition of '{name}' \
+                         at {site} while already holding '{name}' (acquired at {held_site})"
+                    );
+                }
+                if let Some(path) = reg.find_path(class, held_class) {
+                    panic!(
+                        "lock-order cycle (potential deadlock): acquiring '{}' at {} while \
+                         holding '{}' (acquired at {}), but the reverse order was already \
+                         observed: {}",
+                        name,
+                        site,
+                        reg.names[held_class],
+                        held_site,
+                        reg.describe_path(&path)
+                    );
+                }
+            }
+            for &(held_class, held_site) in held.iter() {
+                reg.edges
+                    .entry(held_class)
+                    .or_default()
+                    .entry(class)
+                    .or_insert(Edge { from_site: held_site, to_site: site });
+            }
+        });
+        drop(reg);
+        HELD.with(|h| h.borrow_mut().push((class, site)));
+        Held { class }
+    }
+
+    /// Poison-tolerant lock for the registry itself (a lockdep panic
+    /// inside `acquire` poisons it; later acquisitions must still work).
+    fn lockdep_lock(m: &Mutex<Registry>) -> std::sync::MutexGuard<'_, Registry> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Release-build stub: tracking compiles away entirely.
+#[cfg(not(debug_assertions))]
+mod lockdep {
+    /// Zero-sized token; no tracking in release builds.
+    pub(super) struct Held;
+
+    #[inline(always)]
+    pub(super) fn acquire(_name: &'static str) -> Held {
+        Held
+    }
 }
 
 #[cfg(test)]
@@ -35,5 +293,120 @@ mod tests {
         // The helper still yields the data.
         lock(&m).push(4);
         assert_eq!(*lock(&m), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn tracked_mutex_survives_poison() {
+        let m = Arc::new(TrackedMutex::new("test.sync.poison", vec![1, 2, 3]));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.guard();
+            panic!("poison it");
+        })
+        .join();
+        m.guard().push(4);
+        assert_eq!(*m.guard(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn consistent_order_is_quiet_across_threads() {
+        let a = Arc::new(TrackedMutex::new("test.sync.quiet_a", 0u32));
+        let b = Arc::new(TrackedMutex::new("test.sync.quiet_b", 0u32));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let (a, b) = (a.clone(), b.clone());
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let mut ga = a.guard();
+                    let mut gb = b.guard();
+                    *ga += 1;
+                    *gb += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("consistent a->b order must never trip lockdep");
+        }
+        assert_eq!(*a.guard(), 200);
+    }
+
+    /// The seeded ABBA cycle: establish a→b, then acquire b→a. The
+    /// detector must fire on the second thread with both traces, without
+    /// any actual deadlock (the first pair is already released).
+    #[test]
+    fn lockdep_detects_abba_cycle_with_both_traces() {
+        let a = Arc::new(TrackedMutex::new("test.sync.abba_a", ()));
+        let b = Arc::new(TrackedMutex::new("test.sync.abba_b", ()));
+        {
+            let _ga = a.guard();
+            let _gb = b.guard(); // records abba_a -> abba_b
+        }
+        let (a2, b2) = (a.clone(), b.clone());
+        let result = std::thread::spawn(move || {
+            let _gb = b2.guard();
+            let _ga = a2.guard(); // must panic: would record abba_b -> abba_a
+        })
+        .join();
+        let payload = result.expect_err("lockdep must fire on the inverted order");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("lock-order cycle"), "unexpected panic: {msg}");
+        assert!(msg.contains("test.sync.abba_a"), "missing class a in: {msg}");
+        assert!(msg.contains("test.sync.abba_b"), "missing class b in: {msg}");
+        // Both traces: the blocked acquisition site and the previously
+        // recorded edge's sites are all in this file.
+        assert!(msg.matches("sync.rs").count() >= 2, "expected both traces in: {msg}");
+    }
+
+    #[test]
+    fn lockdep_rejects_same_class_nesting() {
+        let a = Arc::new(TrackedMutex::new("test.sync.nest", ()));
+        let a2 = a.clone();
+        let result = std::thread::spawn(move || {
+            let _g1 = a2.guard();
+            let _g2 = a2.guard(); // self-deadlock: must panic, not hang
+        })
+        .join();
+        let payload = result.expect_err("same-class nesting must trip lockdep");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("same-class nested acquisition"), "unexpected panic: {msg}");
+    }
+
+    #[test]
+    fn transitive_cycle_is_detected() {
+        let a = Arc::new(TrackedMutex::new("test.sync.tri_a", ()));
+        let b = Arc::new(TrackedMutex::new("test.sync.tri_b", ()));
+        let c = Arc::new(TrackedMutex::new("test.sync.tri_c", ()));
+        {
+            let _ga = a.guard();
+            let _gb = b.guard(); // a -> b
+        }
+        {
+            let _gb = b.guard();
+            let _gc = c.guard(); // b -> c
+        }
+        let (a2, c2) = (a.clone(), c.clone());
+        let result = std::thread::spawn(move || {
+            let _gc = c2.guard();
+            let _ga = a2.guard(); // closes a ->* c -> a
+        })
+        .join();
+        let payload = result.expect_err("transitive inversion must trip lockdep");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-order cycle"), "unexpected panic: {msg}");
+        assert!(
+            msg.contains("tri_a") && msg.contains("tri_b") && msg.contains("tri_c"),
+            "path through all three classes should be reported: {msg}"
+        );
+    }
+
+    #[test]
+    fn into_inner_returns_value() {
+        let m = TrackedMutex::new("test.sync.into_inner", 41u32);
+        *m.guard() += 1;
+        assert_eq!(m.into_inner(), 42);
     }
 }

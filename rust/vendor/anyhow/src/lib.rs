@@ -1,0 +1,226 @@
+//! In-tree, std-only stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline, so the real crates.io `anyhow`
+//! cannot be fetched; this shim implements the (small) surface the repo
+//! actually uses with compatible semantics:
+//!
+//! * [`Error`]: an opaque, `Send + Sync` error value holding a message
+//!   chain. `Display` prints the outermost message; the alternate form
+//!   (`{:#}`) prints the whole chain joined with `": "`; `Debug` prints
+//!   the anyhow-style multi-line report with a `Caused by:` section.
+//! * [`Result<T>`]: alias for `Result<T, Error>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`]: the formatting macros.
+//! * A blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts concrete error types (the source chain is flattened into the
+//!   message chain).
+//! * [`Error::context`] and the [`Context`] extension trait for `Result` /
+//!   `Option`.
+//!
+//! Downcasting and backtraces are intentionally out of scope — nothing in
+//! the repo uses them, and the whole point of this shim is to keep the
+//! tree building with zero external dependencies.
+
+use std::fmt;
+
+/// Opaque error value: a chain of messages, outermost first.
+pub struct Error {
+    /// `layers[0]` is the outermost (most recently attached) message;
+    /// `layers[last]` is the root cause.
+    layers: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { layers: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (anyhow's `Error::context`).
+    #[must_use]
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.layers.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.layers.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.layers.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line, anyhow-style.
+            write!(f, "{}", self.layers.join(": "))
+        } else {
+            write!(f, "{}", self.layers.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.layers.first().map(String::as_str).unwrap_or(""))?;
+        if self.layers.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            if self.layers.len() == 2 {
+                write!(f, "\n    {}", self.layers[1])?;
+            } else {
+                for (i, layer) in self.layers[1..].iter().enumerate() {
+                    write!(f, "\n    {i}: {layer}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// Error deliberately does NOT implement std::error::Error — exactly like
+// the real anyhow — which is what makes the blanket From below coherent
+// (it would otherwise overlap the reflexive `impl From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut layers = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            layers.push(s.to_string());
+            src = s.source();
+        }
+        Error { layers }
+    }
+}
+
+/// `Result` specialized to [`Error`], with anyhow's default-param trick so
+/// both `anyhow::Result<T>` and `anyhow::Result<T, E>` spell correctly.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` / `Option` (anyhow's
+/// `Context`).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+    }
+
+    #[test]
+    fn alternate_joins_chain() {
+        let e = Error::from(io_err()).context("reading manifest").context("loading artifacts");
+        assert_eq!(format!("{e:#}"), "loading artifacts: reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let e = Error::from(io_err()).context("reading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("reading manifest"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("disk on fire"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "asked to fail with code {}", 7);
+            let parsed: u32 = "42".parse()?; // ParseIntError -> Error via blanket From
+            if parsed == 0 {
+                bail!("zero is not a value");
+            }
+            Ok(parsed)
+        }
+        assert_eq!(inner(false).unwrap(), 42);
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "asked to fail with code 7");
+    }
+
+    #[test]
+    fn context_trait_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("spilling").unwrap_err();
+        assert_eq!(format!("{e:#}"), "spilling: disk on fire");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing key").unwrap_err()), "missing key");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_bounds<T: Send + Sync + 'static>() {}
+        assert_bounds::<Error>();
+    }
+}

@@ -1,0 +1,289 @@
+//! In-tree stub of the `xla` PJRT FFI crate.
+//!
+//! The real crate binds `xla_extension` (a native XLA build) and cannot be
+//! fetched or linked in the offline build environment. This stub keeps the
+//! repo compiling and its non-PJRT paths fully functional:
+//!
+//! * [`Literal`] is a **real** host-side implementation — `vec1`,
+//!   `reshape`, `to_vec` behave faithfully for the `f32`/`i32` dtypes the
+//!   repo uses — so code that only marshals tensors works unchanged.
+//! * Runtime entry points ([`PjRtClient::cpu`],
+//!   [`HloModuleProto::from_text_file`], compile/execute) return
+//!   [`Error::Unavailable`]. Callers already treat a missing PJRT plugin
+//!   as a skippable condition (see `rust/tests/runtime_hlo.rs`), so tests
+//!   and mock-stage pipelines run end to end while HLO execution reports
+//!   itself unavailable instead of silently faking results.
+//!
+//! Swapping the real crate back in is a one-line change in
+//! `rust/Cargo.toml`; no call site mentions this stub.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: either the runtime is unavailable or a host-side `Literal`
+/// operation was misused.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The operation needs the native XLA runtime, which this stub lacks.
+    Unavailable(&'static str),
+    /// A host-side literal operation failed (shape/dtype mismatch).
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT runtime unavailable (in-tree xla stub; build against the real \
+                 `xla` crate for HLO execution)"
+            ),
+            Error::Literal(msg) => write!(f, "literal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// Literal: real host-side tensor value
+// ---------------------------------------------------------------------------
+
+/// Element types [`Literal`] can hold (the repo only uses f32 / i32).
+pub trait NativeType: Copy + Sized + private::Sealed {
+    /// Wrap a slice as literal storage.
+    fn store(data: &[Self]) -> Storage;
+    /// Extract a typed copy, `None` on dtype mismatch.
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+    /// Dtype name for error messages.
+    fn dtype_name() -> &'static str;
+}
+
+mod private {
+    /// Seals [`super::NativeType`] to the dtypes the repo uses.
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Dtype-erased literal storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    /// 32-bit float elements.
+    F32(Vec<f32>),
+    /// 32-bit signed integer elements.
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            Storage::F32(_) => "f32",
+            Storage::I32(_) => "i32",
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn store(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::I32(_) => None,
+        }
+    }
+
+    fn dtype_name() -> &'static str {
+        "f32"
+    }
+}
+
+impl NativeType for i32 {
+    fn store(data: &[Self]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+
+    fn dtype_name() -> &'static str {
+        "i32"
+    }
+}
+
+/// A host tensor value (dense, row-major), mirroring `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::store(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.storage.len() as i64;
+        if want != have {
+            return Err(Error::Literal(format!(
+                "reshape to {dims:?} wants {want} elements, literal has {have}"
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Typed copy of the elements; errors on dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage).ok_or_else(|| {
+            Error::Literal(format!(
+                "dtype mismatch: literal holds {}, caller wants {}",
+                self.storage.dtype_name(),
+                T::dtype_name()
+            ))
+        })
+    }
+
+    /// Unwrap a 1-tuple result. Stub literals are never tuples — this is
+    /// only reachable through `execute`, which the stub cannot perform.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable("to_tuple1 on a stub literal"))
+    }
+
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.storage.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime surface: every entry point reports unavailable
+// ---------------------------------------------------------------------------
+
+/// Stub PJRT client. [`PjRtClient::cpu`] always errors; the type exists so
+/// call sites compile unchanged.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client — always unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — always unavailable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always unavailable in the stub.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Stub device buffer returned by `execute`.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy device memory back to a host literal — unavailable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments — always unavailable in the stub.
+    /// Generic so `execute::<xla::Literal>(…)` call sites compile as with
+    /// the real crate.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.dims(), &[4]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_dtype_and_shape_errors() {
+        let lit = Literal::vec1(&[1i32, 2]);
+        assert!(lit.to_vec::<f32>().is_err(), "i32 literal must not read as f32");
+        assert!(lit.reshape(&[3]).is_err(), "2 elements cannot reshape to [3]");
+    }
+
+    #[test]
+    fn runtime_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub client must be unavailable");
+        let msg = err.to_string();
+        assert!(msg.contains("unavailable"), "{msg}");
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}

@@ -14,6 +14,11 @@
 //!   from the deterministic interleaving checker and from Miri.
 //! * **safety-comment** — every `unsafe` carries a `// SAFETY:` comment
 //!   explaining why it is sound.
+//! * **thread-spawn** — no `thread::spawn` in non-test `net/` code
+//!   outside `net/reactor.rs`. Since the reactor refactor the transport
+//!   layer owns no threads: all socket reads happen on the one reactor
+//!   thread, and a stray per-conduit thread would silently reintroduce
+//!   the blocking-sweep architecture.
 //!
 //! A violation is silenced by an adjacent comment of the form
 //! `// lint: allow(<rule>): <reason>` — on the same line, or in the
@@ -34,7 +39,7 @@ pub struct Finding {
     /// 1-based line number.
     pub line: usize,
     /// Rule identifier (`unwrap`, `lock`, `socket-free-session`,
-    /// `safety-comment`, `wire-spec`).
+    /// `safety-comment`, `thread-spawn`, `wire-spec`).
     pub rule: &'static str,
     /// Human-readable explanation.
     pub message: String,
@@ -157,6 +162,33 @@ pub fn check_safety_comments(file: &SourceFile, out: &mut Vec<Finding>) {
     }
 }
 
+/// R6: no `thread::spawn` in non-test `net/` code outside the reactor.
+/// The reactor owns every read loop; a per-conduit thread anywhere else
+/// in the transport layer reintroduces exactly the architecture the
+/// reactor replaced.
+pub fn check_thread_spawn(file: &SourceFile, out: &mut Vec<Finding>) {
+    let rel = file.rel();
+    if !rel.starts_with("src/net/") || rel.ends_with("net/reactor.rs") {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("thread::spawn") && !allowed(file, idx, "thread-spawn") {
+            out.push(Finding {
+                file: rel.clone(),
+                line: idx + 1,
+                rule: "thread-spawn",
+                message: "`thread::spawn` in transport code; socket reads belong to the \
+                          reactor (net/reactor.rs) — add `// lint: allow(thread-spawn): \
+                          <why this thread is not a reader loop>` if it truly is not one"
+                    .into(),
+            });
+        }
+    }
+}
+
 /// True when `word` occurs in `code` delimited by non-identifier chars.
 fn has_word(code: &str, word: &str) -> bool {
     let ident = |c: char| c.is_alphanumeric() || c == '_';
@@ -182,6 +214,7 @@ pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
         check_lock(file, &mut out);
         check_session_socket_free(file, &mut out);
         check_safety_comments(file, &mut out);
+        check_thread_spawn(file, &mut out);
     }
     out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
     out
@@ -287,6 +320,44 @@ mod tests {
         let mut out = Vec::new();
         check_session_socket_free(&f, &mut out);
         assert!(out.is_empty(), "other net files may use sockets");
+    }
+
+    #[test]
+    fn thread_spawn_in_net_is_flagged_outside_reactor() {
+        let f = net_file("std::thread::spawn(move || loop_forever());\n");
+        let mut out = Vec::new();
+        check_thread_spawn(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "thread-spawn");
+        // The reactor module owns the one legitimate thread.
+        let f = SourceFile::parse(
+            "src/net/reactor.rs",
+            "std::thread::spawn(move || run_loop(inner, rx));\n",
+            false,
+        );
+        let mut out = Vec::new();
+        check_thread_spawn(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // Outside net/ the rule does not apply at all.
+        let f = SourceFile::parse("src/pipeline/driver.rs", "std::thread::spawn(f);\n", false);
+        let mut out = Vec::new();
+        check_thread_spawn(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn thread_spawn_allow_annotation_and_tests_silence() {
+        let f = net_file(
+            "// lint: allow(thread-spawn): joined before return, not a reader.\n\
+             std::thread::spawn(f);\n",
+        );
+        let mut out = Vec::new();
+        check_thread_spawn(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let f = net_file("#[cfg(test)]\nmod tests {\n    fn t() { std::thread::spawn(f); }\n}\n");
+        let mut out = Vec::new();
+        check_thread_spawn(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //! is emitted and when it lands, a conduit dying with everything
 //! in flight, the HELLO resync on reconnect — is an explicit [`Action`],
 //! and [`crate::util::explore`] drives the pair through **every**
-//! interleaving up to a bound.
+//! interleaving up to a bound. Two further sources model the telemetry
+//! side channel and the kernel's failure modes: a data-plane-neutral
+//! telemetry record may ride any conduit at any time
+//! ([`Action::SendTelemetry`]), and a write may be cut off mid-record
+//! ([`Action::TruncateUp`]) — everything fully written still lands, the
+//! partial record is lost, and the conduit dies.
 //!
 //! Checked after every transition and at every quiescent state:
 //!
@@ -36,6 +41,9 @@ enum Up {
     Frame(u64),
     /// FIN carrying the end-of-stream boundary.
     Fin(u64),
+    /// A telemetry record: data-plane-neutral, never acked, never
+    /// replayed — the receiver must ignore it completely.
+    Tele,
 }
 
 /// Receiver → sender traffic: a control record `(kind, seq)`.
@@ -63,6 +71,10 @@ pub struct BoundaryState {
     delivered: Vec<u64>,
     /// Remaining kill budget.
     kills_left: u8,
+    /// Remaining telemetry-record budget.
+    tele_left: u8,
+    /// Remaining partial-write (truncation) budget.
+    truncs_left: u8,
 }
 
 impl BoundaryState {
@@ -103,6 +115,15 @@ pub enum Action {
     /// dialer completes the handshake before the conduit re-enters the
     /// pool).
     Reconnect(usize),
+    /// Sender writes one telemetry record to conduit `.0`. Telemetry is
+    /// data-plane-neutral: no sequence number, no ack, no replay — the
+    /// checker proves its presence never perturbs delivery.
+    SendTelemetry(usize),
+    /// A write on conduit `.0` is cut off mid-record (process death,
+    /// kernel reset between `write` calls): every fully-written record
+    /// still in flight is delivered, the partial one is lost, and the
+    /// conduit dies — the receiver treats truncation as link failure.
+    TruncateUp(usize),
 }
 
 /// Seeded faults for the checker's own tests: each breaks the protocol
@@ -129,6 +150,10 @@ pub struct BoundaryModel {
     pub capacity: usize,
     /// How many conduit kills the scheduler may inject.
     pub kills: u8,
+    /// How many telemetry records the sender may interleave.
+    pub tele: u8,
+    /// How many partial-write truncations the scheduler may inject.
+    pub truncs: u8,
     /// Fault injection for self-tests; `None` for the real protocol.
     pub bug: Option<Bug>,
 }
@@ -136,7 +161,7 @@ pub struct BoundaryModel {
 impl BoundaryModel {
     /// A clean (no seeded bug) configuration.
     pub fn clean(total: u64, conduits: usize, capacity: usize, kills: u8) -> Self {
-        BoundaryModel { total, conduits, capacity, kills, bug: None }
+        BoundaryModel { total, conduits, capacity, kills, tele: 0, truncs: 0, bug: None }
     }
 
     fn reorder_window(&self) -> usize {
@@ -160,6 +185,32 @@ impl BoundaryModel {
                 ));
             }
             s.delivered.push(f.seq);
+        }
+        Ok(())
+    }
+
+    /// Deliver one upstream record into the receiver (shared by
+    /// [`Action::DeliverUp`] and the flush inside [`Action::TruncateUp`]).
+    fn deliver_one(&self, s: &mut BoundaryState, i: usize, msg: Up) -> Result<(), String> {
+        match msg {
+            Up::Frame(seq) => {
+                let step = s.rx.on_frame(frame(seq)).map_err(|e| e.to_string())?;
+                self.drain_ready(s)?;
+                if step == RxStep::Duplicate {
+                    // The real receiver force-acks duplicates so a
+                    // replaying sender converges.
+                    if let Some(pos) = s.rx.ack_due(true) {
+                        s.conduits[i].down.push_back((K_ACK, pos));
+                        s.rx.mark_acked(pos);
+                    }
+                }
+            }
+            Up::Fin(end) => {
+                s.rx.on_fin(end).map_err(|e| e.to_string())?;
+            }
+            // Telemetry is invisible to the session: no state change at
+            // all — the invariants after this transition prove it.
+            Up::Tele => {}
         }
         Ok(())
     }
@@ -204,6 +255,8 @@ impl Model for BoundaryModel {
             next_send: 0,
             delivered: Vec::new(),
             kills_left: self.kills,
+            tele_left: self.tele,
+            truncs_left: self.truncs,
         }
     }
 
@@ -235,6 +288,12 @@ impl Model for BoundaryModel {
                 if s.kills_left > 0 && !done {
                     out.push(Action::Kill(i));
                 }
+                if s.tele_left > 0 && !done {
+                    out.push(Action::SendTelemetry(i));
+                }
+                if s.truncs_left > 0 && !c.up.is_empty() && !done {
+                    out.push(Action::TruncateUp(i));
+                }
             } else if !done {
                 out.push(Action::Reconnect(i));
             }
@@ -255,21 +314,7 @@ impl Model for BoundaryModel {
                 s.conduits[i].up.push_back(Up::Fin(end));
             }
             Action::DeliverUp(i) => match s.conduits[i].up.pop_front() {
-                Some(Up::Frame(seq)) => {
-                    let step = s.rx.on_frame(frame(seq)).map_err(|e| e.to_string())?;
-                    self.drain_ready(&mut s)?;
-                    if step == RxStep::Duplicate {
-                        // The real receiver force-acks duplicates so a
-                        // replaying sender converges.
-                        if let Some(pos) = s.rx.ack_due(true) {
-                            s.conduits[i].down.push_back((K_ACK, pos));
-                            s.rx.mark_acked(pos);
-                        }
-                    }
-                }
-                Some(Up::Fin(end)) => {
-                    s.rx.on_fin(end).map_err(|e| e.to_string())?;
-                }
+                Some(msg) => self.deliver_one(&mut s, i, msg)?,
                 None => return Err("DeliverUp scheduled on an empty queue".into()),
             },
             Action::DeliverDown(i) => match s.conduits[i].down.pop_front() {
@@ -314,6 +359,27 @@ impl Model for BoundaryModel {
                     }
                 }
             }
+            Action::SendTelemetry(i) => {
+                s.tele_left -= 1;
+                s.conduits[i].up.push_back(Up::Tele);
+            }
+            Action::TruncateUp(i) => {
+                s.truncs_left -= 1;
+                let mut q = std::mem::take(&mut s.conduits[i].up);
+                // The partially-written record at the tail is lost…
+                q.pop_back();
+                // …but every record fully written before it was already in
+                // the kernel's hands and still lands, in order.
+                for msg in q {
+                    self.deliver_one(&mut s, i, msg)?;
+                }
+                // Then the connection is gone: the receiver saw a
+                // truncated stream, which is a link failure, and whatever
+                // it had queued back to the sender dies with the socket.
+                s.conduits[i].alive = false;
+                s.conduits[i].up.clear();
+                s.conduits[i].down.clear();
+            }
         }
         self.invariants(&s)?;
         Ok(s)
@@ -340,6 +406,7 @@ impl Model for BoundaryModel {
     fn fingerprint(&self, s: &BoundaryState) -> u64 {
         let mut h = Fnv::default();
         h.u64(s.next_send).u64(s.delivered.len() as u64).u64(s.kills_left as u64);
+        h.u64(s.tele_left as u64).u64(s.truncs_left as u64);
         h.u64(s.tx.next_seq()).u64(s.tx.acked()).u64(s.tx.fin_acked() as u64);
         for seq in s.tx.replay_seqs() {
             h.u64(seq);
@@ -355,6 +422,7 @@ impl Model for BoundaryModel {
                 match m {
                     Up::Frame(seq) => h.u64(1).u64(*seq),
                     Up::Fin(end) => h.u64(2).u64(*end),
+                    Up::Tele => h.u64(3),
                 };
             }
             h.u64(0xD0);
@@ -402,6 +470,8 @@ mod tests {
             conduits: 1,
             capacity: 2,
             kills: 1,
+            tele: 0,
+            truncs: 0,
             bug: Some(Bug::AckOvershoot),
         };
         let v = explore(&m, Bounds::default()).expect_err("overshooting acks must be caught");
@@ -415,10 +485,51 @@ mod tests {
             conduits: 1,
             capacity: 2,
             kills: 1,
+            tele: 0,
+            truncs: 0,
             bug: Some(Bug::SkipReplay),
         };
         let v = explore(&m, Bounds::default()).expect_err("skipping replay must lose frames");
         assert!(!v.trace.is_empty());
+    }
+
+    #[test]
+    fn telemetry_records_never_perturb_the_data_plane() {
+        // Telemetry may land between any two data records, on any
+        // conduit, at any point of the run — delivery must stay exactly
+        // once, in order, in EVERY interleaving.
+        let m = BoundaryModel {
+            total: 2,
+            conduits: 2,
+            capacity: 4,
+            kills: 0,
+            tele: 2,
+            truncs: 0,
+            bug: None,
+        };
+        let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
+        let cov = explore(&m, bounds).unwrap_or_else(|v| panic!("{v}"));
+        assert!(cov.terminals >= 1, "{cov:?}");
+    }
+
+    #[test]
+    fn partial_write_truncation_recovers_losslessly() {
+        // A write cut off mid-record delivers the fully-written prefix,
+        // loses the partial record and kills the conduit; the HELLO
+        // resync on reconnect must replay exactly what went missing.
+        let m = BoundaryModel {
+            total: 2,
+            conduits: 1,
+            capacity: 2,
+            kills: 0,
+            tele: 1,
+            truncs: 1,
+            bug: None,
+        };
+        let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
+        let cov = explore(&m, bounds).unwrap_or_else(|v| panic!("{v}"));
+        assert!(cov.terminals >= 1, "{cov:?}");
+        assert!(cov.states > 20, "truncation explores a real space: {cov:?}");
     }
 
     #[test]

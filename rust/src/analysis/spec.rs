@@ -160,12 +160,13 @@ pub fn cross_check(spec: &WireSpec) -> Vec<Finding> {
     );
     check_u64("frame MAGIC", spec.magic.0 as u64, spec.magic.1, frame::MAGIC as u64);
     check_u64("frame VERSION", spec.version.0 as u64, spec.version.1, frame::VERSION as u64);
-    let code_kinds: [(&str, u8); 5] = [
+    let code_kinds: [(&str, u8); 6] = [
         ("HELLO", session::K_HELLO),
         ("ACK", session::K_ACK),
         ("FIN", session::K_FIN),
         ("FIN_ACK", session::K_FIN_ACK),
         ("TELEMETRY", session::K_TELEMETRY),
+        ("HAVE", session::K_HAVE),
     ];
     for (name, code_val) in code_kinds {
         match spec.kinds.iter().find(|(_, n, _)| n == name) {
@@ -207,6 +208,7 @@ kind 2  ACK{next_expected}     receiver → sender
 kind 3  FIN{end_seq}           sender → receiver
 kind 4  FIN_ACK{end_seq}       receiver → sender
 kind 5  TELEMETRY{len}         sender → receiver
+kind 6  HAVE{seq}              receiver → sender
 (bounded by `MAX_TELEMETRY_BYTES = 2^20`; larger is desync)
 ";
 
@@ -219,7 +221,7 @@ kind 5  TELEMETRY{len}         sender → receiver
         assert_eq!(spec.max_telemetry_bytes.0, 1 << 20);
         assert_eq!(spec.magic.0, 0x5150_4652);
         assert_eq!(spec.version.0, 1);
-        assert_eq!(spec.kinds.len(), 5, "frame-header kind row must not leak in");
+        assert_eq!(spec.kinds.len(), 6, "frame-header kind row must not leak in");
     }
 
     #[test]

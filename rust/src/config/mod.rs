@@ -149,6 +149,12 @@ pub struct TransportSection {
     pub backoff_base_ms: u64,
     /// Reconnect backoff cap, ms.
     pub backoff_max_ms: u64,
+    /// CPU core to pin the process-wide read reactor thread to
+    /// (`net::reactor`), or -1 (the default) to leave placement to the
+    /// scheduler. Best effort: applied via `taskset` when the reactor
+    /// thread starts, ignored if unavailable. Useful on edge boxes where
+    /// the compute stages saturate the other cores.
+    pub reactor_pin_core: i64,
 }
 
 impl TransportSection {
@@ -229,6 +235,7 @@ impl Default for Config {
                 reconnect_timeout_ms: 10_000,
                 backoff_base_ms: 10,
                 backoff_max_ms: 1_000,
+                reactor_pin_core: -1,
             },
         }
     }
@@ -329,6 +336,13 @@ impl Config {
             if let Some(x) = t.get("reconnect_timeout_ms") { cfg.transport.reconnect_timeout_ms = x.as_u64()?; }
             if let Some(x) = t.get("backoff_base_ms") { cfg.transport.backoff_base_ms = x.as_u64()?; }
             if let Some(x) = t.get("backoff_max_ms") { cfg.transport.backoff_max_ms = x.as_u64()?; }
+            if let Some(x) = t.get("reactor_pin_core") {
+                cfg.transport.reactor_pin_core = x.as_f64()? as i64;
+                anyhow::ensure!(
+                    cfg.transport.reactor_pin_core >= -1,
+                    "transport.reactor_pin_core must be a core index or -1 (unpinned)"
+                );
+            }
         }
         anyhow::ensure!(
             cfg.transport.stripes == 1 || cfg.transport.resilient,
@@ -492,6 +506,17 @@ mod tests {
         assert!(c.transport.telemetry, "telemetry is on by default");
         let c = Config::parse(r#"{"transport": {"telemetry": false}}"#).unwrap();
         assert!(!c.transport.telemetry);
+    }
+
+    #[test]
+    fn reactor_pin_core_parses_validates_and_defaults() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.transport.reactor_pin_core, -1, "pinning is opt-in");
+        let c = Config::parse(r#"{"transport": {"reactor_pin_core": 3}}"#).unwrap();
+        assert_eq!(c.transport.reactor_pin_core, 3);
+        let c = Config::parse(r#"{"transport": {"reactor_pin_core": -1}}"#).unwrap();
+        assert_eq!(c.transport.reactor_pin_core, -1);
+        assert!(Config::parse(r#"{"transport": {"reactor_pin_core": -2}}"#).is_err());
     }
 
     #[test]

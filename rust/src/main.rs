@@ -329,6 +329,9 @@ fn parse_pair(s: &str, what: &str) -> quantpipe::Result<(usize, usize)> {
 
 fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
     let cfg = load_config(args)?;
+    if cfg.transport.reactor_pin_core >= 0 {
+        quantpipe::net::reactor::set_pin_core(cfg.transport.reactor_pin_core as usize);
+    }
     let stage: usize = args
         .get("stage")
         .ok_or_else(|| anyhow::anyhow!("worker needs --stage K"))?
@@ -479,6 +482,9 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
 
 fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
     let cfg = load_config(args)?;
+    if cfg.transport.reactor_pin_core >= 0 {
+        quantpipe::net::reactor::set_pin_core(cfg.transport.reactor_pin_core as usize);
+    }
     let (eval, microbatch) = if let Some(spec) = args.get("synthetic") {
         let (count, classes) = parse_pair(spec, "--synthetic")?;
         (Arc::new(EvalSet::synthetic_onehot(count, classes)), cfg.pipeline.microbatch)

@@ -63,23 +63,51 @@ pub(crate) fn endpoint_nonce() -> u64 {
     (std::process::id() as u64) << 32 | n
 }
 
+/// `write_all` that also services **nonblocking** sockets: every
+/// reactor-registered conduit is permanently O_NONBLOCK (the flag lives
+/// on the socket, shared by all duplicated handles), so write paths must
+/// absorb `WouldBlock` by retrying after a short sleep. The retry time
+/// is still part of the caller-measured write duration — a congested
+/// socket reads as a long (stalled) write either way, which is exactly
+/// the bandwidth signal the adaptive controller feeds on. On a blocking
+/// stream this reduces to plain `write_all`.
+fn write_all_nb(s: &mut TcpStream, mut bytes: &[u8]) -> std::io::Result<()> {
+    while !bytes.is_empty() {
+        match s.write(bytes) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "socket accepted zero bytes",
+                ))
+            }
+            Ok(n) => bytes = &bytes[n..],
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
 /// Write one length-prefixed record (a serialized frame).
 pub(crate) fn write_frame_bytes(s: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
-    s.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    s.write_all(bytes)?;
+    write_all_nb(s, &(bytes.len() as u32).to_le_bytes())?;
+    write_all_nb(s, bytes)?;
     s.flush()
 }
 
 /// Write one 13-byte control record.
 pub(crate) fn write_ctrl(s: &mut TcpStream, kind: u8, seq: u64) -> std::io::Result<()> {
-    s.write_all(&ctrl_record(kind, seq))?;
+    write_all_nb(s, &ctrl_record(kind, seq))?;
     s.flush()
 }
 
 /// Write a prebuilt record verbatim (HELLO/FIN records the session layer
 /// already serialized).
 pub(crate) fn write_raw(s: &mut TcpStream, rec: &[u8]) -> std::io::Result<()> {
-    s.write_all(rec)?;
+    write_all_nb(s, rec)?;
     s.flush()
 }
 
@@ -97,8 +125,10 @@ pub(crate) fn write_telemetry(
     Ok(())
 }
 
-/// Outcome of a non-blocking read sweep.
-pub(crate) enum ReadSweep {
+/// Outcome of a non-blocking read sweep (a direct [`read_available`]
+/// call or a reactor inbox drain via
+/// [`super::reactor::Registration::drain_into`]).
+pub enum ReadSweep {
     /// Bytes (possibly zero) drained; the connection is still alive.
     Alive,
     /// EOF or I/O error: the connection is gone (whatever was read
@@ -108,6 +138,12 @@ pub(crate) enum ReadSweep {
 
 /// Drain whatever is available on `stream` into `into` without blocking
 /// (the stream is returned to blocking mode before this returns).
+///
+/// Pre-registration use only: once a stream is handed to the reactor
+/// ([`super::reactor::Reactor::register`]) its inbox drain replaces
+/// this, and the blocking-mode restore here would fight the reactor's
+/// permanent O_NONBLOCK. The remaining caller is the dial handshake,
+/// which sweeps control bytes off the fresh, not-yet-registered stream.
 pub(crate) fn read_available(stream: &mut TcpStream, into: &mut Vec<u8>) -> ReadSweep {
     if stream.set_nonblocking(true).is_err() {
         return ReadSweep::Dead;
@@ -165,6 +201,10 @@ pub(crate) fn accept_pending(listener: &TcpListener) -> Vec<TcpStream> {
 /// the session handshake on the fresh stream.
 pub(crate) struct DialConduit {
     pub conn: Option<TcpStream>,
+    /// Reactor registration for the current connection: the reactor
+    /// sweeps inbound bytes into its inbox and fires the boundary's
+    /// `Notify`. Dropped (deregistering) whenever the conduit goes down.
+    pub reg: Option<super::reactor::Registration>,
     /// Incremental decoder over inbound control bytes from the current
     /// connection (one wire parser for both directions — see
     /// [`super::session::WireDecoder`]).
@@ -194,6 +234,7 @@ impl DialConduit {
     pub fn new() -> Self {
         DialConduit {
             conn: None,
+            reg: None,
             decoder: super::session::WireDecoder::new(),
             kill: LinkKillSwitch::new(),
             nonce: endpoint_nonce(),
@@ -216,6 +257,7 @@ impl DialConduit {
             let _ = s.shutdown(Shutdown::Both);
         }
         self.conn = None;
+        self.reg = None; // deregisters from the reactor
         self.decoder = super::session::WireDecoder::new();
         let now = Instant::now();
         if self.down_since.is_none() {
@@ -236,13 +278,23 @@ impl DialConduit {
         !self.is_connected() && self.next_retry.map_or(false, |t| Instant::now() >= t)
     }
 
-    /// Install a freshly handshaken stream.
-    pub fn install(&mut self, stream: TcpStream) {
+    /// Install a freshly handshaken stream, registering it with the
+    /// process reactor (which flips it nonblocking for good; the write
+    /// helpers handle that). Failure to register leaves the conduit
+    /// down — the caller's normal revival schedule retries.
+    pub fn install(
+        &mut self,
+        stream: TcpStream,
+        notify: &Arc<crate::util::sync::Notify>,
+    ) -> std::io::Result<()> {
+        let reg = super::reactor::global()?.register(&stream, notify.clone())?;
         self.kill.register(&stream);
+        self.reg = Some(reg);
         self.conn = Some(stream);
         self.down_since = None;
         self.next_retry = None;
         self.ever_connected = true;
+        Ok(())
     }
 
     /// Fold one measured write stall into the bias EWMA.
@@ -292,11 +344,20 @@ impl Drop for DialConduit {
 pub(crate) struct AcceptedConduit {
     pub stream: TcpStream,
     pub decoder: super::session::WireDecoder,
+    /// Reactor registration: inbound bytes arrive via its inbox.
+    pub reg: super::reactor::Registration,
 }
 
 impl AcceptedConduit {
-    pub fn new(stream: TcpStream) -> Self {
-        AcceptedConduit { stream, decoder: super::session::WireDecoder::new() }
+    /// Register `stream` with the process reactor under the boundary's
+    /// `notify`. Failure means the conduit never joins the boundary —
+    /// the peer redials, exactly as for a failed greeting.
+    pub fn new(
+        stream: TcpStream,
+        notify: &Arc<crate::util::sync::Notify>,
+    ) -> std::io::Result<Self> {
+        let reg = super::reactor::global()?.register(&stream, notify.clone())?;
+        Ok(AcceptedConduit { stream, decoder: super::session::WireDecoder::new(), reg })
     }
 }
 

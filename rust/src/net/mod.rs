@@ -23,6 +23,9 @@
 //!   `docs/WIRE_PROTOCOL.md`.
 //! * [`conduit`] — one physical connection of a session: dial/accept
 //!   lifecycle, backoff bookkeeping, raw non-blocking byte I/O.
+//! * [`reactor`] — the process-wide read reactor: one thread sweeps
+//!   every registered conduit socket into per-registration inboxes and
+//!   wakes the owning boundary, replacing per-conduit blocking reads.
 //! * [`stripe`] — a stage boundary fanning one session over N conduits
 //!   (connection striping for high-BDP/multi-path edge links): round-robin
 //!   with a least-stalled bias on the sender, reordering through the
@@ -39,6 +42,7 @@
 pub mod conduit;
 pub mod frame;
 pub mod link;
+pub mod reactor;
 pub mod resilient;
 pub mod session;
 pub mod stripe;

@@ -1,0 +1,371 @@
+//! The process-wide **read reactor**: one thread sweeping every
+//! registered conduit socket, replacing the per-conduit blocking reads
+//! (and their 1–20 ms sleep/timeout loops) scattered across boundaries.
+//!
+//! Design:
+//!
+//! * Registration is per-socket. [`Reactor::register`] flips the socket
+//!   to nonblocking **permanently** (O_NONBLOCK is shared by every
+//!   duplicated handle of the socket, so there is no per-caller mode),
+//!   keeps a `try_clone` for the reactor thread, and hands back a
+//!   [`Registration`] whose inbox the reactor fills.
+//! * The reactor thread (`qp-reactor`, spawned lazily on first
+//!   registration) loops: snapshot the registration list, nonblocking
+//!   read sweep over every live socket, append whatever arrived to the
+//!   owning registration's inbox, and fire that registration's
+//!   [`Notify`] so the boundary thread wakes. EOF or a hard read error
+//!   marks the registration dead — the final bytes are still delivered.
+//! * Writes stay on the boundary threads: measured write-stall time *is*
+//!   the bandwidth signal the adaptive controller feeds on, so the
+//!   reactor deliberately owns reads only.
+//! * Idle behaviour: when a full sweep moves no bytes the reactor parks
+//!   in a ~1 ms timed read on its **wake pipe** — a loopback TCP pair
+//!   built without helper threads (connect completes against the
+//!   listener backlog, then accept). Registering or dropping a
+//!   registration writes one byte to the pipe so membership changes are
+//!   seen promptly. No epoll/kqueue binding exists in `std`, so this
+//!   millisecond-bounded poll is the portable stand-in; under load the
+//!   sweep runs back-to-back and the timeout never enters the picture.
+//! * An optional core-affinity pin ([`set_pin_core`], config knob
+//!   `transport.reactor_pin_core`) applies best-effort CPU pinning to
+//!   the reactor thread at spawn via `taskset`.
+//!
+//! Lock discipline (checked by the debug-build lockdep in
+//! [`crate::util::sync`]): the registry lock (`reactor.registry`) is
+//! released before any inbox lock (`reactor.inbox`) is taken, and no two
+//! inboxes are ever held together.
+
+use super::conduit::ReadSweep;
+use crate::util::sync::{Notify, TrackedMutex};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Requested CPU core for the reactor thread; `-1` = no pinning.
+static PIN_CORE: AtomicI64 = AtomicI64::new(-1);
+
+/// Request that the reactor thread be pinned to `core`. Takes effect
+/// only if called **before** the first registration spawns the thread
+/// (wire it from config at process start); pinning is best-effort via
+/// `taskset` and silently skipped where that isn't available.
+pub fn set_pin_core(core: usize) {
+    PIN_CORE.store(core as i64, Ordering::Relaxed);
+}
+
+/// Per-registration shared state: the reactor appends, the owner drains.
+struct RegSlot {
+    /// The reactor's duplicated handle of the registered socket.
+    stream: TcpStream,
+    /// Bytes swept off the socket, awaiting [`Registration::drain_into`].
+    inbox: TrackedMutex<Vec<u8>>,
+    /// Undrained inbox size — lock-free gauge for congestion weighting.
+    queued: AtomicUsize,
+    /// EOF or hard read error observed; final bytes still deliverable.
+    dead: AtomicBool,
+    /// Owner dropped the registration; reactor prunes it next sweep.
+    removed: AtomicBool,
+    /// Fired whenever bytes land in (or death is recorded on) this slot.
+    notify: Arc<Notify>,
+}
+
+/// Handle to one registered socket. Dropping it deregisters: the reactor
+/// prunes the slot and closes its duplicated handle on the next sweep.
+pub struct Registration {
+    slot: Arc<RegSlot>,
+    inner: Arc<Inner>,
+}
+
+impl Registration {
+    /// Move everything the reactor has swept so far into `into`
+    /// (appending). Returns [`ReadSweep::Dead`] once the socket has hit
+    /// EOF or a hard read error — any bytes swept before death are still
+    /// delivered by the same call, so no tail is lost.
+    pub fn drain_into(&self, into: &mut Vec<u8>) -> ReadSweep {
+        {
+            let mut inbox = self.slot.inbox.guard();
+            into.extend_from_slice(&inbox);
+            inbox.clear();
+        }
+        self.slot.queued.store(0, Ordering::Relaxed);
+        if self.slot.dead.load(Ordering::Relaxed) {
+            ReadSweep::Dead
+        } else {
+            ReadSweep::Alive
+        }
+    }
+
+    /// Bytes currently swept but not yet drained — the reactor-side
+    /// queue depth, folded into stripe selection as a congestion signal.
+    pub fn queued_bytes(&self) -> usize {
+        self.slot.queued.load(Ordering::Relaxed)
+    }
+
+    /// Has the reactor observed EOF or a hard read error on this socket?
+    pub fn is_dead(&self) -> bool {
+        self.slot.dead.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for Registration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registration")
+            .field("queued", &self.queued_bytes())
+            .field("dead", &self.is_dead())
+            .finish()
+    }
+}
+
+impl Drop for Registration {
+    // A short or failed wake write is fine: a full pipe already
+    // guarantees a pending wakeup, so the byte count is meaningless.
+    #[allow(clippy::unused_io_amount)]
+    fn drop(&mut self) {
+        self.slot.removed.store(true, Ordering::Relaxed);
+        // Wake the reactor so it prunes promptly (and closes its clone).
+        let _ = (&self.inner.wake_tx).write(&[1u8]);
+    }
+}
+
+/// State shared between registrants and the reactor thread.
+struct Inner {
+    /// Every live registration. Snapshot-and-release: the reactor clones
+    /// this list out before touching any inbox.
+    registry: TrackedMutex<Vec<Arc<RegSlot>>>,
+    /// Write end of the wake pipe (nonblocking; a full pipe already
+    /// guarantees a pending wakeup, so failed writes are ignored).
+    wake_tx: TcpStream,
+    /// Cumulative bytes ever swept — observability for tests/metrics.
+    swept: AtomicU64,
+}
+
+/// The process-wide read reactor. Obtain via [`global`]; there is one
+/// per process, and its thread lives for the process lifetime.
+pub struct Reactor {
+    inner: Arc<Inner>,
+}
+
+impl Reactor {
+    /// Register `stream` for reactor-driven reads. The socket is set
+    /// nonblocking permanently (writes through other handles must
+    /// tolerate `WouldBlock`; the conduit write helpers do). Bytes the
+    /// reactor sweeps land in the returned [`Registration`]'s inbox, and
+    /// each sweep that moves bytes (or records death) fires `notify`.
+    // A short or failed wake write is fine: a full pipe already
+    // guarantees a pending wakeup, so the byte count is meaningless.
+    #[allow(clippy::unused_io_amount)]
+    pub fn register(&self, stream: &TcpStream, notify: Arc<Notify>) -> io::Result<Registration> {
+        stream.set_nonblocking(true)?;
+        let clone = stream.try_clone()?;
+        let slot = Arc::new(RegSlot {
+            stream: clone,
+            inbox: TrackedMutex::new("reactor.inbox", Vec::new()),
+            queued: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+            removed: AtomicBool::new(false),
+            notify,
+        });
+        self.inner.registry.guard().push(slot.clone());
+        let _ = (&self.inner.wake_tx).write(&[1u8]);
+        Ok(Registration { slot, inner: self.inner.clone() })
+    }
+
+    /// Cumulative bytes swept off all registered sockets since the
+    /// reactor started. Monotonic; never resets.
+    pub fn bytes_swept(&self) -> u64 {
+        self.inner.swept.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide reactor, spawning its thread on first use. Fails
+/// only if the wake pipe cannot be built (loopback bind refused) or the
+/// thread cannot spawn — and then fails the same way on every call.
+pub fn global() -> io::Result<&'static Reactor> {
+    static GLOBAL: OnceLock<Option<Reactor>> = OnceLock::new();
+    match GLOBAL.get_or_init(|| build().ok()) {
+        Some(r) => Ok(r),
+        None => Err(io::Error::other("reactor unavailable: wake pipe or thread spawn failed")),
+    }
+}
+
+/// Construct the reactor: wake pipe first (single-threaded loopback TCP
+/// — connect completes against the listener backlog, then accept), then
+/// the sweep thread.
+fn build() -> io::Result<Reactor> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let wake_tx = TcpStream::connect(listener.local_addr()?)?;
+    let (wake_rx, _) = listener.accept()?;
+    drop(listener);
+    wake_tx.set_nonblocking(true)?;
+    wake_tx.set_nodelay(true)?;
+    wake_rx.set_read_timeout(Some(Duration::from_millis(1)))?;
+    let inner = Arc::new(Inner {
+        registry: TrackedMutex::new("reactor.registry", Vec::new()),
+        wake_tx,
+        swept: AtomicU64::new(0),
+    });
+    let thread_inner = inner.clone();
+    std::thread::Builder::new()
+        .name("qp-reactor".into())
+        .spawn(move || run_loop(thread_inner, wake_rx))?;
+    Ok(Reactor { inner })
+}
+
+/// Best-effort CPU pin for the current thread: resolve our tid through
+/// `/proc/thread-self` and shell out to `taskset`. Any failure (no
+/// procfs, no taskset, cpuset restrictions) silently leaves the thread
+/// unpinned — affinity is an optimisation, never a correctness need.
+fn apply_pin() {
+    let core = PIN_CORE.load(Ordering::Relaxed);
+    if core < 0 {
+        return;
+    }
+    let Ok(link) = std::fs::read_link("/proc/thread-self") else {
+        return;
+    };
+    let Some(tid) = link.file_name().and_then(|s| s.to_str()) else {
+        return;
+    };
+    let _ = std::process::Command::new("taskset")
+        .args(["-cp", &core.to_string(), tid])
+        .output();
+}
+
+/// Per-slot, per-sweep read budget: bounds how long one firehosing
+/// socket can monopolise the sweep before its peers get a turn.
+const SLOT_READ_CHUNKS: usize = 16;
+
+/// The reactor thread body: sweep every live registration, then park on
+/// the wake pipe when a whole sweep moves nothing.
+// The idle read's byte count (and error) are meaningless: any outcome —
+// wake bytes, timeout, interrupt — just restarts the sweep.
+#[allow(clippy::unused_io_amount)]
+fn run_loop(inner: Arc<Inner>, wake_rx: TcpStream) {
+    apply_pin();
+    let mut buf = [0u8; 4096];
+    loop {
+        // Snapshot the registration list and release the registry lock
+        // before touching any inbox (lock-order discipline), pruning
+        // dropped registrations on the way.
+        let regs: Vec<Arc<RegSlot>> = {
+            let mut g = inner.registry.guard();
+            g.retain(|s| !s.removed.load(Ordering::Relaxed));
+            g.clone()
+        };
+        let mut moved = 0usize;
+        for slot in &regs {
+            if slot.dead.load(Ordering::Relaxed) {
+                continue;
+            }
+            for _ in 0..SLOT_READ_CHUNKS {
+                match (&slot.stream).read(&mut buf) {
+                    Ok(0) => {
+                        slot.dead.store(true, Ordering::Relaxed);
+                        slot.notify.notify();
+                        break;
+                    }
+                    Ok(n) => {
+                        {
+                            let mut inbox = slot.inbox.guard();
+                            inbox.extend_from_slice(&buf[..n]);
+                            slot.queued.store(inbox.len(), Ordering::Relaxed);
+                        }
+                        inner.swept.fetch_add(n as u64, Ordering::Relaxed);
+                        moved += n;
+                        slot.notify.notify();
+                        if n < buf.len() {
+                            break; // short read: socket likely drained
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        slot.dead.store(true, Ordering::Relaxed);
+                        slot.notify.notify();
+                        break;
+                    }
+                }
+            }
+        }
+        if moved == 0 {
+            // Idle: park up to the wake pipe's ~1 ms read timeout. Any
+            // outcome — wake byte, timeout, interrupt — just restarts
+            // the sweep; the byte itself carries no information.
+            let mut wb = [0u8; 64];
+            let _ = (&wake_rx).read(&mut wb);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn loopback() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn reactor_sweeps_bytes_into_the_inbox_and_notifies() {
+        let (a, b) = loopback();
+        let notify = Arc::new(Notify::new());
+        let r = global().unwrap();
+        let reg = r.register(&b, notify.clone()).unwrap();
+        let swept_before = r.bytes_swept();
+        (&a).write_all(b"hello reactor").unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < 13 && Instant::now() < deadline {
+            let seen = notify.epoch();
+            reg.drain_into(&mut got);
+            if got.len() < 13 {
+                notify.wait_past(seen, Duration::from_millis(50));
+            }
+        }
+        assert_eq!(got, b"hello reactor");
+        assert!(r.bytes_swept() >= swept_before + 13, "sweep counter must advance");
+        assert_eq!(reg.queued_bytes(), 0, "drained inbox reads as empty queue");
+    }
+
+    #[test]
+    fn reactor_reports_death_after_final_bytes() {
+        let (a, b) = loopback();
+        let notify = Arc::new(Notify::new());
+        let reg = global().unwrap().register(&b, notify.clone()).unwrap();
+        (&a).write_all(b"tail").unwrap();
+        drop(a); // EOF after the final bytes
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let seen = notify.epoch();
+            if matches!(reg.drain_into(&mut got), ReadSweep::Dead) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "death must be observed promptly");
+            notify.wait_past(seen, Duration::from_millis(50));
+        }
+        assert_eq!(got, b"tail", "bytes written before EOF must still arrive");
+    }
+
+    #[test]
+    fn dropping_a_registration_prunes_it() {
+        let (_a, b) = loopback();
+        let notify = Arc::new(Notify::new());
+        let r = global().unwrap();
+        let reg = r.register(&b, notify).unwrap();
+        let slot = reg.slot.clone();
+        drop(reg);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        // The reactor drops its Arc on the next sweep; only our local
+        // clone remains.
+        while Arc::strong_count(&slot) > 1 {
+            assert!(Instant::now() < deadline, "reactor must prune dropped registrations");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}

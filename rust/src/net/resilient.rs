@@ -53,7 +53,7 @@
 
 use super::frame::Frame;
 use super::stripe::{StripedRx, StripedTx};
-use super::transport::{FrameRx, FrameTx};
+use super::transport::{FrameRx, FrameTx, PreparedFrame};
 use crate::metrics::ResilienceStats;
 use crate::Result;
 use std::net::TcpListener;
@@ -119,6 +119,16 @@ impl ReconnectingTx {
 impl FrameTx for ReconnectingTx {
     fn send(&mut self, frame: Frame) -> Result<f64> {
         self.0.send(frame)
+    }
+
+    // Forward explicitly: the newtype must not fall back to the trait's
+    // re-parsing default, or the copy-free path would silently copy.
+    fn send_prepared(&mut self, prepared: PreparedFrame) -> Result<f64> {
+        self.0.send_prepared(prepared)
+    }
+
+    fn reclaim_wire(&mut self) -> Option<Vec<u8>> {
+        self.0.reclaim_wire()
     }
 
     fn kind(&self) -> &'static str {

@@ -28,6 +28,9 @@
 //!       4 FIN_ACK{end_seq}      receiver → sender, everything received
 //!       5 TELEMETRY{len}        sender → receiver, `len` payload bytes
 //!                               follow the 13-byte header
+//!       6 HAVE{seq}             receiver → sender, advisory selective
+//!                               ack: `seq` is already parked in the
+//!                               reorder window, skip it on replay
 //! ```
 //!
 //! TELEMETRY is the one variable-length record: its `seq` field carries
@@ -41,7 +44,7 @@
 
 use super::frame::Frame;
 use crate::Result;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::time::Duration;
 
 /// Length-prefix value marking a control record (can never be a frame
@@ -65,6 +68,12 @@ pub const K_FIN_ACK: u8 = 4;
 /// Control kind: telemetry record; the `seq` field is the byte length of
 /// the opaque payload that follows the 13-byte header.
 pub const K_TELEMETRY: u8 = 5;
+/// Control kind: advisory selective ack — the receiver already holds
+/// `seq` in its reorder window, so a resyncing sender may skip it when
+/// replaying the unacked tail. Best-effort: a lost or unsupported HAVE
+/// merely degrades to full-tail replay plus receiver-side dedup (peers
+/// predating this kind ignore it via the unknown-kind arm).
+pub const K_HAVE: u8 = 6;
 
 /// Upper bound on a telemetry record's payload. Far above any real
 /// snapshot (a few KB); anything larger is a corrupt or hostile stream.
@@ -282,6 +291,11 @@ pub struct SessionTx {
     fin_acked: bool,
     /// Recycled serialization buffers (bounded by [`SPARE_BUFS`]).
     spare: Vec<Vec<u8>>,
+    /// Selective-ack state: seqs the peer reported already parked
+    /// ([`K_HAVE`]), skipped by [`SessionTx::replay_tail`]. Trimmed as
+    /// the cumulative ack advances; cleared on every `HELLO` resync
+    /// (each reconnect renegotiates what the receiver holds).
+    have: BTreeSet<u64>,
 }
 
 impl SessionTx {
@@ -294,6 +308,7 @@ impl SessionTx {
             next_seq: 0,
             fin_acked: false,
             spare: Vec::new(),
+            have: BTreeSet::new(),
         }
     }
 
@@ -302,7 +317,15 @@ impl SessionTx {
     /// [`SessionTx::record_send`]. Contents are stale; `write_into`
     /// clears it.
     pub fn take_buf(&mut self) -> Vec<u8> {
-        self.spare.pop().unwrap_or_default()
+        self.take_spare().unwrap_or_default()
+    }
+
+    /// Pop one recycled serialization buffer, or `None` when nothing has
+    /// been acked since the last take. The copy-free send path uses this
+    /// to hand retired wire buffers back to the codec thread's pool
+    /// instead of allocating fresh ones there.
+    pub fn take_spare(&mut self) -> Option<Vec<u8>> {
+        self.spare.pop()
     }
 
     /// Replay-buffer capacity (frames).
@@ -354,7 +377,8 @@ impl SessionTx {
     }
 
     /// Cumulative ack: drop everything below `next_expected`, recycling
-    /// the dropped frames' serialization buffers into the spare pool.
+    /// the dropped frames' serialization buffers into the spare pool and
+    /// trimming now-covered selective-ack entries.
     pub fn on_ack(&mut self, next_expected: u64) {
         while self.replay.front().map_or(false, |(q, _)| *q < next_expected) {
             if let Some((_, buf)) = self.replay.pop_front() {
@@ -363,6 +387,9 @@ impl SessionTx {
                 }
             }
         }
+        // split_off keeps everything >= the key: entries the cumulative
+        // position has passed are dropped, still-unacked ones survive.
+        self.have = self.have.split_off(&next_expected);
         self.acked = self.acked.max(next_expected);
     }
 
@@ -371,6 +398,11 @@ impl SessionTx {
     /// can cover the tail. After this the caller writes every frame from
     /// [`SessionTx::replay_tail`] onto that conduit.
     pub fn on_hello(&mut self, next_expected: u64) -> Result<()> {
+        // Each resync renegotiates the receiver's window contents: any
+        // HAVE records for the new conduit arrive after its HELLO, and
+        // stale ones from the previous incarnation must not suppress a
+        // replay the receiver now needs.
+        self.have.clear();
         anyhow::ensure!(
             next_expected <= self.next_seq,
             "peer expects seq {next_expected} but only {} were ever sent",
@@ -389,10 +421,26 @@ impl SessionTx {
         Ok(())
     }
 
-    /// The unacked tail, in order — what a freshly resynced conduit must
-    /// carry before any new frame.
+    /// The unacked tail, in order, minus frames the peer selectively
+    /// acked via [`K_HAVE`] — what a freshly resynced conduit must carry
+    /// before any new frame. The skipped frames stay in the replay
+    /// buffer (only a cumulative ack retires state), so a later resync
+    /// that renegotiates the window can still cover them.
     pub fn replay_tail(&self) -> impl Iterator<Item = &[u8]> {
-        self.replay.iter().map(|(_, b)| b.as_slice())
+        self.replay
+            .iter()
+            .filter(|(q, _)| !self.have.contains(q))
+            .map(|(_, b)| b.as_slice())
+    }
+
+    /// Advisory selective ack from the peer: `seq` is already parked in
+    /// its reorder window. Ignored unless `seq` is genuinely in the
+    /// unacked range — a stale or hostile HAVE must never grow state or
+    /// suppress a replay the protocol needs.
+    pub fn on_have(&mut self, seq: u64) {
+        if self.acked <= seq && seq < self.next_seq {
+            self.have.insert(seq);
+        }
     }
 
     /// Sequence numbers currently held in the replay buffer, ascending.
@@ -410,6 +458,7 @@ impl SessionTx {
         match kind {
             K_ACK | K_HELLO => self.on_ack(seq),
             K_FIN_ACK => self.fin_acked = true,
+            K_HAVE => self.on_have(seq),
             _ => {}
         }
     }
@@ -695,6 +744,65 @@ mod tests {
         }
         tx.on_ack(32);
         assert!(tx.spare.len() <= SPARE_BUFS);
+    }
+
+    #[test]
+    fn selective_acks_narrow_the_replay_tail() {
+        let mut tx = SessionTx::new(8);
+        for seq in 0..4 {
+            tx.record_send(seq, frame(seq, 16).to_bytes()).unwrap();
+        }
+        // Reconnect: the receiver needs seq 1 onward but already parked
+        // 2 — only 1 and 3 should replay.
+        tx.on_hello(1).unwrap();
+        tx.apply_ctrl(K_HAVE, 2);
+        let replayed: Vec<u64> = tx
+            .replay_tail()
+            .map(|b| Frame::from_bytes(b).unwrap().seq)
+            .collect();
+        assert_eq!(replayed, vec![1, 3], "HAVE{{2}} must be skipped");
+        assert_eq!(tx.unacked(), 3, "skipped frames stay in the replay buffer");
+    }
+
+    #[test]
+    fn hello_clears_stale_haves() {
+        let mut tx = SessionTx::new(8);
+        for seq in 0..3 {
+            tx.record_send(seq, frame(seq, 16).to_bytes()).unwrap();
+        }
+        tx.on_have(1);
+        assert_eq!(tx.replay_tail().count(), 2);
+        // A new resync renegotiates: the receiver of THIS incarnation
+        // never claimed seq 1, so the full tail must replay again.
+        tx.on_hello(0).unwrap();
+        assert_eq!(tx.replay_tail().count(), 3, "resync must forget old HAVEs");
+    }
+
+    #[test]
+    fn out_of_range_haves_are_ignored() {
+        let mut tx = SessionTx::new(8);
+        for seq in 0..3 {
+            tx.record_send(seq, frame(seq, 16).to_bytes()).unwrap();
+        }
+        tx.on_ack(1);
+        tx.on_have(0); // below the cumulative position: already retired
+        tx.on_have(7); // beyond anything ever sent: bogus
+        assert_eq!(tx.replay_tail().count(), 2, "neither HAVE may narrow the tail");
+    }
+
+    #[test]
+    fn cumulative_ack_trims_covered_haves() {
+        let mut tx = SessionTx::new(8);
+        for seq in 0..4 {
+            tx.record_send(seq, frame(seq, 16).to_bytes()).unwrap();
+        }
+        tx.on_have(1);
+        tx.on_have(3);
+        tx.on_ack(3); // passes seq 1's entry, keeps seq 3's
+        let kept: Vec<u64> = tx.have.iter().copied().collect();
+        assert_eq!(kept, vec![3], "covered HAVEs must be trimmed, live ones kept");
+        assert_eq!(tx.replay_tail().count(), 0, "the one remaining frame is HAVEd");
+        assert_eq!(tx.unacked(), 1);
     }
 
     #[test]

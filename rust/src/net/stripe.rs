@@ -36,12 +36,13 @@ use super::conduit::{
 };
 use super::frame::Frame;
 use super::session::{
-    parse_ctrl, ResilienceConfig, RxStep, SessionRx, SessionTx, WireItem, CTRL_MARKER, K_ACK,
-    K_FIN, K_FIN_ACK, K_HELLO, MAX_TELEMETRY_BYTES,
+    ctrl_record, parse_ctrl, ResilienceConfig, RxStep, SessionRx, SessionTx, WireDecoder,
+    WireItem, CTRL_MARKER, K_ACK, K_FIN, K_FIN_ACK, K_HAVE, K_HELLO, MAX_TELEMETRY_BYTES,
 };
 use super::tcp::Backoff;
-use super::transport::{FrameRx, FrameTx};
+use super::transport::{FrameRx, FrameTx, PreparedFrame};
 use crate::metrics::{ResilienceStats, StripeStats};
+use crate::util::sync::Notify;
 use crate::Result;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
@@ -88,6 +89,10 @@ pub struct StripedTx {
     scratch: Vec<u8>,
     /// Serialization scratch for outbound telemetry records.
     tele_scratch: Vec<u8>,
+    /// Fired by the reactor whenever inbound bytes (acks) land on any of
+    /// this boundary's conduits — the backpressure waits park on it
+    /// instead of sleeping blind.
+    notify: Arc<Notify>,
 }
 
 impl StripedTx {
@@ -115,6 +120,7 @@ impl StripedTx {
             sends_since_pump: 0,
             scratch: Vec::new(),
             tele_scratch: Vec::new(),
+            notify: Arc::new(Notify::new()),
         }
     }
 
@@ -158,13 +164,24 @@ impl StripedTx {
     /// partial collapse its revival stalls add up to.
     pub fn send(&mut self, frame: Frame) -> Result<f64> {
         anyhow::ensure!(!self.finished, "send on a finished striped link");
-        let t0 = Instant::now();
         let seq = frame.seq;
         // Serialize into a buffer recycled from previously acked frames —
         // the replay buffer owns each frame's bytes until the cumulative
         // ack releases them, so steady state allocates nothing per frame.
         let mut bytes = self.session.take_buf();
         frame.write_into(&mut bytes);
+        self.send_bytes(seq, bytes)
+    }
+
+    /// The send core behind both [`StripedTx::send`] and the copy-free
+    /// [`super::transport::FrameTx::send_prepared`] path: takes the
+    /// frame's already-serialized wire bytes, which the replay buffer
+    /// then owns until the cumulative ack releases them. The socket
+    /// write borrows the bytes out of the replay buffer, so no payload
+    /// copy happens past this point.
+    fn send_bytes(&mut self, seq: u64, bytes: Vec<u8>) -> Result<f64> {
+        anyhow::ensure!(!self.finished, "send on a finished striped link");
+        let t0 = Instant::now();
         self.sends_since_pump += 1;
         if self.sends_since_pump >= PUMP_EVERY
             || self.session.unacked() + 1 >= self.session.capacity() / 2
@@ -291,11 +308,12 @@ impl StripedTx {
                 && self.any_connected()
                 && Instant::now() < slice_end.min(deadline)
             {
+                let seen = self.notify.epoch();
                 self.pump_all();
                 if self.session.fin_acked() {
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(2));
+                self.notify.wait_past(seen, Duration::from_millis(2));
             }
             self.revive_due();
             if self.session.fin_acked() {
@@ -333,10 +351,25 @@ impl StripedTx {
         }
     }
 
-    /// Round-robin over connected conduits, skipping any whose recent
-    /// write stall sits well above the best sibling's (the least-stalled
-    /// bias; an absolute 1 ms slack keeps noise from defeating the
-    /// rotation).
+    /// Congestion cost of conduit `i`: the write-stall EWMA plus a
+    /// penalty for inbound bytes the reactor has swept off this conduit
+    /// that the boundary hasn't drained yet. A backlogged inbox means
+    /// the conduit's ack stream is running behind its siblings' — the
+    /// reactor's registration state is the live congestion signal the
+    /// old blocking sweeps never had. The pump drains all inboxes every
+    /// cycle, so with idle queues this reduces exactly to the
+    /// least-stalled EWMA bias. Scale: ~1 µs of penalty per 16 queued
+    /// bytes, putting a few KB of backlog on par with a sub-millisecond
+    /// stall.
+    fn conduit_cost(&self, i: usize) -> f64 {
+        let queued = self.conduits[i].reg.as_ref().map_or(0, |r| r.queued_bytes());
+        self.conduits[i].stall_ewma_us + queued as f64 / 16.0
+    }
+
+    /// Round-robin over connected conduits, skipping any whose
+    /// congestion cost (recent write stall + undrained reactor inbox)
+    /// sits well above the best sibling's (an absolute 1 ms slack keeps
+    /// noise from defeating the rotation).
     fn pick_conduit(&mut self) -> Option<usize> {
         let connected: Vec<usize> = (0..self.conduits.len())
             .filter(|&i| self.conduits[i].is_connected())
@@ -344,32 +377,33 @@ impl StripedTx {
         if connected.is_empty() {
             return None;
         }
-        let min_ewma = connected
+        let min_cost = connected
             .iter()
-            .map(|&i| self.conduits[i].stall_ewma_us)
+            .map(|&i| self.conduit_cost(i))
             .fold(f64::INFINITY, f64::min);
         self.rr = self.rr.wrapping_add(1);
         let start = self.rr % connected.len();
         for k in 0..connected.len() {
             let i = connected[(start + k) % connected.len()];
-            if self.conduits[i].stall_ewma_us <= min_ewma * 2.0 + 1e3 {
+            if self.conduit_cost(i) <= min_cost * 2.0 + 1e3 {
                 return Some(i);
             }
         }
         Some(connected[start])
     }
 
-    /// Read whatever control bytes are available on every connected
-    /// conduit, applying acks to the shared session. One [`WireDecoder`]
-    /// per conduit parses both directions' wire format; a data frame
-    /// arriving at the *sender* is a desynced peer, cured by reconnect.
+    /// Drain whatever control bytes the reactor has swept off every
+    /// connected conduit, applying acks to the shared session. One
+    /// [`WireDecoder`] per conduit parses both directions' wire format;
+    /// a data frame arriving at the *sender* is a desynced peer, cured
+    /// by reconnect.
     fn pump_all(&mut self) {
         for i in 0..self.conduits.len() {
             self.scratch.clear();
             let sweep = {
-                let c = &mut self.conduits[i];
-                match c.conn.as_mut() {
-                    Some(stream) => read_available(stream, &mut self.scratch),
+                let c = &self.conduits[i];
+                match c.reg.as_ref() {
+                    Some(reg) => reg.drain_into(&mut self.scratch),
                     None => continue, // down conduit: nothing to pump
                 }
             };
@@ -415,6 +449,7 @@ impl StripedTx {
         let mut last_acked = self.session.acked();
         let mut stalled_since = Instant::now();
         loop {
+            let seen = self.notify.epoch();
             self.pump_all();
             if self.session.has_room() {
                 return Ok(());
@@ -447,7 +482,9 @@ impl StripedTx {
                     );
                 }
             }
-            std::thread::sleep(Duration::from_millis(2));
+            // Park until the reactor sweeps more ack bytes in (bounded,
+            // so revival schedules and the stall clock keep ticking).
+            self.notify.wait_past(seen, Duration::from_millis(2));
         }
     }
 
@@ -595,6 +632,30 @@ impl StripedTx {
         let (kind, next_expected) = parse_ctrl(&rec);
         anyhow::ensure!(kind == K_HELLO, "expected HELLO, got control kind {kind}");
         self.session.on_hello(next_expected)?;
+        // Selective acks: the receiver batches a HAVE record for every
+        // seq parked in its reorder window right behind the HELLO, in
+        // the same write. Sweep whatever of that has arrived (best
+        // effort — the stream is not yet reactor-registered, so this is
+        // a direct nonblocking read) and apply it before replaying; any
+        // HAVE that hasn't landed yet simply costs a replayed frame the
+        // receiver dedups. The decoder is kept and moved into the
+        // conduit below so a partial trailing record is never lost.
+        let mut decoder = WireDecoder::new();
+        self.scratch.clear();
+        if matches!(read_available(&mut stream, &mut self.scratch), ReadSweep::Dead) {
+            anyhow::bail!("peer vanished right after its HELLO");
+        }
+        decoder.extend(&self.scratch);
+        loop {
+            match decoder.next() {
+                Ok(Some(WireItem::Ctrl(kind, seq))) => self.session.apply_ctrl(kind, seq),
+                Ok(Some(WireItem::Telemetry(_))) => {}
+                Ok(None) => break,
+                Ok(Some(WireItem::Frame(_))) | Err(_) => {
+                    anyhow::bail!("peer desynced during the handshake")
+                }
+            }
+        }
         let replay_owed = self.dirty || self.conduits[i].ever_connected;
         let mut replayed = 0u64;
         let mut replayed_bytes = 0u64;
@@ -617,7 +678,12 @@ impl StripedTx {
             self.stripe_stats[i].frames.fetch_add(replayed, Relaxed);
             self.stripe_stats[i].bytes.fetch_add(replayed_bytes, Relaxed);
         }
-        self.conduits[i].install(stream);
+        // Hand the fresh connection to the reactor. The handshake sweep's
+        // decoder moves into the conduit so partial bytes carry over.
+        self.conduits[i].decoder = decoder;
+        self.conduits[i]
+            .install(stream, &self.notify)
+            .map_err(|e| anyhow::anyhow!("reactor registration failed: {e}"))?;
         if replay_owed {
             // Everything unacked is back on the wire via this conduit;
             // nothing is lost anymore until the next death-with-unacked.
@@ -630,6 +696,16 @@ impl StripedTx {
 impl FrameTx for StripedTx {
     fn send(&mut self, frame: Frame) -> Result<f64> {
         StripedTx::send(self, frame)
+    }
+
+    fn send_prepared(&mut self, prepared: PreparedFrame) -> Result<f64> {
+        // Zero-copy: the codec thread's serialization buffer moves into
+        // the replay buffer and the socket write borrows it from there.
+        self.send_bytes(prepared.seq, prepared.wire)
+    }
+
+    fn reclaim_wire(&mut self) -> Option<Vec<u8>> {
+        self.session.take_spare()
     }
 
     fn kind(&self) -> &'static str {
@@ -678,6 +754,10 @@ pub struct StripedRx {
     /// Telemetry payloads decoded off the data stream, awaiting
     /// [`StripedRx::poll_telemetry`] (arrival order).
     tele_inbox: Vec<Vec<u8>>,
+    /// Fired by the reactor whenever inbound bytes land on any of this
+    /// boundary's conduits — idle `recv` parks on it instead of a
+    /// per-conduit blocking read or a poll sleep.
+    notify: Arc<Notify>,
 }
 
 impl StripedRx {
@@ -719,6 +799,7 @@ impl StripedRx {
             done: false,
             scratch: Vec::new(),
             tele_inbox: Vec::new(),
+            notify: Arc::new(Notify::new()),
         }
     }
 
@@ -747,6 +828,11 @@ impl StripedRx {
             if self.done {
                 return Ok(None);
             }
+            // Epoch snapshot BEFORE the poll: bytes the reactor sweeps
+            // in while we're polling bump the epoch past `seen`, so the
+            // idle wait below returns immediately instead of losing the
+            // wakeup.
+            let seen = self.notify.epoch();
             self.accept_new();
             if self.conduits.is_empty() {
                 self.await_peer()?;
@@ -756,33 +842,13 @@ impl StripedRx {
             self.try_ack(false);
             self.try_fin_ack();
             if !progressed && !self.session.has_ready() && !self.done {
-                if self.conduits.len() == 1 {
-                    self.block_on_single();
-                } else {
-                    std::thread::sleep(Duration::from_millis(1));
-                }
+                // Park until the reactor sweeps more bytes in. Bounded:
+                // a freshly dialing conduit sits in the listener backlog
+                // without firing any notify, so the accept sweep must
+                // still come around on its own.
+                self.notify.wait_past(seen, Duration::from_millis(5));
             }
         }
-    }
-
-    /// With exactly one conduit (the resilient N = 1 default), idle time
-    /// is spent in one bounded blocking read instead of a poll sleep — no
-    /// busy wakeups and no added per-frame latency on a quiet link.
-    /// EOF/errors are left for the next poll sweep to classify (EOF is
-    /// sticky), and the 20 ms bound keeps re-accept sweeps responsive.
-    fn block_on_single(&mut self) {
-        use std::io::Read;
-        let c = &mut self.conduits[0];
-        if c.stream.set_read_timeout(Some(Duration::from_millis(20))).is_err() {
-            return;
-        }
-        let mut tmp = [0u8; 4096];
-        if let Ok(n) = c.stream.read(&mut tmp) {
-            if n > 0 {
-                c.decoder.extend(&tmp[..n]);
-            }
-        }
-        c.stream.set_read_timeout(None).ok();
     }
 
     /// Greet every connection waiting on the listener (non-blocking).
@@ -794,13 +860,27 @@ impl StripedRx {
 
     fn adopt(&mut self, mut stream: TcpStream) {
         stream.set_nodelay(true).ok();
-        let hello = self.session.hello_record();
-        if write_raw(&mut stream, &hello).is_err() {
+        // Greet with the cumulative position, followed by one advisory
+        // HAVE per seq already parked in the reorder window — all in a
+        // single write, so the dialer's post-HELLO sweep sees the whole
+        // batch before it starts replaying and can skip frames other
+        // stripes already delivered.
+        let mut greeting = self.session.hello_record().to_vec();
+        for seq in self.session.parked_seqs() {
+            greeting.extend_from_slice(&ctrl_record(K_HAVE, seq));
+        }
+        if write_raw(&mut stream, &greeting).is_err() {
             return; // stale backlog entry; the dialer will retry
         }
         // The HELLO just written is a cumulative ack.
         let pos = self.session.next_expected();
         self.session.mark_acked(pos);
+        let conduit = match AcceptedConduit::new(stream, &self.notify) {
+            Ok(c) => c,
+            // Reactor registration failed: the conduit never joins; the
+            // dialer sees EOF and redials, same as a failed greeting.
+            Err(_) => return,
+        };
         if self.ever_connected && self.deaths > 0 {
             // Re-accepts count separately from the dialer's reconnects:
             // a loopback link shares one stats block between both ends,
@@ -812,7 +892,7 @@ impl StripedRx {
             self.deaths -= 1;
         }
         self.ever_connected = true;
-        self.conduits.push(AcceptedConduit::new(stream));
+        self.conduits.push(conduit);
     }
 
     /// Block (bounded) until at least one conduit connects — the
@@ -863,10 +943,7 @@ impl StripedRx {
         let mut i = 0;
         while i < self.conduits.len() {
             self.scratch.clear();
-            let sweep = {
-                let c = &mut self.conduits[i];
-                read_available(&mut c.stream, &mut self.scratch)
-            };
+            let sweep = self.conduits[i].reg.drain_into(&mut self.scratch);
             if !self.scratch.is_empty() {
                 self.conduits[i].decoder.extend(&self.scratch);
             }

@@ -21,7 +21,7 @@ use super::frame::Frame;
 use super::session::{
     append_telemetry_record, parse_ctrl, CTRL_LEN, CTRL_MARKER, K_TELEMETRY, MAX_TELEMETRY_BYTES,
 };
-use super::transport::{FrameRx, FrameTx};
+use super::transport::{FrameRx, FrameTx, PreparedFrame};
 use crate::Result;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -39,6 +39,9 @@ pub struct TcpFrameSender {
     /// Per-link wire buffer: frames serialize into it ([`Frame::write_into`])
     /// instead of allocating a fresh `Vec` per frame.
     wire: Vec<u8>,
+    /// Written-out [`PreparedFrame`] buffers awaiting
+    /// [`FrameTx::reclaim_wire`], so the producing stage can reuse them.
+    spares: Vec<Vec<u8>>,
 }
 
 /// Receiver half of a plain (non-resilient) TCP stage boundary.
@@ -55,7 +58,7 @@ pub fn framed(stream: TcpStream) -> Result<(TcpFrameSender, TcpFrameReceiver)> {
     stream.set_nodelay(true).ok();
     let rx_stream = stream.try_clone()?;
     Ok((
-        TcpFrameSender { stream, wire: Vec::new() },
+        TcpFrameSender { stream, wire: Vec::new(), spares: Vec::new() },
         TcpFrameReceiver { stream: rx_stream, buf: Vec::new(), tele_inbox: Vec::new() },
     ))
 }
@@ -155,6 +158,9 @@ pub fn loopback_pair(
 ) -> Result<((TcpFrameSender, TcpFrameReceiver), (TcpFrameSender, TcpFrameReceiver))> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
+    // lint: allow(thread-spawn): short-lived connect helper for the
+    // loopback handshake, joined before this function returns — not a
+    // per-conduit reader loop (those belong to the reactor).
     let connector = std::thread::spawn(move || TcpStream::connect(addr));
     let (accepted, _) = listener.accept()?;
     let connected = connector
@@ -201,6 +207,24 @@ impl TcpFrameSender {
 impl FrameTx for TcpFrameSender {
     fn send(&mut self, frame: Frame) -> Result<f64> {
         TcpFrameSender::send(self, frame)
+    }
+
+    fn send_prepared(&mut self, prepared: PreparedFrame) -> Result<f64> {
+        // Already serialized: write the bytes straight out, then park the
+        // buffer for reclaim_wire so the stage loop can reuse it.
+        let t0 = Instant::now();
+        self.stream.write_all(&(prepared.wire.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&prepared.wire)?;
+        self.stream.flush()?;
+        let busy = t0.elapsed().as_secs_f64();
+        if self.spares.len() < 4 {
+            self.spares.push(prepared.wire);
+        }
+        Ok(busy)
+    }
+
+    fn reclaim_wire(&mut self) -> Option<Vec<u8>> {
+        self.spares.pop()
     }
 
     fn kind(&self) -> &'static str {

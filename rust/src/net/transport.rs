@@ -31,6 +31,22 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Duration;
 
+/// A frame already serialized to its wire bytes by the producing stage.
+///
+/// This is the unit of the copy-free handoff path: the stage loop
+/// serializes **once** (via [`Frame::write_into`] into a recycled
+/// buffer), and the same `Vec<u8>` then travels through the boundary
+/// channel, the sender thread, the transport's replay buffer and the
+/// socket write without being copied again. `seq` mirrors the sequence
+/// number already encoded in `wire` so bookkeeping (in-flight counters,
+/// replay keys) never needs to re-parse the bytes.
+pub struct PreparedFrame {
+    /// Data-plane sequence number, identical to the one inside `wire`.
+    pub seq: u64,
+    /// The complete serialized frame (header + payload + CRC).
+    pub wire: Vec<u8>,
+}
+
 /// Blocking sender half of a stage-to-stage transport.
 ///
 /// `send` returns the seconds the underlying link was busy shipping the
@@ -41,6 +57,24 @@ use std::time::Duration;
 pub trait FrameTx: Send {
     /// Ship one frame; returns seconds the link was busy (see trait docs).
     fn send(&mut self, frame: Frame) -> Result<f64>;
+    /// Ship a frame the caller already serialized ([`PreparedFrame`]).
+    /// Transports that keep frames as bytes internally (TCP, resilient,
+    /// striped, in-proc) override this to move the buffer straight through
+    /// with zero copies; the default re-parses and falls back to [`send`]
+    /// so simple test transports keep working unchanged.
+    ///
+    /// [`send`]: FrameTx::send
+    fn send_prepared(&mut self, prepared: PreparedFrame) -> Result<f64> {
+        self.send(Frame::from_bytes(&prepared.wire)?)
+    }
+    /// Hand back a spare wire buffer the transport no longer needs (an
+    /// acked replay-buffer entry, a written-out frame), so the producing
+    /// stage can reuse it for the next [`PreparedFrame`] instead of
+    /// allocating. `None` when nothing is available; the default (for
+    /// transports without buffer pooling) is always `None`.
+    fn reclaim_wire(&mut self) -> Option<Vec<u8>> {
+        None
+    }
     /// Transport name for logs/reports.
     fn kind(&self) -> &'static str;
     /// Negotiate a clean end of stream after the last frame. Resilient
@@ -218,6 +252,16 @@ impl InProcSender {
 impl FrameTx for InProcSender {
     fn send(&mut self, frame: Frame) -> Result<f64> {
         InProcSender::send(self, frame)
+    }
+
+    fn send_prepared(&mut self, prepared: PreparedFrame) -> Result<f64> {
+        // Already serialized: charge the shaped link for the bytes and move
+        // the buffer into the channel without re-encoding.
+        let occupied = self.link.send(prepared.wire.len());
+        self.tx
+            .send(prepared.wire)
+            .map_err(|_| anyhow::anyhow!("receiver dropped"))?;
+        Ok(occupied.as_secs_f64())
     }
 
     fn kind(&self) -> &'static str {

@@ -36,7 +36,7 @@ use crate::metrics::{
 };
 use crate::monitor::WindowMonitor;
 use crate::net::frame::Frame;
-use crate::net::transport::{FrameRx, FrameTx, LinkSpec};
+use crate::net::transport::{FrameRx, FrameTx, LinkSpec, PreparedFrame};
 use crate::pipeline::stage::StageFactory;
 use crate::quant::codec::Codec;
 use crate::quant::{calibrate, Method, QuantParams, BITS_NONE};
@@ -247,6 +247,40 @@ impl LinkCounters {
     }
 }
 
+/// Shared pool of spare wire buffers circulating between a stage loop
+/// (which serializes outgoing frames into them) and its sender thread
+/// (which reclaims them from the transport once the bytes are written or
+/// acked). Closes the copy-free loop: in steady state the same handful of
+/// `Vec<u8>`s cycle codec → channel → transport → pool → codec, with zero
+/// payload copies after the single serialization. Bounded so a burst
+/// can't hoard memory forever.
+pub(crate) struct WirePool {
+    bufs: TrackedMutex<Vec<Vec<u8>>>,
+}
+
+/// Spare buffers kept per boundary; beyond this, returns are dropped.
+const WIRE_POOL_CAP: usize = 8;
+
+impl WirePool {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(WirePool { bufs: TrackedMutex::new("driver.wire_pool", Vec::new()) })
+    }
+
+    /// A spare buffer, or a fresh one when the pool is dry.
+    pub(crate) fn take(&self) -> Vec<u8> {
+        self.bufs.guard().pop().unwrap_or_default()
+    }
+
+    /// Return a buffer for reuse (dropped when the pool is full).
+    pub(crate) fn put(&self, mut buf: Vec<u8>) {
+        let mut bufs = self.bufs.guard();
+        if bufs.len() < WIRE_POOL_CAP {
+            buf.clear();
+            bufs.push(buf);
+        }
+    }
+}
+
 struct SourceMsg {
     seq: u64,
     tensor: Tensor,
@@ -264,9 +298,10 @@ enum StageIn {
 
 enum StageOut {
     Downstream {
-        frame_tx: SyncSender<Frame>,
+        frame_tx: SyncSender<PreparedFrame>,
         bits: Arc<AtomicU8>,
         quant: LinkQuant,
+        pool: Arc<WirePool>,
     },
     Sink(SyncSender<SinkMsg>),
 }
@@ -432,17 +467,19 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
                     .spawn(move || stage_thread(i, factory, input, out, secs, errs))?,
             );
         } else {
-            let (frame_tx, frame_rx) = sync_channel::<Frame>(inflight);
+            let (frame_tx, frame_rx) = sync_channel::<PreparedFrame>(inflight);
             let (link_tx, link_rx) = link_iter
                 .next()
                 // lint: allow(expect): links.len() + 1 == n is ensured at
                 // entry, so every non-last stage has exactly one link to take.
                 .expect("link count checked above")
                 .into_endpoints(inflight);
+            let pool = WirePool::new();
             let out = StageOut::Downstream {
                 frame_tx,
                 bits: link_bits[i].clone(),
                 quant,
+                pool: pool.clone(),
             };
             threads.push(
                 std::thread::Builder::new()
@@ -466,7 +503,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
                             // In-process runs skip wire telemetry: every
                             // stage already records into the one shared
                             // timeline this RunReport returns.
-                            bits, tl, counters, errs, start, None,
+                            bits, tl, counters, errs, start, None, pool,
                         )
                     })?,
             );
@@ -650,12 +687,19 @@ fn stage_loop(
                     return Ok(()); // sink finished early
                 }
             }
-            StageOut::Downstream { frame_tx, bits, quant } => {
+            StageOut::Downstream { frame_tx, bits, quant, pool } => {
                 let enc = encode_at_current_bits(
                     &mut codec, &out.data, quant, bits, &mut cached, &mut since_calib,
                 )?;
+                // Serialize ONCE, into a pooled wire buffer; from here the
+                // same Vec travels channel → sender thread → transport
+                // (replay buffer, socket write) without another copy.
                 let frame = Frame::new(seq, out.shape.clone(), enc);
-                if frame_tx.send(frame).is_err() {
+                let mut wire = pool.take();
+                frame.write_into(&mut wire);
+                let Frame { enc, .. } = frame;
+                codec.recycle(enc); // reuse the payload allocation next encode
+                if frame_tx.send(PreparedFrame { seq, wire }).is_err() {
                     return Ok(());
                 }
             }
@@ -706,7 +750,7 @@ pub(crate) fn encode_at_current_bits(
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn sender_thread(
     stage: usize,
-    frame_rx: Receiver<Frame>,
+    frame_rx: Receiver<PreparedFrame>,
     mut link_tx: Box<dyn FrameTx>,
     window: u64,
     batch: usize,
@@ -718,6 +762,7 @@ pub(crate) fn sender_thread(
     errors: Arc<TrackedMutex<Vec<String>>>,
     start: Instant,
     mut telemetry: Option<TelemetryTap>,
+    pool: Arc<WirePool>,
 ) {
     let mut monitor = WindowMonitor::new(window, batch);
     let mut ctl = adapt.map(|cfg| {
@@ -725,18 +770,18 @@ pub(crate) fn sender_thread(
         c.set_bits(initial_bits);
         c
     });
-    while let Ok(frame) = frame_rx.recv() {
-        let wire = frame.wire_len();
+    while let Ok(prepared) = frame_rx.recv() {
+        let wire = prepared.wire.len();
         if let Some(t) = &mut telemetry {
             t.shared.dequeued.fetch_add(1, Ordering::Relaxed);
-            t.note_seq(frame.seq);
+            t.note_seq(prepared.seq);
         }
-        // On a resilient link `send` rides out transient failures
+        // On a resilient link `send_prepared` rides out transient failures
         // internally: the reconnect stall comes back as busy time, the
         // monitor turns it into collapsed measured bandwidth, and the
         // controller sheds bits for the outage. Only a hard failure
         // (reconnect budget exhausted) reaches the error path.
-        let busy = match link_tx.send(frame) {
+        let busy = match link_tx.send_prepared(prepared) {
             Ok(b) => b,
             Err(e) => {
                 errors
@@ -745,6 +790,12 @@ pub(crate) fn sender_thread(
                 return;
             }
         };
+        // Close the buffer loop: whatever the transport is done with
+        // (acked replay entries, written-out frames) goes back to the
+        // stage loop for the next serialization.
+        while let Some(buf) = link_tx.reclaim_wire() {
+            pool.put(buf);
+        }
         counters.bytes.fetch_add(wire as u64, Ordering::Relaxed);
         counters.frames.fetch_add(1, Ordering::Relaxed);
         if let Some(stats) = monitor.record_send(wire, busy) {

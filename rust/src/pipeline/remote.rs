@@ -28,10 +28,10 @@ use crate::data::AccuracyMeter;
 use crate::metrics::telemetry::{CoordinatorSummary, PipelineReport, TelemetryRelay};
 use crate::metrics::{LatencyHisto, ResilienceSummary, StripeSummary, Timeline};
 use crate::net::frame::Frame;
-use crate::net::transport::{FrameRx, FrameTx};
+use crate::net::transport::{FrameRx, FrameTx, PreparedFrame};
 use crate::pipeline::driver::{
     encode_at_current_bits, sender_thread, LinkCounters, LinkQuant, StageTelemetryShared,
-    TelemetryTap, Workload,
+    TelemetryTap, WirePool, Workload,
 };
 use crate::pipeline::stage::StageFactory;
 use crate::quant::codec::Codec;
@@ -134,7 +134,8 @@ pub fn run_worker(
     let counters = Arc::new(LinkCounters::default());
     let errors: Arc<TrackedMutex<Vec<String>>> =
         Arc::new(TrackedMutex::new("worker.errors", Vec::new()));
-    let (frame_tx, frame_rx) = sync_channel::<Frame>(cfg.inflight.max(1));
+    let (frame_tx, frame_rx) = sync_channel::<PreparedFrame>(cfg.inflight.max(1));
+    let pool = WirePool::new();
     // Telemetry plumbing: the stage loop updates the shared counters and
     // relays upstream snapshots into `relay`; the sender thread's tap
     // snapshots both forward along the data path (toward the
@@ -161,18 +162,19 @@ pub fn run_worker(
         let counters = counters.clone();
         let errs = errors.clone();
         let (stage, window, batch) = (cfg.stage, cfg.window, cfg.microbatch);
+        let pool = pool.clone();
         std::thread::Builder::new()
             .name(format!("qp-worker-send-{stage}"))
             .spawn(move || {
                 sender_thread(
                     stage, frame_rx, tx, window, batch, adapt, initial_bits,
-                    bits, tl, counters, errs, start, tap,
+                    bits, tl, counters, errs, start, tap, pool,
                 )
             })?
     };
 
     let (loop_result, frames, compute_secs) =
-        worker_stage_loop(cfg, &mut rx, frame_tx, bits, factory, &shared, &relay);
+        worker_stage_loop(cfg, &mut rx, frame_tx, bits, factory, &shared, &relay, &pool);
     // frame_tx was moved into the loop and is dropped by now, so the
     // sender drains its channel, runs the downstream drain, and exits.
     let _ = sender.join();
@@ -199,14 +201,16 @@ pub fn run_worker(
 
 /// Returns the loop outcome WITH the progress counters — a failure after
 /// frame 500 still reports 500 frames of progress.
+#[allow(clippy::too_many_arguments)]
 fn worker_stage_loop(
     cfg: WorkerConfig,
     rx: &mut Box<dyn FrameRx>,
-    frame_tx: SyncSender<Frame>,
+    frame_tx: SyncSender<PreparedFrame>,
     bits: Arc<AtomicU8>,
     factory: StageFactory,
     shared: &StageTelemetryShared,
     relay: &TrackedMutex<TelemetryRelay>,
+    pool: &WirePool,
 ) -> (Result<()>, u64, f64) {
     let mut frames = 0u64;
     let mut compute_secs = 0f64;
@@ -253,7 +257,15 @@ fn worker_stage_loop(
                 &mut codec, &out.data, &cfg.quant, &bits, &mut cached, &mut since_calib,
             )?;
             shared.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            if frame_tx.send(Frame::new(seq, out.shape.clone(), enc)).is_err() {
+            // Serialize ONCE into a pooled wire buffer; the sender thread
+            // ships the same bytes and the transport keeps them for replay
+            // — no further copies (see the driver's stage loop).
+            let out_frame = Frame::new(seq, out.shape.clone(), enc);
+            let mut wire = pool.take();
+            out_frame.write_into(&mut wire);
+            let Frame { enc, .. } = out_frame;
+            codec.recycle(enc);
+            if frame_tx.send(PreparedFrame { seq, wire }).is_err() {
                 // Sender died (downstream link failure, already recorded).
                 return Ok(());
             }

@@ -102,6 +102,66 @@ impl<T> DerefMut for TrackedGuard<'_, T> {
     }
 }
 
+/// An epoch-counting wakeup latch: the missed-notification-proof
+/// primitive behind the reactor's "bytes may have arrived" signal.
+///
+/// A plain `Condvar` loses notifications that fire between a caller's
+/// check and its wait. `Notify` closes that race with a monotonically
+/// increasing epoch: readers snapshot [`Notify::epoch`] *before*
+/// checking their condition, and [`Notify::wait_past`] returns
+/// immediately if any notification has happened since that snapshot —
+/// the notification cannot be lost, only observed early.
+///
+/// Uses a raw `Mutex`/`Condvar` pair (this module is the one place
+/// allowed to): the lock is held for a single integer bump, is a leaf
+/// (nothing else is ever acquired under it), and `Condvar::wait_timeout`
+/// needs the real `MutexGuard` type.
+#[derive(Debug, Default)]
+pub struct Notify {
+    epoch: Mutex<u64>,
+    cv: std::sync::Condvar,
+}
+
+impl Notify {
+    /// A latch at epoch 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wake every current and future waiter: bump the epoch and signal.
+    pub fn notify(&self) {
+        *lock(&self.epoch) += 1;
+        self.cv.notify_all();
+    }
+
+    /// Current epoch. Snapshot this *before* checking the condition the
+    /// notification guards, then pass it to [`Notify::wait_past`].
+    pub fn epoch(&self) -> u64 {
+        *lock(&self.epoch)
+    }
+
+    /// Block until the epoch moves past `seen` or `timeout` elapses
+    /// (whichever first); returns the epoch at wakeup. Returns
+    /// immediately if a notification already happened after the `seen`
+    /// snapshot was taken.
+    pub fn wait_past(&self, seen: u64, timeout: std::time::Duration) -> u64 {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = lock(&self.epoch);
+        while *guard <= seen {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            guard = g;
+        }
+        *guard
+    }
+}
+
 /// Debug-build lock-order tracking. Everything here compiles to nothing
 /// when `debug_assertions` is off.
 #[cfg(debug_assertions)]
@@ -408,5 +468,44 @@ mod tests {
         let m = TrackedMutex::new("test.sync.into_inner", 41u32);
         *m.guard() += 1;
         assert_eq!(m.into_inner(), 42);
+    }
+
+    #[test]
+    fn notify_wakes_a_waiter() {
+        let n = Arc::new(Notify::new());
+        let seen = n.epoch();
+        let n2 = n.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            n2.notify();
+        });
+        let after = n.wait_past(seen, std::time::Duration::from_secs(5));
+        assert!(after > seen, "wait_past must observe the notification");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn notify_between_snapshot_and_wait_is_not_lost() {
+        // The race a bare Condvar loses: notification fires after the
+        // epoch snapshot but before the wait. wait_past must return
+        // immediately instead of eating the full timeout.
+        let n = Notify::new();
+        let seen = n.epoch();
+        n.notify();
+        let t0 = std::time::Instant::now();
+        let after = n.wait_past(seen, std::time::Duration::from_secs(5));
+        assert!(after > seen);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "already-notified wait must not block"
+        );
+    }
+
+    #[test]
+    fn notify_wait_times_out_quietly() {
+        let n = Notify::new();
+        let seen = n.epoch();
+        let after = n.wait_past(seen, std::time::Duration::from_millis(5));
+        assert_eq!(after, seen, "no notification: epoch unchanged after timeout");
     }
 }

@@ -674,6 +674,105 @@ fn resilient_worker_chain_survives_link_kill() {
     );
 }
 
+#[test]
+fn reactor_sweeps_every_conduit_and_survives_a_stripe_kill() {
+    // The process-wide read reactor owns every conduit's receive side.
+    // Kill one of three stripes mid-stream: the transfer must complete
+    // with zero loss, duplication, or reorder; the reconnect must be
+    // recorded; and the reactor's sweep counter must have moved — if the
+    // bytes arrived any other way, a per-conduit reader thread snuck back
+    // onto the receive path.
+    use quantpipe::net::reactor;
+    let swept_before = reactor::global().unwrap().bytes_swept();
+    let mut rcfg = fast_resilience();
+    rcfg.replay_capacity = 8;
+    let (mut tx, mut rx) = striped_loopback_pair(3, &rcfg).unwrap();
+    let stats = tx.stats();
+    let kill = tx.kill_switch_for(0);
+    let total = 40u64;
+    let killer = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while !kill.kill() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
+    let sender = std::thread::spawn(move || {
+        let mut c = quantpipe::quant::codec::Codec::default();
+        for seq in 0..total {
+            let x: Vec<f32> = (0..256).map(|i| (i as f32 + seq as f32).sin()).collect();
+            let enc = c.encode(&x, Method::Aciq, 8).unwrap();
+            tx.send(Frame::new(seq, vec![256], enc)).unwrap();
+            // Pace the stream so the kill lands with frames in flight.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        tx.finish().unwrap();
+    });
+    for want in 0..total {
+        assert_eq!(
+            rx.recv().unwrap().unwrap().seq,
+            want,
+            "loss/dup/reorder across the stripe kill"
+        );
+    }
+    assert!(rx.recv().unwrap().is_none(), "FIN must close cleanly after the kill");
+    sender.join().unwrap();
+    killer.join().unwrap();
+    assert!(
+        stats.snapshot().reconnects >= 1,
+        "the killed stripe must have reconnected: {:?}",
+        stats.snapshot()
+    );
+    let swept_after = reactor::global().unwrap().bytes_swept();
+    assert!(
+        swept_after > swept_before,
+        "reactor swept nothing ({swept_before} → {swept_after}): reads bypassed it"
+    );
+}
+
+#[test]
+fn prepared_frame_buffer_circulates_back_without_a_copy() {
+    // Steady-state copy-free regression (transport-layer sibling of
+    // stage_loop_steady_state_reallocates_nothing): the serialization
+    // buffer handed to send_prepared moves into the replay buffer, the
+    // socket write borrows it there, and the receiver's ack retires it
+    // into the spare pool — so reclaim_wire() must hand back the exact
+    // allocation, pointer-identical, not a copy.
+    use quantpipe::net::transport::PreparedFrame;
+    let mut rcfg = fast_resilience();
+    rcfg.replay_capacity = 4; // ack_every = 1: the receiver acks every frame
+    let (mut tx, mut rx) = striped_loopback_pair(1, &rcfg).unwrap();
+    let rx_thread = std::thread::spawn(move || {
+        assert_eq!(rx.recv().unwrap().unwrap().seq, 0);
+        assert!(rx.recv().unwrap().is_none(), "FIN must close the boundary");
+    });
+    let mut c = quantpipe::quant::codec::Codec::default();
+    let x: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+    let enc = c.encode(&x, Method::Aciq, 8).unwrap();
+    let frame = Frame::new(0, vec![64], enc);
+    let mut wire = Vec::new();
+    frame.write_into(&mut wire);
+    let ptr = wire.as_ptr() as usize;
+    tx.send_prepared(PreparedFrame { seq: 0, wire }).unwrap();
+    // The ack rides back on the receiver's cadence; pump until it lands
+    // and the replay buffer releases the wire buffer into the spares.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let reclaimed = loop {
+        tx.pump();
+        if let Some(buf) = tx.reclaim_wire() {
+            break buf;
+        }
+        assert!(Instant::now() < deadline, "the ack never released the sent wire buffer");
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    assert_eq!(
+        reclaimed.as_ptr() as usize,
+        ptr,
+        "the wire buffer came back from a different allocation: something copied it"
+    );
+    tx.finish().unwrap();
+    rx_thread.join().unwrap();
+}
+
 /// Feed stub that forwards frames into an echo channel, then fails hard.
 /// Panics if `send` is ever called again after the injected failure —
 /// the coordinator's feed loop must stop at the FIRST hard error instead

@@ -23,7 +23,9 @@
 
 pub mod policy;
 
-pub use policy::{ladder_step_down, required_bits_eq2, required_bits_ladder, Policy};
+pub use policy::{
+    budget_avg_bits, ladder_step_down, required_bits_eq2, required_bits_ladder, Policy,
+};
 
 use crate::monitor::WindowStats;
 use crate::quant::BITS_NONE;
@@ -66,6 +68,10 @@ pub struct Decision {
     pub required_compression: f64,
     /// Did the bitwidth move?
     pub changed: bool,
+    /// Continuous per-boundary bit budget ([`Policy::Budget`] only, and
+    /// only once the discrete width is ≤ 8): the tiled codec allocates
+    /// {2,4,6,8}-bit tiles averaging at most this. `None` = uniform.
+    pub avg_bits: Option<f32>,
 }
 
 /// The adaptive PDA controller for one stage's output link.
@@ -117,7 +123,7 @@ impl AdaptivePda {
 
         let proposal = match self.cfg.policy {
             Policy::Eq2 => required_bits_eq2(ratio),
-            Policy::Ladder => required_bits_ladder(ratio),
+            Policy::Ladder | Policy::Budget => required_bits_ladder(ratio),
             Policy::Fixed(b) => b,
         };
 
@@ -138,7 +144,9 @@ impl AdaptivePda {
         let next = if proposal > prev {
             let with_margin = match self.cfg.policy {
                 Policy::Eq2 => required_bits_eq2(ratio * self.cfg.raise_margin),
-                Policy::Ladder => required_bits_ladder(ratio * self.cfg.raise_margin),
+                Policy::Ladder | Policy::Budget => {
+                    required_bits_ladder(ratio * self.cfg.raise_margin)
+                }
                 Policy::Fixed(b) => b,
             };
             if with_margin >= proposal {
@@ -150,6 +158,21 @@ impl AdaptivePda {
             proposal
         };
 
+        // Budget mode: alongside the discrete ladder width, publish the
+        // *continuous* width the link affords. The discrete pick is the
+        // largest supported uniform width under the budget; the tiled
+        // allocator can average strictly more by mixing widths (e.g.
+        // ratio 6.5 ⇒ ladder 4, budget average 4.88). A rate violation
+        // caps the average at the stepped-down width — the ratio said
+        // the old width fit, and the measured rate proved it wrong.
+        let avg_bits = match self.cfg.policy {
+            Policy::Budget if next <= 8 => {
+                let a = budget_avg_bits(ratio);
+                Some(if rate_violated { a.min(next as f32) } else { a })
+            }
+            _ => None,
+        };
+
         self.bits = next;
         Decision {
             bits: next,
@@ -157,6 +180,7 @@ impl AdaptivePda {
             measured_bps: w.bandwidth_bps,
             required_compression: ratio,
             changed: next != prev,
+            avg_bits,
         }
     }
 
@@ -353,6 +377,54 @@ mod tests {
         w.rate = 50.0;
         w.link_utilization = 0.1;
         assert_eq!(c.on_window(&w).bits, 32);
+    }
+
+    #[test]
+    fn budget_policy_publishes_a_continuous_average() {
+        let mut c = ctl(Policy::Budget);
+        c.set_bits(32);
+        // Unconstrained: full precision, no budget in play.
+        let d = c.on_window(&window(FULL_BYTES, f64::INFINITY));
+        assert_eq!(d.bits, 32);
+        assert!(d.avg_bits.is_none());
+        // 1 Mbps: ratio 6.5536 ⇒ ladder 4-bit, but the budget affords an
+        // average of 32/6.5536 ≈ 4.88 — strictly more than uniform 4.
+        let d = c.on_window(&window(FULL_BYTES, 1e6));
+        assert_eq!(d.bits, 4, "{d:?}");
+        let avg = d.avg_bits.unwrap();
+        assert!((avg - 4.8828).abs() < 1e-3, "{avg}");
+        assert!(avg > d.bits as f32, "budget average beats the uniform pick");
+        // Dead link: both floor at 2.
+        let d = c.on_window(&window(FULL_BYTES * 4.0 / 32.0, 0.0));
+        assert_eq!(d.bits, 2);
+        assert_eq!(d.avg_bits, Some(2.0));
+    }
+
+    #[test]
+    fn budget_average_absent_above_8_bits() {
+        // At 16/32-bit the codec runs flat — no tiled budget to publish.
+        let mut c = ctl(Policy::Budget);
+        c.set_bits(32);
+        let full_bits = FULL_BYTES * 8.0;
+        let bw = (full_bits / 1.5) / 0.64; // ratio 1.5 ⇒ 16-bit
+        let d = c.on_window(&window(FULL_BYTES, bw));
+        assert_eq!(d.bits, 16, "{d:?}");
+        assert!(d.avg_bits.is_none());
+    }
+
+    #[test]
+    fn budget_average_capped_by_rate_violation() {
+        // The ratio claims plenty of headroom but the measured rate says
+        // otherwise: the discrete width steps down and the average must
+        // not exceed it (the ratio has been proven optimistic).
+        let mut c = ctl(Policy::Budget);
+        c.set_bits(6);
+        let mut w = window(FULL_BYTES * 6.0 / 32.0, 60e6);
+        w.rate = 50.0;
+        w.link_utilization = 1.0;
+        let d = c.on_window(&w);
+        assert_eq!(d.bits, 4, "{d:?}");
+        assert_eq!(d.avg_bits, Some(4.0), "{d:?}");
     }
 
     #[test]

@@ -12,6 +12,20 @@ pub enum Policy {
     Ladder,
     /// Pin a bitwidth (baselines/ablations).
     Fixed(u8),
+    /// Ladder for the discrete decision, plus a continuous per-boundary
+    /// *bit budget* (`Decision::avg_bits`) once the link drops into the
+    /// sub-byte regime. The tiled codec spends that budget non-uniformly
+    /// across tiles ([`crate::quant::tile`]), so e.g. a ratio of 6.5
+    /// yields tiles averaging 4.9 bits instead of a uniform 4 — every
+    /// wire byte the link affords actually gets used.
+    Budget,
+}
+
+/// Continuous width the link budget affords: `32 / ratio`, clamped to
+/// the tiled allocator's `[2, 8]` range. Only meaningful once the
+/// discrete ladder has dropped to 8 bits or below.
+pub fn budget_avg_bits(ratio: f64) -> f32 {
+    ((32.0 / ratio.max(1e-300)) as f32).clamp(2.0, 8.0)
 }
 
 /// Supported ladder, descending (32 = no quantization).
@@ -102,6 +116,19 @@ mod tests {
                 assert_eq!(b, 2, "ratio={ratio}");
             }
         }
+    }
+
+    #[test]
+    fn budget_avg_tracks_the_ratio() {
+        // ratio 6.5536 (the 1 Mbps Fig-5 window): uniform ladder says 4,
+        // the continuous budget affords 4.88 average bits.
+        let a = budget_avg_bits(6.5536);
+        assert!((a - 4.8828).abs() < 1e-3, "{a}");
+        // Clamps: huge ratio floors at 2, tiny ratio ceils at 8.
+        assert_eq!(budget_avg_bits(1e9), 2.0);
+        assert_eq!(budget_avg_bits(f64::INFINITY), 2.0);
+        assert_eq!(budget_avg_bits(1.0), 8.0);
+        assert_eq!(budget_avg_bits(0.0), 8.0);
     }
 
     #[test]

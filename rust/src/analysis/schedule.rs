@@ -238,7 +238,7 @@ impl BoundaryModel {
 /// A minimal data frame for the model (payload content is irrelevant to
 /// the session layer, which tracks only sequence numbers and bytes).
 fn frame(seq: u64) -> Frame {
-    Frame::new(seq, vec![1], Encoded { params: None, elems: 1, payload: vec![0] })
+    Frame::new(seq, vec![1], Encoded { params: None, elems: 1, payload: vec![0], tiled: false })
 }
 
 impl Model for BoundaryModel {

@@ -10,6 +10,7 @@
 use crate::analysis::lints::Finding;
 use crate::net::frame;
 use crate::net::session;
+use crate::quant::tile;
 
 /// Wire facts extracted from the normative doc.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,6 +29,14 @@ pub struct WireSpec {
     pub version: (u8, usize),
     /// Control kinds: (kind byte, name, doc line).
     pub kinds: Vec<(u8, String, usize)>,
+    /// Tiled-payload header length, with doc line (§2.1).
+    pub tile_hdr: (usize, usize),
+    /// Tiled-payload per-tile param row length, with doc line.
+    pub tile_param: (usize, usize),
+    /// Tiled-payload outlier record length, with doc line.
+    pub tile_outlier: (usize, usize),
+    /// Tile-count bound, with doc line.
+    pub max_tiles: (usize, usize),
 }
 
 /// First hex literal (`0x…`) on the line, underscores allowed.
@@ -39,6 +48,13 @@ fn extract_hex(line: &str) -> Option<u64> {
         .filter(|c| *c != '_')
         .collect();
     u64::from_str_radix(&digits, 16).ok()
+}
+
+/// Trailing byte-count annotation: `… (N bytes…)`.
+fn extract_paren_bytes(line: &str) -> Option<usize> {
+    let inside = &line[line.rfind('(')? + 1..];
+    let digits: String = inside.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok().filter(|_| inside.contains("bytes"))
 }
 
 /// Value of a power-of-two bound written as `` `NAME = 2^exp` ``.
@@ -61,6 +77,10 @@ pub fn parse(doc: &str) -> Result<WireSpec, String> {
     let mut magic = None;
     let mut version = None;
     let mut kinds = Vec::new();
+    let mut tile_hdr = None;
+    let mut tile_param = None;
+    let mut tile_outlier = None;
+    let mut max_tiles = None;
     for (idx, line) in doc.lines().enumerate() {
         let no = idx + 1;
         if line.contains("CTRL_MARKER") && ctrl_marker.is_none() {
@@ -90,7 +110,29 @@ pub fn parse(doc: &str) -> Result<WireSpec, String> {
                 ctrl_len = Some((v, no));
             }
         }
+        if max_tiles.is_none() {
+            if let Some(v) = extract_pow2(line, "MAX_TILES") {
+                max_tiles = Some((v, no));
+            }
+        }
         let tokens: Vec<&str> = line.split_whitespace().collect();
+        // §2.1 tiled-payload rows, keyed on their leading field name.
+        if tokens.first() == Some(&"header") && line.contains("ntiles") && tile_hdr.is_none() {
+            if let Some(v) = extract_paren_bytes(line) {
+                tile_hdr = Some((v, no));
+            }
+        }
+        if tokens.first() == Some(&"param") && line.contains("scale") && tile_param.is_none() {
+            if let Some(v) = extract_paren_bytes(line) {
+                tile_param = Some((v, no));
+            }
+        }
+        if tokens.first() == Some(&"outlier") && line.contains("index") && tile_outlier.is_none()
+        {
+            if let Some(v) = extract_paren_bytes(line) {
+                tile_outlier = Some((v, no));
+            }
+        }
         if tokens.first() == Some(&"magic") && magic.is_none() {
             if let Some(v) = extract_hex(line) {
                 magic = Some((v as u32, no));
@@ -120,6 +162,10 @@ pub fn parse(doc: &str) -> Result<WireSpec, String> {
         magic: magic.ok_or("doc: frame magic not found")?,
         version: version.ok_or("doc: frame version not found")?,
         kinds,
+        tile_hdr: tile_hdr.ok_or("doc: tiled-payload header length not found")?,
+        tile_param: tile_param.ok_or("doc: tiled-payload param row length not found")?,
+        tile_outlier: tile_outlier.ok_or("doc: tiled-payload outlier record length not found")?,
+        max_tiles: max_tiles.ok_or("doc: MAX_TILES bound not found")?,
     })
 }
 
@@ -160,6 +206,25 @@ pub fn cross_check(spec: &WireSpec) -> Vec<Finding> {
     );
     check_u64("frame MAGIC", spec.magic.0 as u64, spec.magic.1, frame::MAGIC as u64);
     check_u64("frame VERSION", spec.version.0 as u64, spec.version.1, frame::VERSION as u64);
+    check_u64(
+        "TILE_HDR_BYTES",
+        spec.tile_hdr.0 as u64,
+        spec.tile_hdr.1,
+        tile::TILE_HDR_BYTES as u64,
+    );
+    check_u64(
+        "TILE_PARAM_BYTES",
+        spec.tile_param.0 as u64,
+        spec.tile_param.1,
+        tile::TILE_PARAM_BYTES as u64,
+    );
+    check_u64(
+        "OUTLIER_BYTES",
+        spec.tile_outlier.0 as u64,
+        spec.tile_outlier.1,
+        tile::OUTLIER_BYTES as u64,
+    );
+    check_u64("MAX_TILES", spec.max_tiles.0 as u64, spec.max_tiles.1, tile::MAX_TILES as u64);
     let code_kinds: [(&str, u8); 6] = [
         ("HELLO", session::K_HELLO),
         ("ACK", session::K_ACK),
@@ -201,7 +266,11 @@ length `L` (bounded by `MAX_FRAME_BYTES = 2^30`; larger is corrupt)
 * prefix `== 0xFFFF_FFFF` (`CTRL_MARKER`) — a control record.
 magic  u32   \"QPFR\" (0x5150_4652)
 ver    u8    1
-kind   u8    0 = raw f32, 1 = quantized
+kind   u8    0 = raw f32, 1 = quantized, 2 = tiled
+header  ntiles u32 | tile_elems u32 | noutliers u32         (12 bytes)
+param   scale f32 | zp f32 | lo f32 | hi f32 | bits u8      (17 bytes, × ntiles)
+outlier index u32 | value f32                               (8 bytes, × noutliers)
+`MAX_TILES = 2^16`
 marker u32 = 0xFFFF_FFFF | kind u8 | seq u64        (13 bytes)
 kind 1  HELLO{next_expected}   receiver → sender
 kind 2  ACK{next_expected}     receiver → sender
@@ -222,6 +291,10 @@ kind 6  HAVE{seq}              receiver → sender
         assert_eq!(spec.magic.0, 0x5150_4652);
         assert_eq!(spec.version.0, 1);
         assert_eq!(spec.kinds.len(), 6, "frame-header kind row must not leak in");
+        assert_eq!(spec.tile_hdr.0, 12);
+        assert_eq!(spec.tile_param.0, 17);
+        assert_eq!(spec.tile_outlier.0, 8);
+        assert_eq!(spec.max_tiles.0, 1 << 16);
     }
 
     #[test]
@@ -253,5 +326,18 @@ kind 6  HAVE{seq}              receiver → sender
     fn missing_fact_is_a_parse_error() {
         let gutted = GOOD.replace("CTRL_MARKER", "SOMETHING_ELSE");
         assert!(parse(&gutted).unwrap_err().contains("CTRL_MARKER"));
+        let gutted = GOOD.replace("MAX_TILES", "SOMETHING_ELSE");
+        assert!(parse(&gutted).unwrap_err().contains("MAX_TILES"));
+    }
+
+    #[test]
+    fn drifted_tile_constant_is_caught() {
+        let drifted = GOOD.replace("(17 bytes", "(19 bytes");
+        let diffs = cross_check(&parse(&drifted).unwrap());
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0].message.contains("TILE_PARAM_BYTES"), "{}", diffs[0]);
+        let drifted = GOOD.replace("MAX_TILES = 2^16", "MAX_TILES = 2^12");
+        let diffs = cross_check(&parse(&drifted).unwrap());
+        assert!(diffs.iter().any(|d| d.message.contains("MAX_TILES")), "{diffs:?}");
     }
 }

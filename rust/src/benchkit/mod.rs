@@ -157,6 +157,48 @@ pub fn write_bench_json(
     Ok(path)
 }
 
+/// One-line drift summary of `fields` against a committed baseline JSON
+/// (the text of a prior `write_bench_json` output). Fields are treated as
+/// costs (ns/elem): ratio > 1 means the current run is slower. Returns
+/// `None` when the baseline is unparseable or shares no finite fields.
+pub fn delta_vs_baseline(baseline_json: &str, fields: &[(&str, f64)]) -> Option<String> {
+    use crate::util::json::Value;
+    let base = Value::parse(baseline_json).ok()?;
+    let mut log_sum = 0f64;
+    let mut n = 0usize;
+    let mut worst: Option<(&str, f64)> = None;
+    for (k, cur) in fields {
+        let Some(b) = base.at(k).and_then(|v| v.as_f64().ok()) else { continue };
+        if !(b > 0.0 && cur.is_finite() && *cur > 0.0) {
+            continue;
+        }
+        let ratio = cur / b;
+        log_sum += ratio.ln();
+        n += 1;
+        if worst.is_none_or(|(_, w)| ratio > w) {
+            worst = Some((k, ratio));
+        }
+    }
+    let (wk, wr) = worst?;
+    Some(format!(
+        "geomean {:.2}x of baseline over {n} fields (worst: {wk} {wr:.2}x)",
+        (log_sum / n as f64).exp()
+    ))
+}
+
+/// Print the [`delta_vs_baseline`] line against the checked-in
+/// `BENCH_<name>.json` at the crate root, so every bench run ends with a
+/// one-line answer to "did this change move the needle?". Baselines come
+/// from a different machine, so this is a narrative aid, not a gate.
+pub fn print_delta_vs_committed(name: &str, fields: &[(&str, f64)]) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{name}.json"));
+    match std::fs::read_to_string(&path).ok().as_deref().and_then(|t| delta_vs_baseline(t, fields))
+    {
+        Some(line) => println!("vs committed {}: {line}", path.display()),
+        None => println!("no comparable committed baseline at {}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +240,20 @@ mod tests {
         assert_eq!(back.at("throughput").unwrap().as_f64().unwrap(), 123.5);
         assert_eq!(back.at("bandwidth").unwrap(), &Value::Null);
         assert_eq!(back.at("bits").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn baseline_delta_reports_geomean_and_worst_field() {
+        let baseline = r#"{"enc": 10.0, "dec": 4.0, "skipme": null, "other": 1.0}"#;
+        // enc 2x slower, dec 0.5x: geomean = 1.0; worst = enc.
+        let line =
+            delta_vs_baseline(baseline, &[("enc", 20.0), ("dec", 2.0), ("new_field", 9.9)])
+                .unwrap();
+        assert!(line.contains("1.00x"), "{line}");
+        assert!(line.contains("worst: enc 2.00x"), "{line}");
+        assert!(line.contains("over 2 fields"), "{line}");
+        // Unparseable or disjoint baselines degrade to None, not a panic.
+        assert!(delta_vs_baseline("not json", &[("enc", 1.0)]).is_none());
+        assert!(delta_vs_baseline(baseline, &[("unrelated", 1.0)]).is_none());
     }
 }

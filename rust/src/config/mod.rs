@@ -47,6 +47,20 @@ pub struct PipelineSection {
     /// (1 = serial, the default; only the native backend parallelizes).
     /// Output is byte-identical for every value.
     pub codec_threads: usize,
+    /// Use the SIMD fused-codec kernels when the CPU supports them
+    /// (default true; output is byte-identical to the scalar path, so
+    /// this knob exists for A/B benchmarking and bug triage only).
+    pub codec_simd: bool,
+    /// Tile size (elements) for the tiled hybrid codec on sub-byte
+    /// links. 0 (the default) keeps the flat single-tensor wire format;
+    /// a positive multiple of 8 enables per-tile calibration, the
+    /// outlier side-channel and — with the "budget" adapt policy —
+    /// non-uniform per-tile bitwidths.
+    pub tile_elems: usize,
+    /// Fraction of elements shipped raw through the tiled codec's
+    /// outlier side-channel (0 ≤ f ≤ 0.5; ignored when `tile_elems` is
+    /// 0).
+    pub outlier_frac: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -71,7 +85,7 @@ pub struct AdaptSection {
     pub target_rate: f64,
     /// Window length in microbatches (paper: 50).
     pub window: u64,
-    /// Policy: "ladder" (default), "eq2", or "fixed:<bits>".
+    /// Policy: "ladder" (default), "eq2", "budget", or "fixed:<bits>".
     pub policy: String,
     /// Hysteresis margin for raising bitwidth.
     pub raise_margin: f64,
@@ -194,6 +208,9 @@ impl Default for Config {
                 inflight: 2,
                 codec_backend: "native".into(),
                 codec_threads: 1,
+                codec_simd: true,
+                tile_elems: 0,
+                outlier_frac: 0.01,
             },
             quant: QuantSection { method: Method::Pda, calib_every: 1, ds_steps: 100 },
             adapt: AdaptSection {
@@ -272,6 +289,23 @@ impl Config {
                 anyhow::ensure!(
                     cfg.pipeline.codec_threads >= 1,
                     "pipeline.codec_threads must be >= 1 (1 = serial encode)"
+                );
+            }
+            if let Some(x) = p.get("codec_simd") { cfg.pipeline.codec_simd = x.as_bool()?; }
+            if let Some(x) = p.get("tile_elems") {
+                cfg.pipeline.tile_elems = x.as_usize()?;
+                anyhow::ensure!(
+                    cfg.pipeline.tile_elems % 8 == 0,
+                    "pipeline.tile_elems must be a multiple of 8 (0 = flat codec), got {}",
+                    cfg.pipeline.tile_elems
+                );
+            }
+            if let Some(x) = p.get("outlier_frac") {
+                cfg.pipeline.outlier_frac = x.as_f64()?;
+                anyhow::ensure!(
+                    (0.0..=0.5).contains(&cfg.pipeline.outlier_frac),
+                    "pipeline.outlier_frac must be in [0, 0.5], got {}",
+                    cfg.pipeline.outlier_frac
                 );
             }
         }
@@ -357,6 +391,7 @@ impl Config {
         let policy = match self.adapt.policy.as_str() {
             "ladder" => Policy::Ladder,
             "eq2" => Policy::Eq2,
+            "budget" => Policy::Budget,
             other => {
                 let bits: u8 = other
                     .strip_prefix("fixed:")
@@ -437,6 +472,32 @@ mod tests {
         let c = Config::parse(r#"{"pipeline": {"codec_threads": 4}}"#).unwrap();
         assert_eq!(c.pipeline.codec_threads, 4);
         assert!(Config::parse(r#"{"pipeline": {"codec_threads": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn tiling_knobs_parse_validate_and_default() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.pipeline.tile_elems, 0, "tiling is opt-in");
+        assert!((c.pipeline.outlier_frac - 0.01).abs() < 1e-12);
+        assert!(c.pipeline.codec_simd, "SIMD kernels are on by default");
+        let c = Config::parse(
+            r#"{"pipeline": {"tile_elems": 1024, "outlier_frac": 0.02, "codec_simd": false}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.tile_elems, 1024);
+        assert!((c.pipeline.outlier_frac - 0.02).abs() < 1e-12);
+        assert!(!c.pipeline.codec_simd);
+        // Tile size must stay group-aligned; the outlier budget is capped.
+        assert!(Config::parse(r#"{"pipeline": {"tile_elems": 100}}"#).is_err());
+        assert!(Config::parse(r#"{"pipeline": {"outlier_frac": 0.6}}"#).is_err());
+        assert!(Config::parse(r#"{"pipeline": {"outlier_frac": -0.1}}"#).is_err());
+    }
+
+    #[test]
+    fn budget_policy_string() {
+        let mut c = Config::default();
+        c.adapt.policy = "budget".into();
+        assert!(matches!(c.adapt_config().unwrap().policy, Policy::Budget));
     }
 
     #[test]

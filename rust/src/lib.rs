@@ -21,7 +21,7 @@
 //!
 //! | module | paper role |
 //! |---|---|
-//! | [`quant`] | §3 PTQ/ACIQ/DS-ACIQ math, bit packing, tensor codec; the deployed data path is `quant::fused` — single-pass quantize+pack / unpack+dequantize kernels (optionally multicore via `pipeline.codec_threads`), byte-identical to the two-pass reference |
+//! | [`quant`] | §3 PTQ/ACIQ/DS-ACIQ math, bit packing, tensor codec; the deployed data path is `quant::fused` — single-pass quantize+pack / unpack+dequantize kernels (SIMD on AVX2/SSE2 with a byte-identical scalar fallback, optionally multicore via `pipeline.codec_threads`); `quant::tile` layers tile-wise hybrid quantization over it: per-tile calibration, a raw-f32 outlier side-channel, and budget-allocated non-uniform per-tile widths |
 //! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets; the layered reliability stack (`net::session` protocol state machine → `net::conduit` connections → `net::stripe` N-connection striped boundaries, with `net::resilient` as the 1-conduit case); traces, wire framing |
 //! | [`monitor`] | §3 runtime monitor (windowed bandwidth / output-rate) |
 //! | [`adapt`] | §3 adaptive PDA module (Eq. 2 bitwidth policy) |

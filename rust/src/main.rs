@@ -187,6 +187,9 @@ fn load_config(args: &Args) -> quantpipe::Result<Config> {
         "--stripes > 1 requires resilient links (--resilient true): the striped boundary \
          rides the resilient session protocol"
     );
+    // Process-wide: every codec in this process honours the knob, and the
+    // scalar fallback keeps the wire bytes identical either way.
+    quantpipe::quant::fused::set_simd_enabled(cfg.pipeline.codec_simd);
     Ok(cfg)
 }
 
@@ -229,6 +232,8 @@ fn build_spec(cfg: &Config, manifest: &Manifest, dir: &std::path::Path) -> quant
         calib_every: cfg.quant.calib_every,
         initial_bits: if cfg.adapt.enabled { 32 } else { cfg.adapt.fixed_bits },
         codec_threads: cfg.pipeline.codec_threads,
+        tile_elems: cfg.pipeline.tile_elems,
+        outlier_frac: cfg.pipeline.outlier_frac,
     };
     let adapt: Option<AdaptConfig> = if cfg.adapt.enabled {
         let mut a = cfg.adapt_config()?;
@@ -429,6 +434,8 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
         calib_every: cfg.quant.calib_every,
         initial_bits: if cfg.adapt.enabled { 32 } else { cfg.adapt.fixed_bits },
         codec_threads: cfg.pipeline.codec_threads,
+        tile_elems: cfg.pipeline.tile_elems,
+        outlier_frac: cfg.pipeline.outlier_frac,
     };
     let adapt: Option<AdaptConfig> = if cfg.adapt.enabled {
         let mut a = cfg.adapt_config()?;

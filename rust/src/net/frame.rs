@@ -7,16 +7,22 @@
 //! ```text
 //! magic  u32  "QPFR"
 //! ver    u8
-//! kind   u8    0 = raw f32, 1 = quantized
-//! bits   u8    2/4/6/8/16 (or 32 for raw)
+//! kind   u8    0 = raw f32, 1 = quantized, 2 = tiled
+//! bits   u8    2/4/6/8/16 (or 32 for raw and tiled)
 //! rank   u8
 //! seq    u64   microbatch sequence number
-//! scale  f32 | zp f32 | lo f32 | hi f32     (quantized only)
+//! scale  f32 | zp f32 | lo f32 | hi f32     (kind 1 only)
 //! dims   u32 × rank
 //! plen   u32   payload byte length
 //! crc    u32   CRC32 (IEEE) of payload
 //! payload …
 //! ```
+//!
+//! Kind 2 payloads are self-describing tiled payloads
+//! (`quant::tile`): the per-tile param table, the outlier side-channel
+//! and the packed streams all live inside the payload, so the header
+//! carries no scale/zp/lo/hi and the `bits` byte stays 32 (per-tile
+//! widths vary; see `Encoded::avg_wire_bits`).
 
 use crate::quant::codec::Encoded;
 use crate::quant::QuantParams;
@@ -69,7 +75,13 @@ impl Frame {
         out.reserve(self.wire_len());
         out.extend_from_slice(&MAGIC.to_le_bytes());
         out.push(VERSION);
-        out.push(if self.enc.params.is_some() { 1 } else { 0 });
+        out.push(if self.enc.tiled {
+            2
+        } else if self.enc.params.is_some() {
+            1
+        } else {
+            0
+        });
         out.push(self.enc.bits());
         out.push(self.shape.len() as u8);
         out.extend_from_slice(&self.seq.to_le_bytes());
@@ -93,6 +105,7 @@ impl Frame {
         anyhow::ensure!(r.u32()? == MAGIC, "bad frame magic");
         anyhow::ensure!(r.u8()? == VERSION, "unsupported frame version");
         let kind = r.u8()?;
+        anyhow::ensure!(kind <= 2, "unknown frame kind {kind}");
         let bits = r.u8()?;
         let rank = r.u8()? as usize;
         let seq = r.u64()?;
@@ -120,7 +133,7 @@ impl Frame {
         Ok(Frame {
             seq,
             shape,
-            enc: Encoded { params, elems, payload },
+            enc: Encoded { params, elems, payload, tiled: kind == 2 },
         })
     }
 }
@@ -219,6 +232,29 @@ mod tests {
         for (a, b) in x.iter().zip(&out) {
             assert!((a - b).abs() <= p.scale / 2.0 + 1e-6);
         }
+    }
+
+    #[test]
+    fn tiled_frame_roundtrips_as_kind_2() {
+        use crate::quant::tile::{TileCodec, TileConfig};
+        let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let mut c = Codec::default();
+        let cfg = TileConfig { tile_elems: 256, outlier_frac: 0.01 };
+        c.set_tiling(Some(TileCodec::new(cfg, Method::Pda)));
+        let enc = c.encode_tiled(&x, 4, None).unwrap();
+        let f = Frame::new(3, vec![4, 256], enc);
+        let bytes = f.to_bytes();
+        assert_eq!(bytes[5], 2, "tiled frames use kind 2");
+        let back = Frame::from_bytes(&bytes).unwrap();
+        assert_eq!(back, f);
+        assert!(back.enc.tiled);
+        let mut out = Vec::new();
+        c.decode(&back.enc, &mut out).unwrap();
+        assert_eq!(out.len(), 1024);
+        // An unknown kind is a parse error, not a silent misread.
+        let mut bad = bytes.clone();
+        bad[5] = 3;
+        assert!(Frame::from_bytes(&bad).unwrap_err().to_string().contains("kind"));
     }
 
     #[test]

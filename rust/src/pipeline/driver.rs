@@ -39,13 +39,14 @@ use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx, LinkSpec, PreparedFrame};
 use crate::pipeline::stage::StageFactory;
 use crate::quant::codec::Codec;
+use crate::quant::tile::{TileCodec, TileConfig};
 use crate::quant::{calibrate, Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
 use crate::util::sync::TrackedMutex;
 use crate::Result;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -63,6 +64,16 @@ pub struct LinkQuant {
     /// in the config). 1 = serial; >1 chunks big boundary activations
     /// across scoped threads with byte-identical output.
     pub codec_threads: usize,
+    /// Elements per quantization tile (`pipeline.tile_elems`). 0 = flat
+    /// (one scale per tensor, today's wire format); > 0 switches
+    /// sub-byte-width frames to tiled payloads (`quant::tile`): per-tile
+    /// scales, the outlier side-channel, and — under the adaptive
+    /// controller's `Policy::Budget` — non-uniform per-tile widths.
+    pub tile_elems: usize,
+    /// Fraction of elements shipped raw in the tiled outlier
+    /// side-channel (`pipeline.outlier_frac`); only meaningful when
+    /// `tile_elems > 0`.
+    pub outlier_frac: f64,
 }
 
 impl Default for LinkQuant {
@@ -72,7 +83,21 @@ impl Default for LinkQuant {
             calib_every: 1,
             initial_bits: BITS_NONE,
             codec_threads: 1,
+            tile_elems: 0,
+            outlier_frac: 0.01,
         }
+    }
+}
+
+impl LinkQuant {
+    /// The tiled encoder these settings call for (`None` = flat).
+    pub(crate) fn tile_codec(&self) -> Option<TileCodec> {
+        (self.tile_elems > 0).then(|| {
+            let cfg = TileConfig { tile_elems: self.tile_elems, outlier_frac: self.outlier_frac };
+            let mut tc = TileCodec::new(cfg, self.method);
+            tc.set_calib_every(self.calib_every.max(1));
+            tc
+        })
     }
 }
 
@@ -300,6 +325,13 @@ enum StageOut {
     Downstream {
         frame_tx: SyncSender<PreparedFrame>,
         bits: Arc<AtomicU8>,
+        /// Budget-mode average bits, fixed-point ×256 (0 = uniform).
+        /// Published by the sender thread beside `bits`; the two are
+        /// separate relaxed atomics, so an encode may briefly pair a new
+        /// width with the previous budget — both are advisory and the
+        /// tile allocator clamps independently, so a torn pair costs one
+        /// slightly-off microbatch, never correctness.
+        avg_fp: Arc<AtomicU32>,
         quant: LinkQuant,
         pool: Arc<WirePool>,
     },
@@ -433,6 +465,8 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
     let link_bits: Vec<Arc<AtomicU8>> = (0..n - 1)
         .map(|_| Arc::new(AtomicU8::new(quant.initial_bits)))
         .collect();
+    let link_avg_fp: Vec<Arc<AtomicU32>> =
+        (0..n - 1).map(|_| Arc::new(AtomicU32::new(0))).collect();
     let link_counters: Vec<Arc<LinkCounters>> = (0..n - 1)
         .map(|_| Arc::new(LinkCounters::default()))
         .collect();
@@ -478,6 +512,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
             let out = StageOut::Downstream {
                 frame_tx,
                 bits: link_bits[i].clone(),
+                avg_fp: link_avg_fp[i].clone(),
                 quant,
                 pool: pool.clone(),
             };
@@ -489,6 +524,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
 
             // Sender thread: transport + monitoring + adaptation for link i.
             let bits = link_bits[i].clone();
+            let avg_fp = link_avg_fp[i].clone();
             let counters = link_counters[i].clone();
             let tl = timeline.clone();
             let errs = errors.clone();
@@ -503,7 +539,7 @@ pub fn run(spec: PipelineSpec, workload: Workload) -> Result<RunReport> {
                             // In-process runs skip wire telemetry: every
                             // stage already records into the one shared
                             // timeline this RunReport returns.
-                            bits, tl, counters, errs, start, None, pool,
+                            bits, avg_fp, tl, counters, errs, start, None, pool,
                         )
                     })?,
             );
@@ -639,6 +675,7 @@ fn stage_loop(
     let mut codec = Codec::new(bundle.quant_backend);
     if let StageOut::Downstream { quant, .. } = &output {
         codec.set_threads(quant.codec_threads);
+        codec.set_tiling(quant.tile_codec());
     }
     // One-slot pool of decoded-activation storage: each frame decodes
     // into the pooled buffer, the buffer moves into the `Tensor` handed
@@ -687,9 +724,9 @@ fn stage_loop(
                     return Ok(()); // sink finished early
                 }
             }
-            StageOut::Downstream { frame_tx, bits, quant, pool } => {
+            StageOut::Downstream { frame_tx, bits, avg_fp, quant, pool } => {
                 let enc = encode_at_current_bits(
-                    &mut codec, &out.data, quant, bits, &mut cached, &mut since_calib,
+                    &mut codec, &out.data, quant, bits, avg_fp, &mut cached, &mut since_calib,
                 )?;
                 // Serialize ONCE, into a pooled wire buffer; from here the
                 // same Vec travels channel → sender thread → transport
@@ -710,11 +747,19 @@ fn stage_loop(
 /// Encode one activation at the bitwidth currently published by the link's
 /// controller, amortizing calibration across `calib_every` sends. Shared
 /// by the in-driver stage loop and the multi-process worker endpoint.
+///
+/// When the codec has tiling configured and the width is in the sub-byte
+/// regime (≤ 8 bits), frames go out as tiled payloads; `avg_fp` (the
+/// budget-mode average, fixed-point ×256, 0 = uniform) then drives the
+/// per-tile width allocation. 16-bit and raw frames stay flat — tile
+/// tables cost more than they buy there.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn encode_at_current_bits(
     codec: &mut Codec,
     data: &[f32],
     quant: &LinkQuant,
     bits: &AtomicU8,
+    avg_fp: &AtomicU32,
     cached: &mut Option<QuantParams>,
     since_calib: &mut u32,
 ) -> Result<crate::quant::codec::Encoded> {
@@ -722,6 +767,12 @@ pub(crate) fn encode_at_current_bits(
     if bits_now >= BITS_NONE {
         *cached = None;
         return codec.encode(data, quant.method, BITS_NONE);
+    }
+    if codec.tiling_enabled() && bits_now <= 8 {
+        *cached = None;
+        let fp = avg_fp.load(Ordering::Relaxed);
+        let avg = (fp != 0).then(|| fp as f32 / 256.0);
+        return codec.encode_tiled(data, bits_now, avg);
     }
     // Reuse the cached params while they are fresh (same bitwidth, within
     // the calibration interval); otherwise recalibrate. Binding the chosen
@@ -757,6 +808,7 @@ pub(crate) fn sender_thread(
     adapt: Option<AdaptConfig>,
     initial_bits: u8,
     bits: Arc<AtomicU8>,
+    avg_fp: Arc<AtomicU32>,
     timeline: Arc<TrackedMutex<Timeline>>,
     counters: Arc<LinkCounters>,
     errors: Arc<TrackedMutex<Vec<String>>>,
@@ -802,6 +854,12 @@ pub(crate) fn sender_thread(
             let decided = if let Some(c) = &mut ctl {
                 let d = c.on_window(&stats);
                 bits.store(d.bits, Ordering::Relaxed);
+                // Budget-mode continuous average rides beside the
+                // discrete width, fixed-point ×256 (0 = uniform).
+                avg_fp.store(
+                    d.avg_bits.map_or(0, |a| (a * 256.0).round() as u32),
+                    Ordering::Relaxed,
+                );
                 d.bits
             } else {
                 bits.load(Ordering::Relaxed)
@@ -838,5 +896,111 @@ pub(crate) fn sender_thread(
         errors
             .guard()
             .push(format!("link {stage} ({}): drain failed: {e:#}", link_tx.kind()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::Policy;
+    use crate::monitor::WindowStats;
+    use crate::quant::tile::TileView;
+
+    fn mk_window(bw: f64) -> WindowStats {
+        WindowStats {
+            bandwidth_bps: bw,
+            rate: f64::INFINITY,
+            mean_bytes: 524288.0,
+            microbatches: 50,
+            wall_secs: 1.0,
+            link_utilization: 1.0,
+        }
+    }
+
+    /// Publish a decision the way `sender_thread` does.
+    fn publish(d: &crate::adapt::Decision, bits: &AtomicU8, avg_fp: &AtomicU32) {
+        bits.store(d.bits, Ordering::Relaxed);
+        avg_fp.store(d.avg_bits.map_or(0, |a| (a * 256.0).round() as u32), Ordering::Relaxed);
+    }
+
+    #[test]
+    fn bandwidth_drop_degrades_bits_per_tile_not_uniformly() {
+        // The budget acceptance case, at driver level: the controller on
+        // one side, the encode path on the other, linked by the same
+        // atomics the sender and stage threads share.
+        let quant =
+            LinkQuant { tile_elems: 1024, outlier_frac: 0.0, ..LinkQuant::default() };
+        let mut codec = Codec::default();
+        codec.set_tiling(quant.tile_codec());
+        let bits = AtomicU8::new(BITS_NONE);
+        let avg_fp = AtomicU32::new(0);
+        let (mut cached, mut since) = (None, 0u32);
+        let mut encode = |codec: &mut Codec, x: &[f32]| {
+            encode_at_current_bits(codec, x, &quant, &bits, &avg_fp, &mut cached, &mut since)
+                .unwrap()
+        };
+
+        // One loud tile, seven quiet ones — heterogeneous on purpose.
+        let mut rng = crate::util::rng::Rng::seed(41);
+        let x: Vec<f32> = (0..8192)
+            .map(|i| rng.laplace(if i < 1024 { 2.0 } else { 0.02 }) as f32)
+            .collect();
+
+        let mut ctl = AdaptivePda::new(AdaptConfig {
+            target_rate: 100.0,
+            microbatch: 64,
+            policy: Policy::Budget,
+            raise_margin: 1.0,
+        });
+        ctl.set_bits(BITS_NONE);
+
+        // Healthy link: raw passthrough, nothing tiled.
+        let d = ctl.on_window(&mk_window(f64::INFINITY));
+        publish(&d, &bits, &avg_fp);
+        let enc = encode(&mut codec, &x);
+        assert!(!enc.tiled && enc.params.is_none());
+
+        // Simulated bandwidth drop: ratio 6.55 ⇒ ladder 4-bit, budget
+        // average ≈ 4.88 bits. The encode must go out tiled with
+        // NON-uniform per-tile widths — the loud tile keeps more bits.
+        let d = ctl.on_window(&mk_window(1e6));
+        assert_eq!(d.bits, 4, "{d:?}");
+        publish(&d, &bits, &avg_fp);
+        let enc = encode(&mut codec, &x);
+        assert!(enc.tiled);
+        let view = TileView::parse(&enc.payload, x.len()).unwrap();
+        let widths: Vec<u8> = view.params.iter().map(|p| p.bits).collect();
+        let distinct: std::collections::BTreeSet<u8> = widths.iter().copied().collect();
+        assert!(distinct.len() > 1, "drop must degrade per tile, got {widths:?}");
+        let quiet_min = *widths[1..].iter().min().unwrap();
+        assert!(widths[0] > quiet_min, "loud tile keeps more bits: {widths:?}");
+        // The realized average respects the published budget.
+        let avg = widths.iter().map(|&b| b as usize * 1024).sum::<usize>() as f64 / 8192.0;
+        assert!(avg <= d.avg_bits.unwrap() as f64 + 1e-6, "avg {avg} vs {d:?}");
+
+        // Recovery: the controller returns to raw and the encode follows.
+        let d = ctl.on_window(&mk_window(f64::INFINITY));
+        publish(&d, &bits, &avg_fp);
+        assert!(!encode(&mut codec, &x).tiled);
+    }
+
+    #[test]
+    fn flat_links_ignore_the_budget_atomic() {
+        // tile_elems = 0 (today's default): even with a budget published,
+        // frames stay in the flat wire format — byte-compatible with
+        // pre-tiling peers.
+        let quant = LinkQuant::default();
+        let mut codec = Codec::default();
+        codec.set_tiling(quant.tile_codec());
+        assert!(!codec.tiling_enabled());
+        let bits = AtomicU8::new(4);
+        let avg_fp = AtomicU32::new((4.9 * 256.0) as u32);
+        let (mut cached, mut since) = (None, 0u32);
+        let x: Vec<f32> = (0..2048).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let enc =
+            encode_at_current_bits(&mut codec, &x, &quant, &bits, &avg_fp, &mut cached, &mut since)
+                .unwrap();
+        assert!(!enc.tiled);
+        assert_eq!(enc.bits(), 4);
     }
 }

@@ -41,7 +41,7 @@ use crate::util::json::Value;
 use crate::util::sync::TrackedMutex;
 use crate::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -130,6 +130,7 @@ pub fn run_worker(
     let stripe_handles: Vec<_> = tx.stripes().into_iter().flatten().collect();
     let initial_bits = if cfg.quantize_output { cfg.quant.initial_bits } else { BITS_NONE };
     let bits = Arc::new(AtomicU8::new(initial_bits));
+    let avg_fp = Arc::new(AtomicU32::new(0));
     let timeline = Timeline::shared();
     let counters = Arc::new(LinkCounters::default());
     let errors: Arc<TrackedMutex<Vec<String>>> =
@@ -158,6 +159,7 @@ pub fn run_worker(
     let sender = {
         let adapt = if cfg.quantize_output { cfg.adapt } else { None };
         let bits = bits.clone();
+        let avg_fp = avg_fp.clone();
         let tl = timeline.clone();
         let counters = counters.clone();
         let errs = errors.clone();
@@ -168,13 +170,13 @@ pub fn run_worker(
             .spawn(move || {
                 sender_thread(
                     stage, frame_rx, tx, window, batch, adapt, initial_bits,
-                    bits, tl, counters, errs, start, tap, pool,
+                    bits, avg_fp, tl, counters, errs, start, tap, pool,
                 )
             })?
     };
 
     let (loop_result, frames, compute_secs) =
-        worker_stage_loop(cfg, &mut rx, frame_tx, bits, factory, &shared, &relay, &pool);
+        worker_stage_loop(cfg, &mut rx, frame_tx, bits, avg_fp, factory, &shared, &relay, &pool);
     // frame_tx was moved into the loop and is dropped by now, so the
     // sender drains its channel, runs the downstream drain, and exits.
     let _ = sender.join();
@@ -207,6 +209,7 @@ fn worker_stage_loop(
     rx: &mut Box<dyn FrameRx>,
     frame_tx: SyncSender<PreparedFrame>,
     bits: Arc<AtomicU8>,
+    avg_fp: Arc<AtomicU32>,
     factory: StageFactory,
     shared: &StageTelemetryShared,
     relay: &TrackedMutex<TelemetryRelay>,
@@ -219,6 +222,7 @@ fn worker_stage_loop(
         let mut compute = bundle.compute;
         let mut codec = Codec::new(bundle.quant_backend);
         codec.set_threads(cfg.quant.codec_threads);
+        codec.set_tiling(cfg.quant.tile_codec());
         // One-slot decoded-activation pool (see the driver's stage loop):
         // decode into it, move it through the Tensor, reclaim after
         // compute — no per-microbatch clone.
@@ -254,7 +258,8 @@ fn worker_stage_loop(
 
             let t0 = Instant::now();
             let enc = encode_at_current_bits(
-                &mut codec, &out.data, &cfg.quant, &bits, &mut cached, &mut since_calib,
+                &mut codec, &out.data, &cfg.quant, &bits, &avg_fp, &mut cached,
+                &mut since_calib,
             )?;
             shared.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             // Serialize ONCE into a pooled wire buffer; the sender thread

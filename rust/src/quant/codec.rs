@@ -19,6 +19,7 @@
 //! benches/quant_codec.rs (`BENCH_hotpath.json`).
 
 use super::pack;
+use super::tile::{self, TileCodec};
 use super::{calibrate, fused, Method, QuantParams, BITS_NONE};
 use crate::Result;
 
@@ -67,18 +68,32 @@ impl QuantBackend for NativeBackend {
 /// An encoded activation ready for framing onto the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Encoded {
-    /// `None` ⇒ raw f32 passthrough (bits = 32, the nominal state).
+    /// `None` ⇒ raw f32 passthrough (bits = 32, the nominal state) *or*
+    /// a tiled payload (per-tile params live inside the payload).
     pub params: Option<QuantParams>,
     /// Element count of the original tensor.
     pub elems: usize,
     /// Packed payload bytes.
     pub payload: Vec<u8>,
+    /// `true` ⇒ `payload` is a tiled payload (`quant::tile` layout, frame
+    /// kind 2): per-tile param table + outlier side-channel + streams.
+    pub tiled: bool,
 }
 
 impl Encoded {
-    /// Wire bitwidth (32 = raw f32).
+    /// Wire bitwidth (32 = raw f32). A tiled payload has no single
+    /// width — this reports 32 there; use [`Encoded::avg_wire_bits`].
     pub fn bits(&self) -> u8 {
         self.params.map_or(BITS_NONE, |p| p.bits)
+    }
+
+    /// Average wire bits per element, derived from the payload size —
+    /// the telemetry-facing width for tiled (mixed-width) payloads.
+    pub fn avg_wire_bits(&self) -> f64 {
+        if self.elems == 0 {
+            return 0.0;
+        }
+        (self.payload.len() * 8) as f64 / self.elems as f64
     }
 
     /// Wire bytes (payload only; the frame header adds a fixed few bytes).
@@ -111,6 +126,8 @@ pub struct Codec {
     /// Worker threads for large fused encodes (the `codec_threads` config
     /// knob). 1 = serial, never spawns.
     threads: usize,
+    /// Tiled-encode state (`pipeline.tile_elems` > 0); `None` = flat.
+    tile: Option<TileCodec>,
 }
 
 impl Default for Codec {
@@ -122,7 +139,7 @@ impl Default for Codec {
 impl Codec {
     /// Codec over the given arithmetic backend.
     pub fn new(backend: Box<dyn QuantBackend>) -> Self {
-        Codec { backend, codes: Vec::new(), spare: Vec::new(), threads: 1 }
+        Codec { backend, codes: Vec::new(), spare: Vec::new(), threads: 1, tile: None }
     }
 
     /// Name of the arithmetic backend ("native" / "hlo").
@@ -139,6 +156,18 @@ impl Codec {
     /// Current worker-thread setting.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Enable tile-wise encoding ([`super::tile`]): subsequent
+    /// [`Codec::encode_tiled`] calls produce tiled payloads. `None`
+    /// disables (the default; [`Codec::encode`] stays flat either way).
+    pub fn set_tiling(&mut self, tile: Option<TileCodec>) {
+        self.tile = tile;
+    }
+
+    /// Whether a tiled encoder is configured.
+    pub fn tiling_enabled(&self) -> bool {
+        self.tile.is_some()
     }
 
     /// Hand a consumed [`Encoded`]'s payload buffer back for reuse by the
@@ -164,10 +193,28 @@ impl Codec {
         if bits >= BITS_NONE {
             let mut payload = self.take_payload();
             fused::raw_f32_into(x, &mut payload);
-            return Ok(Encoded { params: None, elems: x.len(), payload });
+            return Ok(Encoded { params: None, elems: x.len(), payload, tiled: false });
         }
         let params = calibrate(x, method, bits);
         self.encode_with_params(x, params)
+    }
+
+    /// Encode as a tiled payload (per-tile scales, outlier side-channel,
+    /// optionally budget-allocated widths — see [`super::tile`]).
+    /// Requires [`Codec::set_tiling`]; `bits == 32` falls back to the raw
+    /// passthrough (tiling a raw stream buys nothing). When `avg_bits` is
+    /// set, per-tile widths are budget-allocated around that average
+    /// instead of uniformly `bits`.
+    pub fn encode_tiled(&mut self, x: &[f32], bits: u8, avg_bits: Option<f32>) -> Result<Encoded> {
+        if bits >= BITS_NONE {
+            let mut payload = self.take_payload();
+            fused::raw_f32_into(x, &mut payload);
+            return Ok(Encoded { params: None, elems: x.len(), payload, tiled: false });
+        }
+        let tc = self.tile.as_mut().ok_or_else(|| anyhow::anyhow!("tiling not configured"))?;
+        let mut payload = self.take_payload();
+        tc.encode_into(x, bits, avg_bits, &mut payload)?;
+        Ok(Encoded { params: None, elems: x.len(), payload, tiled: true })
     }
 
     /// Encode with pre-derived params (used when calibration is amortized
@@ -184,13 +231,19 @@ impl Codec {
             self.backend.quantize(x, &params, &mut self.codes)?;
             pack::pack(&self.codes, params.bits, params.pack_offset(), &mut payload);
         }
-        Ok(Encoded { params: Some(params), elems: x.len(), payload })
+        Ok(Encoded { params: Some(params), elems: x.len(), payload, tiled: false })
     }
 
     /// Decode into `out` (resized to the tensor's element count).
     /// Truncated payloads are errors (see [`pack::unpack`]), never panics.
+    /// Tiled payloads decode through [`tile::decode_into`] regardless of
+    /// backend — the tile layer is defined over the fused (native)
+    /// arithmetic, which is byte-identical to the reference.
     pub fn decode(&mut self, enc: &Encoded, out: &mut Vec<f32>) -> Result<()> {
         out.resize(enc.elems, 0.0);
+        if enc.tiled {
+            return tile::decode_into(&enc.payload, out);
+        }
         match enc.params {
             None => {
                 anyhow::ensure!(
@@ -362,6 +415,36 @@ mod tests {
         // 0 clamps to 1 (serial) rather than panicking or spawning nothing.
         parallel.set_threads(0);
         assert_eq!(parallel.threads(), 1);
+    }
+
+    #[test]
+    fn tiled_encode_roundtrips_and_recycles() {
+        use crate::quant::tile::TileConfig;
+        let x = test_tensor(4096);
+        let mut c = Codec::default();
+        // Without set_tiling, encode_tiled is an error, not a panic.
+        assert!(c.encode_tiled(&x, 4, None).is_err());
+        let cfg = TileConfig { tile_elems: 512, outlier_frac: 0.01 };
+        c.set_tiling(Some(TileCodec::new(cfg, Method::Pda)));
+        assert!(c.tiling_enabled());
+        let enc = c.encode_tiled(&x, 4, None).unwrap();
+        assert!(enc.tiled && enc.params.is_none());
+        // Tables + outliers cost a little over the 4 stream bits/elem.
+        assert!(enc.avg_wire_bits() > 4.0 && enc.avg_wire_bits() < 6.0);
+        let mut out = Vec::new();
+        c.decode(&enc, &mut out).unwrap();
+        assert_eq!(out.len(), 4096);
+        // The recycled-buffer discipline holds on the tiled path too.
+        let ptr = enc.payload.as_ptr();
+        c.recycle(enc);
+        let e2 = c.encode_tiled(&x, 4, None).unwrap();
+        assert_eq!(e2.payload.as_ptr(), ptr);
+        // bits == 32 falls back to the raw passthrough.
+        let raw = c.encode_tiled(&x, 32, None).unwrap();
+        assert!(!raw.tiled && raw.params.is_none());
+        let mut back = Vec::new();
+        c.decode(&raw, &mut back).unwrap();
+        assert_eq!(back, x);
     }
 
     #[test]

@@ -26,7 +26,10 @@
 //! the reference two-pass [`uniform`]+[`pack`] route; calibration runs
 //! through [`stats::CalibScan`], one fused stats+histogram scan. The
 //! two-pass modules remain the numerical reference and the staging path
-//! for external backends (the AOT Pallas kernel).
+//! for external backends (the AOT Pallas kernel). [`tile`] layers
+//! tile-wise hybrid quantization on top of [`fused`]: per-tile scales, a
+//! raw-f32 outlier side-channel, and a budgeted non-uniform bit
+//! allocation across tiles.
 
 pub mod aciq;
 pub mod codec;
@@ -34,6 +37,7 @@ pub mod ds_aciq;
 pub mod fused;
 pub mod pack;
 pub mod stats;
+pub mod tile;
 pub mod uniform;
 
 /// Bitwidths supported on the wire. 32 means "no quantization" (raw f32).

@@ -138,6 +138,26 @@ impl AbsHistogram {
     }
 }
 
+/// Indices of the `k` largest-|x| elements of `x`, ascending index order.
+///
+/// O(n) selection (`select_nth_unstable_by`) rather than a full sort —
+/// this runs per encode on the tiled hot path, where `k` is a small
+/// fraction of `n` (the outlier side-channel). NaN ranks above every
+/// finite value (`total_cmp` on |x|), so poisoned elements land in the
+/// raw side-channel instead of poisoning a tile's calibration.
+pub fn top_abs_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(x.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    let key = |i: &u32| x[*i as usize].abs();
+    idx.select_nth_unstable_by(k - 1, |a, b| key(b).total_cmp(&key(a)));
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
 /// Fused calibration scan: [`TensorStats`] and the |x| histogram from a
 /// single stats pass plus one binning pass.
 ///
@@ -265,6 +285,17 @@ mod tests {
         let b = AbsHistogram::compute_with_top(&x, 128, top);
         assert_eq!(a.counts, b.counts);
         assert_eq!(a.width.to_bits(), b.width.to_bits());
+    }
+
+    #[test]
+    fn top_abs_indices_finds_the_spikes() {
+        let mut x = vec![0.1f32; 1000];
+        x[3] = -50.0;
+        x[997] = 40.0;
+        x[500] = f32::NAN;
+        assert_eq!(top_abs_indices(&x, 3), vec![3, 500, 997]);
+        assert_eq!(top_abs_indices(&x, 0), Vec::<u32>::new());
+        assert_eq!(top_abs_indices(&[1.0, 2.0], 5), vec![0, 1]);
     }
 
     #[test]

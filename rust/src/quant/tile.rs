@@ -1,0 +1,651 @@
+//! Tile-wise hybrid quantization: per-tile scales, a sparse outlier
+//! side-channel, and a non-uniform bit allocation — the TAH-QUANT-style
+//! codec layer on top of the fused kernels.
+//!
+//! One scale per tensor (the flat path) makes every element pay for the
+//! worst outlier: a single |x| spike widens the quantization interval of
+//! the whole activation. Splitting the tensor into fixed-size tiles and
+//! calibrating each independently localizes that damage; pulling the
+//! top-k |x| elements out into a raw-f32 side-channel before calibration
+//! removes it almost entirely; and letting the adaptive controller spend
+//! a *bit budget* non-uniformly across tiles (more bits where the
+//! histogram says quantization hurts, fewer where the tile is flat)
+//! makes every wire byte worth more at a fixed bandwidth.
+//!
+//! **Tiled payload layout** (normative copy in `docs/WIRE_PROTOCOL.md`;
+//! cross-checked by `analysis/spec.rs`):
+//!
+//! ```text
+//! tile header (12 bytes)   ntiles u32 | tile_elems u32 | noutliers u32
+//! tile param table         ntiles × tile param record (17 bytes):
+//!                          scale f32 | zero_point f32 | lo f32 | hi f32 | bits u8
+//! outlier side-channel     noutliers × outlier record (8 bytes):
+//!                          index u32 | value f32   (ascending index)
+//! packed streams           per-tile fused streams, each byte-aligned
+//! ```
+//!
+//! All integers and floats are little-endian. Tile `t` covers elements
+//! `[t*tile_elems, min((t+1)*tile_elems, elems))`; only the final tile
+//! may be ragged. `tile_elems` is a multiple of 8 (every
+//! [`super::fused::group_elems`] value divides 8), so each tile's packed
+//! stream carries no padding bits except possibly the final one, and the
+//! fused single-pass / multicore structure applies per tile unchanged. A
+//! payload with `ntiles = 1` and no outliers carries exactly the flat
+//! fused stream after its 29 header/table bytes (asserted byte-for-byte
+//! in tests) — and the *old* flat format keeps its own frame kind, so
+//! pre-tiling peers still decode.
+//!
+//! Decode is hostile-input safe: every header field is validated
+//! (`ntiles` against [`MAX_TILES`] and `elems`, outlier indices against
+//! `elems`, per-tile `bits` against [`super::SUPPORTED_BITS`] — a wire
+//! width like 13 is an error here exactly as on the flat path), and
+//! stream lengths are checked before any kernel runs.
+
+use super::ds_aciq::hist_quant_mse;
+use super::fused;
+use super::pack::packed_len;
+use super::stats::{top_abs_indices, CalibScan, DEFAULT_BINS};
+use super::{calibrate, Method, QuantParams, SUPPORTED_BITS};
+use crate::Result;
+
+/// Bytes in the tiled-payload header: `ntiles u32 | tile_elems u32 |
+/// noutliers u32`.
+pub const TILE_HDR_BYTES: usize = 12;
+
+/// Bytes per tile param record: `scale f32 | zero_point f32 | lo f32 |
+/// hi f32 | bits u8`.
+pub const TILE_PARAM_BYTES: usize = 17;
+
+/// Bytes per outlier record: `index u32 | value f32`.
+pub const OUTLIER_BYTES: usize = 8;
+
+/// Hard cap on the tile count a payload may claim (2^16). Real configs
+/// sit far below this; the cap bounds hostile-header allocation.
+pub const MAX_TILES: usize = 1 << 16;
+
+/// Ladder of widths the budget allocator spends across tiles. Raw f32
+/// and 16-bit stay whole-tensor decisions (the controller only enters
+/// budget territory once it has left the high-precision regime).
+const BUDGET_LADDER: [u8; 4] = [8, 6, 4, 2];
+
+/// Static tiling configuration (the `pipeline.tile_elems` /
+/// `pipeline.outlier_frac` knobs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileConfig {
+    /// Elements per tile; must be a positive multiple of 8.
+    pub tile_elems: usize,
+    /// Fraction of elements routed to the raw-f32 outlier side-channel
+    /// (top-k by |x|); `0.0` disables the side-channel.
+    pub outlier_frac: f64,
+}
+
+impl TileConfig {
+    /// Validate the invariants the encoder relies on.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.tile_elems > 0 && self.tile_elems % 8 == 0,
+            "tile_elems must be a positive multiple of 8, got {}",
+            self.tile_elems
+        );
+        anyhow::ensure!(
+            (0.0..=0.5).contains(&self.outlier_frac),
+            "outlier_frac must be in [0, 0.5], got {}",
+            self.outlier_frac
+        );
+        Ok(())
+    }
+}
+
+/// Cached per-tile calibration: recomputed when the tensor shape, the
+/// requested width, or the bit budget changes, and refreshed every
+/// `calib_every` microbatches — the tile-path mirror of the driver's
+/// flat-path calibration amortization.
+struct TilePlan {
+    n: usize,
+    bits: u8,
+    avg_fp: u32,
+    params: Vec<QuantParams>,
+}
+
+/// Stateful tiled encoder: owns the calibration cache and the masked-
+/// calibration scratch buffer. Decode is stateless — see [`decode_into`].
+pub struct TileCodec {
+    cfg: TileConfig,
+    method: Method,
+    calib_every: u32,
+    since: u32,
+    plan: Option<TilePlan>,
+    scratch: Vec<f32>,
+}
+
+impl TileCodec {
+    /// Tiled encoder with the given tiling config and calibration method.
+    pub fn new(cfg: TileConfig, method: Method) -> Self {
+        TileCodec { cfg, method, calib_every: 1, since: 0, plan: None, scratch: Vec::new() }
+    }
+
+    /// Recalibrate every `every` encodes (shape/width/budget changes
+    /// always recalibrate immediately). 1 = every microbatch.
+    pub fn set_calib_every(&mut self, every: u32) {
+        self.calib_every = every.max(1);
+    }
+
+    /// The tiling configuration this encoder was built with.
+    pub fn config(&self) -> TileConfig {
+        self.cfg
+    }
+
+    /// Encode `x` as a tiled payload into `payload` (resized; every byte
+    /// written). `bits` is the uniform per-tile width; when `avg_bits`
+    /// is set, the budget allocator instead distributes
+    /// {2,4,6,8}-bit widths across tiles so the *average* stays at or
+    /// under `avg_bits`, degrading the least-sensitive tiles first.
+    pub fn encode_into(
+        &mut self,
+        x: &[f32],
+        bits: u8,
+        avg_bits: Option<f32>,
+        payload: &mut Vec<u8>,
+    ) -> Result<()> {
+        self.cfg.validate()?;
+        anyhow::ensure!(SUPPORTED_BITS.contains(&bits), "unsupported tile bitwidth {bits}");
+        let n = x.len();
+        let te = self.cfg.tile_elems;
+        let ntiles = n.div_ceil(te);
+        anyhow::ensure!(ntiles <= MAX_TILES, "{ntiles} tiles exceeds MAX_TILES");
+        // Fixed-point budget key: 0 = uniform, else avg_bits × 256.
+        let avg_fp = avg_bits.map_or(0, |a| (a.clamp(2.0, 8.0) * 256.0).round() as u32);
+
+        // Outliers are per-tensor data, recomputed every encode; the
+        // calibration plan is amortized across `calib_every` encodes.
+        let k = ((n as f64 * self.cfg.outlier_frac) as usize).min(n / 2);
+        let outliers = top_abs_indices(x, k);
+
+        let stale = match &self.plan {
+            None => true,
+            Some(p) => p.n != n || p.bits != bits || p.avg_fp != avg_fp,
+        };
+        if stale || self.since >= self.calib_every {
+            self.plan = Some(self.compute_plan(x, bits, avg_fp, &outliers));
+            self.since = 1;
+        } else {
+            self.since += 1;
+        }
+        // lint-free unwrap shape: the plan was just ensured above.
+        let plan = self.plan.as_ref().expect("plan computed above");
+
+        // Layout: header | param table | outliers | per-tile streams.
+        let streams_len: usize = (0..ntiles)
+            .map(|t| packed_len(tile_len(n, te, t), plan.params[t].bits))
+            .sum();
+        let total = TILE_HDR_BYTES
+            + ntiles * TILE_PARAM_BYTES
+            + outliers.len() * OUTLIER_BYTES
+            + streams_len;
+        payload.resize(total, 0);
+        payload[0..4].copy_from_slice(&(ntiles as u32).to_le_bytes());
+        payload[4..8].copy_from_slice(&(te as u32).to_le_bytes());
+        payload[8..12].copy_from_slice(&(outliers.len() as u32).to_le_bytes());
+        let mut off = TILE_HDR_BYTES;
+        for p in &plan.params {
+            let rec = &mut payload[off..off + TILE_PARAM_BYTES];
+            rec[0..4].copy_from_slice(&p.scale.to_le_bytes());
+            rec[4..8].copy_from_slice(&p.zero_point.to_le_bytes());
+            rec[8..12].copy_from_slice(&p.lo.to_le_bytes());
+            rec[12..16].copy_from_slice(&p.hi.to_le_bytes());
+            rec[16] = p.bits;
+            off += TILE_PARAM_BYTES;
+        }
+        for &idx in &outliers {
+            let rec = &mut payload[off..off + OUTLIER_BYTES];
+            rec[0..4].copy_from_slice(&idx.to_le_bytes());
+            rec[4..8].copy_from_slice(&x[idx as usize].to_le_bytes());
+            off += OUTLIER_BYTES;
+        }
+        // Streams: the original data (outliers included — they clamp to
+        // the tile range harmlessly and are overwritten on decode), each
+        // tile through the same fused dispatch as the flat path.
+        for (t, p) in plan.params.iter().enumerate() {
+            let (a, b) = (t * te, (t * te + tile_len(n, te, t)).min(n));
+            let plen = packed_len(b - a, p.bits);
+            fused::encode_chunk(&x[a..b], p, &mut payload[off..off + plen]);
+            off += plen;
+        }
+        debug_assert_eq!(off, total);
+        Ok(())
+    }
+
+    /// Derive the per-tile calibration plan: mask outliers to zero in a
+    /// scratch copy, choose per-tile widths (uniform or budgeted), then
+    /// calibrate each tile slice with the configured method.
+    fn compute_plan(&mut self, x: &[f32], bits: u8, avg_fp: u32, outliers: &[u32]) -> TilePlan {
+        let n = x.len();
+        let te = self.cfg.tile_elems;
+        let ntiles = n.div_ceil(te);
+        self.scratch.clear();
+        self.scratch.extend_from_slice(x);
+        for &i in outliers {
+            self.scratch[i as usize] = 0.0;
+        }
+        let tile_bits: Vec<u8> = if avg_fp == 0 {
+            vec![bits; ntiles]
+        } else {
+            allocate_bits(&self.scratch, te, avg_fp)
+        };
+        let params = tile_bits
+            .iter()
+            .enumerate()
+            .map(|(t, &b)| {
+                let sl = &self.scratch[t * te..(t * te + tile_len(n, te, t)).min(n)];
+                calibrate(sl, self.method, b)
+            })
+            .collect();
+        TilePlan { n, bits, avg_fp, params }
+    }
+}
+
+/// Length of tile `t` for an `n`-element tensor at `te` elements/tile.
+fn tile_len(n: usize, te: usize, t: usize) -> usize {
+    te.min(n - t * te)
+}
+
+/// Greedy budget allocator: every tile starts at 8 bits; while the total
+/// exceeds the budget implied by `avg_fp` (= avg bits × 256), step down
+/// the tile whose next ladder step costs the least quantization MSE per
+/// bit saved (per-tile `hist_quant_mse` over a one-pass [`CalibScan`]
+/// histogram). A bandwidth drop therefore degrades the least-sensitive
+/// tiles first and touches sensitive tiles only once the flat ones are
+/// exhausted. O(ntiles² · ladder) worst case — ntiles is small (wire cap
+/// [`MAX_TILES`], configs typically ≤ 64 tiles).
+fn allocate_bits(x: &[f32], te: usize, avg_fp: u32) -> Vec<u8> {
+    let n = x.len();
+    let ntiles = n.div_ceil(te);
+    // Per-tile MSE at each ladder width from one calibration scan/tile.
+    let mut mse = vec![[0f64; BUDGET_LADDER.len()]; ntiles];
+    for (t, row) in mse.iter_mut().enumerate() {
+        let sl = &x[t * te..(t * te + tile_len(n, te, t)).min(n)];
+        let scan = CalibScan::compute(sl, DEFAULT_BINS);
+        let alpha = if scan.stats.n == 0 { 1e-12 } else { scan.stats.abs_max().max(1e-12) };
+        for (j, &w) in BUDGET_LADDER.iter().enumerate() {
+            row[j] = hist_quant_mse(&scan.hist, alpha, w);
+        }
+    }
+    let budget_bits = avg_fp as f64 / 256.0 * n as f64;
+    let mut level = vec![0usize; ntiles];
+    let mut total_bits: f64 = (0..ntiles)
+        .map(|t| (BUDGET_LADDER[0] as usize * tile_len(n, te, t)) as f64)
+        .sum();
+    while total_bits > budget_bits {
+        let mut best: Option<(usize, f64)> = None;
+        for t in 0..ntiles {
+            let l = level[t];
+            if l + 1 >= BUDGET_LADDER.len() {
+                continue;
+            }
+            let dmse = (mse[t][l + 1] - mse[t][l]).max(0.0);
+            let dbits = (BUDGET_LADDER[l] - BUDGET_LADDER[l + 1]) as f64;
+            let cost = dmse / dbits;
+            if best.is_none_or(|(_, c)| cost < c) {
+                best = Some((t, cost));
+            }
+        }
+        let Some((t, _)) = best else {
+            break; // every tile already at the 2-bit floor
+        };
+        let saved = (BUDGET_LADDER[level[t]] - BUDGET_LADDER[level[t] + 1]) as usize;
+        total_bits -= (saved * tile_len(n, te, t)) as f64;
+        level[t] += 1;
+    }
+    level.iter().map(|&l| BUDGET_LADDER[l]).collect()
+}
+
+/// Parsed view of a tiled payload: validated header fields, the param
+/// table, and borrowed outlier/stream sections. Public so tests, benches
+/// and the driver-level budget assertions can inspect per-tile widths
+/// without re-implementing the layout.
+#[derive(Debug)]
+pub struct TileView<'a> {
+    /// Number of tiles (`0` only for an empty tensor).
+    pub ntiles: usize,
+    /// Elements per tile (final tile may be ragged).
+    pub tile_elems: usize,
+    /// Per-tile quantizer parameters, wire order.
+    pub params: Vec<QuantParams>,
+    /// Raw outlier records (`noutliers ×` [`OUTLIER_BYTES`]).
+    pub outliers: &'a [u8],
+    /// Concatenated per-tile packed streams.
+    pub streams: &'a [u8],
+}
+
+impl<'a> TileView<'a> {
+    /// Parse and validate a tiled payload against the expected element
+    /// count. Every field a hostile peer controls is checked here:
+    /// tile count, tile size vs `elems`, per-tile bitwidths, outlier
+    /// indices, and total stream length.
+    pub fn parse(payload: &'a [u8], elems: usize) -> Result<Self> {
+        anyhow::ensure!(
+            payload.len() >= TILE_HDR_BYTES,
+            "tiled payload truncated: {} bytes < {TILE_HDR_BYTES}-byte header",
+            payload.len()
+        );
+        let ntiles = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+        let te = u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]) as usize;
+        let nout = u32::from_le_bytes([payload[8], payload[9], payload[10], payload[11]]) as usize;
+        anyhow::ensure!(ntiles <= MAX_TILES, "tile count {ntiles} exceeds MAX_TILES");
+        if elems == 0 {
+            anyhow::ensure!(ntiles == 0 && nout == 0, "nonzero tiles for empty tensor");
+        } else {
+            anyhow::ensure!(ntiles >= 1 && te >= 1, "bad tile geometry: {ntiles} × {te}");
+            let (nt, te64, n64) = (ntiles as u64, te as u64, elems as u64);
+            anyhow::ensure!(
+                (nt - 1) * te64 < n64 && n64 <= nt * te64,
+                "tile geometry {ntiles} × {te} does not cover {elems} elements"
+            );
+        }
+        anyhow::ensure!(nout <= elems, "{nout} outliers exceed {elems} elements");
+        let ptab = TILE_HDR_BYTES + ntiles * TILE_PARAM_BYTES;
+        let oend = ptab + nout * OUTLIER_BYTES;
+        anyhow::ensure!(
+            payload.len() >= oend,
+            "tiled payload truncated: {} bytes, tables need {oend}",
+            payload.len()
+        );
+        let mut params = Vec::with_capacity(ntiles);
+        for t in 0..ntiles {
+            let rec = &payload[TILE_HDR_BYTES + t * TILE_PARAM_BYTES..][..TILE_PARAM_BYTES];
+            let bits = rec[16];
+            // The flat path's hostile-bitwidth guard, per tile: a wire
+            // width outside SUPPORTED_BITS decodes to an error, never
+            // garbage (and never reaches group_elems' debug contract).
+            anyhow::ensure!(
+                SUPPORTED_BITS.contains(&bits),
+                "unsupported wire bitwidth {bits} in tile {t}"
+            );
+            params.push(QuantParams {
+                scale: f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]),
+                zero_point: f32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]),
+                lo: f32::from_le_bytes([rec[8], rec[9], rec[10], rec[11]]),
+                hi: f32::from_le_bytes([rec[12], rec[13], rec[14], rec[15]]),
+                bits,
+            });
+        }
+        let outliers = &payload[ptab..oend];
+        for rec in outliers.chunks_exact(OUTLIER_BYTES) {
+            let idx = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+            anyhow::ensure!(idx < elems, "outlier index {idx} out of range ({elems} elements)");
+        }
+        let streams = &payload[oend..];
+        let need: usize = params
+            .iter()
+            .enumerate()
+            .map(|(t, p)| packed_len(tile_len(elems, te.max(1), t), p.bits))
+            .sum();
+        anyhow::ensure!(
+            streams.len() >= need,
+            "tiled bitstream truncated: streams need {need} bytes, got {}",
+            streams.len()
+        );
+        Ok(TileView { ntiles, tile_elems: te, params, outliers, streams })
+    }
+
+    /// Decoded outlier records `(index, value)`, wire order.
+    pub fn outlier_records(&self) -> impl Iterator<Item = (usize, f32)> + '_ {
+        self.outliers.chunks_exact(OUTLIER_BYTES).map(|rec| {
+            (
+                u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize,
+                f32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]),
+            )
+        })
+    }
+}
+
+/// Decode a tiled payload into `out` (`out.len()` = element count, set by
+/// the frame header exactly like the flat path). Stateless: all layout
+/// and parameters come from the validated payload itself.
+pub fn decode_into(payload: &[u8], out: &mut [f32]) -> Result<()> {
+    let view = TileView::parse(payload, out.len())?;
+    let (n, te) = (out.len(), view.tile_elems.max(1));
+    let mut off = 0usize;
+    for (t, p) in view.params.iter().enumerate() {
+        let (a, b) = (t * te, (t * te + tile_len(n, te, t)).min(n));
+        let plen = packed_len(b - a, p.bits);
+        fused::decode_into(&view.streams[off..], p, &mut out[a..b])?;
+        off += plen;
+    }
+    for (idx, val) in view.outlier_records() {
+        out[idx] = val; // idx validated < elems by parse
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::quant_mse;
+
+    /// Heavy-tailed, tile-heterogeneous fixture: per-region scales spread
+    /// over two orders of magnitude plus sparse huge outliers — the
+    /// regime where one scale per tensor collapses at 2-bit (paper Fig 3,
+    /// TAH-QUANT's motivating case).
+    fn heavy_tailed(n: usize, region: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::seed(seed);
+        (0..n)
+            .map(|i| {
+                let scale = 0.05 * ((i / region) as f64 * 1.7 + 1.0);
+                let v = rng.laplace(scale) as f32;
+                if i % 211 == 0 {
+                    v + 30.0 * (if i % 2 == 0 { 1.0 } else { -1.0 })
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    fn roundtrip(x: &[f32], cfg: TileConfig, bits: u8, avg: Option<f32>) -> (Vec<u8>, Vec<f32>) {
+        let mut tc = TileCodec::new(cfg, Method::Pda);
+        let mut payload = Vec::new();
+        tc.encode_into(x, bits, avg, &mut payload).unwrap();
+        let mut out = vec![0f32; x.len()];
+        decode_into(&payload, &mut out).unwrap();
+        (payload, out)
+    }
+
+    #[test]
+    fn one_tile_stream_is_byte_identical_to_flat_fused() {
+        let x = heavy_tailed(1000, 250, 5);
+        let te = 1024; // one tile covers everything
+        let (payload, _) = roundtrip(&x, TileConfig { tile_elems: te, outlier_frac: 0.0 }, 4, None);
+        let view = TileView::parse(&payload, x.len()).unwrap();
+        assert_eq!(view.ntiles, 1);
+        assert!(view.outliers.is_empty());
+        // The stream section is exactly the flat fused payload under the
+        // same params — the backward-compatibility pin for the format.
+        let mut flat = Vec::new();
+        fused::encode_into(&x, &view.params[0], &mut flat);
+        assert_eq!(view.streams, &flat[..]);
+        assert_eq!(
+            payload.len(),
+            TILE_HDR_BYTES + TILE_PARAM_BYTES + flat.len(),
+            "1-tile/no-outlier payload = header + one param record + flat stream"
+        );
+    }
+
+    #[test]
+    fn roundtrip_reconstruction_bounded_per_tile() {
+        let x = heavy_tailed(4096, 512, 7);
+        let cfg = TileConfig { tile_elems: 512, outlier_frac: 0.0 };
+        for bits in SUPPORTED_BITS {
+            let (payload, out) = roundtrip(&x, cfg, bits, None);
+            let view = TileView::parse(&payload, x.len()).unwrap();
+            assert_eq!(view.ntiles, 8);
+            for (t, p) in view.params.iter().enumerate() {
+                let (a, b) = (t * 512, ((t + 1) * 512).min(x.len()));
+                // Inside each tile's clip range the error is ≤ scale/2.
+                let (clip_lo, clip_hi) =
+                    ((p.lo - p.zero_point) * p.scale, (p.hi - p.zero_point) * p.scale);
+                for i in a..b {
+                    if x[i] > clip_lo && x[i] < clip_hi {
+                        assert!(
+                            (x[i] - out[i]).abs() <= p.scale * 0.5 + 1e-5,
+                            "bits={bits} tile={t} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outliers_reconstruct_exactly() {
+        let x = heavy_tailed(2048, 256, 11);
+        let cfg = TileConfig { tile_elems: 256, outlier_frac: 0.01 };
+        let (payload, out) = roundtrip(&x, cfg, 2, None);
+        let view = TileView::parse(&payload, x.len()).unwrap();
+        let k = (2048.0 * 0.01) as usize;
+        assert_eq!(view.outliers.len(), k * OUTLIER_BYTES);
+        let mut prev = None;
+        for (idx, val) in view.outlier_records() {
+            assert_eq!(val.to_bits(), x[idx].to_bits(), "outliers are raw f32");
+            assert_eq!(out[idx].to_bits(), x[idx].to_bits(), "decode restores them exactly");
+            if let Some(p) = prev {
+                assert!(idx > p, "ascending index order");
+            }
+            prev = Some(idx);
+        }
+    }
+
+    #[test]
+    fn tiled_2bit_beats_flat_2bit_on_heavy_tailed_fixture() {
+        // The paper's 2-bit headline case: per-tile scales + the outlier
+        // side-channel must show a *measured* quant_mse win over one
+        // scale per tensor.
+        let x = heavy_tailed(8192, 1024, 13);
+        let flat_p = calibrate(&x, Method::Pda, 2);
+        let flat_mse = quant_mse(&x, &flat_p);
+        let cfg = TileConfig { tile_elems: 1024, outlier_frac: 0.01 };
+        let (_, out) = roundtrip(&x, cfg, 2, None);
+        let tiled_mse: f64 = x
+            .iter()
+            .zip(&out)
+            .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+            .sum::<f64>()
+            / x.len() as f64;
+        assert!(
+            tiled_mse < flat_mse * 0.7,
+            "tiled 2-bit must beat flat 2-bit: tiled={tiled_mse:.6} flat={flat_mse:.6}"
+        );
+    }
+
+    #[test]
+    fn budget_mode_allocates_nonuniform_bits() {
+        // One loud region, the rest near-flat: at avg 4 bits the loud
+        // tiles must keep more bits than the flat ones — degradation is
+        // per-tile, not uniform.
+        let mut rng = crate::util::rng::Rng::seed(17);
+        let n = 8192;
+        let x: Vec<f32> = (0..n)
+            .map(|i| {
+                let s = if i < 1024 { 2.0 } else { 0.02 };
+                rng.laplace(s) as f32
+            })
+            .collect();
+        let cfg = TileConfig { tile_elems: 1024, outlier_frac: 0.0 };
+        let (payload, _) = roundtrip(&x, cfg, 4, Some(4.0));
+        let view = TileView::parse(&payload, n).unwrap();
+        let bits: Vec<u8> = view.params.iter().map(|p| p.bits).collect();
+        let distinct: std::collections::BTreeSet<u8> = bits.iter().copied().collect();
+        assert!(distinct.len() > 1, "budget must spend non-uniformly, got {bits:?}");
+        assert!(bits[0] > bits[7], "loud tile keeps more bits than quiet tile: {bits:?}");
+        // The budget is respected: average wire bits ≤ requested avg.
+        let total_bits: usize =
+            bits.iter().enumerate().map(|(t, &b)| b as usize * tile_len(n, 1024, t)).sum();
+        assert!(total_bits as f64 / n as f64 <= 4.0 + 1e-9, "{bits:?}");
+    }
+
+    #[test]
+    fn hostile_tile_bitwidth_is_a_decode_error() {
+        let x = heavy_tailed(512, 128, 19);
+        let cfg = TileConfig { tile_elems: 128, outlier_frac: 0.0 };
+        let (mut payload, _) = roundtrip(&x, cfg, 4, None);
+        // Corrupt tile 1's bits field to a width the wire cannot carry.
+        payload[TILE_HDR_BYTES + TILE_PARAM_BYTES + 16] = 13;
+        let mut out = vec![0f32; 512];
+        let err = decode_into(&payload, &mut out).unwrap_err();
+        assert!(err.to_string().contains("unsupported wire bitwidth 13"), "{err:#}");
+    }
+
+    #[test]
+    fn hostile_headers_are_decode_errors() {
+        let x = heavy_tailed(512, 128, 23);
+        let cfg = TileConfig { tile_elems: 128, outlier_frac: 0.01 };
+        let (payload, _) = roundtrip(&x, cfg, 4, None);
+        let mut out = vec![0f32; 512];
+        // Truncated header.
+        assert!(decode_into(&payload[..8], &mut out).is_err());
+        // Tile count that cannot cover the tensor.
+        let mut bad = payload.clone();
+        bad[0..4].copy_from_slice(&2u32.to_le_bytes());
+        assert!(decode_into(&bad, &mut out).is_err());
+        // Tile count over the hard cap.
+        let mut bad = payload.clone();
+        bad[0..4].copy_from_slice(&(MAX_TILES as u32 + 1).to_le_bytes());
+        assert!(decode_into(&bad, &mut out).is_err());
+        // Outlier index out of range.
+        let mut bad = payload.clone();
+        let optr = TILE_HDR_BYTES + 4 * TILE_PARAM_BYTES;
+        bad[optr..optr + 4].copy_from_slice(&512u32.to_le_bytes());
+        assert!(decode_into(&bad, &mut out).is_err());
+        // Truncated stream section.
+        let bad = &payload[..payload.len() - 1];
+        assert!(decode_into(bad, &mut out).is_err());
+        // The original still decodes after all that cloning.
+        assert!(decode_into(&payload, &mut out).is_ok());
+    }
+
+    #[test]
+    fn ragged_final_tile_and_empty_tensor() {
+        let x = heavy_tailed(1000, 300, 29); // 1000 = 3×256 + 232
+        let cfg = TileConfig { tile_elems: 256, outlier_frac: 0.005 };
+        let (payload, out) = roundtrip(&x, cfg, 8, None);
+        let view = TileView::parse(&payload, x.len()).unwrap();
+        assert_eq!(view.ntiles, 4);
+        assert_eq!(out.len(), 1000);
+        // Empty tensor: a degenerate but valid payload.
+        let (payload, out) = roundtrip(&[], cfg, 8, None);
+        assert!(out.is_empty());
+        let view = TileView::parse(&payload, 0).unwrap();
+        assert_eq!(view.ntiles, 0);
+    }
+
+    #[test]
+    fn calibration_cache_is_keyed_and_refreshed() {
+        let x = heavy_tailed(2048, 512, 31);
+        let cfg = TileConfig { tile_elems: 512, outlier_frac: 0.0 };
+        let mut tc = TileCodec::new(cfg, Method::Pda);
+        tc.set_calib_every(1000);
+        let mut p1 = Vec::new();
+        tc.encode_into(&x, 4, None, &mut p1).unwrap();
+        // Same shape/width: the cached plan reproduces the exact bytes.
+        let mut p2 = Vec::new();
+        tc.encode_into(&x, 4, None, &mut p2).unwrap();
+        assert_eq!(p1, p2);
+        // Width change invalidates the cache (params must change).
+        let mut p3 = Vec::new();
+        tc.encode_into(&x, 2, None, &mut p3).unwrap();
+        let v3 = TileView::parse(&p3, x.len()).unwrap();
+        assert!(v3.params.iter().all(|p| p.bits == 2));
+        // Budget-mode key differs from uniform.
+        let mut p4 = Vec::new();
+        tc.encode_into(&x, 2, Some(3.0), &mut p4).unwrap();
+        assert_ne!(p3, p4);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        assert!(TileConfig { tile_elems: 0, outlier_frac: 0.0 }.validate().is_err());
+        assert!(TileConfig { tile_elems: 100, outlier_frac: 0.0 }.validate().is_err());
+        assert!(TileConfig { tile_elems: 128, outlier_frac: 0.6 }.validate().is_err());
+        assert!(TileConfig { tile_elems: 128, outlier_frac: 0.02 }.validate().is_ok());
+    }
+}

@@ -305,6 +305,93 @@ fn prop_session_delivers_exactly_once_in_order_under_churn() {
 }
 
 #[test]
+fn prop_tiled_codec_roundtrip_across_shapes_widths_and_budgets() {
+    use quantpipe::quant::tile::{self, TileCodec, TileConfig, TileView};
+    forall(60, |rng| {
+        let n = rng.usize(1, 6000);
+        let x = random_tensor(rng, n);
+        let n = x.len(); // random_tensor may extend past the requested n
+        let bits = SUPPORTED_BITS[rng.usize(0, SUPPORTED_BITS.len())];
+        let tile_elems = 8 * rng.usize(1, 128);
+        let outlier_frac = rng.range(0.0, 0.5);
+        let avg_bits = if rng.f64() < 0.4 {
+            Some(rng.range(2.0, 8.0) as f32)
+        } else {
+            None
+        };
+        let mut tc = TileCodec::new(TileConfig { tile_elems, outlier_frac }, Method::Pda);
+        let mut payload = Vec::new();
+        tc.encode_into(&x, bits, avg_bits, &mut payload).unwrap();
+
+        // The payload must parse back to a consistent wire view.
+        let view = TileView::parse(&payload, n).unwrap();
+        let ntiles = n.div_ceil(tile_elems);
+        prop_assert!(view.ntiles == ntiles, "ntiles {} != {ntiles}", view.ntiles);
+        prop_assert!(view.params.len() == ntiles, "param table length");
+        match avg_bits {
+            None => prop_assert!(
+                view.params.iter().all(|p| p.bits == bits),
+                "uniform mode must pin every tile at {bits}"
+            ),
+            Some(a) => {
+                // Budgeted widths come from the {8,6,4,2} ladder and
+                // average at or under the clamped budget.
+                prop_assert!(
+                    view.params.iter().all(|p| [2u8, 4, 6, 8].contains(&p.bits)),
+                    "budget widths off-ladder"
+                );
+                let total: f64 = view
+                    .params
+                    .iter()
+                    .enumerate()
+                    .map(|(t, p)| (p.bits as usize * tile_elems.min(n - t * tile_elems)) as f64)
+                    .sum();
+                let cap = (f64::from(a).clamp(2.0, 8.0) * 256.0).round() / 256.0 * n as f64;
+                prop_assert!(total <= cap + 1e-6, "budget blown: {total} > {cap}");
+            }
+        }
+
+        let mut out = vec![0f32; n];
+        tile::decode_into(&payload, &mut out).unwrap();
+        for (t, p) in view.params.iter().enumerate() {
+            let clip_lo = (p.lo - p.zero_point) * p.scale;
+            let clip_hi = (p.hi - p.zero_point) * p.scale;
+            let (a, b) = (t * tile_elems, ((t + 1) * tile_elems).min(n));
+            for i in a..b {
+                if x[i] == out[i] {
+                    continue; // outlier side-channel: exact
+                }
+                if x[i] > clip_lo && x[i] < clip_hi {
+                    prop_assert!(
+                        (x[i] - out[i]).abs() <= p.scale * 0.5 + 1e-4,
+                        "tile {t} in-range error: {} vs {} (scale {})",
+                        x[i],
+                        out[i],
+                        p.scale
+                    );
+                } else {
+                    prop_assert!(
+                        out[i] >= clip_lo - p.scale && out[i] <= clip_hi + p.scale,
+                        "tile {t} clip reconstruction"
+                    );
+                }
+            }
+        }
+
+        // Any truncation must be a decode error, never a short/garbage read.
+        if !payload.is_empty() {
+            let cut = rng.usize(0, payload.len());
+            prop_assert!(
+                TileView::parse(&payload[..cut], n).is_err(),
+                "truncated tiled payload accepted at {cut}/{}",
+                payload.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_partition_greedy_matches_dp() {
     forall(30, |rng| {
         let blocks = rng.usize(3, 14);

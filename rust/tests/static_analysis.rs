@@ -52,6 +52,31 @@ fn lint_pass_actually_sees_the_tree() {
 }
 
 #[test]
+fn safety_lint_catches_a_seeded_violation_in_the_simd_kernels() {
+    // End-to-end negative test for R4 against the real SIMD source: strip
+    // every SAFETY: annotation from `quant/fused.rs` (the crate's densest
+    // unsafe code) and the lint must light up; the pristine file must be
+    // clean. Guards against the rule silently rotting into a no-op while
+    // `repo_is_lint_clean` keeps passing vacuously.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/quant/fused.rs");
+    let text = std::fs::read_to_string(&path).expect("reading quant/fused.rs");
+    assert!(text.contains("unsafe"), "fused.rs lost its SIMD kernels?");
+    assert!(text.contains("SAFETY:"), "fused.rs lost its SAFETY comments?");
+
+    let clean = quantpipe::analysis::SourceFile::parse("src/quant/fused.rs", &text, false);
+    let mut findings = Vec::new();
+    lints::check_safety_comments(&clean, &mut findings);
+    assert!(findings.is_empty(), "pristine fused.rs must be R4-clean: {findings:?}");
+
+    let doctored = text.replace("SAFETY:", "SAFETY_REMOVED");
+    let seeded = quantpipe::analysis::SourceFile::parse("src/quant/fused.rs", &doctored, false);
+    let mut findings = Vec::new();
+    lints::check_safety_comments(&seeded, &mut findings);
+    assert!(!findings.is_empty(), "stripping SAFETY: comments must trip R4");
+    assert!(findings.iter().all(|f| f.rule == "safety-comment"), "{findings:?}");
+}
+
+#[test]
 fn wire_constants_match_the_normative_doc() {
     let doc_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/WIRE_PROTOCOL.md");
     let doc = std::fs::read_to_string(&doc_path)

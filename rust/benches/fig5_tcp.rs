@@ -1,0 +1,177 @@
+//! Fig 5 over REAL sockets: replay the five-phase bandwidth trace
+//! through the chaos shaper on a localhost TCP link and let the
+//! controller react to *measured* write stalls — no `SimLink` anywhere.
+//!
+//! This is the trace-replay half of the chaos lab (`net::shaper`): the
+//! same `BandwidthTrace` type that drives the simulated Fig 5 bench
+//! (`fig5_adaptive`) here drives a token bucket on the sender's write
+//! path, so the kernel socket, the framing layer and the controller see
+//! the fade exactly as a congested uplink would present it.
+//!
+//! Artifact-free by design (mock stages + synthetic one-hot eval) so it
+//! runs on any machine, including CI: the point is the transport and the
+//! control loop, not the model. Emits `BENCH_fig5_tcp.json`; set
+//! `QUANTPIPE_BENCH_GATE=<max_ratio>` to hard-fail when the cost fields
+//! regress past the committed baseline by more than that ratio.
+
+use quantpipe::adapt::{AdaptConfig, Policy};
+use quantpipe::benchkit::{
+    gate_vs_committed, print_delta_vs_committed, section, write_bench_json, Table,
+};
+use quantpipe::data::EvalSet;
+use quantpipe::net::resilient::ResilienceConfig;
+use quantpipe::net::shaper::{LinkShaper, ShaperSpec};
+use quantpipe::net::trace::BandwidthTrace;
+use quantpipe::net::transport::LinkSpec;
+use quantpipe::pipeline::{mock_stage_factory, run, LinkQuant, PipelineSpec, Workload};
+use quantpipe::quant::Method;
+use quantpipe::util::json::Value;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> quantpipe::Result<()> {
+    // Mock-stage geometry: 8x256 f32 ≈ 8 KB per raw activation frame,
+    // 5 ms of "compute" on the middle stage. The compute ceiling is then
+    // exact (no probe run needed): nominal = s / compute.
+    let s = 8usize;
+    let classes = 256usize;
+    let compute = Duration::from_millis(5);
+    let nominal = s as f64 / compute.as_secs_f64();
+    let target = nominal * 0.75;
+    let budget_secs = s as f64 / target;
+
+    // Eq. 2 thresholds scaled to THIS testbed, exactly as fig5_adaptive
+    // derives them: capacity needed to hold bitwidth q at the target rate.
+    let full_bits = (s * classes) as f64 * 32.0;
+    let b_min = |q: f64| full_bits * (q / 32.0) / budget_secs;
+    let p1 = b_min(32.0) * 0.85; // forces 16-bit
+    let p2 = b_min(2.0) * 1.15; // forces 2-bit
+    let p3 = b_min(8.0) * 1.2; // recovers to 8-bit
+
+    let window = 4u64;
+    let phase_mb = 40u64;
+    let total = 5 * phase_mb;
+    let phase_secs = budget_secs * phase_mb as f64 * 1.3;
+    let trace = BandwidthTrace::from_points(&[
+        (0.0, f64::INFINITY),
+        (phase_secs, p1),
+        (2.0 * phase_secs, p2),
+        (3.0 * phase_secs, p3),
+        (4.0 * phase_secs, f64::INFINITY),
+    ]);
+
+    section("Fig 5 over TCP: trace replay through the chaos shaper");
+    println!(
+        "nominal {nominal:.0} img/s, target R = {target:.0} img/s, phase ≈ {phase_secs:.2}s"
+    );
+    println!(
+        "phase capacities: inf / {:.1} / {:.2} / {:.2} Mbps / inf",
+        p1 / 1e6,
+        p2 / 1e6,
+        p3 / 1e6
+    );
+
+    // One resilient TCP conduit whose write path carries the trace: the
+    // shaper sleeps the sender until the token bucket admits each frame,
+    // so the controller's window monitor measures the fade as real
+    // backpressure on a real socket.
+    let shaper = Arc::new(LinkShaper::new(ShaperSpec { trace, seed: 7, ..ShaperSpec::default() }));
+    let mut link0 = LinkSpec::tcp_loopback_striped(1, ResilienceConfig::default())?;
+    anyhow::ensure!(
+        link0.set_stripe_shapers(vec![Some(shaper.clone())]),
+        "striped link refused the shaper"
+    );
+    let link1 = LinkSpec::tcp_loopback()?;
+
+    let spec = PipelineSpec {
+        stages: vec![
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+            mock_stage_factory(1.0, 0.0, vec![s, classes], compute),
+            mock_stage_factory(1.0, 0.0, vec![s, classes], Duration::ZERO),
+        ],
+        links: vec![link0, link1],
+        quant: LinkQuant { method: Method::Aciq, initial_bits: 32, ..Default::default() },
+        adapt: Some(AdaptConfig {
+            target_rate: target,
+            microbatch: s,
+            policy: Policy::Ladder,
+            raise_margin: 1.1,
+        }),
+        window,
+        inflight: 2,
+    };
+    let eval = Arc::new(EvalSet::synthetic_onehot(64, classes));
+    let report = run(spec, Workload::repeat(eval, s, total))?;
+    anyhow::ensure!(
+        report.errors.is_empty() && report.microbatches == total,
+        "trace replay run was not clean: {:?}",
+        report.errors
+    );
+
+    let mut table = Table::new(&["t(s)", "bw meas (Mbps)", "rate (img/s)", "bits", "util"]);
+    for p in report.timeline.points.iter().filter(|p| p.stage == 0) {
+        table.row(&[
+            format!("{:.1}", p.t),
+            if p.bandwidth_bps.is_infinite() {
+                "inf".into()
+            } else {
+                format!("{:.1}", p.bandwidth_bps / 1e6)
+            },
+            format!("{:.0}", p.rate),
+            format!("{}", p.bits),
+            format!("{:.2}", p.util),
+        ]);
+    }
+    table.print();
+    println!("bitwidth sequence (link 0): {:?}", report.timeline.bits_sequence(0));
+    let sh = shaper.stats();
+    println!(
+        "shaper: {} frames shaped, {:.2}s total serialization stall",
+        sh.frames,
+        sh.stalled_us as f64 / 1e6
+    );
+    println!(
+        "overall throughput {:.1} img/s, accuracy {:.2}%",
+        report.throughput,
+        report.accuracy * 100.0
+    );
+
+    let bits_seq = Value::Arr(
+        report.timeline.bits_sequence(0).iter().map(|&b| Value::Num(b as f64)).collect(),
+    );
+    let fields = [
+        ("throughput_img_s", report.throughput),
+        ("accuracy", report.accuracy),
+        ("wall_secs", report.wall_secs),
+        ("microbatches", report.microbatches as f64),
+        ("images", report.images as f64),
+        ("target_rate_img_s", target),
+        ("nominal_img_s", nominal),
+        ("p50_latency_s", report.latency.quantile(0.5).as_secs_f64()),
+        ("p99_latency_s", report.latency.quantile(0.99).as_secs_f64()),
+        ("shaper_stall_secs", sh.stalled_us as f64 / 1e6),
+        ("final_bits_link0", report.timeline.final_bits(0).unwrap_or(32) as f64),
+        ("bits_steps_link0", report.timeline.bits_sequence(0).len() as f64),
+        ("window_points", report.timeline.points.len() as f64),
+    ];
+    let bench_path = write_bench_json("fig5_tcp", &fields, &[("bits_sequence_link0", bits_seq)])?;
+    println!("bench json -> {}", bench_path.display());
+
+    // Drift line always; hard gate only when asked (CI sets the ratio).
+    // Only lower-is-better fields participate — the gate treats every
+    // field as a cost.
+    let costs = [
+        ("wall_secs", report.wall_secs),
+        ("p50_latency_s", report.latency.quantile(0.5).as_secs_f64()),
+        ("p99_latency_s", report.latency.quantile(0.99).as_secs_f64()),
+    ];
+    print_delta_vs_committed("fig5_tcp", &costs);
+    if let Ok(raw) = std::env::var("QUANTPIPE_BENCH_GATE") {
+        let max_ratio: f64 = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("QUANTPIPE_BENCH_GATE wants a ratio like 1.5: {e}"))?;
+        gate_vs_committed("fig5_tcp", &costs, max_ratio)?;
+        println!("bench gate: within {max_ratio:.2}x of the committed baseline");
+    }
+    Ok(())
+}

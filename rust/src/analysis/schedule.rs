@@ -7,12 +7,16 @@
 //! is emitted and when it lands, a conduit dying with everything
 //! in flight, the HELLO resync on reconnect — is an explicit [`Action`],
 //! and [`crate::util::explore`] drives the pair through **every**
-//! interleaving up to a bound. Two further sources model the telemetry
-//! side channel and the kernel's failure modes: a data-plane-neutral
+//! interleaving up to a bound. Three further sources model the telemetry
+//! side channel and the link's failure modes: a data-plane-neutral
 //! telemetry record may ride any conduit at any time
-//! ([`Action::SendTelemetry`]), and a write may be cut off mid-record
+//! ([`Action::SendTelemetry`]), a write may be cut off mid-record
 //! ([`Action::TruncateUp`]) — everything fully written still lands, the
-//! partial record is lost, and the conduit dies.
+//! partial record is lost, and the conduit dies — and a record may be
+//! corrupted in flight ([`Action::CorruptUp`], mirroring the chaos
+//! shaper's byte-flip semantics): the receiver's CRC check rejects it,
+//! which reads as a desynced stream, so the record is lost and the
+//! conduit dies with everything behind it.
 //!
 //! Checked after every transition and at every quiescent state:
 //!
@@ -75,6 +79,8 @@ pub struct BoundaryState {
     tele_left: u8,
     /// Remaining partial-write (truncation) budget.
     truncs_left: u8,
+    /// Remaining in-flight-corruption budget.
+    corrupts_left: u8,
 }
 
 impl BoundaryState {
@@ -124,6 +130,12 @@ pub enum Action {
     /// still in flight is delivered, the partial one is lost, and the
     /// conduit dies — the receiver treats truncation as link failure.
     TruncateUp(usize),
+    /// The head in-flight record on conduit `.0` is corrupted on the
+    /// wire (the chaos shaper's byte flip): the receiver's CRC check
+    /// rejects it, which reads as a desynced stream, so the record is
+    /// lost and the conduit dies with everything queued behind it —
+    /// replay on reconnect must recover every data frame.
+    CorruptUp(usize),
 }
 
 /// Seeded faults for the checker's own tests: each breaks the protocol
@@ -154,6 +166,9 @@ pub struct BoundaryModel {
     pub tele: u8,
     /// How many partial-write truncations the scheduler may inject.
     pub truncs: u8,
+    /// How many in-flight corruptions (CRC-failed records) the
+    /// scheduler may inject.
+    pub corrupts: u8,
     /// Fault injection for self-tests; `None` for the real protocol.
     pub bug: Option<Bug>,
 }
@@ -161,7 +176,16 @@ pub struct BoundaryModel {
 impl BoundaryModel {
     /// A clean (no seeded bug) configuration.
     pub fn clean(total: u64, conduits: usize, capacity: usize, kills: u8) -> Self {
-        BoundaryModel { total, conduits, capacity, kills, tele: 0, truncs: 0, bug: None }
+        BoundaryModel {
+            total,
+            conduits,
+            capacity,
+            kills,
+            tele: 0,
+            truncs: 0,
+            corrupts: 0,
+            bug: None,
+        }
     }
 
     fn reorder_window(&self) -> usize {
@@ -257,6 +281,7 @@ impl Model for BoundaryModel {
             kills_left: self.kills,
             tele_left: self.tele,
             truncs_left: self.truncs,
+            corrupts_left: self.corrupts,
         }
     }
 
@@ -293,6 +318,9 @@ impl Model for BoundaryModel {
                 }
                 if s.truncs_left > 0 && !c.up.is_empty() && !done {
                     out.push(Action::TruncateUp(i));
+                }
+                if s.corrupts_left > 0 && !c.up.is_empty() && !done {
+                    out.push(Action::CorruptUp(i));
                 }
             } else if !done {
                 out.push(Action::Reconnect(i));
@@ -380,6 +408,19 @@ impl Model for BoundaryModel {
                 s.conduits[i].up.clear();
                 s.conduits[i].down.clear();
             }
+            Action::CorruptUp(i) => {
+                s.corrupts_left -= 1;
+                // The head record's bytes fail the CRC check at the
+                // receiver: it never reaches the session layer, and the
+                // receiver drops the conduit as desynced — the corrupt
+                // record and everything queued behind it are lost
+                // together. Same transition as a kill, but spent from
+                // its own budget so corruption is exercised even when
+                // `kills` is zero.
+                s.conduits[i].alive = false;
+                s.conduits[i].up.clear();
+                s.conduits[i].down.clear();
+            }
         }
         self.invariants(&s)?;
         Ok(s)
@@ -406,7 +447,7 @@ impl Model for BoundaryModel {
     fn fingerprint(&self, s: &BoundaryState) -> u64 {
         let mut h = Fnv::default();
         h.u64(s.next_send).u64(s.delivered.len() as u64).u64(s.kills_left as u64);
-        h.u64(s.tele_left as u64).u64(s.truncs_left as u64);
+        h.u64(s.tele_left as u64).u64(s.truncs_left as u64).u64(s.corrupts_left as u64);
         h.u64(s.tx.next_seq()).u64(s.tx.acked()).u64(s.tx.fin_acked() as u64);
         for seq in s.tx.replay_seqs() {
             h.u64(seq);
@@ -472,6 +513,7 @@ mod tests {
             kills: 1,
             tele: 0,
             truncs: 0,
+            corrupts: 0,
             bug: Some(Bug::AckOvershoot),
         };
         let v = explore(&m, Bounds::default()).expect_err("overshooting acks must be caught");
@@ -487,6 +529,7 @@ mod tests {
             kills: 1,
             tele: 0,
             truncs: 0,
+            corrupts: 0,
             bug: Some(Bug::SkipReplay),
         };
         let v = explore(&m, Bounds::default()).expect_err("skipping replay must lose frames");
@@ -505,6 +548,7 @@ mod tests {
             kills: 0,
             tele: 2,
             truncs: 0,
+            corrupts: 0,
             bug: None,
         };
         let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
@@ -524,12 +568,35 @@ mod tests {
             kills: 0,
             tele: 1,
             truncs: 1,
+            corrupts: 0,
             bug: None,
         };
         let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
         let cov = explore(&m, bounds).unwrap_or_else(|v| panic!("{v}"));
         assert!(cov.terminals >= 1, "{cov:?}");
         assert!(cov.states > 20, "truncation explores a real space: {cov:?}");
+    }
+
+    #[test]
+    fn in_flight_corruption_recovers_losslessly() {
+        // A CRC-failed record costs the receiver the whole conduit (the
+        // stream is desynced past it), so recovery rides the same
+        // machinery as a kill: HELLO resync + replay of the unacked
+        // tail. Exhaustively, in every interleaving, nothing is lost.
+        let m = BoundaryModel {
+            total: 2,
+            conduits: 1,
+            capacity: 2,
+            kills: 0,
+            tele: 0,
+            truncs: 0,
+            corrupts: 1,
+            bug: None,
+        };
+        let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
+        let cov = explore(&m, bounds).unwrap_or_else(|v| panic!("{v}"));
+        assert!(cov.terminals >= 1, "{cov:?}");
+        assert!(cov.states > 20, "corruption explores a real space: {cov:?}");
     }
 
     #[test]

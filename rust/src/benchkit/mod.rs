@@ -168,7 +168,7 @@ pub fn delta_vs_baseline(baseline_json: &str, fields: &[(&str, f64)]) -> Option<
     let mut n = 0usize;
     let mut worst: Option<(&str, f64)> = None;
     for (k, cur) in fields {
-        let Some(b) = base.at(k).and_then(|v| v.as_f64().ok()) else { continue };
+        let Some(b) = base.at(k).ok().and_then(|v| v.as_f64().ok()) else { continue };
         if !(b > 0.0 && cur.is_finite() && *cur > 0.0) {
             continue;
         }
@@ -197,6 +197,61 @@ pub fn print_delta_vs_committed(name: &str, fields: &[(&str, f64)]) {
         Some(line) => println!("vs committed {}: {line}", path.display()),
         None => println!("no comparable committed baseline at {}", path.display()),
     }
+}
+
+/// Hard perf gate against a baseline JSON (the text of a prior
+/// [`write_bench_json`] output). Every field is treated as a COST —
+/// wall seconds, latency quantiles, ns/elem — so pass only
+/// lower-is-better numbers; the gate fails if any shared finite field
+/// regresses past `cur / baseline > max_ratio`, listing every violation.
+/// Fields absent from the baseline are skipped (a new metric must not
+/// fail old baselines).
+pub fn gate_vs_baseline(
+    baseline_json: &str,
+    fields: &[(&str, f64)],
+    max_ratio: f64,
+) -> Result<()> {
+    use crate::util::json::Value;
+    anyhow::ensure!(
+        max_ratio.is_finite() && max_ratio > 0.0,
+        "bench gate wants a positive finite max ratio, got {max_ratio}"
+    );
+    let base = Value::parse(baseline_json)?;
+    let mut violations = Vec::new();
+    for (k, cur) in fields {
+        let Some(b) = base.at(k).ok().and_then(|v| v.as_f64().ok()) else { continue };
+        if !(b > 0.0 && cur.is_finite() && *cur > 0.0) {
+            continue;
+        }
+        let ratio = cur / b;
+        if ratio > max_ratio {
+            violations.push(format!("{k} {ratio:.2}x of baseline ({cur:.4} vs {b:.4})"));
+        }
+    }
+    anyhow::ensure!(
+        violations.is_empty(),
+        "bench gate (max {max_ratio:.2}x) failed: {}",
+        violations.join("; ")
+    );
+    Ok(())
+}
+
+/// [`gate_vs_baseline`] against the checked-in `BENCH_<name>.json` at the
+/// crate root. A missing or unparseable baseline passes with a notice —
+/// a fresh checkout must not fail its first bench run — but a present
+/// baseline gates hard.
+pub fn gate_vs_committed(name: &str, fields: &[(&str, f64)], max_ratio: f64) -> Result<()> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{name}.json"));
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        println!("bench gate: no committed baseline at {} (pass)", path.display());
+        return Ok(());
+    };
+    if crate::util::json::Value::parse(&text).is_err() {
+        println!("bench gate: unparseable baseline at {} (pass)", path.display());
+        return Ok(());
+    }
+    gate_vs_baseline(&text, fields, max_ratio)
+        .map_err(|e| e.context(format!("vs committed {}", path.display())))
 }
 
 #[cfg(test)]
@@ -255,5 +310,30 @@ mod tests {
         // Unparseable or disjoint baselines degrade to None, not a panic.
         assert!(delta_vs_baseline("not json", &[("enc", 1.0)]).is_none());
         assert!(delta_vs_baseline(baseline, &[("unrelated", 1.0)]).is_none());
+    }
+
+    #[test]
+    fn gate_passes_within_ratio_and_fails_past_it() {
+        let baseline = r#"{"wall_secs": 10.0, "p99_latency_s": 0.5, "skipme": null}"#;
+        // 1.4x on the worst field, gate at 1.5x: pass.
+        gate_vs_baseline(baseline, &[("wall_secs", 14.0), ("p99_latency_s", 0.4)], 1.5).unwrap();
+        // 1.6x on wall_secs: fail, naming the field and the ratio.
+        let err = gate_vs_baseline(baseline, &[("wall_secs", 16.0), ("p99_latency_s", 0.4)], 1.5)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("wall_secs 1.60x"), "{err}");
+        assert!(err.contains("max 1.50x"), "{err}");
+        // Fields the baseline lacks are skipped, never a failure.
+        gate_vs_baseline(baseline, &[("brand_new_metric", 1e9)], 1.5).unwrap();
+        // A nonsense threshold is a loud error, not a silent pass.
+        assert!(gate_vs_baseline(baseline, &[("wall_secs", 1.0)], f64::NAN).is_err());
+        // An unparseable baseline is an error here (gate_vs_committed is
+        // the lenient entry point for missing/rotten files).
+        assert!(gate_vs_baseline("not json", &[("wall_secs", 1.0)], 1.5).is_err());
+    }
+
+    #[test]
+    fn gate_vs_committed_passes_when_no_baseline_exists() {
+        gate_vs_committed("no_such_bench_baseline", &[("wall_secs", 1.0)], 1.5).unwrap();
     }
 }

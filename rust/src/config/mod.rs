@@ -169,12 +169,30 @@ pub struct TransportSection {
     /// thread starts, ignored if unavailable. Useful on edge boxes where
     /// the compute stages saturate the other cores.
     pub reactor_pin_core: i64,
+    /// Named chaos scenario (`net::scenario`) to impose on every striped
+    /// boundary this process sends on: "none" (the default — byte-for-byte
+    /// the unshaped path), "cellular_fade", "satellite_pass",
+    /// "flash_crowd", "drone_handoff", "partitioned_stripe", "kill_storm"
+    /// or "composite_chaos". Requires `stripes >= 1` over resilient links;
+    /// shaping is sender-side only, so only the processes that *send* on
+    /// a boundary need the scenario configured.
+    pub scenario: String,
+    /// Seed for the scenario's deterministic impairment schedule: the
+    /// same (scenario, seed, stripes) triple always produces the same
+    /// fault timeline (see `quantpipe scenario` to print it).
+    pub scenario_seed: u64,
 }
 
 impl TransportSection {
     /// Delay between connect attempts.
     pub fn connect_retry(&self) -> Duration {
         Duration::from_millis(self.connect_retry_ms.max(1))
+    }
+
+    /// The parsed chaos scenario (validated at config-parse time, so
+    /// this only fails on a hand-mutated section).
+    pub fn scenario_kind(&self) -> Result<crate::net::scenario::ScenarioKind> {
+        crate::net::scenario::ScenarioKind::parse(&self.scenario)
     }
 
     /// Total budget for the first connect of a link.
@@ -253,6 +271,8 @@ impl Default for Config {
                 backoff_base_ms: 10,
                 backoff_max_ms: 1_000,
                 reactor_pin_core: -1,
+                scenario: "none".into(),
+                scenario_seed: 0,
             },
         }
     }
@@ -377,11 +397,33 @@ impl Config {
                     "transport.reactor_pin_core must be a core index or -1 (unpinned)"
                 );
             }
+            if let Some(x) = t.get("scenario") {
+                let name = x.as_str()?;
+                // Fail at parse time, not mid-run: unknown names list the
+                // valid set.
+                crate::net::scenario::ScenarioKind::parse(name)?;
+                cfg.transport.scenario = name.into();
+            }
+            if let Some(x) = t.get("scenario_seed") { cfg.transport.scenario_seed = x.as_u64()?; }
         }
         anyhow::ensure!(
             cfg.transport.stripes == 1 || cfg.transport.resilient,
             "transport.stripes > 1 requires transport.resilient: the striped boundary rides \
              the resilient session protocol (shared sequence space, replay, HELLO resync)"
+        );
+        anyhow::ensure!(
+            cfg.transport.scenario == "none" || cfg.transport.resilient,
+            "transport.scenario {:?} requires transport.resilient: chaos shaping expresses \
+             loss and corruption as conduit death, which only the resilient session protocol \
+             (replay + HELLO resync) survives",
+            cfg.transport.scenario
+        );
+        anyhow::ensure!(
+            cfg.transport.scenario == "none" || cfg.transport.mode == "tcp",
+            "transport.scenario {:?} requires transport.mode \"tcp\": shapers attach to real \
+             socket conduits, so an in-process run would silently ignore the scenario — shape \
+             the in-process link with --trace instead",
+            cfg.transport.scenario
         );
         Ok(cfg)
     }
@@ -559,6 +601,39 @@ mod tests {
         // Striping rides the resilient session protocol.
         assert!(Config::parse(r#"{"transport": {"stripes": 4}}"#).is_err());
         assert!(Config::parse(r#"{"transport": {"resilient": true, "stripes": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn scenario_knob_parses_validates_and_defaults() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.transport.scenario, "none", "chaos is opt-in");
+        assert_eq!(c.transport.scenario_seed, 0);
+        let c = Config::parse(
+            r#"{"transport": {"mode": "tcp", "resilient": true, "stripes": 3,
+                "scenario": "cellular_fade", "scenario_seed": 42}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.transport.scenario, "cellular_fade");
+        assert_eq!(c.transport.scenario_seed, 42);
+        assert_eq!(
+            c.transport.scenario_kind().unwrap(),
+            crate::net::scenario::ScenarioKind::CellularFade
+        );
+        // Unknown names are rejected at parse time, loudly.
+        let err = Config::parse(r#"{"transport": {"resilient": true, "scenario": "tsunami"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tsunami") && err.contains("cellular_fade"), "{err}");
+        // Chaos kills conduits; only resilient links survive that.
+        assert!(Config::parse(r#"{"transport": {"scenario": "kill_storm"}}"#).is_err());
+        // Shapers attach to sockets: an in-process run must reject a
+        // scenario loudly instead of silently ignoring it.
+        let err = Config::parse(
+            r#"{"transport": {"resilient": true, "scenario": "kill_storm"}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("transport.mode"), "{err}");
     }
 
     #[test]

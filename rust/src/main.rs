@@ -8,6 +8,7 @@
 //! quantpipe sweep      [--config F] [--bits 32,16,8,6,4,2]
 //! quantpipe worker     --stage K [--listen A] [--connect A] [--mock SxD]
 //! quantpipe coordinate [--config F] [--synthetic CxD] [--microbatches N]
+//! quantpipe scenario   [NAME] [--scenario-seed S] [--stripes N]
 //! quantpipe report     <run.json>
 //! quantpipe partition  <profile.json> [--devices N]
 //! quantpipe inspect    [--artifacts DIR]
@@ -27,6 +28,7 @@ use quantpipe::data::EvalSet;
 use quantpipe::metrics::ResilienceStats;
 use quantpipe::net::link::SimLink;
 use quantpipe::net::resilient::{ReconnectingRx, ReconnectingTx};
+use quantpipe::net::scenario::ScenarioKind;
 use quantpipe::net::stripe::{StripedRx, StripedTx};
 use quantpipe::net::tcp;
 use quantpipe::net::transport::{FrameRx, FrameTx, LinkSpec};
@@ -53,10 +55,11 @@ USAGE:
   quantpipe worker     --stage K [--config F] [--listen ADDR] [--connect ADDR]
                        [--stages N] [--mock SxD] [--fixed-bits B] [--target-rate R]
                        [--resilient BOOL] [--stripes N] [--report-json F]
-                       [--artifacts DIR]
+                       [--scenario NAME] [--scenario-seed S] [--artifacts DIR]
   quantpipe coordinate [--config F] [--microbatches N] [--synthetic CxD]
                        [--resilient BOOL] [--stripes N] [--report-json F]
-                       [--artifacts DIR]
+                       [--scenario NAME] [--scenario-seed S] [--artifacts DIR]
+  quantpipe scenario   [NAME] [--scenario-seed S] [--stripes N]
   quantpipe report     <run.json>
   quantpipe partition  <profile.json> [--devices N]
   quantpipe inspect    [--artifacts DIR]
@@ -76,6 +79,12 @@ Every worker streams per-window telemetry forward to the coordinator
 (transport.telemetry, default on), which merges all stages into one
 PipelineReport: `coordinate --report-json run.json` persists it and
 `quantpipe report run.json` renders it.
+`--scenario NAME` (or transport.scenario; requires resilient) imposes a
+named, seeded chaos schedule — trace-driven rate fades, delay+jitter,
+corruption, loss, stripe partitions — on this process's outgoing links
+(docs/SCENARIOS.md). Deterministic per `--scenario-seed`; shaping is
+sender-side, so configure it on the processes that send. `quantpipe
+scenario` lists the names; `quantpipe scenario NAME` prints its timeline.
 ";
 
 /// Tiny flag parser: --key value pairs + positionals.
@@ -126,6 +135,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "worker" => cmd_worker(&args),
         "coordinate" => cmd_coordinate(&args),
+        "scenario" => cmd_scenario(&args),
         "report" => cmd_report(&args),
         "partition" => cmd_partition(&args),
         "inspect" => cmd_inspect(&args),
@@ -180,12 +190,27 @@ fn load_config(args: &Args) -> quantpipe::Result<Config> {
         cfg.transport.stripes = s.parse()?;
         anyhow::ensure!(cfg.transport.stripes >= 1, "--stripes must be >= 1");
     }
+    if let Some(s) = args.get("scenario") {
+        // Unknown names fail here, loudly, listing the valid set.
+        ScenarioKind::parse(s)?;
+        cfg.transport.scenario = s.to_string();
+    }
+    if let Some(s) = args.get("scenario-seed") {
+        cfg.transport.scenario_seed = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--scenario-seed wants a non-negative integer: {e}"))?;
+    }
     // Re-validate after CLI overrides (the config parser enforces the
-    // same invariant for file-borne settings).
+    // same invariants for file-borne settings).
     anyhow::ensure!(
         cfg.transport.stripes == 1 || cfg.transport.resilient,
         "--stripes > 1 requires resilient links (--resilient true): the striped boundary \
          rides the resilient session protocol"
+    );
+    anyhow::ensure!(
+        cfg.transport.scenario == "none" || cfg.transport.resilient,
+        "--scenario requires resilient links (--resilient true): chaos shaping expresses \
+         loss and corruption as conduit death, which only the session protocol survives"
     );
     // Process-wide: every codec in this process honours the knob, and the
     // scalar fallback keeps the wire bytes identical either way.
@@ -260,6 +285,14 @@ fn ensure_inproc(cfg: &Config, cmd: &str) -> quantpipe::Result<()> {
         "transport.mode is \"tcp\": use `quantpipe coordinate` + `quantpipe worker` \
          for multi-process runs (`{cmd}` drives the single-process simulated pipeline)"
     );
+    // Shapers attach to real socket conduits; silently ignoring a chaos
+    // scenario on the simulated link would fake clean "chaos" results.
+    anyhow::ensure!(
+        cfg.transport.scenario == "none",
+        "transport.scenario {:?} needs real sockets (`quantpipe coordinate`/`worker`); \
+         `{cmd}` shapes its in-process link with --trace instead",
+        cfg.transport.scenario
+    );
     Ok(())
 }
 
@@ -323,6 +356,49 @@ fn cmd_run(args: &Args) -> quantpipe::Result<()> {
 // Multi-process mode: one stage per `worker` process, `coordinate` is
 // source + sink. See the `transport` config section for the topology.
 // ---------------------------------------------------------------------------
+
+/// Build (and announce) the configured chaos scenario's per-stripe
+/// shapers for this process's outgoing links. `None` when the scenario
+/// is "none" — the write path then has zero shaper code on it.
+fn scenario_shapers(
+    cfg: &Config,
+    who: &str,
+) -> quantpipe::Result<Option<Vec<Option<Arc<quantpipe::net::shaper::LinkShaper>>>>> {
+    let kind = cfg.transport.scenario_kind()?;
+    if kind == ScenarioKind::None {
+        return Ok(None);
+    }
+    let seed = cfg.transport.scenario_seed;
+    eprintln!("[{who}] chaos scenario {} (seed {seed}) on outgoing links:", kind.name());
+    for line in kind.timeline(seed, cfg.transport.stripes) {
+        eprintln!("[{who}]   {line}");
+    }
+    Ok(Some(kind.build(seed, cfg.transport.stripes)))
+}
+
+/// Print a chaos scenario's deterministic timeline, or list them all.
+fn cmd_scenario(args: &Args) -> quantpipe::Result<()> {
+    let seed: u64 = args.get("scenario-seed").map(str::parse).transpose()?.unwrap_or(0);
+    let stripes: usize = args.get("stripes").map(str::parse).transpose()?.unwrap_or(3);
+    anyhow::ensure!(stripes >= 1, "--stripes must be >= 1");
+    match args.positional.first() {
+        Some(name) => {
+            let kind = ScenarioKind::parse(name)?;
+            println!("scenario {} (seed {seed}, {stripes} stripes):", kind.name());
+            for line in kind.timeline(seed, stripes) {
+                println!("  {line}");
+            }
+        }
+        None => {
+            println!("available scenarios (inspect one: quantpipe scenario NAME):");
+            for k in ScenarioKind::all() {
+                println!("  {}", k.name());
+            }
+            println!("  none (the default: the unshaped write path)");
+        }
+    }
+    Ok(())
+}
 
 /// Parse "AxB" (e.g. `--mock 64x16`, `--synthetic 256x16`).
 fn parse_pair(s: &str, what: &str) -> quantpipe::Result<(usize, usize)> {
@@ -395,12 +471,15 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
             rcfg.clone(),
             Arc::new(ResilienceStats::default()),
         );
-        let down = StripedTx::connect_to(
+        let mut down = StripedTx::connect_to(
             connect.clone(),
             cfg.transport.stripes,
             rcfg,
             Arc::new(ResilienceStats::default()),
         );
+        if let Some(shapers) = scenario_shapers(&cfg, &format!("worker {stage}"))? {
+            down.set_shapers(shapers);
+        }
         (Box::new(up), Box::new(down))
     } else if cfg.transport.resilient {
         // Fault-tolerant endpoints: the listener is kept so a failed
@@ -412,11 +491,14 @@ fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
             rcfg.clone(),
             Arc::new(ResilienceStats::default()),
         );
-        let down = ReconnectingTx::connect_to(
+        let mut down = ReconnectingTx::connect_to(
             connect.clone(),
             rcfg,
             Arc::new(ResilienceStats::default()),
         );
+        if let Some(shapers) = scenario_shapers(&cfg, &format!("worker {stage}"))? {
+            down.set_shaper(shapers.into_iter().next().flatten());
+        }
         (Box::new(up), Box::new(down))
     } else {
         let (_up_tx, up_rx) = tcp::accept_one(&listener)?;
@@ -516,12 +598,15 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
     );
     let (feed_tx, ret_rx): (Box<dyn FrameTx>, Box<dyn FrameRx>) = if cfg.transport.stripes > 1 {
         let rcfg = cfg.transport.resilience_config();
-        let feed = StripedTx::connect_to(
+        let mut feed = StripedTx::connect_to(
             first.clone(),
             cfg.transport.stripes,
             rcfg.clone(),
             Arc::new(ResilienceStats::default()),
         );
+        if let Some(shapers) = scenario_shapers(&cfg, "coordinator")? {
+            feed.set_shapers(shapers);
+        }
         let ret = StripedRx::accept_on(
             Arc::new(listener),
             rcfg,
@@ -530,11 +615,14 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
         (Box::new(feed), Box::new(ret))
     } else if cfg.transport.resilient {
         let rcfg = cfg.transport.resilience_config();
-        let feed = ReconnectingTx::connect_to(
+        let mut feed = ReconnectingTx::connect_to(
             first.clone(),
             rcfg.clone(),
             Arc::new(ResilienceStats::default()),
         );
+        if let Some(shapers) = scenario_shapers(&cfg, "coordinator")? {
+            feed.set_shaper(shapers.into_iter().next().flatten());
+        }
         let ret = ReconnectingRx::accept_on(
             Arc::new(listener),
             rcfg,

@@ -38,13 +38,22 @@
 //!   transient link failure stalls the pipeline (feeding the adaptive
 //!   controller) instead of killing it. Implemented as the 1-conduit
 //!   instantiation of [`stripe`].
+//! * [`shaper`] — the chaos transport lab's root-free `tc netem`: a
+//!   deterministic per-conduit byte shaper (trace-driven token bucket,
+//!   delay+jitter, corruption, loss-as-conduit-kill, partition windows)
+//!   applied on the sender threads at the striped write path.
+//! * [`scenario`] — named, seeded impairment schedules (`cellular_fade`,
+//!   `satellite_pass`, …) that instantiate per-stripe shapers from
+//!   `transport.scenario` config / `--scenario` CLI.
 
 pub mod conduit;
 pub mod frame;
 pub mod link;
 pub mod reactor;
 pub mod resilient;
+pub mod scenario;
 pub mod session;
+pub mod shaper;
 pub mod stripe;
 pub mod tcp;
 pub mod trace;

@@ -93,6 +93,12 @@ impl ReconnectingTx {
         self.0.unacked()
     }
 
+    /// Attach a chaos shaper (`net::shaper`) to this link's single
+    /// conduit. `None` restores the unshaped write path.
+    pub fn set_shaper(&mut self, shaper: Option<Arc<super::shaper::LinkShaper>>) {
+        self.0.set_shaper(0, shaper)
+    }
+
     /// Drain any acks the peer has pushed without blocking. `send` does
     /// this itself on a schedule.
     pub fn pump(&mut self) {

@@ -1,0 +1,468 @@
+//! Named, timed impairment schedules for the chaos transport lab.
+//!
+//! A scenario turns one `(name, seed)` pair into a full per-stripe set
+//! of [`super::shaper::ShaperSpec`]s: which stripes are shaped, whether
+//! they share one token bucket (a boundary-level radio link carrying
+//! every stripe) or get independent ones (per-path impairment), and the
+//! exact fade/partition/loss timeline — all deterministic, so a failing
+//! chaos run replays from its printed seed.
+//!
+//! Plumbing: `transport.scenario` + `transport.scenario_seed` in the
+//! config, `--scenario NAME [--scenario-seed S]` on `quantpipe worker` /
+//! `quantpipe coordinate`, and [`ScenarioKind::build`] wherever a
+//! [`super::stripe::StripedTx`] is constructed. `"none"` (the default)
+//! builds no shapers at all — the hot path is byte-identical to a
+//! scenario-free build (regression-tested via
+//! [`super::shaper::hot_touches`]).
+//!
+//! Timescales are sized for seconds-scale localhost experiments (the
+//! scale of the Fig-5 replay and the chaos soak), not for day-long runs:
+//! every named scenario plays out within roughly five seconds.
+
+use super::shaper::{LinkShaper, ShaperSpec};
+use super::trace::BandwidthTrace;
+use super::{mbps, Bps};
+use crate::util::rng::Rng;
+use crate::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Every legal `transport.scenario` value, including the default.
+pub const NAMES: &[&str] = &[
+    "none",
+    "cellular_fade",
+    "satellite_pass",
+    "flash_crowd",
+    "drone_handoff",
+    "partitioned_stripe",
+    "kill_storm",
+    "composite_chaos",
+];
+
+/// Whether a scenario shapes the boundary as one shared medium or each
+/// stripe as its own path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// One shared [`LinkShaper`] (one token bucket) across all stripes:
+    /// the boundary rides a single radio link.
+    Boundary,
+    /// Independent shapers per stripe: multi-path impairment, possibly
+    /// leaving some stripes unshaped.
+    PerStripe,
+}
+
+/// A named impairment schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// No shaping at all (the default; byte-identical to pre-chaos-lab
+    /// behavior).
+    None,
+    /// Deep cellular fade: full rate → 40 Mbps shoulder → seeded trough
+    /// (4–10 Mbps) → recovery, with light delay/jitter. The Fig-5 shape
+    /// compressed into one fade cycle.
+    CellularFade,
+    /// LEO pass: capacity rises toward zenith and falls back to the
+    /// horizon floor, under high fixed delay, ending in a short
+    /// handover blackhole.
+    SatellitePass,
+    /// Competing flash crowd: capacity steps down as the crowd arrives,
+    /// heavy jitter and light loss, then recovers.
+    FlashCrowd,
+    /// Drone formation handoffs (pairs with `examples/drone_formation`):
+    /// each stripe periodically blackholes for a handoff window, at
+    /// staggered offsets, over a moderate shared-rate radio.
+    DroneHandoff,
+    /// One seeded victim stripe is partitioned and lossy while its
+    /// siblings stay clean — the asymmetric-stripe case the striped
+    /// scheduler's least-stalled bias exists for.
+    PartitionedStripe,
+    /// High frame-loss storm on every stripe: each loss is a conduit
+    /// kill, so this is a reconnect/replay stress test.
+    KillStorm,
+    /// The chaos-soak composite: a fade trace on every stripe plus
+    /// corruption on stripe 0, loss on stripe 1 (when present) and a
+    /// partition window on the last stripe.
+    CompositeChaos,
+}
+
+impl ScenarioKind {
+    /// Parse a `transport.scenario` / `--scenario` value. Unknown names
+    /// fail loudly with the full list of valid ones.
+    pub fn parse(name: &str) -> Result<ScenarioKind> {
+        Ok(match name {
+            "none" => ScenarioKind::None,
+            "cellular_fade" => ScenarioKind::CellularFade,
+            "satellite_pass" => ScenarioKind::SatellitePass,
+            "flash_crowd" => ScenarioKind::FlashCrowd,
+            "drone_handoff" => ScenarioKind::DroneHandoff,
+            "partitioned_stripe" => ScenarioKind::PartitionedStripe,
+            "kill_storm" => ScenarioKind::KillStorm,
+            "composite_chaos" => ScenarioKind::CompositeChaos,
+            other => anyhow::bail!(
+                "unknown scenario {other:?} (valid: {})",
+                NAMES.join(", ")
+            ),
+        })
+    }
+
+    /// The canonical name (`ScenarioKind::parse` round-trips it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::None => "none",
+            ScenarioKind::CellularFade => "cellular_fade",
+            ScenarioKind::SatellitePass => "satellite_pass",
+            ScenarioKind::FlashCrowd => "flash_crowd",
+            ScenarioKind::DroneHandoff => "drone_handoff",
+            ScenarioKind::PartitionedStripe => "partitioned_stripe",
+            ScenarioKind::KillStorm => "kill_storm",
+            ScenarioKind::CompositeChaos => "composite_chaos",
+        }
+    }
+
+    /// All named (non-`none`) scenarios.
+    pub fn all() -> Vec<ScenarioKind> {
+        vec![
+            ScenarioKind::CellularFade,
+            ScenarioKind::SatellitePass,
+            ScenarioKind::FlashCrowd,
+            ScenarioKind::DroneHandoff,
+            ScenarioKind::PartitionedStripe,
+            ScenarioKind::KillStorm,
+            ScenarioKind::CompositeChaos,
+        ]
+    }
+
+    /// How this scenario's shapers are shared across stripes.
+    pub fn placement(&self) -> Placement {
+        match self {
+            ScenarioKind::None
+            | ScenarioKind::CellularFade
+            | ScenarioKind::SatellitePass
+            | ScenarioKind::FlashCrowd => Placement::Boundary,
+            ScenarioKind::DroneHandoff
+            | ScenarioKind::PartitionedStripe
+            | ScenarioKind::KillStorm
+            | ScenarioKind::CompositeChaos => Placement::PerStripe,
+        }
+    }
+
+    /// One spec slot per stripe (`None` = that stripe stays unshaped).
+    /// Pure in `(self, seed, stripes)`.
+    pub fn specs(&self, seed: u64, stripes: usize) -> Vec<Option<ShaperSpec>> {
+        let stripes = stripes.max(1);
+        let base = mix(seed, self.name());
+        match self {
+            ScenarioKind::None => vec![None; stripes],
+            ScenarioKind::CellularFade => {
+                let mut r = Rng::seed(base);
+                let t0 = r.range(0.8, 1.6);
+                let trough = mbps(r.range(4.0, 10.0));
+                let d = r.range(1.5, 3.0);
+                let spec = ShaperSpec {
+                    trace: BandwidthTrace::from_points(&[
+                        (0.0, f64::INFINITY),
+                        (t0, mbps(40.0)),
+                        (t0 + 0.3 * d, trough),
+                        (t0 + 0.7 * d, mbps(40.0)),
+                        (t0 + d, f64::INFINITY),
+                    ]),
+                    delay: Duration::from_millis(2),
+                    jitter: Duration::from_millis(3),
+                    seed: base,
+                    ..ShaperSpec::default()
+                };
+                vec![Some(spec); stripes]
+            }
+            ScenarioKind::SatellitePass => {
+                let mut r = Rng::seed(base);
+                let t0 = r.range(0.5, 1.0);
+                let d = r.range(2.0, 4.0);
+                let spec = ShaperSpec {
+                    trace: BandwidthTrace::from_points(&[
+                        (0.0, mbps(8.0)),
+                        (t0, mbps(20.0)),
+                        (t0 + d / 3.0, mbps(80.0)),
+                        (t0 + 2.0 * d / 3.0, mbps(20.0)),
+                        (t0 + d, mbps(8.0)),
+                    ]),
+                    delay: Duration::from_millis(40),
+                    jitter: Duration::from_millis(5),
+                    partitions: vec![(t0 + d, t0 + d + 0.25)],
+                    seed: base,
+                    ..ShaperSpec::default()
+                };
+                vec![Some(spec); stripes]
+            }
+            ScenarioKind::FlashCrowd => {
+                let mut r = Rng::seed(base);
+                let t0 = r.range(0.4, 1.0);
+                let surge = r.range(1.5, 2.5);
+                let spec = ShaperSpec {
+                    trace: BandwidthTrace::from_points(&[
+                        (0.0, f64::INFINITY),
+                        (t0, mbps(60.0)),
+                        (t0 + 0.3, mbps(24.0)),
+                        (t0 + 0.8, mbps(12.0)),
+                        (t0 + 0.8 + surge, mbps(60.0)),
+                        (t0 + 1.3 + surge, f64::INFINITY),
+                    ]),
+                    jitter: Duration::from_millis(6),
+                    loss_p: 0.005,
+                    seed: base,
+                    ..ShaperSpec::default()
+                };
+                vec![Some(spec); stripes]
+            }
+            ScenarioKind::DroneHandoff => (0..stripes)
+                .map(|k| {
+                    let mut r = Rng::seed(base ^ k as u64);
+                    let period = r.range(1.2, 2.0);
+                    let width = r.range(0.15, 0.35);
+                    let offset = r.range(0.2, 0.8) + k as f64 * period / stripes as f64;
+                    Some(ShaperSpec {
+                        trace: BandwidthTrace::constant(mbps(40.0)),
+                        jitter: Duration::from_millis(1),
+                        loss_p: 0.01,
+                        partitions: (0..3)
+                            .map(|j| {
+                                let s = offset + j as f64 * period;
+                                (s, s + width)
+                            })
+                            .collect(),
+                        seed: base ^ k as u64,
+                        ..ShaperSpec::default()
+                    })
+                })
+                .collect(),
+            ScenarioKind::PartitionedStripe => {
+                let mut r = Rng::seed(base);
+                let victim = r.usize(0, stripes);
+                let t0 = r.range(0.5, 1.0);
+                let d = r.range(0.5, 1.5);
+                (0..stripes)
+                    .map(|k| {
+                        (k == victim).then(|| ShaperSpec {
+                            partitions: vec![(t0, t0 + d)],
+                            loss_p: 0.05,
+                            seed: base ^ k as u64,
+                            ..ShaperSpec::default()
+                        })
+                    })
+                    .collect()
+            }
+            ScenarioKind::KillStorm => (0..stripes)
+                .map(|k| {
+                    let mut r = Rng::seed(base ^ k as u64);
+                    Some(ShaperSpec {
+                        loss_p: r.range(0.05, 0.15),
+                        seed: base ^ k as u64,
+                        ..ShaperSpec::default()
+                    })
+                })
+                .collect(),
+            ScenarioKind::CompositeChaos => {
+                let mut r = Rng::seed(base);
+                let trough = mbps(r.range(6.0, 10.0));
+                let p = r.range(0.5, 0.8);
+                let pt = r.range(1.0, 1.6);
+                let fade = BandwidthTrace::from_points(&[
+                    (0.0, f64::INFINITY),
+                    (p, mbps(24.0)),
+                    (2.0 * p, trough),
+                    (3.0 * p, mbps(24.0)),
+                    (4.0 * p, f64::INFINITY),
+                ]);
+                (0..stripes)
+                    .map(|k| {
+                        let mut spec = ShaperSpec {
+                            trace: fade.clone(),
+                            delay: Duration::from_micros(100),
+                            jitter: Duration::from_micros(400),
+                            seed: base ^ k as u64,
+                            ..ShaperSpec::default()
+                        };
+                        if k == 0 {
+                            // High enough that a soak of ~40+ frames on
+                            // this stripe observes corruption for any
+                            // seed (P(none) < 1e-5 at 40 draws).
+                            spec.corrupt_p = 0.25;
+                        }
+                        if k == 1 && stripes > 2 {
+                            spec.loss_p = 0.02;
+                        }
+                        if k == stripes - 1 && stripes > 1 {
+                            spec.partitions = vec![(pt, pt + 0.12)];
+                        }
+                        Some(spec)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Instantiate the shapers for a `stripes`-wide boundary. Boundary
+    /// scenarios return one shared `Arc` (one token bucket) cloned into
+    /// every slot; per-stripe scenarios return independent shapers.
+    pub fn build(&self, seed: u64, stripes: usize) -> Vec<Option<Arc<LinkShaper>>> {
+        let specs = self.specs(seed, stripes);
+        match self.placement() {
+            Placement::Boundary => {
+                let shared = specs
+                    .iter()
+                    .flatten()
+                    .next()
+                    .cloned()
+                    .map(|s| Arc::new(LinkShaper::new(s)));
+                specs
+                    .iter()
+                    .map(|s| if s.is_some() { shared.clone() } else { None })
+                    .collect()
+            }
+            Placement::PerStripe => specs
+                .into_iter()
+                .map(|s| s.map(|spec| Arc::new(LinkShaper::new(spec))))
+                .collect(),
+        }
+    }
+
+    /// Human-readable deterministic event timeline: one line per stripe
+    /// slot describing its full impairment schedule. Pure in
+    /// `(self, seed, stripes)` — the unit tests pin this.
+    pub fn timeline(&self, seed: u64, stripes: usize) -> Vec<String> {
+        let placement = match self.placement() {
+            Placement::Boundary => "shared",
+            Placement::PerStripe => "per-stripe",
+        };
+        self.specs(seed, stripes)
+            .iter()
+            .enumerate()
+            .map(|(k, slot)| match slot {
+                None => format!("stripe {k}: unshaped"),
+                Some(s) => {
+                    let segs: Vec<String> = s
+                        .trace
+                        .segments
+                        .iter()
+                        .map(|seg| format!("{:.2}s:{}", seg.start, fmt_bps(seg.bps)))
+                        .collect();
+                    let parts: Vec<String> = s
+                        .partitions
+                        .iter()
+                        .map(|(a, b)| format!("[{a:.2}s,{b:.2}s)"))
+                        .collect();
+                    format!(
+                        "stripe {k} [{placement}]: trace {}; delay {:?}; jitter {:?}; \
+                         corrupt {:.3}; loss {:.3}; partitions {}",
+                        segs.join(","),
+                        s.delay,
+                        s.jitter,
+                        s.corrupt_p,
+                        s.loss_p,
+                        if parts.is_empty() { "-".to_string() } else { parts.join(" ") },
+                    )
+                }
+            })
+            .collect()
+    }
+}
+
+fn fmt_bps(bps: Bps) -> String {
+    if bps.is_infinite() {
+        "inf".to_string()
+    } else {
+        format!("{:.1}M", bps / 1e6)
+    }
+}
+
+/// FNV-style fold of the scenario name into the user seed, so two
+/// scenarios at the same seed still draw independent parameters.
+fn mix(seed: u64, name: &str) -> u64 {
+    name.bytes()
+        .fold(seed ^ 0x9E37_79B9_7F4A_7C15, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01B3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_name() {
+        for name in NAMES {
+            let kind = ScenarioKind::parse(name).unwrap();
+            assert_eq!(kind.name(), *name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_loud_and_lists_the_valid_set() {
+        let err = ScenarioKind::parse("celular_fade").unwrap_err().to_string();
+        assert!(err.contains("celular_fade"), "{err}");
+        for name in NAMES {
+            assert!(err.contains(name), "{err} should list {name}");
+        }
+    }
+
+    #[test]
+    fn timelines_are_deterministic_per_seed() {
+        for kind in ScenarioKind::all() {
+            let a = kind.timeline(7, 3);
+            let b = kind.timeline(7, 3);
+            let c = kind.timeline(8, 3);
+            assert_eq!(a, b, "{}", kind.name());
+            assert_ne!(a, c, "{} must vary with the seed", kind.name());
+        }
+    }
+
+    #[test]
+    fn none_builds_no_shapers() {
+        let specs = ScenarioKind::None.specs(7, 3);
+        assert_eq!(specs.len(), 3);
+        assert!(specs.iter().all(|s| s.is_none()));
+        assert!(ScenarioKind::None.build(7, 3).iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn boundary_scenarios_share_one_token_bucket() {
+        let boundary =
+            [ScenarioKind::CellularFade, ScenarioKind::SatellitePass, ScenarioKind::FlashCrowd];
+        for kind in boundary {
+            let shapers = kind.build(7, 3);
+            assert_eq!(shapers.len(), 3);
+            let first = shapers[0].as_ref().unwrap();
+            for s in &shapers[1..] {
+                assert!(Arc::ptr_eq(first, s.as_ref().unwrap()), "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn per_stripe_scenarios_get_independent_shapers() {
+        let per_stripe =
+            [ScenarioKind::DroneHandoff, ScenarioKind::KillStorm, ScenarioKind::CompositeChaos];
+        for kind in per_stripe {
+            let shapers = kind.build(7, 3);
+            let a = shapers[0].as_ref().unwrap();
+            let b = shapers[1].as_ref().unwrap();
+            assert!(!Arc::ptr_eq(a, b), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn partitioned_stripe_impairs_exactly_one_victim() {
+        let specs = ScenarioKind::PartitionedStripe.specs(7, 4);
+        let shaped = specs.iter().filter(|s| s.is_some()).count();
+        assert_eq!(shaped, 1);
+    }
+
+    #[test]
+    fn composite_chaos_covers_every_fault_axis() {
+        let specs = ScenarioKind::CompositeChaos.specs(7, 3);
+        let s0 = specs[0].as_ref().unwrap();
+        assert!(s0.corrupt_p > 0.0);
+        assert!(!s0.trace.segments.is_empty());
+        let s1 = specs[1].as_ref().unwrap();
+        assert!(s1.loss_p > 0.0);
+        let s2 = specs[2].as_ref().unwrap();
+        assert!(!s2.partitions.is_empty());
+    }
+}

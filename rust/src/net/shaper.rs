@@ -1,0 +1,437 @@
+//! Deterministic byte-level link shaping: a root-free `tc netem`.
+//!
+//! Every impairment the real-TCP stack had ever faced was a hand-placed
+//! [`super::conduit::LinkKillSwitch`] in a test; actual *shaping* (rate,
+//! delay, jitter, corruption, partitions) lived only in the in-process
+//! [`super::link::SimLink`]. The [`LinkShaper`] closes that gap: it sits
+//! on the **sender threads** at the striped write path and renders a
+//! [`super::trace::BandwidthTrace`] — plus seeded jitter, probabilistic
+//! frame corruption, frame loss and partition windows — onto real
+//! localhost sockets, fully deterministic from a seed.
+//!
+//! Placement is the whole design (see docs/ARCHITECTURE.md):
+//!
+//! * **All shaping happens on the write side.** The adaptive controller
+//!   never reads the trace — it measures write-stall time — so a shaper
+//!   sleep on the sender thread *is* the collapsed-bandwidth signal, and
+//!   the reactor's read sweep stays untouched (a read-side throttle
+//!   would delay acks and distort the very signal under test).
+//! * **Loss is expressed as a conduit kill.** A lossy link on a session
+//!   link means a frame died in flight; the honest model is the conduit
+//!   dying with unacked frames, which makes the session machinery
+//!   (reconnect → HELLO/HAVE → replay) earn its keep instead of
+//!   silently skipping a sequence number.
+//! * **Corruption flips a byte in a throwaway copy** of the wire bytes;
+//!   the replay buffer keeps the pristine frame, so the receiver's CRC
+//!   check fails, the conduit desyncs, and the post-reconnect replay
+//!   delivers the original — exactly-once survives corruption.
+//!
+//! A disabled shaper is `None` at the call site: no shaper code runs at
+//! all on an unshaped boundary, asserted by the [`hot_touches`] counter
+//! regression test rather than a flaky wall-clock comparison.
+
+use super::trace::BandwidthTrace;
+use crate::util::rng::Rng;
+use crate::util::sync::TrackedMutex;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::{Duration, Instant};
+
+/// Upper bound (seconds) on any single shaping stall. A trace that pins
+/// capacity at zero forever, or a pathological partition window, must
+/// degrade into bounded stalls (which the resilience layer treats as an
+/// outage) instead of hanging a sender thread for good.
+const MAX_STALL_SECS: f64 = 30.0;
+
+/// Every byte-flip lands in the trailing `CORRUPT_TAIL` bytes of the
+/// frame's wire image: that region is payload and/or the CRC32 field for
+/// every legal frame, so a flip is *guaranteed* to fail the CRC check
+/// (never to forge a parseable header with a mangled seq, which the
+/// session would treat as a protocol violation rather than line noise).
+const CORRUPT_TAIL: usize = 4;
+
+/// Global count of shaper hot-path decisions, across all shapers. The
+/// zero-cost-when-disabled regression test asserts an unshaped transfer
+/// leaves this untouched — i.e. no shaper code ran at all.
+static HOT_TOUCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Total [`LinkShaper::decide`] / [`LinkShaper::decide_at`] calls ever
+/// made in this process (see [`HOT_TOUCHES`]).
+pub fn hot_touches() -> u64 {
+    HOT_TOUCHES.load(Relaxed)
+}
+
+/// Declarative description of one shaped link. `Default` is a no-op
+/// shaper: unlimited trace, zero delay/jitter, zero probabilities.
+#[derive(Debug, Clone)]
+pub struct ShaperSpec {
+    /// Capacity schedule the token bucket serializes frames against
+    /// (seconds are measured from shaper construction).
+    pub trace: BandwidthTrace,
+    /// Fixed one-way delay added to every shipped frame.
+    pub delay: Duration,
+    /// Jitter ceiling: each shipped frame waits an extra uniform
+    /// `[0, jitter)` drawn from the seeded RNG.
+    pub jitter: Duration,
+    /// Per-frame probability of a byte flip on the wire copy.
+    pub corrupt_p: f64,
+    /// Per-frame probability the frame is "lost": the carrying conduit
+    /// is killed before the write, forcing reconnect + replay.
+    pub loss_p: f64,
+    /// Blackhole windows `(start, end)` in seconds from construction,
+    /// sorted by start: a frame decided inside a window waits until the
+    /// window closes before serialization even begins.
+    pub partitions: Vec<(f64, f64)>,
+    /// Seed for the loss/jitter/corruption draws; the whole impairment
+    /// timeline is a pure function of `(spec, decision times)`.
+    pub seed: u64,
+}
+
+impl Default for ShaperSpec {
+    fn default() -> Self {
+        ShaperSpec {
+            trace: BandwidthTrace::unlimited(),
+            delay: Duration::ZERO,
+            jitter: Duration::ZERO,
+            corrupt_p: 0.0,
+            loss_p: 0.0,
+            partitions: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+/// What the shaper decided for one frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Verdict {
+    /// The link ate the frame: kill the carrying conduit *instead of*
+    /// writing, and let the session replay the tail on reconnect.
+    Lose,
+    /// Ship the frame after sleeping `delay` on the sender thread;
+    /// `corrupt_at` is the byte index to flip in a throwaway wire copy
+    /// (`None` = write the pristine bytes).
+    Ship {
+        /// Sender-thread sleep before the write (serialization + fixed
+        /// delay + jitter + any partition-window remainder).
+        delay: Duration,
+        /// Byte index to flip in the wire copy, if corruption fired.
+        corrupt_at: Option<usize>,
+    },
+}
+
+/// Counter snapshot for assertions and reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShaperStats {
+    /// Frames decided (shipped + lost).
+    pub frames: u64,
+    /// Frames turned into conduit kills.
+    pub lost: u64,
+    /// Frames shipped with a flipped byte.
+    pub corrupted: u64,
+    /// Total sender-thread stall the shaper imposed, in microseconds.
+    pub stalled_us: u64,
+}
+
+/// Mutable decision state: one RNG stream plus the token bucket's
+/// "earliest instant the link is free" horizon.
+struct ShaperState {
+    rng: Rng,
+    /// Seconds-from-epoch when the previously queued bytes finish
+    /// serializing; the next frame queues behind it.
+    next_free: f64,
+}
+
+/// One shaped link. Shared (`Arc`) by however many stripes the scenario
+/// says ride the same physical medium: a shared shaper means a shared
+/// token bucket, i.e. boundary-level capacity; distinct shapers mean
+/// per-stripe capacity.
+pub struct LinkShaper {
+    spec: ShaperSpec,
+    epoch: Instant,
+    state: TrackedMutex<ShaperState>,
+    frames: AtomicU64,
+    lost: AtomicU64,
+    corrupted: AtomicU64,
+    stalled_us: AtomicU64,
+}
+
+impl std::fmt::Debug for LinkShaper {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LinkShaper").field("spec", &self.spec).finish_non_exhaustive()
+    }
+}
+
+impl LinkShaper {
+    /// Shaper from a spec; the trace/partition clock starts now.
+    pub fn new(spec: ShaperSpec) -> Self {
+        let rng = Rng::seed(spec.seed);
+        LinkShaper {
+            spec,
+            epoch: Instant::now(),
+            state: TrackedMutex::new("shaper.state", ShaperState { rng, next_free: 0.0 }),
+            frames: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
+            stalled_us: AtomicU64::new(0),
+        }
+    }
+
+    /// The spec this shaper renders.
+    pub fn spec(&self) -> &ShaperSpec {
+        &self.spec
+    }
+
+    /// Decide the fate of one `wire_len`-byte frame at the current
+    /// wall-clock offset from construction.
+    pub fn decide(&self, wire_len: usize) -> Verdict {
+        self.decide_at(self.epoch.elapsed().as_secs_f64(), wire_len)
+    }
+
+    /// [`LinkShaper::decide`] at an explicit time offset (seconds from
+    /// epoch) — the deterministic entry point scenario tests replay.
+    ///
+    /// Exactly four RNG draws happen per decision regardless of which
+    /// impairments are enabled, so the impairment timeline of a seed is
+    /// invariant under toggling individual probabilities.
+    pub fn decide_at(&self, now: f64, wire_len: usize) -> Verdict {
+        HOT_TOUCHES.fetch_add(1, Relaxed);
+        self.frames.fetch_add(1, Relaxed);
+        let mut st = self.state.guard();
+        let loss_draw = st.rng.f64();
+        let jitter_draw = st.rng.f64();
+        let corrupt_draw = st.rng.f64();
+        let tail_draw = st.rng.usize(1, CORRUPT_TAIL + 1);
+        if loss_draw < self.spec.loss_p {
+            drop(st);
+            self.lost.fetch_add(1, Relaxed);
+            return Verdict::Lose;
+        }
+        // Token bucket first: queue behind bytes still serializing.
+        // Partition windows then push the serialization start past their
+        // end — looped to a fixpoint, because bucket backlog can queue a
+        // frame *into* a window and one window's end can land inside the
+        // next (windows never move a start backward, so this terminates
+        // after at most `partitions.len()` passes).
+        let mut start = now.max(st.next_free);
+        loop {
+            let before = start;
+            for &(a, b) in &self.spec.partitions {
+                if start >= a && start < b {
+                    start = b;
+                }
+            }
+            if start == before {
+                break;
+            }
+        }
+        // Pay this frame's serialization at the trace's capacity.
+        let ser = self.spec.trace.transmit_secs(wire_len, start).min(MAX_STALL_SECS);
+        st.next_free = start + ser;
+        let wait = (st.next_free - now).max(0.0)
+            + self.spec.delay.as_secs_f64()
+            + self.spec.jitter.as_secs_f64() * jitter_draw;
+        drop(st);
+        let wait = wait.clamp(0.0, MAX_STALL_SECS);
+        let corrupt_at = if corrupt_draw < self.spec.corrupt_p {
+            self.corrupted.fetch_add(1, Relaxed);
+            Some(wire_len.saturating_sub(tail_draw))
+        } else {
+            None
+        };
+        self.stalled_us.fetch_add((wait * 1e6) as u64, Relaxed);
+        Verdict::Ship { delay: Duration::from_secs_f64(wait), corrupt_at }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ShaperStats {
+        ShaperStats {
+            frames: self.frames.load(Relaxed),
+            lost: self.lost.load(Relaxed),
+            corrupted: self.corrupted.load(Relaxed),
+            stalled_us: self.stalled_us.load(Relaxed),
+        }
+    }
+}
+
+/// Build the corrupted wire image for a [`Verdict::Ship`] with
+/// `corrupt_at`: copy `bytes` into `out` and XOR-flip the byte at `at`.
+/// The caller writes `out` to the socket while the replay buffer keeps
+/// the pristine `bytes`.
+pub fn corrupt_into(bytes: &[u8], at: usize, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(bytes);
+    if let Some(b) = out.get_mut(at) {
+        *b ^= 0xA5;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mbps;
+
+    fn verdicts(spec: &ShaperSpec, times: &[f64], wire: usize) -> Vec<Verdict> {
+        let sh = LinkShaper::new(spec.clone());
+        times.iter().map(|&t| sh.decide_at(t, wire)).collect()
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = ShaperSpec {
+            trace: BandwidthTrace::constant(mbps(8.0)),
+            jitter: Duration::from_millis(5),
+            corrupt_p: 0.3,
+            loss_p: 0.3,
+            seed: 7,
+            ..ShaperSpec::default()
+        };
+        let times: Vec<f64> = (0..64).map(|i| i as f64 * 0.01).collect();
+        let a = verdicts(&spec, &times, 4096);
+        let b = verdicts(&spec, &times, 4096);
+        assert_eq!(a, b);
+        let other = ShaperSpec { seed: 8, ..spec };
+        assert_ne!(a, verdicts(&other, &times, 4096));
+    }
+
+    #[test]
+    fn token_bucket_serializes_at_trace_rate() {
+        // 8 Mbps = 1 MB/s: a 100 KB frame takes 0.1 s, and a second
+        // frame decided at the same instant queues behind the first.
+        let sh = LinkShaper::new(ShaperSpec {
+            trace: BandwidthTrace::constant(mbps(8.0)),
+            ..ShaperSpec::default()
+        });
+        let d1 = match sh.decide_at(0.0, 100_000) {
+            Verdict::Ship { delay, .. } => delay.as_secs_f64(),
+            v => panic!("unexpected {v:?}"),
+        };
+        let d2 = match sh.decide_at(0.0, 100_000) {
+            Verdict::Ship { delay, .. } => delay.as_secs_f64(),
+            v => panic!("unexpected {v:?}"),
+        };
+        assert!((d1 - 0.1).abs() < 1e-6, "{d1}");
+        assert!((d2 - 0.2).abs() < 1e-6, "{d2}");
+        // After the queue drains (t=1.0) the bucket is free again.
+        let d3 = match sh.decide_at(1.0, 100_000) {
+            Verdict::Ship { delay, .. } => delay.as_secs_f64(),
+            v => panic!("unexpected {v:?}"),
+        };
+        assert!((d3 - 0.1).abs() < 1e-6, "{d3}");
+    }
+
+    #[test]
+    fn partition_window_blocks_until_close() {
+        let sh = LinkShaper::new(ShaperSpec {
+            partitions: vec![(1.0, 1.5)],
+            ..ShaperSpec::default()
+        });
+        match sh.decide_at(1.2, 1024) {
+            Verdict::Ship { delay, .. } => {
+                let d = delay.as_secs_f64();
+                assert!((d - 0.3).abs() < 1e-6, "{d}");
+            }
+            v => panic!("unexpected {v:?}"),
+        }
+        // Outside the window: instant (unlimited trace, no delay).
+        match sh.decide_at(2.0, 1024) {
+            Verdict::Ship { delay, .. } => assert_eq!(delay, Duration::ZERO),
+            v => panic!("unexpected {v:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_backlog_queued_into_a_window_waits_it_out() {
+        // 8 Mbps = 1 MB/s: the first frame (800 KB, decided at t=0.4)
+        // serializes until t=1.2 — *inside* the (1.0, 1.5) window. The
+        // second frame queues behind it and must not serialize through
+        // the blackhole: its start snaps to the window close, so it
+        // finishes at 1.5 + 0.1, a 1.2 s wait from its decision at 0.4.
+        let sh = LinkShaper::new(ShaperSpec {
+            trace: BandwidthTrace::constant(mbps(8.0)),
+            partitions: vec![(1.0, 1.5)],
+            ..ShaperSpec::default()
+        });
+        let d1 = match sh.decide_at(0.4, 800_000) {
+            Verdict::Ship { delay, .. } => delay.as_secs_f64(),
+            v => panic!("unexpected {v:?}"),
+        };
+        assert!((d1 - 0.8).abs() < 1e-6, "{d1}");
+        let d2 = match sh.decide_at(0.4, 100_000) {
+            Verdict::Ship { delay, .. } => delay.as_secs_f64(),
+            v => panic!("unexpected {v:?}"),
+        };
+        assert!((d2 - 1.2).abs() < 1e-6, "{d2}");
+    }
+
+    #[test]
+    fn certain_loss_and_certain_corruption() {
+        let lossy = LinkShaper::new(ShaperSpec { loss_p: 1.0, ..ShaperSpec::default() });
+        assert_eq!(lossy.decide_at(0.0, 512), Verdict::Lose);
+        assert_eq!(lossy.stats().lost, 1);
+        let dirty = LinkShaper::new(ShaperSpec { corrupt_p: 1.0, ..ShaperSpec::default() });
+        for _ in 0..32 {
+            match dirty.decide_at(0.0, 512) {
+                Verdict::Ship { corrupt_at: Some(at), .. } => {
+                    // Trailing CORRUPT_TAIL bytes only: payload/CRC, so a
+                    // flip always fails the CRC check at the receiver.
+                    assert!(at >= 512 - CORRUPT_TAIL && at < 512, "{at}");
+                }
+                v => panic!("unexpected {v:?}"),
+            }
+        }
+        assert_eq!(dirty.stats().corrupted, 32);
+    }
+
+    #[test]
+    fn corrupt_copy_flips_exactly_one_byte() {
+        let frame = crate::net::frame::Frame::new(
+            3,
+            vec![64],
+            crate::quant::codec::Encoded {
+                params: None,
+                elems: 64,
+                payload: vec![0x11; 256],
+                tiled: false,
+            },
+        );
+        let wire = frame.to_bytes();
+        let mut out = Vec::new();
+        corrupt_into(&wire, wire.len() - 2, &mut out);
+        assert_eq!(out.len(), wire.len());
+        let diff = wire.iter().zip(&out).filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 1);
+        // And the flip is detected as line noise, not parsed as a frame.
+        assert!(crate::net::frame::Frame::from_bytes(&out).is_err());
+        assert!(crate::net::frame::Frame::from_bytes(&wire).is_ok());
+    }
+
+    #[test]
+    fn dead_trace_stall_is_clamped() {
+        let sh = LinkShaper::new(ShaperSpec {
+            trace: BandwidthTrace::constant(0.0),
+            ..ShaperSpec::default()
+        });
+        match sh.decide_at(0.0, 1024) {
+            Verdict::Ship { delay, .. } => {
+                assert!(delay.as_secs_f64() <= MAX_STALL_SECS + 1e-9);
+            }
+            v => panic!("unexpected {v:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let sh = LinkShaper::new(ShaperSpec {
+            trace: BandwidthTrace::constant(mbps(80.0)),
+            loss_p: 0.5,
+            seed: 3,
+            ..ShaperSpec::default()
+        });
+        for _ in 0..64 {
+            sh.decide_at(0.0, 10_000);
+        }
+        let s = sh.stats();
+        assert_eq!(s.frames, 64);
+        assert!(s.lost > 10 && s.lost < 54, "{}", s.lost);
+        assert!(s.stalled_us > 0);
+    }
+}

@@ -39,6 +39,7 @@ use super::session::{
     ctrl_record, parse_ctrl, ResilienceConfig, RxStep, SessionRx, SessionTx, WireDecoder,
     WireItem, CTRL_MARKER, K_ACK, K_FIN, K_FIN_ACK, K_HAVE, K_HELLO, MAX_TELEMETRY_BYTES,
 };
+use super::shaper::{corrupt_into, LinkShaper, Verdict};
 use super::tcp::Backoff;
 use super::transport::{FrameRx, FrameTx, PreparedFrame};
 use crate::metrics::{ResilienceStats, StripeStats};
@@ -89,6 +90,14 @@ pub struct StripedTx {
     scratch: Vec<u8>,
     /// Serialization scratch for outbound telemetry records.
     tele_scratch: Vec<u8>,
+    /// Chaos-lab shaper per stripe (`None` = unshaped; the default). A
+    /// `None` slot adds exactly one `if let` to the write path — no
+    /// shaper code runs at all, asserted by the `hot_touches` regression
+    /// test in `tests/chaos_soak.rs`.
+    shapers: Vec<Option<Arc<LinkShaper>>>,
+    /// Wire-copy scratch for shaper-corrupted writes (the replay buffer
+    /// keeps the pristine bytes).
+    shape_scratch: Vec<u8>,
     /// Fired by the reactor whenever inbound bytes (acks) land on any of
     /// this boundary's conduits — the backpressure waits park on it
     /// instead of sleeping blind.
@@ -120,7 +129,26 @@ impl StripedTx {
             sends_since_pump: 0,
             scratch: Vec::new(),
             tele_scratch: Vec::new(),
+            shapers: (0..stripes).map(|_| None).collect(),
+            shape_scratch: Vec::new(),
             notify: Arc::new(Notify::new()),
+        }
+    }
+
+    /// Attach (or clear) the chaos-lab shaper for stripe `i`. Shaping is
+    /// sender-side only: the sleep a shaped write incurs is real write
+    /// stall, which is exactly the bandwidth signal the adaptive
+    /// controller measures.
+    pub fn set_shaper(&mut self, i: usize, shaper: Option<Arc<LinkShaper>>) {
+        self.shapers[i] = shaper;
+    }
+
+    /// Attach one shaper slot per stripe (see
+    /// [`super::scenario::ScenarioKind::build`]); missing trailing slots
+    /// stay unshaped.
+    pub fn set_shapers(&mut self, shapers: Vec<Option<Arc<LinkShaper>>>) {
+        for (i, s) in shapers.into_iter().enumerate().take(self.shapers.len()) {
+            self.shapers[i] = s;
         }
     }
 
@@ -210,15 +238,47 @@ impl StripedTx {
                 continue;
             };
             let wt0 = Instant::now();
-            let Some(bytes) = self.session.latest() else {
+            let Some(wire) = self.session.latest().map(<[u8]>::len) else {
                 // record_send succeeded above, so the only way the frame is
                 // gone is a cumulative ack that already covers it (a pump
                 // raced ahead) — nothing left to write.
                 break;
             };
-            let wire = bytes.len();
+            // Chaos-lab shaping, sender-side only (see `super::shaper`):
+            // the sleep below is real write stall — it lands in this
+            // send's busy time and in the stripe's stall EWMA, so the
+            // adaptive controller and the least-stalled picker both see
+            // the impairment without ever being told about it.
+            let mut corrupt_at = None;
+            if let Some(shaper) = self.shapers[i].clone() {
+                match shaper.decide(wire) {
+                    Verdict::Lose => {
+                        // The link ate the frame: kill the conduit instead
+                        // of writing, and let reconnect + replay recover.
+                        self.down(i);
+                        continue;
+                    }
+                    Verdict::Ship { delay, corrupt_at: at } => {
+                        if delay > Duration::ZERO {
+                            std::thread::sleep(delay);
+                        }
+                        corrupt_at = at;
+                    }
+                }
+            }
+            let Some(bytes) = self.session.latest() else {
+                break;
+            };
+            if let Some(at) = corrupt_at {
+                // Corrupt a throwaway copy; the pristine frame stays in
+                // the replay buffer for the post-desync replay.
+                corrupt_into(bytes, at, &mut self.shape_scratch);
+            }
             let ok = match self.conduits[i].conn.as_mut() {
-                Some(stream) => write_frame_bytes(stream, bytes).is_ok(),
+                Some(stream) => {
+                    let out = if corrupt_at.is_some() { &self.shape_scratch } else { bytes };
+                    write_frame_bytes(stream, out).is_ok()
+                }
                 None => false, // raced with a concurrent death sweep
             };
             if ok {

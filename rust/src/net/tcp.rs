@@ -13,9 +13,14 @@
 //! Receive-side error taxonomy (see [`TcpFrameReceiver::recv`]):
 //! * `Ok(Some(frame))` — next frame;
 //! * `Ok(None)` — clean shutdown: the peer closed between frames;
-//! * `Err(..)` — link failure: I/O error, EOF mid-frame, or a corrupt
-//!   length prefix. The driver reports these instead of treating them as
-//!   a quiet end of stream.
+//! * `Err(..)` — link failure: I/O error, EOF mid-frame, a corrupt
+//!   length prefix, **or a frame failing its CRC/header check**. The
+//!   driver reports these instead of treating them as a quiet end of
+//!   stream. Plain TCP has no replay buffer, so "skipping" a corrupt
+//!   frame would be a permanent sequence gap — silent data loss; the
+//!   session-bearing transports ([`super::resilient`],
+//!   [`super::stripe`]) instead treat corruption as a conduit desync and
+//!   recover the frame by reconnect + replay.
 
 use super::frame::Frame;
 use super::session::{
@@ -243,10 +248,12 @@ enum Prefix {
 
 impl TcpFrameReceiver {
     /// Next frame. `Ok(None)` = clean shutdown (EOF exactly on a frame
-    /// boundary); `Err` = I/O failure, EOF mid-frame, or corrupt length
-    /// prefix. Frames failing CRC are skipped (the in-proc path does the
-    /// same; corruption of a single frame is recoverable, a desynced
-    /// stream is not).
+    /// boundary); `Err` = I/O failure, EOF mid-frame, corrupt length
+    /// prefix, or a frame failing its CRC/header check. A corrupt frame
+    /// is a hard error — plain TCP has no replay buffer, so skipping it
+    /// would leave a permanent sequence gap (silent data loss); run
+    /// `--resilient` (or `--stripes N`) if the link is expected to
+    /// corrupt, and corruption becomes a recoverable desync instead.
     pub fn recv(&mut self) -> Result<Option<Frame>> {
         loop {
             let n = match self.read_prefix()? {
@@ -270,10 +277,13 @@ impl TcpFrameReceiver {
             self.stream.read_exact(&mut self.buf).map_err(|e| {
                 anyhow::anyhow!("link failed mid-frame ({n}-byte frame): {e}")
             })?;
-            match Frame::from_bytes(&self.buf) {
-                Ok(f) => return Ok(Some(f)),
-                Err(_) => continue,
-            }
+            return match Frame::from_bytes(&self.buf) {
+                Ok(f) => Ok(Some(f)),
+                Err(e) => Err(e.context(
+                    "corrupt frame on a plain TCP link (no replay buffer to recover it; \
+                     use --resilient for links that corrupt)",
+                )),
+            };
         }
     }
 
@@ -497,7 +507,11 @@ mod tests {
     }
 
     #[test]
-    fn crc_corrupt_frame_skipped_next_delivered() {
+    fn crc_corrupt_frame_is_a_hard_error() {
+        // Plain TCP has no replay buffer: "skipping" a corrupt frame
+        // would be a silent, permanent loss of its sequence number. The
+        // receiver must surface corruption loudly and point at the
+        // resilient mode that can actually recover it.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let server = std::thread::spawn(move || {
@@ -510,11 +524,9 @@ mod tests {
         bad[n - 1] ^= 0xff; // payload corruption -> CRC mismatch
         raw.write_all(&(bad.len() as u32).to_le_bytes()).unwrap();
         raw.write_all(&bad).unwrap();
-        let good = frame(1, 64);
-        let good_bytes = good.to_bytes();
-        raw.write_all(&(good_bytes.len() as u32).to_le_bytes()).unwrap();
-        raw.write_all(&good_bytes).unwrap();
-        assert_eq!(server.join().unwrap().unwrap().unwrap().seq, 1);
+        let err = server.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("corrupt frame"), "{err:#}");
+        assert!(err.to_string().contains("--resilient"), "{err:#}");
         drop(raw);
     }
 

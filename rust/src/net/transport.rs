@@ -204,6 +204,24 @@ impl LinkSpec {
         }
     }
 
+    /// Attach chaos-lab shapers to a striped boundary (one slot per
+    /// stripe; see [`super::scenario::ScenarioKind::build`]). Returns
+    /// whether the link could take them — only [`LinkSpec::Striped`]
+    /// has a shaped write path; every other variant ignores the call
+    /// and reports `false` so callers can be loud about it.
+    pub fn set_stripe_shapers(
+        &mut self,
+        shapers: Vec<Option<Arc<super::shaper::LinkShaper>>>,
+    ) -> bool {
+        match self {
+            LinkSpec::Striped(tx, _) => {
+                tx.set_shapers(shapers);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Split into boxed trait endpoints. `depth` bounds in-flight frames
     /// for the in-proc channel (TCP relies on socket buffers).
     pub fn into_endpoints(self, depth: usize) -> (Box<dyn FrameTx>, Box<dyn FrameRx>) {

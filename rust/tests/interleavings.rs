@@ -4,8 +4,8 @@
 //!
 //! Unlike the randomized soak tests, a clean run here is a *proof* over
 //! the bounded space: every interleaving of send/deliver/ack/kill/
-//! telemetry/partial-write/HELLO-resync/FIN the model admits was
-//! executed and checked.
+//! telemetry/partial-write/corruption/HELLO-resync/FIN the model admits
+//! was executed and checked.
 
 use quantpipe::analysis::schedule::{Action, BoundaryModel, Bug};
 use quantpipe::util::explore::{explore, replay, Bounds};
@@ -52,14 +52,32 @@ fn checker_rejects_ack_overshoot() {
     // Self-test: a protocol that acks one past the delivery point must
     // be caught (the overshoot trims an undelivered frame, a kill then
     // loses it for good).
-    let m = BoundaryModel { total: 2, conduits: 1, capacity: 2, kills: 1, tele: 0, truncs: 0, bug: Some(Bug::AckOvershoot) };
+    let m = BoundaryModel {
+        total: 2,
+        conduits: 1,
+        capacity: 2,
+        kills: 1,
+        tele: 0,
+        truncs: 0,
+        corrupts: 0,
+        bug: Some(Bug::AckOvershoot),
+    };
     let v = explore(&m, Bounds::default()).expect_err("overshoot must be found");
     assert!(!v.trace.is_empty(), "violation must carry its schedule:\n{v}");
 }
 
 #[test]
 fn checker_rejects_skipped_replay() {
-    let m = BoundaryModel { total: 2, conduits: 1, capacity: 2, kills: 1, tele: 0, truncs: 0, bug: Some(Bug::SkipReplay) };
+    let m = BoundaryModel {
+        total: 2,
+        conduits: 1,
+        capacity: 2,
+        kills: 1,
+        tele: 0,
+        truncs: 0,
+        corrupts: 0,
+        bug: Some(Bug::SkipReplay),
+    };
     explore(&m, Bounds::default()).expect_err("lost replay must be found");
 }
 
@@ -174,7 +192,16 @@ fn corpus_truncated_write_loses_tail_then_resyncs() {
     // cut off mid-record: frame 0 and the telemetry land, frame 1 (the
     // partial record) is lost with the conduit. The reconnect HELLO
     // carries the receiver's position and exactly the lost frame replays.
-    let m = BoundaryModel { total: 2, conduits: 1, capacity: 2, kills: 0, tele: 1, truncs: 1, bug: None };
+    let m = BoundaryModel {
+        total: 2,
+        conduits: 1,
+        capacity: 2,
+        kills: 0,
+        tele: 1,
+        truncs: 1,
+        corrupts: 0,
+        bug: None,
+    };
     let end = replay(
         &m,
         &[
@@ -194,6 +221,47 @@ fn corpus_truncated_write_loses_tail_then_resyncs() {
     )
     .unwrap_or_else(|v| panic!("{v}"));
     assert_eq!(end.delivered(), &[0, 1], "the truncated frame must be recovered by replay");
+    assert!(end.tx().fin_acked() && end.rx().finished());
+}
+
+#[test]
+fn corpus_corrupt_frame_kills_conduit_then_resyncs() {
+    // Frame 1 is corrupted on the wire: the receiver's CRC check rejects
+    // it and drops the conduit as desynced. The reconnect HELLO carries
+    // the receiver's position and exactly the corrupted frame replays —
+    // the same recovery path the chaos shaper's byte flips exercise over
+    // real sockets in tests/chaos_soak.rs.
+    let m = BoundaryModel {
+        total: 2,
+        conduits: 1,
+        capacity: 2,
+        kills: 0,
+        tele: 0,
+        truncs: 0,
+        corrupts: 1,
+        bug: None,
+    };
+    let end = replay(
+        &m,
+        &[
+            Action::Send(0),
+            Action::DeliverUp(0), // frame 0 delivered clean
+            Action::EmitAck(0),
+            Action::DeliverDown(0),
+            Action::Send(0),      // frame 1…
+            Action::CorruptUp(0), // …fails its CRC check; conduit dies
+            Action::Reconnect(0), // HELLO(1) → replay of frame 1 only
+            Action::DeliverUp(0), // frame 1 delivered
+            Action::EmitAck(0),
+            Action::DeliverDown(0),
+            Action::SendFin(0),
+            Action::DeliverUp(0),
+            Action::EmitFinAck(0),
+            Action::DeliverDown(0),
+        ],
+    )
+    .unwrap_or_else(|v| panic!("{v}"));
+    assert_eq!(end.delivered(), &[0, 1], "the corrupted frame must be recovered by replay");
     assert!(end.tx().fin_acked() && end.rx().finished());
 }
 

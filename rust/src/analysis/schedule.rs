@@ -26,6 +26,14 @@
 //! * at quiescence every frame was delivered and the FIN/FIN_ACK
 //!   handshake completed — nothing is lost even across conduit kills.
 //!
+//! The serving plane adds one more axis: with `streams > 1` every fresh
+//! send also picks WHICH client stream claims the next global sequence
+//! number ([`Action::SendOn`]), over-approximating the DRR dispatcher's
+//! pop order, and the frame carries that stream tag on the wire. The
+//! demux invariant — a delivered frame's tag equals the tag it was
+//! submitted with, even when the frame rode the kill → HELLO-resync →
+//! replay path — is checked at every delivery.
+//!
 //! The model over-approximates the real schedulers (the sender may pick
 //! *any* live conduit per frame, not just the round-robin choice), so a
 //! clean search covers strictly more behaviours than the deployed code
@@ -41,8 +49,8 @@ use std::collections::VecDeque;
 /// Sender → receiver traffic on one conduit.
 #[derive(Debug, Clone, PartialEq)]
 enum Up {
-    /// A data frame with this sequence number.
-    Frame(u64),
+    /// A data frame: `(seq, stream tag)`.
+    Frame(u64, u32),
     /// FIN carrying the end-of-stream boundary.
     Fin(u64),
     /// A telemetry record: data-plane-neutral, never acked, never
@@ -71,8 +79,13 @@ pub struct BoundaryState {
     conduits: Vec<Conduit>,
     /// Next fresh sequence number the application will send.
     next_send: u64,
+    /// Stream tag each sent seq was submitted with (`stream_of[seq]`) —
+    /// the model's copy of the serving coordinator's `pending` map.
+    stream_of: Vec<u32>,
     /// Sequence numbers popped by the receiving application, in order.
     delivered: Vec<u64>,
+    /// Stream tag each delivered frame carried, parallel to `delivered`.
+    delivered_tags: Vec<u32>,
     /// Remaining kill budget.
     kills_left: u8,
     /// Remaining telemetry-record budget.
@@ -89,6 +102,12 @@ impl BoundaryState {
         &self.delivered
     }
 
+    /// Stream tag each delivered frame carried, parallel to
+    /// [`Self::delivered`] — the corpus pins demux survival on this.
+    pub fn delivered_tags(&self) -> &[u32] {
+        &self.delivered_tags
+    }
+
     /// Sender-side session endpoint (for assertions in tests).
     pub fn tx(&self) -> &SessionTx {
         &self.tx
@@ -103,8 +122,14 @@ impl BoundaryState {
 /// One schedulable transition of the boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Action {
-    /// Application records the next frame and writes it to conduit `.0`.
+    /// Application records the next frame (tagged stream 0) and writes
+    /// it to conduit `.0` — the single-stream plane.
     Send(usize),
+    /// Serving plane (`streams > 1`): stream `.1` claims the next global
+    /// sequence number and the frame rides conduit `.0` carrying that
+    /// stream tag. Enumerated for every stream, over-approximating every
+    /// pop order the DRR dispatcher could produce.
+    SendOn(usize, u32),
     /// Sender writes FIN (end = `next_seq`) to conduit `.0`.
     SendFin(usize),
     /// Kernel delivers the head of conduit `.0`'s upstream queue.
@@ -147,6 +172,11 @@ pub enum Bug {
     AckOvershoot,
     /// Reconnect skips the replay of unacked frames.
     SkipReplay,
+    /// Replay after the HELLO resync rebuilds frames tagged stream 0
+    /// instead of their submitted stream — the cross-stream leakage the
+    /// serving demux invariant must catch (observable only with
+    /// `streams >= 2`).
+    ReplayRetag,
 }
 
 /// Model parameters: frame count, conduit count, session capacity and
@@ -169,6 +199,9 @@ pub struct BoundaryModel {
     /// How many in-flight corruptions (CRC-failed records) the
     /// scheduler may inject.
     pub corrupts: u8,
+    /// Client streams interleaving sends on this one session (1 = the
+    /// classic single-stream plane; `> 1` enables [`Action::SendOn`]).
+    pub streams: u32,
     /// Fault injection for self-tests; `None` for the real protocol.
     pub bug: Option<Bug>,
 }
@@ -184,8 +217,15 @@ impl BoundaryModel {
             tele: 0,
             truncs: 0,
             corrupts: 0,
+            streams: 1,
             bug: None,
         }
+    }
+
+    /// A clean serving-plane configuration: `streams` client streams
+    /// interleave their sends on the one session.
+    pub fn serving(total: u64, conduits: usize, capacity: usize, kills: u8, streams: u32) -> Self {
+        BoundaryModel { streams, ..BoundaryModel::clean(total, conduits, capacity, kills) }
     }
 
     fn reorder_window(&self) -> usize {
@@ -208,7 +248,19 @@ impl BoundaryModel {
                     f.seq, want, s.delivered
                 ));
             }
+            // The serving demux invariant: the frame must still carry
+            // the stream tag it was submitted with — even when it
+            // reached the receiver via the kill → HELLO → replay path.
+            let submitted = s.stream_of[f.seq as usize];
+            if f.stream != submitted {
+                return Err(format!(
+                    "cross-stream leakage: seq {} was submitted on stream {} but delivered \
+                     tagged stream {}",
+                    f.seq, submitted, f.stream
+                ));
+            }
             s.delivered.push(f.seq);
+            s.delivered_tags.push(f.stream);
         }
         Ok(())
     }
@@ -217,8 +269,8 @@ impl BoundaryModel {
     /// [`Action::DeliverUp`] and the flush inside [`Action::TruncateUp`]).
     fn deliver_one(&self, s: &mut BoundaryState, i: usize, msg: Up) -> Result<(), String> {
         match msg {
-            Up::Frame(seq) => {
-                let step = s.rx.on_frame(frame(seq)).map_err(|e| e.to_string())?;
+            Up::Frame(seq, stream) => {
+                let step = s.rx.on_frame(frame(seq, stream)).map_err(|e| e.to_string())?;
                 self.drain_ready(s)?;
                 if step == RxStep::Duplicate {
                     // The real receiver force-acks duplicates so a
@@ -260,9 +312,15 @@ impl BoundaryModel {
 }
 
 /// A minimal data frame for the model (payload content is irrelevant to
-/// the session layer, which tracks only sequence numbers and bytes).
-fn frame(seq: u64) -> Frame {
-    Frame::new(seq, vec![1], Encoded { params: None, elems: 1, payload: vec![0], tiled: false })
+/// the session layer, which tracks only sequence numbers and bytes —
+/// the stream tag is payload routing it must carry through untouched).
+fn frame(seq: u64, stream: u32) -> Frame {
+    Frame::for_stream(
+        stream,
+        seq,
+        vec![1],
+        Encoded { params: None, elems: 1, payload: vec![0], tiled: false },
+    )
 }
 
 impl Model for BoundaryModel {
@@ -277,7 +335,9 @@ impl Model for BoundaryModel {
                 .map(|_| Conduit { alive: true, up: VecDeque::new(), down: VecDeque::new() })
                 .collect(),
             next_send: 0,
+            stream_of: Vec::new(),
             delivered: Vec::new(),
+            delivered_tags: Vec::new(),
             kills_left: self.kills,
             tele_left: self.tele,
             truncs_left: self.truncs,
@@ -290,7 +350,16 @@ impl Model for BoundaryModel {
         for (i, c) in s.conduits.iter().enumerate() {
             if c.alive {
                 if s.next_send < self.total && s.tx.has_room() {
-                    out.push(Action::Send(i));
+                    if self.streams <= 1 {
+                        out.push(Action::Send(i));
+                    } else {
+                        // Serving plane: any stream may claim the next
+                        // global seq — the over-approximation of every
+                        // DRR pop order the dispatcher could produce.
+                        for st in 0..self.streams {
+                            out.push(Action::SendOn(i, st));
+                        }
+                    }
                 }
                 if s.next_send == self.total
                     && !s.tx.fin_acked()
@@ -335,7 +404,15 @@ impl Model for BoundaryModel {
                 let seq = s.next_send;
                 s.tx.record_send(seq, seq.to_le_bytes().to_vec()).map_err(|e| e.to_string())?;
                 s.next_send += 1;
-                s.conduits[i].up.push_back(Up::Frame(seq));
+                s.stream_of.push(0);
+                s.conduits[i].up.push_back(Up::Frame(seq, 0));
+            }
+            Action::SendOn(i, st) => {
+                let seq = s.next_send;
+                s.tx.record_send(seq, seq.to_le_bytes().to_vec()).map_err(|e| e.to_string())?;
+                s.next_send += 1;
+                s.stream_of.push(st);
+                s.conduits[i].up.push_back(Up::Frame(seq, st));
             }
             Action::SendFin(i) => {
                 let end = s.tx.next_seq();
@@ -383,7 +460,16 @@ impl Model for BoundaryModel {
                 s.tx.on_hello(pos).map_err(|e| e.to_string())?;
                 if self.bug != Some(Bug::SkipReplay) {
                     for seq in s.tx.replay_seqs().collect::<Vec<_>>() {
-                        s.conduits[i].up.push_back(Up::Frame(seq));
+                        // The replay buffer holds the pristine wire
+                        // bytes, stream tag included; the retag bug
+                        // models a replay path that rebuilds frames
+                        // and forgets the tag.
+                        let st = if self.bug == Some(Bug::ReplayRetag) {
+                            0
+                        } else {
+                            s.stream_of[seq as usize]
+                        };
+                        s.conduits[i].up.push_back(Up::Frame(seq, st));
                     }
                 }
             }
@@ -447,6 +533,9 @@ impl Model for BoundaryModel {
     fn fingerprint(&self, s: &BoundaryState) -> u64 {
         let mut h = Fnv::default();
         h.u64(s.next_send).u64(s.delivered.len() as u64).u64(s.kills_left as u64);
+        for st in &s.stream_of {
+            h.u64(*st as u64);
+        }
         h.u64(s.tele_left as u64).u64(s.truncs_left as u64).u64(s.corrupts_left as u64);
         h.u64(s.tx.next_seq()).u64(s.tx.acked()).u64(s.tx.fin_acked() as u64);
         for seq in s.tx.replay_seqs() {
@@ -461,7 +550,7 @@ impl Model for BoundaryModel {
             h.u64(0xC0).u64(c.alive as u64);
             for m in &c.up {
                 match m {
-                    Up::Frame(seq) => h.u64(1).u64(*seq),
+                    Up::Frame(seq, st) => h.u64(1).u64(*seq).u64(*st as u64),
                     Up::Fin(end) => h.u64(2).u64(*end),
                     Up::Tele => h.u64(3),
                 };
@@ -514,6 +603,7 @@ mod tests {
             tele: 0,
             truncs: 0,
             corrupts: 0,
+            streams: 1,
             bug: Some(Bug::AckOvershoot),
         };
         let v = explore(&m, Bounds::default()).expect_err("overshooting acks must be caught");
@@ -530,6 +620,7 @@ mod tests {
             tele: 0,
             truncs: 0,
             corrupts: 0,
+            streams: 1,
             bug: Some(Bug::SkipReplay),
         };
         let v = explore(&m, Bounds::default()).expect_err("skipping replay must lose frames");
@@ -549,6 +640,7 @@ mod tests {
             tele: 2,
             truncs: 0,
             corrupts: 0,
+            streams: 1,
             bug: None,
         };
         let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
@@ -569,6 +661,7 @@ mod tests {
             tele: 1,
             truncs: 1,
             corrupts: 0,
+            streams: 1,
             bug: None,
         };
         let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
@@ -591,12 +684,42 @@ mod tests {
             tele: 0,
             truncs: 0,
             corrupts: 1,
+            streams: 1,
             bug: None,
         };
         let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
         let cov = explore(&m, bounds).unwrap_or_else(|v| panic!("{v}"));
         assert!(cov.terminals >= 1, "{cov:?}");
         assert!(cov.states > 20, "corruption explores a real space: {cov:?}");
+    }
+
+    #[test]
+    fn two_streams_interleave_without_cross_stream_leakage() {
+        // Serving plane: 2 streams race for 3 global seqs on a boundary
+        // that loses one conduit mid-run. Every assignment of streams to
+        // seqs, interleaved with every kill/resync point, must deliver
+        // exactly once, in order, with every stream tag intact.
+        let m = BoundaryModel::serving(3, 1, 2, 1, 2);
+        let bounds = Bounds { max_depth: 64, max_states: 1 << 21 };
+        let cov = explore(&m, bounds).unwrap_or_else(|v| panic!("{v}"));
+        assert!(cov.terminals >= 1, "{cov:?}");
+        assert!(cov.states > 100, "the stream axis explores a real space: {cov:?}");
+    }
+
+    #[test]
+    fn replay_retag_bug_is_caught() {
+        // A replay path that rebuilds frames tagged stream 0 leaks a
+        // stream-1 frame across the demux boundary as soon as a kill
+        // forces a replay — the checker must find that schedule.
+        let m = BoundaryModel {
+            bug: Some(Bug::ReplayRetag),
+            ..BoundaryModel::serving(2, 1, 2, 1, 2)
+        };
+        let v = explore(&m, Bounds::default()).expect_err("retagged replay must leak");
+        assert!(
+            format!("{v}").contains("cross-stream leakage"),
+            "wrong violation: {v}"
+        );
     }
 
     #[test]

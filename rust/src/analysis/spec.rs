@@ -265,8 +265,9 @@ mod tests {
 length `L` (bounded by `MAX_FRAME_BYTES = 2^30`; larger is corrupt)
 * prefix `== 0xFFFF_FFFF` (`CTRL_MARKER`) — a control record.
 magic  u32   \"QPFR\" (0x5150_4652)
-ver    u8    1
+ver    u8    2
 kind   u8    0 = raw f32, 1 = quantized, 2 = tiled
+stream u32   client stream / request ID (0 = single-stream)
 header  ntiles u32 | tile_elems u32 | noutliers u32         (12 bytes)
 param   scale f32 | zp f32 | lo f32 | hi f32 | bits u8      (17 bytes, × ntiles)
 outlier index u32 | value f32                               (8 bytes, × noutliers)
@@ -289,7 +290,7 @@ kind 6  HAVE{seq}              receiver → sender
         assert_eq!(spec.max_frame_bytes.0, 1 << 30);
         assert_eq!(spec.max_telemetry_bytes.0, 1 << 20);
         assert_eq!(spec.magic.0, 0x5150_4652);
-        assert_eq!(spec.version.0, 1);
+        assert_eq!(spec.version.0, 2);
         assert_eq!(spec.kinds.len(), 6, "frame-header kind row must not leak in");
         assert_eq!(spec.tile_hdr.0, 12);
         assert_eq!(spec.tile_param.0, 17);

@@ -61,6 +61,15 @@ pub struct PipelineSection {
     /// outlier side-channel (0 ≤ f ≤ 0.5; ignored when `tile_elems` is
     /// 0).
     pub outlier_frac: f64,
+    /// Maximum concurrent client streams the serving coordinator admits
+    /// (1 = the classic single-stream coordinator; see
+    /// `pipeline::serve`). Streams are payload routing, not a new
+    /// reliability domain — the session layer never sees them.
+    pub max_streams: usize,
+    /// Bounded ingress-queue depth per client stream. A full queue
+    /// backpressures only that client (`Admission::Backpressured`);
+    /// everyone else keeps flowing.
+    pub stream_queue_depth: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -229,6 +238,8 @@ impl Default for Config {
                 codec_simd: true,
                 tile_elems: 0,
                 outlier_frac: 0.01,
+                max_streams: 1,
+                stream_queue_depth: 4,
             },
             quant: QuantSection { method: Method::Pda, calib_every: 1, ds_steps: 100 },
             adapt: AdaptSection {
@@ -326,6 +337,20 @@ impl Config {
                     (0.0..=0.5).contains(&cfg.pipeline.outlier_frac),
                     "pipeline.outlier_frac must be in [0, 0.5], got {}",
                     cfg.pipeline.outlier_frac
+                );
+            }
+            if let Some(x) = p.get("max_streams") {
+                cfg.pipeline.max_streams = x.as_usize()?;
+                anyhow::ensure!(
+                    cfg.pipeline.max_streams >= 1,
+                    "pipeline.max_streams must be >= 1 (1 = single-stream coordinator)"
+                );
+            }
+            if let Some(x) = p.get("stream_queue_depth") {
+                cfg.pipeline.stream_queue_depth = x.as_usize()?;
+                anyhow::ensure!(
+                    cfg.pipeline.stream_queue_depth >= 1,
+                    "pipeline.stream_queue_depth must be >= 1"
                 );
             }
         }
@@ -533,6 +558,22 @@ mod tests {
         assert!(Config::parse(r#"{"pipeline": {"tile_elems": 100}}"#).is_err());
         assert!(Config::parse(r#"{"pipeline": {"outlier_frac": 0.6}}"#).is_err());
         assert!(Config::parse(r#"{"pipeline": {"outlier_frac": -0.1}}"#).is_err());
+    }
+
+    #[test]
+    fn serving_knobs_parse_validate_and_default() {
+        let c = Config::parse("{}").unwrap();
+        assert_eq!(c.pipeline.max_streams, 1, "multi-stream serving is opt-in");
+        assert_eq!(c.pipeline.stream_queue_depth, 4);
+        let c = Config::parse(
+            r#"{"pipeline": {"max_streams": 8, "stream_queue_depth": 16}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.max_streams, 8);
+        assert_eq!(c.pipeline.stream_queue_depth, 16);
+        // Both are "at least one" quantities.
+        assert!(Config::parse(r#"{"pipeline": {"max_streams": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"pipeline": {"stream_queue_depth": 0}}"#).is_err());
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! | [`net`] | edge network substrate: the `FrameTx`/`FrameRx` transport abstraction over shaped in-proc links *and* real TCP sockets; the layered reliability stack (`net::session` protocol state machine → `net::conduit` connections → `net::stripe` N-connection striped boundaries, with `net::resilient` as the 1-conduit case); traces, wire framing |
 //! | [`monitor`] | §3 runtime monitor (windowed bandwidth / output-rate) |
 //! | [`adapt`] | §3 adaptive PDA module (Eq. 2 bitwidth policy) |
-//! | [`pipeline`] | transport-agnostic pipeline driver (stage threads, scheduling, backpressure) + multi-process worker/coordinator endpoints |
+//! | [`pipeline`] | transport-agnostic pipeline driver (stage threads, scheduling, backpressure) + multi-process worker/coordinator endpoints; `pipeline::serve` is the multi-stream serving plane — weighted-round-robin admission over bounded per-stream queues, feeding `run_serving_coordinator` |
 //! | [`partition`] | PipeEdge [15] optimal partition DP |
 //! | [`runtime`] | PJRT engine: load + execute AOT HLO artifacts |
 //! | [`tensor`] | host tensors (f32 / i32) |

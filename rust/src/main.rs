@@ -34,8 +34,9 @@ use quantpipe::net::tcp;
 use quantpipe::net::transport::{FrameRx, FrameTx, LinkSpec};
 use quantpipe::partition::CostModel;
 use quantpipe::pipeline::{
-    self, hlo_stage_factory, mock_stage_factory, run_coordinator, run_worker, LinkQuant,
-    PipelineSpec, StageFactory, WorkerConfig, Workload,
+    self, hlo_stage_factory, mock_stage_factory, run_coordinator, run_serving_coordinator,
+    run_worker, LinkQuant, PipelineSpec, ServeConfig, ServeWorkload, StageFactory, StreamSpec,
+    WorkerConfig, Workload,
 };
 use quantpipe::quant::Method;
 use quantpipe::runtime::Manifest;
@@ -59,6 +60,7 @@ USAGE:
   quantpipe coordinate [--config F] [--microbatches N] [--synthetic CxD]
                        [--resilient BOOL] [--stripes N] [--report-json F]
                        [--scenario NAME] [--scenario-seed S] [--artifacts DIR]
+                       [--max-streams N] [--stream-queue-depth D] [--streams W:M,W:M,…]
   quantpipe scenario   [NAME] [--scenario-seed S] [--stripes N]
   quantpipe report     <run.json>
   quantpipe partition  <profile.json> [--devices N]
@@ -85,6 +87,15 @@ corruption, loss, stripe partitions — on this process's outgoing links
 (docs/SCENARIOS.md). Deterministic per `--scenario-seed`; shaping is
 sender-side, so configure it on the processes that send. `quantpipe
 scenario` lists the names; `quantpipe scenario NAME` prints its timeline.
+Multi-stream serving: `--max-streams N` (or pipeline.max_streams) > 1
+turns `coordinate` into a serving front-end — N concurrent client
+sessions interleave through the one stage chain under weighted
+round-robin with bounded per-stream queues (`--stream-queue-depth`,
+pipeline.stream_queue_depth). `--streams 4:40,1:10` spells each client
+out as WEIGHT:MICROBATCHES (must fit within --max-streams); without it
+the run's microbatches split evenly across N weight-1 streams. The
+report gains per-stream frame counts, backpressure stalls and
+completion-latency percentiles.
 ";
 
 /// Tiny flag parser: --key value pairs + positionals.
@@ -199,6 +210,14 @@ fn load_config(args: &Args) -> quantpipe::Result<Config> {
         cfg.transport.scenario_seed = s
             .parse()
             .map_err(|e| anyhow::anyhow!("--scenario-seed wants a non-negative integer: {e}"))?;
+    }
+    if let Some(s) = args.get("max-streams") {
+        cfg.pipeline.max_streams = s.parse()?;
+        anyhow::ensure!(cfg.pipeline.max_streams >= 1, "--max-streams must be >= 1");
+    }
+    if let Some(s) = args.get("stream-queue-depth") {
+        cfg.pipeline.stream_queue_depth = s.parse()?;
+        anyhow::ensure!(cfg.pipeline.stream_queue_depth >= 1, "--stream-queue-depth must be >= 1");
     }
     // Re-validate after CLI overrides (the config parser enforces the
     // same invariants for file-borne settings).
@@ -406,6 +425,34 @@ fn parse_pair(s: &str, what: &str) -> quantpipe::Result<(usize, usize)> {
         .split_once('x')
         .ok_or_else(|| anyhow::anyhow!("{what} wants AxB (e.g. 64x16), got {s:?}"))?;
     Ok((a.trim().parse()?, b.trim().parse()?))
+}
+
+/// Parse `--streams W:M,W:M,…` — one WEIGHT:MICROBATCHES entry per
+/// client stream (e.g. `--streams 4:40,1:10,1:10`).
+fn parse_streams(s: &str) -> quantpipe::Result<Vec<StreamSpec>> {
+    s.split(',')
+        .map(|e| {
+            let (w, m) = e.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("--streams wants WEIGHT:MICROBATCHES entries, got {e:?}")
+            })?;
+            let spec = StreamSpec { weight: w.trim().parse()?, microbatches: m.trim().parse()? };
+            anyhow::ensure!(spec.microbatches > 0, "--streams entry {e:?} offers no microbatches");
+            Ok(spec)
+        })
+        .collect()
+}
+
+/// Without an explicit `--streams` spec, split the run's microbatches
+/// evenly across `n` weight-1 clients (earlier streams take the
+/// remainder).
+fn even_streams(total: u64, n: usize) -> Vec<StreamSpec> {
+    let n64 = n as u64;
+    (0..n64)
+        .map(|i| StreamSpec {
+            weight: 1,
+            microbatches: total / n64 + u64::from(i < total % n64),
+        })
+        .collect()
 }
 
 fn cmd_worker(args: &Args) -> quantpipe::Result<()> {
@@ -640,12 +687,35 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
         (Box::new(feed_tx), Box::new(ret_rx))
     };
 
-    let workload = if cfg.run.microbatches == 0 {
-        Workload::one_pass(eval, microbatch)
+    let total = if cfg.run.microbatches == 0 {
+        eval.microbatches(microbatch) as u64
     } else {
-        Workload::repeat(eval, microbatch, cfg.run.microbatches)
+        cfg.run.microbatches
     };
-    let report = run_coordinator(workload, feed_tx, ret_rx)?;
+    let serving = args.get("streams").is_some() || cfg.pipeline.max_streams > 1;
+    let report = if serving {
+        let streams = match args.get("streams") {
+            Some(s) => parse_streams(s)?,
+            None => even_streams(total, cfg.pipeline.max_streams),
+        };
+        let workload = ServeWorkload {
+            eval,
+            microbatch,
+            streams,
+            serve: ServeConfig {
+                max_streams: cfg.pipeline.max_streams,
+                queue_depth: cfg.pipeline.stream_queue_depth,
+            },
+        };
+        eprintln!(
+            "[coordinator] serving {} streams (queue depth {})",
+            workload.streams.len(),
+            cfg.pipeline.stream_queue_depth
+        );
+        run_serving_coordinator(workload, feed_tx, ret_rx)?
+    } else {
+        run_coordinator(Workload::repeat(eval, microbatch, total), feed_tx, ret_rx)?
+    };
 
     println!("== QuantPipe coordinate (tcp) ==");
     println!("microbatches      {}", report.microbatches);
@@ -681,6 +751,21 @@ fn cmd_coordinate(args: &Args) -> quantpipe::Result<()> {
             st.points.len(),
             if st.complete { "complete" } else { "INCOMPLETE" }
         );
+    }
+    // Per-stream rows (serving runs only): who completed what, and who
+    // absorbed the backpressure.
+    if let Some(c) = report.pipeline.coordinator.as_ref() {
+        for s in &c.streams {
+            println!(
+                "stream {:<3}       {} frames (weight {}), {} stalls, p50 {:.1} ms / p99 {:.1} ms",
+                s.stream,
+                s.frames,
+                s.weight,
+                s.stalls,
+                s.p50_latency_s * 1e3,
+                s.p99_latency_s * 1e3
+            );
+        }
     }
     for e in &report.errors {
         eprintln!("  link failure: {e}");

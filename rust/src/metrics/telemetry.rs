@@ -406,6 +406,27 @@ impl StageReport {
 // The merged run view
 // ---------------------------------------------------------------------------
 
+/// One client stream's end-to-end view under the serving plane
+/// ([`crate::pipeline::serve`]): admission counters from the scheduler
+/// plus completion-latency percentiles measured at the coordinator's
+/// sink. Empty `streams` list = the classic single-stream coordinator.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamSummary {
+    /// Stream ID (the frame-header tag).
+    pub stream: u32,
+    /// WRR weight the stream was admitted with (post-clamp).
+    pub weight: u32,
+    /// Microbatches completed end to end on this stream.
+    pub frames: u64,
+    /// Backpressure stalls this stream's client absorbed at admission —
+    /// the "who was held back" counter the fairness tests assert on.
+    pub stalls: u64,
+    /// Median completion latency (submit → logits), seconds.
+    pub p50_latency_s: f64,
+    /// 99th-percentile completion latency, seconds.
+    pub p99_latency_s: f64,
+}
+
 /// The coordinator's end-to-end measurements, embedded in the
 /// [`PipelineReport`] beside the per-stage telemetry.
 #[derive(Debug, Clone, Default)]
@@ -424,6 +445,8 @@ pub struct CoordinatorSummary {
     pub p50_latency_s: f64,
     /// 99th-percentile end-to-end microbatch latency, seconds.
     pub p99_latency_s: f64,
+    /// Per-stream serving-plane rows (empty on single-stream runs).
+    pub streams: Vec<StreamSummary>,
     /// Coordinator-side failures (empty on a clean run).
     pub errors: Vec<String>,
 }
@@ -542,6 +565,24 @@ impl PipelineReport {
                 cm.insert("p50_latency_s".into(), num(c.p50_latency_s));
                 cm.insert("p99_latency_s".into(), num(c.p99_latency_s));
                 cm.insert(
+                    "streams".into(),
+                    Value::Arr(
+                        c.streams
+                            .iter()
+                            .map(|st| {
+                                let mut tm = BTreeMap::new();
+                                tm.insert("stream".into(), Value::Num(st.stream as f64));
+                                tm.insert("weight".into(), Value::Num(st.weight as f64));
+                                tm.insert("frames".into(), Value::Num(st.frames as f64));
+                                tm.insert("stalls".into(), Value::Num(st.stalls as f64));
+                                tm.insert("p50_latency_s".into(), num(st.p50_latency_s));
+                                tm.insert("p99_latency_s".into(), num(st.p99_latency_s));
+                                Value::Obj(tm)
+                            })
+                            .collect(),
+                    ),
+                );
+                cm.insert(
                     "errors".into(),
                     Value::Arr(c.errors.iter().map(|e| Value::Str(e.clone())).collect()),
                 );
@@ -652,6 +693,38 @@ impl PipelineReport {
                 accuracy: opt("accuracy"),
                 p50_latency_s: opt("p50_latency_s"),
                 p99_latency_s: opt("p99_latency_s"),
+                // Absent on reports written before the serving plane —
+                // old artifacts keep parsing as single-stream.
+                streams: cv
+                    .get("streams")
+                    .and_then(|a| a.as_arr().ok())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|tv| {
+                                Some(StreamSummary {
+                                    stream: tv.at("stream").ok()?.as_u64().ok()? as u32,
+                                    weight: tv
+                                        .get("weight")
+                                        .and_then(|x| x.as_u64().ok())
+                                        .unwrap_or(1) as u32,
+                                    frames: tv.at("frames").ok()?.as_u64().ok()?,
+                                    stalls: tv
+                                        .get("stalls")
+                                        .and_then(|x| x.as_u64().ok())
+                                        .unwrap_or(0),
+                                    p50_latency_s: tv
+                                        .get("p50_latency_s")
+                                        .and_then(|x| x.as_f64().ok())
+                                        .unwrap_or(0.0),
+                                    p99_latency_s: tv
+                                        .get("p99_latency_s")
+                                        .and_then(|x| x.as_f64().ok())
+                                        .unwrap_or(0.0),
+                                })
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
                 errors: cv
                     .get("errors")
                     .and_then(|e| e.as_arr().ok())
@@ -687,6 +760,18 @@ impl PipelineReport {
                 c.p50_latency_s * 1e3,
                 c.p99_latency_s * 1e3
             );
+            for st in &c.streams {
+                let _ = writeln!(
+                    s,
+                    "stream {:<3}       {} frames (weight {}), {} stalls, p50 {:.1} ms / p99 {:.1} ms",
+                    st.stream,
+                    st.frames,
+                    st.weight,
+                    st.stalls,
+                    st.p50_latency_s * 1e3,
+                    st.p99_latency_s * 1e3
+                );
+            }
             for e in &c.errors {
                 let _ = writeln!(s, "  coordinator failure: {e}");
             }
@@ -972,6 +1057,24 @@ mod tests {
             accuracy: 1.0,
             p50_latency_s: 0.012,
             p99_latency_s: 0.04,
+            streams: vec![
+                StreamSummary {
+                    stream: 0,
+                    weight: 4,
+                    frames: 16,
+                    stalls: 9,
+                    p50_latency_s: 0.010,
+                    p99_latency_s: 0.050,
+                },
+                StreamSummary {
+                    stream: 1,
+                    weight: 1,
+                    frames: 8,
+                    stalls: 0,
+                    p50_latency_s: 0.011,
+                    p99_latency_s: 0.020,
+                },
+            ],
             errors: vec![],
         });
         let json = report.to_json().to_string_pretty();
@@ -985,8 +1088,32 @@ mod tests {
         let c = back.coordinator.as_ref().unwrap();
         assert_eq!(c.microbatches, 24);
         assert!((c.accuracy - 1.0).abs() < 1e-12);
-        // And the renderer accepts the parsed-back form.
-        assert!(back.render().contains("stage 0"));
+        // The serving plane's per-stream rows survive the round trip…
+        assert_eq!(c.streams, report.coordinator.as_ref().unwrap().streams);
+        // …and the renderer shows who absorbed the backpressure.
+        let text = back.render();
+        assert!(text.contains("stage 0"));
+        assert!(text.contains("9 stalls"), "{text}");
+    }
+
+    #[test]
+    fn pre_serving_plane_reports_parse_as_single_stream() {
+        // A v1 report written before the `streams` key existed.
+        let json = r#"{
+            "schema": "quantpipe.pipeline_report.v1",
+            "dropped": 0,
+            "stages": [],
+            "coordinator": {
+                "images": 8, "microbatches": 1, "wall_secs": 1.0,
+                "throughput": 8.0, "accuracy": 1.0,
+                "p50_latency_s": 0.01, "p99_latency_s": 0.02,
+                "errors": []
+            }
+        }"#;
+        let back = PipelineReport::from_json(&Value::parse(json).unwrap()).unwrap();
+        let c = back.coordinator.as_ref().unwrap();
+        assert_eq!(c.microbatches, 1);
+        assert!(c.streams.is_empty(), "absent key = classic single-stream run");
     }
 
     #[test]

@@ -11,12 +11,20 @@
 //! bits   u8    2/4/6/8/16 (or 32 for raw and tiled)
 //! rank   u8
 //! seq    u64   microbatch sequence number
+//! stream u32   client stream / request ID (0 = single-stream)
 //! scale  f32 | zp f32 | lo f32 | hi f32     (kind 1 only)
 //! dims   u32 × rank
 //! plen   u32   payload byte length
 //! crc    u32   CRC32 (IEEE) of payload
 //! payload …
 //! ```
+//!
+//! Version 2 added the `stream` word for the multi-stream serving plane
+//! (`pipeline::serve`): the coordinator tags each microbatch with the
+//! client session it belongs to and demuxes returned logits by it.
+//! Stream IDs are payload routing only — the session layer's sequence
+//! space stays global per boundary, so reliability (replay, ACKs, HELLO
+//! resync) is completely stream-oblivious.
 //!
 //! Kind 2 payloads are self-describing tiled payloads
 //! (`quant::tile`): the per-tile param table, the outlier side-channel
@@ -31,13 +39,16 @@ use crate::Result;
 /// Frame header magic ("QPFR").
 pub const MAGIC: u32 = 0x5150_4652; // "QPFR"
 /// Frame format version.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 
 /// One activation frame: header + payload bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     /// Microbatch sequence number.
     pub seq: u64,
+    /// Client stream / request ID (0 = the single-stream default). Pure
+    /// payload routing: the session layer never looks at it.
+    pub stream: u32,
     /// Activation shape (outermost first).
     pub shape: Vec<usize>,
     /// Encoded payload + quantization parameters.
@@ -45,9 +56,14 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// Assemble a frame from its parts.
+    /// Assemble a single-stream frame (stream 0) from its parts.
     pub fn new(seq: u64, shape: Vec<usize>, enc: Encoded) -> Self {
-        Frame { seq, shape, enc }
+        Frame { seq, stream: 0, shape, enc }
+    }
+
+    /// Assemble a frame tagged with a client stream ID (serving plane).
+    pub fn for_stream(stream: u32, seq: u64, shape: Vec<usize>, enc: Encoded) -> Self {
+        Frame { seq, stream, shape, enc }
     }
 
     /// Total bytes on the wire (header + payload).
@@ -56,7 +72,16 @@ impl Frame {
     }
 
     fn header_len(&self) -> usize {
-        4 + 1 + 1 + 1 + 1 + 8 + if self.enc.params.is_some() { 16 } else { 0 } + 4 * self.shape.len() + 4 + 4
+        4 + 1
+            + 1
+            + 1
+            + 1
+            + 8
+            + 4
+            + if self.enc.params.is_some() { 16 } else { 0 }
+            + 4 * self.shape.len()
+            + 4
+            + 4
     }
 
     /// Serialize to a fresh buffer. Hot paths use [`Frame::write_into`]
@@ -85,6 +110,7 @@ impl Frame {
         out.push(self.enc.bits());
         out.push(self.shape.len() as u8);
         out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.stream.to_le_bytes());
         if let Some(p) = self.enc.params {
             out.extend_from_slice(&p.scale.to_le_bytes());
             out.extend_from_slice(&p.zero_point.to_le_bytes());
@@ -109,6 +135,7 @@ impl Frame {
         let bits = r.u8()?;
         let rank = r.u8()? as usize;
         let seq = r.u64()?;
+        let stream = r.u32()?;
         let params = if kind == 1 {
             Some(QuantParams {
                 scale: r.f32()?,
@@ -132,6 +159,7 @@ impl Frame {
         let elems: usize = shape.iter().product();
         Ok(Frame {
             seq,
+            stream,
             shape,
             enc: Encoded { params, elems, payload, tiled: kind == 2 },
         })
@@ -299,6 +327,20 @@ mod tests {
             }
             ptr = wire.as_ptr();
         }
+    }
+
+    #[test]
+    fn stream_id_roundtrips_and_defaults_to_zero() {
+        let f = sample_frame(8);
+        assert_eq!(f.stream, 0, "Frame::new is the single-stream constructor");
+        let tagged = Frame::for_stream(42, f.seq, f.shape.clone(), f.enc.clone());
+        let back = Frame::from_bytes(&tagged.to_bytes()).unwrap();
+        assert_eq!(back.stream, 42);
+        assert_eq!(back, tagged);
+        // A v1 (pre-stream) header is rejected loudly, not misparsed.
+        let mut old = tagged.to_bytes();
+        old[4] = 1;
+        assert!(Frame::from_bytes(&old).unwrap_err().to_string().contains("version"));
     }
 
     #[test]

@@ -51,13 +51,93 @@ const CORRUPT_TAIL: usize = 4;
 
 /// Global count of shaper hot-path decisions, across all shapers. The
 /// zero-cost-when-disabled regression test asserts an unshaped transfer
-/// leaves this untouched — i.e. no shaper code ran at all.
+/// leaves this untouched — i.e. no shaper code ran at all. Observe it
+/// through a [`HotTouchScope`] in parallel test binaries; a bare
+/// [`hot_touches`] read is only meaningful single-threaded.
 static HOT_TOUCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Gate between the decision hot path (shared mode — an uncontended
+/// read is one atomic op) and [`HotTouchScope`] observers (exclusive
+/// mode). Leaf lock: nothing else is ever taken while it is held.
+static OBSERVER: std::sync::RwLock<()> = std::sync::RwLock::new(());
+
+/// How long a decision waits for an open [`HotTouchScope`] to close
+/// before counting itself anyway. The timeout is what keeps a genuine
+/// regression (shaper code on a supposedly-unshaped path, *inside* a
+/// scope) a clean assertion failure instead of a deadlocked test
+/// binary; it only ever elapses if a scope outlives it, which no
+/// well-formed scope (a single short transfer) does.
+const OBSERVER_PATIENCE: Duration = Duration::from_secs(5);
 
 /// Total [`LinkShaper::decide`] / [`LinkShaper::decide_at`] calls ever
 /// made in this process (see [`HOT_TOUCHES`]).
 pub fn hot_touches() -> u64 {
     HOT_TOUCHES.load(Relaxed)
+}
+
+/// Count one hot-path decision, yielding to any open observation scope
+/// first (bounded by [`OBSERVER_PATIENCE`]).
+fn count_hot_touch() {
+    // Fast path: no scope open. Poisoning is impossible to provoke here
+    // (the critical sections hold no user code) but tolerated anyway.
+    let gate = match OBSERVER.try_read() {
+        Ok(g) => Some(g),
+        Err(std::sync::TryLockError::Poisoned(e)) => Some(e.into_inner()),
+        Err(std::sync::TryLockError::WouldBlock) => None,
+    };
+    if gate.is_some() {
+        HOT_TOUCHES.fetch_add(1, Relaxed);
+        return;
+    }
+    let deadline = Instant::now() + OBSERVER_PATIENCE;
+    loop {
+        std::thread::sleep(Duration::from_millis(1));
+        match OBSERVER.try_read() {
+            Ok(_g) => break,
+            Err(std::sync::TryLockError::Poisoned(e)) => {
+                let _g = e.into_inner();
+                break;
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {
+                if Instant::now() >= deadline {
+                    break;
+                }
+            }
+        }
+    }
+    HOT_TOUCHES.fetch_add(1, Relaxed);
+}
+
+/// RAII observation window over the process-global decision counter —
+/// what makes "no shaper code ran" assertions hold in a *parallel* test
+/// binary without a file-local serialization mutex.
+///
+/// While a scope is open it holds the [`OBSERVER`] gate exclusively:
+/// decisions made by concurrent tests park briefly at the gate (they
+/// stall, they do not fail) instead of polluting the window, so
+/// [`HotTouchScope::delta`] over a window whose own code path is
+/// genuinely shaper-free is exactly 0. Scopes serialize against each
+/// other the same way. Keep the scope to one short transfer; a
+/// decision that waits longer than [`OBSERVER_PATIENCE`] counts itself
+/// anyway, trading a theoretical long-scope race for deadlock freedom.
+pub struct HotTouchScope {
+    baseline: u64,
+    _gate: std::sync::RwLockWriteGuard<'static, ()>,
+}
+
+impl HotTouchScope {
+    /// Open an exclusive observation window: quiesces in-flight
+    /// decisions, snapshots the counter, and holds the gate until drop.
+    pub fn begin() -> Self {
+        let gate = OBSERVER.write().unwrap_or_else(|e| e.into_inner());
+        HotTouchScope { baseline: HOT_TOUCHES.load(Relaxed), _gate: gate }
+    }
+
+    /// Decisions counted since [`HotTouchScope::begin`]. Zero iff no
+    /// shaper hot-path code ran inside the window.
+    pub fn delta(&self) -> u64 {
+        HOT_TOUCHES.load(Relaxed).saturating_sub(self.baseline)
+    }
 }
 
 /// Declarative description of one shaped link. `Default` is a no-op
@@ -193,7 +273,7 @@ impl LinkShaper {
     /// impairments are enabled, so the impairment timeline of a seed is
     /// invariant under toggling individual probabilities.
     pub fn decide_at(&self, now: f64, wire_len: usize) -> Verdict {
-        HOT_TOUCHES.fetch_add(1, Relaxed);
+        count_hot_touch();
         self.frames.fetch_add(1, Relaxed);
         let mut st = self.state.guard();
         let loss_draw = st.rng.f64();
@@ -416,6 +496,21 @@ mod tests {
             }
             v => panic!("unexpected {v:?}"),
         }
+    }
+
+    #[test]
+    fn hot_touch_scope_window_is_exact_and_exclusive() {
+        // An open scope quiesces the gate: no decision can land in the
+        // window, so delta is exactly 0 however many parallel tests are
+        // exercising shapers right now.
+        let scope = HotTouchScope::begin();
+        assert_eq!(scope.delta(), 0);
+        drop(scope);
+        // Outside any scope, decisions land on the counter immediately.
+        let sh = LinkShaper::new(ShaperSpec::default());
+        let before = hot_touches();
+        sh.decide_at(0.0, 1024);
+        assert!(hot_touches() > before, "decision not counted");
     }
 
     #[test]

@@ -687,18 +687,21 @@ fn stage_loop(
     let mut since_calib: u32 = 0;
 
     loop {
-        let (seq, tensor) = match &mut input {
+        // The in-proc source is single-stream (stream 0); a frame arriving
+        // from upstream keeps whatever stream tag the coordinator put on
+        // it — stages route payloads, they never own streams.
+        let (seq, stream, tensor) = match &mut input {
             StageIn::Source(rx) => match rx.recv() {
-                Ok(m) => (m.seq, m.tensor),
+                Ok(m) => (m.seq, 0u32, m.tensor),
                 Err(_) => return Ok(()),
             },
             StageIn::Upstream(rx) => match rx.recv() {
                 Ok(Some(frame)) => {
                     let mut data = std::mem::take(&mut decode_pool);
                     codec.decode(&frame.enc, &mut data)?;
-                    let Frame { seq, shape, enc } = frame;
+                    let Frame { seq, stream, shape, enc } = frame;
                     codec.recycle(enc); // reuse the payload allocation for our own encodes
-                    (seq, Tensor::new(data, shape))
+                    (seq, stream, Tensor::new(data, shape))
                 }
                 Ok(None) => return Ok(()), // clean upstream shutdown
                 Err(e) => {
@@ -731,7 +734,7 @@ fn stage_loop(
                 // Serialize ONCE, into a pooled wire buffer; from here the
                 // same Vec travels channel → sender thread → transport
                 // (replay buffer, socket write) without another copy.
-                let frame = Frame::new(seq, out.shape.clone(), enc);
+                let frame = Frame::for_stream(stream, seq, out.shape.clone(), enc);
                 let mut wire = pool.take();
                 frame.write_into(&mut wire);
                 let Frame { enc, .. } = frame;

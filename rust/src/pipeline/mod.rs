@@ -10,14 +10,23 @@
 //! * [`remote`] — multi-process endpoints: [`remote::run_worker`] runs one
 //!   stage over arbitrary transports, [`remote::run_coordinator`] is the
 //!   source+sink process (CLI: `quantpipe worker` / `quantpipe coordinate`).
+//! * [`serve`] — the multi-stream serving plane: weighted round-robin
+//!   admission over bounded per-stream ingress queues, per-stream
+//!   backpressure and a fairness guard; [`remote::run_serving_coordinator`]
+//!   interleaves N client sessions through the one stage chain.
 
 pub mod driver;
 pub mod remote;
+pub mod serve;
 pub mod stage;
 
 pub use crate::net::transport::LinkSpec;
 pub use driver::{run, LinkCounters, LinkQuant, PipelineSpec, RunReport, Workload};
-pub use remote::{run_coordinator, run_worker, CoordinatorReport, WorkerConfig, WorkerReport};
+pub use remote::{
+    run_coordinator, run_serving_coordinator, run_worker, CoordinatorReport, ServeWorkload,
+    StreamSpec, WorkerConfig, WorkerReport,
+};
+pub use serve::{Admission, ServeConfig, ServeFrontend, ServeScheduler, StreamStats};
 pub use stage::{hlo_stage_factory, mock_stage_factory, StageBundle, StageCompute, StageFactory};
 
 #[cfg(test)]

@@ -24,8 +24,8 @@
 //! ```
 
 use crate::adapt::AdaptConfig;
-use crate::data::AccuracyMeter;
-use crate::metrics::telemetry::{CoordinatorSummary, PipelineReport, TelemetryRelay};
+use crate::data::{AccuracyMeter, EvalSet};
+use crate::metrics::telemetry::{CoordinatorSummary, PipelineReport, StreamSummary, TelemetryRelay};
 use crate::metrics::{LatencyHisto, ResilienceSummary, StripeSummary, Timeline};
 use crate::net::frame::Frame;
 use crate::net::transport::{FrameRx, FrameTx, PreparedFrame};
@@ -33,8 +33,9 @@ use crate::pipeline::driver::{
     encode_at_current_bits, sender_thread, LinkCounters, LinkQuant, StageTelemetryShared,
     TelemetryTap, WirePool, Workload,
 };
+use crate::pipeline::serve::{ServeConfig, ServeFrontend, ServeScheduler};
 use crate::pipeline::stage::StageFactory;
-use crate::quant::codec::Codec;
+use crate::quant::codec::{Codec, Encoded};
 use crate::quant::{Method, QuantParams, BITS_NONE};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
@@ -44,7 +45,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One worker's role in the pipeline.
 #[derive(Debug, Clone, Copy)]
@@ -245,7 +246,7 @@ fn worker_stage_loop(
             let mut data = std::mem::take(&mut decode_pool);
             codec.decode(&frame.enc, &mut data)?;
             shared.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            let Frame { seq, shape, enc } = frame;
+            let Frame { seq, stream, shape, enc } = frame;
             codec.recycle(enc);
             let tensor = Tensor::new(data, shape);
 
@@ -264,8 +265,10 @@ fn worker_stage_loop(
             shared.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             // Serialize ONCE into a pooled wire buffer; the sender thread
             // ships the same bytes and the transport keeps them for replay
-            // — no further copies (see the driver's stage loop).
-            let out_frame = Frame::new(seq, out.shape.clone(), enc);
+            // — no further copies (see the driver's stage loop). The
+            // stream tag rides through unchanged: workers route payloads,
+            // they never own streams.
+            let out_frame = Frame::for_stream(stream, seq, out.shape.clone(), enc);
             let mut wire = pool.take();
             out_frame.write_into(&mut wire);
             let Frame { enc, .. } = out_frame;
@@ -478,6 +481,355 @@ pub fn run_coordinator(
         accuracy: acc.value(),
         p50_latency_s: latency.quantile(0.5).as_secs_f64(),
         p99_latency_s: latency.quantile(0.99).as_secs_f64(),
+        // The classic coordinator is the single-stream special case: no
+        // admission, no per-stream rows.
+        streams: Vec::new(),
+        errors: errors.clone(),
+    });
+
+    Ok(CoordinatorReport {
+        images,
+        microbatches: done,
+        wall_secs: wall,
+        throughput: images as f64 / wall,
+        accuracy: acc.value(),
+        latency,
+        errors,
+        resilience: ResilienceSummary::collect(&resilience_handles),
+        stripes: StripeSummary::collect(&stripe_handles),
+        pipeline,
+    })
+}
+
+// -----------------------------------------------------------------------------
+// Serving coordinator: N client streams through one stage chain
+// -----------------------------------------------------------------------------
+
+/// One client session's offered load and scheduling seat.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamSpec {
+    /// Weighted-round-robin weight (clamped to
+    /// [`crate::pipeline::serve::MAX_WEIGHT`] — the fairness guard).
+    pub weight: u32,
+    /// Microbatches this client submits over its lifetime.
+    pub microbatches: u64,
+}
+
+/// A multi-stream serving workload: N concurrent client sessions drawing
+/// microbatches from one shared eval set, interleaved through the one
+/// stage chain by [`run_serving_coordinator`].
+pub struct ServeWorkload {
+    /// Eval set every client cycles over.
+    pub eval: Arc<EvalSet>,
+    /// Images per microbatch.
+    pub microbatch: usize,
+    /// One entry per client stream; the entry's index is its stream ID.
+    pub streams: Vec<StreamSpec>,
+    /// Admission shape (`pipeline.max_streams`,
+    /// `pipeline.stream_queue_depth`).
+    pub serve: ServeConfig,
+}
+
+impl ServeWorkload {
+    /// Total microbatches across every stream.
+    pub fn total(&self) -> u64 {
+        self.streams.iter().map(|s| s.microbatches).sum()
+    }
+}
+
+/// One encoded microbatch parked in a stream's ingress queue: everything
+/// the dispatcher needs to build the wire frame, plus the scoring state
+/// the sink needs when the logits come back.
+struct QueuedBatch {
+    /// Per-stream submission index (the sink's FIFO check).
+    idx: u64,
+    shape: Vec<usize>,
+    enc: Encoded,
+    labels: Vec<u32>,
+    /// Set when the client *offered* the microbatch — so completion
+    /// latency includes time spent backpressured in submit().
+    t0: Instant,
+}
+
+/// What the sink needs to score and account a returning frame.
+struct Pending {
+    stream: u32,
+    idx: u64,
+    labels: Vec<u32>,
+    t0: Instant,
+}
+
+/// Per-stream sink-side accounting.
+struct StreamAgg {
+    frames: u64,
+    next_idx: u64,
+    latency: LatencyHisto,
+}
+
+/// Run N concurrent client sessions through one pipeline: each stream
+/// gets a client thread that encodes and submits into the bounded-queue
+/// WRR front-end ([`crate::pipeline::serve`]); a dispatch thread
+/// interleaves the admitted microbatches in fair order, assigns **global**
+/// sequence numbers (the session layer stays stream-oblivious) and tags
+/// each frame with its stream ID; the calling thread sinks returning
+/// logits, demuxing by the frame's stream tag. Blocking until every
+/// stream completes or the pipeline fails.
+///
+/// The returned report's `pipeline.coordinator.streams` carries one row
+/// per stream: frames completed, backpressure stalls absorbed, and
+/// completion-latency percentiles measured from *offer* (so a
+/// backpressured client's queueing delay is visible).
+pub fn run_serving_coordinator(
+    workload: ServeWorkload,
+    feed: Box<dyn FrameTx>,
+    mut ret: Box<dyn FrameRx>,
+) -> Result<CoordinatorReport> {
+    anyhow::ensure!(!workload.streams.is_empty(), "serving workload needs at least one stream");
+    anyhow::ensure!(
+        workload.streams.len() <= workload.serve.max_streams,
+        "{} streams offered but pipeline.max_streams = {}",
+        workload.streams.len(),
+        workload.serve.max_streams
+    );
+    let start = Instant::now();
+    let total = workload.total();
+    let n_streams = workload.streams.len();
+
+    let mut sched: ServeScheduler<QueuedBatch> = ServeScheduler::new(workload.serve)?;
+    for spec in &workload.streams {
+        sched.open_stream(spec.weight)?;
+    }
+    let frontend = ServeFrontend::new(sched);
+
+    let pending: Arc<TrackedMutex<HashMap<u64, Pending>>> =
+        Arc::new(TrackedMutex::new("serve.pending", HashMap::new()));
+    let errors: Arc<TrackedMutex<Vec<String>>> =
+        Arc::new(TrackedMutex::new("serve.errors", Vec::new()));
+    let resilience_handles: Vec<_> =
+        feed.resilience().into_iter().chain(ret.resilience()).collect();
+    let stripe_handles: Vec<_> = feed.stripes().into_iter().flatten().collect();
+    // `expected` is the number of microbatches that will actually reach
+    // the dispatcher: a client that aborts early subtracts its unsent
+    // remainder, so the dispatcher's drain loop always terminates.
+    let expected = Arc::new(AtomicU64::new(total));
+    // Set on feed failure: clients stop offering, the dispatcher keeps
+    // draining (and discarding) so no client blocks in submit() forever.
+    let abort = Arc::new(AtomicBool::new(false));
+    let fed = Arc::new(AtomicU64::new(0));
+    let feed_done = Arc::new(AtomicBool::new(false));
+
+    // One client thread per stream: encode at full precision (the
+    // coordinator feeds raw activations; stage links do the quantizing)
+    // and submit. A full lane blocks HERE — per-stream backpressure.
+    let mut clients = Vec::with_capacity(n_streams);
+    for (stream, spec) in workload.streams.iter().copied().enumerate() {
+        let stream = stream as u32;
+        let eval = workload.eval.clone();
+        let s = workload.microbatch;
+        let fe = frontend.clone();
+        let errs = errors.clone();
+        let expected = expected.clone();
+        let abort = abort.clone();
+        clients.push(
+            std::thread::Builder::new()
+                .name(format!("qp-serve-client-{stream}"))
+                .spawn(move || {
+                    let mut codec = Codec::default();
+                    let per_pass = eval.microbatches(s).max(1);
+                    for i in 0..spec.microbatches {
+                        if abort.load(Ordering::Acquire) {
+                            expected.fetch_sub(spec.microbatches - i, Ordering::AcqRel);
+                            return;
+                        }
+                        let mb = (i as usize) % per_pass;
+                        let tensor = eval.microbatch(mb, s);
+                        let labels = eval.labels_for(mb, s).to_vec();
+                        let enc = match codec.encode(&tensor.data, Method::Pda, BITS_NONE) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                errs.guard()
+                                    .push(format!("stream {stream}: encode failed: {e:#}"));
+                                expected.fetch_sub(spec.microbatches - i, Ordering::AcqRel);
+                                return;
+                            }
+                        };
+                        let batch = QueuedBatch {
+                            idx: i,
+                            shape: tensor.shape.clone(),
+                            enc,
+                            labels,
+                            t0: Instant::now(),
+                        };
+                        if let Err(e) = fe.submit(stream, batch) {
+                            errs.guard().push(format!("stream {stream}: submit failed: {e:#}"));
+                            expected.fetch_sub(spec.microbatches - i, Ordering::AcqRel);
+                            return;
+                        }
+                    }
+                })?,
+        );
+    }
+
+    // Dispatch thread: the ONLY writer on the feed link. Pops in DRR
+    // order, assigns the global seq, tags the frame with its stream.
+    let dispatcher = {
+        let fe = frontend.clone();
+        let pending = pending.clone();
+        let errs = errors.clone();
+        let expected = expected.clone();
+        let abort = abort.clone();
+        let fed = fed.clone();
+        let feed_done = feed_done.clone();
+        std::thread::Builder::new().name("qp-serve-dispatch".into()).spawn(move || {
+            let mut feed = feed;
+            let mut seq = 0u64;
+            let mut popped = 0u64;
+            let mut failed = false;
+            while popped < expected.load(Ordering::Acquire) {
+                let Some((stream, batch)) = fe.pop(Duration::from_millis(100)) else {
+                    continue;
+                };
+                popped += 1;
+                if failed {
+                    // Drain-and-discard: frees queue slots so blocked
+                    // clients observe the abort instead of hanging.
+                    continue;
+                }
+                pending.guard().insert(
+                    seq,
+                    Pending { stream, idx: batch.idx, labels: batch.labels, t0: batch.t0 },
+                );
+                let frame = Frame::for_stream(stream, seq, batch.shape, batch.enc);
+                // First hard send error ends the feed (see run_coordinator);
+                // resilient links only surface it once reconnects are spent.
+                if let Err(e) = feed.send(frame) {
+                    errs.guard().push(format!("serving coordinator: feed link failed: {e:#}"));
+                    pending.guard().remove(&seq);
+                    failed = true;
+                    abort.store(true, Ordering::Release);
+                    continue;
+                }
+                fed.fetch_add(1, Ordering::Release);
+                seq += 1;
+            }
+            if !failed {
+                if let Err(e) = feed.finish() {
+                    errs.guard().push(format!("serving coordinator: feed drain failed: {e:#}"));
+                }
+            }
+            feed_done.store(true, Ordering::Release);
+        })?
+    };
+
+    // Sink: demux returning logits by the frame's stream tag, check
+    // per-stream FIFO, and account latency from the client's offer time.
+    let mut acc = AccuracyMeter::default();
+    let mut latency = LatencyHisto::default();
+    let mut codec = Codec::default();
+    let mut pipeline = PipelineReport::new();
+    let mut aggs: Vec<StreamAgg> = (0..n_streams)
+        .map(|_| StreamAgg { frames: 0, next_idx: 0, latency: LatencyHisto::default() })
+        .collect();
+    let mut logits_pool: Vec<f32> = Vec::new();
+    let mut done = 0u64;
+    let mut images = 0u64;
+    while done < total {
+        if feed_done.load(Ordering::Acquire) && done >= fed.load(Ordering::Acquire) {
+            break;
+        }
+        let step = ret.recv();
+        for payload in ret.poll_telemetry() {
+            pipeline.ingest(&payload);
+        }
+        match step {
+            Ok(Some(frame)) => {
+                let mut data = std::mem::take(&mut logits_pool);
+                if let Err(e) = codec.decode(&frame.enc, &mut data) {
+                    errors
+                        .guard()
+                        .push(format!("serving coordinator: logits decode failed: {e:#}"));
+                    logits_pool = data;
+                    continue;
+                }
+                let logits = Tensor::new(data, frame.shape.clone());
+                if let Some(p) = pending.guard().remove(&frame.seq) {
+                    if p.stream != frame.stream {
+                        errors.guard().push(format!(
+                            "stream demux violation: seq {} fed on stream {} returned tagged {}",
+                            frame.seq, p.stream, frame.stream
+                        ));
+                    }
+                    if let Some(agg) = aggs.get_mut(p.stream as usize) {
+                        if p.idx != agg.next_idx {
+                            errors.guard().push(format!(
+                                "stream {} FIFO violation: completed idx {} while expecting {}",
+                                p.stream, p.idx, agg.next_idx
+                            ));
+                        }
+                        agg.next_idx = p.idx + 1;
+                        agg.frames += 1;
+                        let dt = p.t0.elapsed();
+                        agg.latency.record(dt);
+                        latency.record(dt);
+                    }
+                    images += p.labels.len() as u64;
+                    acc.add(&logits, &p.labels);
+                }
+                done += 1;
+                logits_pool = logits.into_data();
+            }
+            Ok(None) => break,
+            Err(e) => {
+                errors
+                    .guard()
+                    .push(format!("serving coordinator: return link failed: {e:#}"));
+                break;
+            }
+        }
+    }
+    if done >= total {
+        // Consume the return link's end-of-stream (FIN_ACK on resilient
+        // links) — see run_coordinator for why skipping this strands the
+        // last worker's drain and loses the final telemetry flush.
+        while let Ok(Some(_)) = ret.recv() {}
+    }
+    for payload in ret.poll_telemetry() {
+        pipeline.ingest(&payload);
+    }
+    for c in clients {
+        let _ = c.join();
+    }
+    let _ = dispatcher.join();
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    let errors = std::mem::take(&mut *errors.guard());
+
+    // Per-stream rows: admission counters from the scheduler, frame
+    // counts and completion percentiles from the sink-side accounting.
+    let streams: Vec<StreamSummary> = frontend
+        .stats()
+        .iter()
+        .map(|st| {
+            let agg = &aggs[st.stream as usize];
+            StreamSummary {
+                stream: st.stream,
+                weight: st.weight,
+                frames: agg.frames,
+                stalls: st.stalls,
+                p50_latency_s: agg.latency.quantile(0.5).as_secs_f64(),
+                p99_latency_s: agg.latency.quantile(0.99).as_secs_f64(),
+            }
+        })
+        .collect();
+
+    pipeline.coordinator = Some(CoordinatorSummary {
+        images,
+        microbatches: done,
+        wall_secs: wall,
+        throughput: images as f64 / wall,
+        accuracy: acc.value(),
+        p50_latency_s: latency.quantile(0.5).as_secs_f64(),
+        p99_latency_s: latency.quantile(0.99).as_secs_f64(),
+        streams,
         errors: errors.clone(),
     });
 

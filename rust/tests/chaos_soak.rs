@@ -17,22 +17,13 @@ use quantpipe::data::EvalSet;
 use quantpipe::net::frame::Frame;
 use quantpipe::net::resilient::ResilienceConfig;
 use quantpipe::net::scenario::ScenarioKind;
-use quantpipe::net::shaper::{hot_touches, LinkShaper, ShaperSpec};
+use quantpipe::net::shaper::{HotTouchScope, LinkShaper, ShaperSpec};
 use quantpipe::net::stripe::striped_loopback_pair;
 use quantpipe::net::transport::LinkSpec;
 use quantpipe::pipeline::{mock_stage_factory, run, LinkQuant, PipelineSpec, Workload};
 use quantpipe::quant::Method;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
-
-/// The shaper hot-touch counter is process-global, so the zero-overhead
-/// regression must not observe another test's shaped transfer: every
-/// test in this binary serializes on this gate.
-static GATE: Mutex<()> = Mutex::new(());
-
-fn gate() -> std::sync::MutexGuard<'static, ()> {
-    GATE.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// Rotating-seed hook for the nightly chaos job; defaults to a pinned
 /// seed for regular runs.
@@ -68,9 +59,11 @@ fn unshaped_boundary_runs_zero_shaper_code() {
     // decision — asserted on the global hot-touch counter instead of a
     // flaky wall-clock comparison. This is the `scenario: none`
     // guarantee: the write path is byte-identical to the pre-chaos-lab
-    // build.
-    let _g = gate();
-    let before = hot_touches();
+    // build. The HotTouchScope holds the observer gate for the window,
+    // so the shaped tests in this binary run in PARALLEL with this one:
+    // their decisions park at the gate for the scope's (short) lifetime
+    // instead of polluting the delta.
+    let scope = HotTouchScope::begin();
     let (mut tx, mut rx) = striped_loopback_pair(2, &fast_resilience()).unwrap();
     let total = 8u64;
     let sender = std::thread::spawn(move || {
@@ -88,8 +81,8 @@ fn unshaped_boundary_runs_zero_shaper_code() {
     assert!(rx.recv().unwrap().is_none());
     sender.join().unwrap();
     assert_eq!(
-        hot_touches(),
-        before,
+        scope.delta(),
+        0,
         "an unshaped transfer executed shaper code on the write path"
     );
 }
@@ -103,7 +96,8 @@ fn certain_corruption_still_delivers_exactly_once() {
     // handshake replays the pristine bytes from the replay buffer. So
     // the stream makes progress purely through the replay path — and
     // must still arrive exactly once, in order, with a clean FIN drain.
-    let _g = gate();
+    // (No gate needed: the assertions ride this test's own per-shaper
+    // and per-link counters, which no parallel test can touch.)
     let (mut tx, mut rx) = striped_loopback_pair(1, &fast_resilience()).unwrap();
     let stats = tx.stats();
     let shaper = Arc::new(LinkShaper::new(ShaperSpec {
@@ -147,8 +141,8 @@ fn chaos_soak_composite_scenario_end_to_end() {
     // schedule — fade traces on every stripe, corruption on stripe 0,
     // loss on stripe 1, a partition window on stripe 2 — while stage 1
     // paces the pipeline so the run is still in flight when the fade
-    // trough arrives.
-    let _g = gate();
+    // trough arrives. Runs in parallel with its siblings: everything it
+    // asserts is per-shaper or per-link, never process-global.
     let seed = chaos_seed();
     eprintln!("chaos soak seed {seed} (replay: QUANTPIPE_CHAOS_SEED={seed})");
 

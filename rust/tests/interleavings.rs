@@ -48,6 +48,18 @@ fn exhaustive_striped_boundary_with_kill() {
 }
 
 #[test]
+fn exhaustive_two_stream_serving_with_kill() {
+    // The serving plane's stream axis: 2 client streams race for the
+    // global sequence space on one session while a conduit dies and
+    // resyncs. Every stream-to-seq assignment × every loss point must
+    // deliver exactly once, in order, with every stream tag intact
+    // (the demux invariant is checked at each delivery).
+    let m = BoundaryModel::serving(2, 1, 2, 1, 2);
+    let cov = explore(&m, Bounds::default()).unwrap_or_else(|v| panic!("{v}"));
+    assert!(cov.terminals >= 1, "{cov:?}");
+}
+
+#[test]
 fn checker_rejects_ack_overshoot() {
     // Self-test: a protocol that acks one past the delivery point must
     // be caught (the overshoot trims an undelivered frame, a kill then
@@ -60,6 +72,7 @@ fn checker_rejects_ack_overshoot() {
         tele: 0,
         truncs: 0,
         corrupts: 0,
+        streams: 1,
         bug: Some(Bug::AckOvershoot),
     };
     let v = explore(&m, Bounds::default()).expect_err("overshoot must be found");
@@ -76,6 +89,7 @@ fn checker_rejects_skipped_replay() {
         tele: 0,
         truncs: 0,
         corrupts: 0,
+        streams: 1,
         bug: Some(Bug::SkipReplay),
     };
     explore(&m, Bounds::default()).expect_err("lost replay must be found");
@@ -200,6 +214,7 @@ fn corpus_truncated_write_loses_tail_then_resyncs() {
         tele: 1,
         truncs: 1,
         corrupts: 0,
+        streams: 1,
         bug: None,
     };
     let end = replay(
@@ -239,6 +254,7 @@ fn corpus_corrupt_frame_kills_conduit_then_resyncs() {
         tele: 0,
         truncs: 0,
         corrupts: 1,
+        streams: 1,
         bug: None,
     };
     let end = replay(
@@ -262,6 +278,42 @@ fn corpus_corrupt_frame_kills_conduit_then_resyncs() {
     )
     .unwrap_or_else(|v| panic!("{v}"));
     assert_eq!(end.delivered(), &[0, 1], "the corrupted frame must be recovered by replay");
+    assert!(end.tx().fin_acked() && end.rx().finished());
+}
+
+#[test]
+fn corpus_two_streams_survive_kill_and_resync_without_leakage() {
+    // The serving-plane pin: two interleaved streams share the session's
+    // global sequence space; stream 0's frame dies on the wire with the
+    // conduit and rides the HELLO resync + replay path back. Demux must
+    // survive the round trip — the replayed frame still carries stream
+    // 0's tag, and the earlier stream-1 frame was never re-labelled.
+    let m = BoundaryModel::serving(2, 1, 2, 1, 2);
+    let end = replay(
+        &m,
+        &[
+            Action::SendOn(0, 1), // stream 1 claims global seq 0
+            Action::SendOn(0, 0), // stream 0 claims global seq 1
+            Action::DeliverUp(0), // seq 0 delivered, tagged stream 1
+            Action::EmitAck(0),   // ack queued…
+            Action::Kill(0),      // …and lost, with seq 1 still in flight
+            Action::Reconnect(0), // HELLO(1) → replay of seq 1, tag intact
+            Action::DeliverUp(0), // seq 1 delivered, still tagged stream 0
+            Action::EmitAck(0),
+            Action::DeliverDown(0),
+            Action::SendFin(0),
+            Action::DeliverUp(0),
+            Action::EmitFinAck(0),
+            Action::DeliverDown(0),
+        ],
+    )
+    .unwrap_or_else(|v| panic!("{v}"));
+    assert_eq!(end.delivered(), &[0, 1], "both streams' frames recovered exactly once");
+    assert_eq!(
+        end.delivered_tags(),
+        &[1, 0],
+        "stream tags must survive the kill + HELLO resync"
+    );
     assert!(end.tx().fin_acked() && end.rx().finished());
 }
 
